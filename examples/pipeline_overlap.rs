@@ -1,0 +1,67 @@
+//! Fig-1 demo: watch the parallel loading pipeline hide the data cost.
+//!
+//! Runs the same micro-model training twice — serial loading vs the
+//! Fig-1 prefetching loader — and prints per-window step times plus the
+//! loader's own accounting (load seconds vs trainer stall seconds).
+//!
+//!     cargo run --release --example pipeline_overlap
+
+use std::path::PathBuf;
+
+use theano_mgpu::config::{ClusterConfig, DataConfig, LoaderMode, TrainConfig};
+use theano_mgpu::coordinator::trainer::train;
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+
+fn main() -> theano_mgpu::Result<()> {
+    theano_mgpu::cli::init_logging();
+    let data_dir = PathBuf::from("data/overlap_demo");
+    if !data_dir.join("meta.json").exists() {
+        // Large stored images (96px) make loading expensive enough to
+        // matter against the micro model's small compute.
+        let spec = SynthSpec { classes: 10, hw: 96, seed: 5, ..Default::default() };
+        generate_dataset(&data_dir, &spec, 2048, 128, 512)?;
+    }
+
+    let mut cfg = TrainConfig::default();
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "refconv".into();
+    cfg.batch_per_worker = 8;
+    cfg.steps = 60;
+    cfg.log_every = 0;
+    cfg.seed = 3;
+    cfg.schedule.base_lr = 0.01;
+    cfg.cluster = ClusterConfig::single();
+    cfg.data = DataConfig {
+        dir: data_dir,
+        train_examples: 2048,
+        val_examples: 128,
+        shard_examples: 512,
+        seed: 5,
+        stored_hw: 96,
+    };
+    // Micro model crops to 32 from 96 stored pixels.
+
+    let mut results = Vec::new();
+    for mode in [LoaderMode::Serial, LoaderMode::Parallel] {
+        cfg.loader_mode = mode;
+        let s = train(&cfg)?;
+        let loader = s.loader[0];
+        println!("\n=== {mode:?} loading ===");
+        println!("  wall time          : {:.2}s for {} steps", s.wall_seconds, s.steps);
+        println!("  mean s/20 iters    : {:.3}", s.secs_per_20_iters);
+        println!("  loader load time   : {:.2}s total", loader.load_seconds);
+        println!(
+            "  trainer stall      : {:.2}s total ({:.0}% of load hidden)",
+            loader.stall_seconds,
+            100.0 * (1.0 - loader.stall_seconds / loader.load_seconds.max(1e-9))
+        );
+        results.push((mode, s.wall_seconds, s.losses));
+    }
+
+    let (m0, t0, l0) = &results[0];
+    let (m1, t1, l1) = &results[1];
+    println!("\n{m1:?} vs {m0:?}: {:.1}% faster", 100.0 * (1.0 - t1 / t0));
+    assert_eq!(l0, l1, "loading mode must not change the math (Fig 1 is pure schedule)");
+    println!("loss curves identical across modes — the pipeline is semantically transparent.");
+    Ok(())
+}

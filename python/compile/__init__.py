@@ -1,0 +1,6 @@
+"""Build-time-only compile package (L2 model + L1 kernels + AOT lowering).
+
+Never imported at runtime: ``make artifacts`` runs ``python -m
+compile.aot`` once, and the Rust binary consumes only the emitted
+``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+"""

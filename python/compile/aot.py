@@ -1,0 +1,211 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the Rust runtime consumes
+only the emitted files.  HLO text — NOT ``lowered.compile()`` or
+serialized protos — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Manifest schema (consumed by rust/src/runtime/artifact.rs):
+
+{
+  "version": 1,
+  "models": { name: { image_hw, in_channels, num_classes,
+                      params: [ {name, shape, init, std, bias_value} ] } },
+  "artifacts": [ { "name", "kind": "train"|"eval", "model", "backend",
+                   "batch_size", "file",
+                   "inputs":  [ {name, dtype, shape} ],
+                   "outputs": [ {name, dtype, shape} ] } ]
+}
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, ModelConfig, param_specs
+from .train_step import make_eval_step, make_train_step
+
+# Default artifact set: micro x all backends for Table-1 calibration and
+# the Rust test suite; tiny x refconv for the end-to-end driver (1-worker
+# B=32 and 2-worker B=16, mirroring the paper's 256 vs 2x128 split);
+# tiny x cudnn_r2 to run the Pallas path end-to-end.
+DEFAULT_PLAN = [
+    # (model, backend, train_batch, with_eval)
+    ("alexnet-micro", "refconv", 8, True),
+    ("alexnet-micro", "convnet", 8, False),
+    ("alexnet-micro", "cudnn_r1", 8, False),
+    ("alexnet-micro", "cudnn_r2", 8, True),
+    ("alexnet-tiny", "refconv", 32, True),
+    ("alexnet-tiny", "refconv", 16, False),
+    ("alexnet-tiny", "cudnn_r2", 16, False),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_list(s) -> List[int]:
+    return [int(d) for d in s]
+
+
+def _io_entry(name, sds):
+    return {
+        "name": name,
+        "dtype": jnp.dtype(sds.dtype).name,
+        "shape": _shape_list(sds.shape),
+    }
+
+
+def lower_train(cfg: ModelConfig, backend: str, batch: int):
+    specs = param_specs(cfg)
+    n = len(specs)
+    fn = make_train_step(cfg, backend, n)
+    c, h = cfg.in_channels, cfg.image_hw
+    args = [
+        _spec((batch, c, h, h)),                 # images
+        _spec((batch,), jnp.int32),              # labels
+        _spec((), jnp.float32),                  # lr
+        _spec((), jnp.int32),                    # seed
+        *[_spec(s.shape) for s in specs],        # params
+        *[_spec(s.shape) for s in specs],        # momenta
+    ]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    inputs = (
+        [_io_entry("images", args[0]), _io_entry("labels", args[1]),
+         _io_entry("lr", args[2]), _io_entry("seed", args[3])]
+        + [_io_entry(s.name, _spec(s.shape)) for s in specs]
+        + [_io_entry(s.name + ".m", _spec(s.shape)) for s in specs]
+    )
+    outputs = (
+        [_io_entry("loss", _spec(())), _io_entry("correct1", _spec((), jnp.int32))]
+        + [_io_entry(s.name, _spec(s.shape)) for s in specs]
+        + [_io_entry(s.name + ".m", _spec(s.shape)) for s in specs]
+    )
+    return lowered, inputs, outputs
+
+
+def lower_eval(cfg: ModelConfig, backend: str, batch: int):
+    specs = param_specs(cfg)
+    fn = make_eval_step(cfg, backend, len(specs))
+    c, h = cfg.in_channels, cfg.image_hw
+    args = [
+        _spec((batch, c, h, h)),
+        _spec((batch,), jnp.int32),
+        *[_spec(s.shape) for s in specs],
+    ]
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    inputs = [
+        _io_entry("images", args[0]),
+        _io_entry("labels", args[1]),
+        *[_io_entry(s.name, _spec(s.shape)) for s in specs],
+    ]
+    outputs = [
+        _io_entry("loss", _spec(())),
+        _io_entry("correct1", _spec((), jnp.int32)),
+        _io_entry("correct5", _spec((), jnp.int32)),
+    ]
+    return lowered, inputs, outputs
+
+
+def model_entry(cfg: ModelConfig):
+    return {
+        "image_hw": cfg.image_hw,
+        "in_channels": cfg.in_channels,
+        "num_classes": cfg.num_classes,
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "init": s.init,
+                "std": s.std,
+                "bias_value": s.bias_value,
+            }
+            for s in param_specs(cfg)
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--plan",
+        default=None,
+        help="comma list of model:backend:batch[:eval] entries "
+        "(default: the built-in plan)",
+    )
+    ns = ap.parse_args()
+
+    plan = DEFAULT_PLAN
+    if ns.plan:
+        plan = []
+        for entry in ns.plan.split(","):
+            parts = entry.split(":")
+            plan.append(
+                (parts[0], parts[1], int(parts[2]), len(parts) > 3 and parts[3] == "eval")
+            )
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    manifest = {"version": 1, "models": {}, "artifacts": []}
+
+    for model_name, backend, batch, with_eval in plan:
+        cfg = MODELS[model_name]
+        manifest["models"].setdefault(model_name, model_entry(cfg))
+        jobs = [("train", lower_train)]
+        if with_eval:
+            jobs.append(("eval", lower_eval))
+        for kind, lower in jobs:
+            t0 = time.time()
+            lowered, inputs, outputs = lower(cfg, backend, batch)
+            text = to_hlo_text(lowered)
+            fname = f"{kind}_{model_name}_{backend}_b{batch}.hlo.txt"
+            with open(os.path.join(ns.out_dir, fname), "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            manifest["artifacts"].append(
+                {
+                    "name": f"{kind}_{model_name}_{backend}_b{batch}",
+                    "kind": kind,
+                    "model": model_name,
+                    "backend": backend,
+                    "batch_size": batch,
+                    "file": fname,
+                    "sha256_16": digest,
+                    "inputs": inputs,
+                    "outputs": outputs,
+                }
+            )
+            print(
+                f"[aot] {fname}: {len(text) / 1e6:.2f} MB HLO text "
+                f"({time.time() - t0:.1f}s)",
+                file=sys.stderr,
+            )
+
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

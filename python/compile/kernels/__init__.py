@@ -1,0 +1,14 @@
+"""L1 Pallas kernels + pure-jnp oracles.
+
+Public surface used by the L2 model:
+
+- ``conv.conv2d`` / ``conv.conv2d_bias_relu`` / ``conv.linear`` /
+  ``conv.linear_bias_relu`` — backend-dispatched conv/FC.
+- ``maxpool.maxpool`` — overlapping max pool.
+- ``lrn.lrn`` — AlexNet local response normalization.
+- ``ref`` — oracles for all of the above (pytest ground truth).
+"""
+
+from . import bias_relu, conv, lrn, matmul_pallas, maxpool, ref  # noqa: F401
+
+BACKENDS = conv.BACKENDS

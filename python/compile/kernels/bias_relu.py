@@ -1,0 +1,59 @@
+"""Standalone fused bias+ReLU Pallas kernel.
+
+Used by the ``convnet`` and ``cudnn_r1`` backends, whose GEMM schedules
+do not fuse the epilogue (``cudnn_r2`` fuses it into the GEMM itself —
+see matmul_pallas.matmul_bias_relu_fused).  Row-blocked elementwise
+kernel with an analytic VJP.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_INTERPRET = True
+_BLOCK_ROWS = 256
+
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    v = x_ref[...] + b_ref[...]
+    o_ref[...] = jnp.maximum(v, jnp.zeros_like(v))
+
+
+def _bias_relu_raw(x, b):
+    m, n = x.shape
+    bm = min(_BLOCK_ROWS, m)
+    mp = (m + bm - 1) // bm * bm
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    out = pl.pallas_call(
+        _bias_relu_kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, b.reshape(1, n))
+    return out[:m]
+
+
+@jax.custom_vjp
+def bias_relu(x, b):
+    """max(x + b, 0) with bias broadcast over rows. x [M,N], b [N]."""
+    return _bias_relu_raw(x, b)
+
+
+def _br_fwd(x, b):
+    y = _bias_relu_raw(x, b)
+    return y, y
+
+
+def _br_bwd(y, g):
+    g = g * (y > 0).astype(g.dtype)
+    return g, jnp.sum(g, axis=0)
+
+
+bias_relu.defvjp(_br_fwd, _br_bwd)

@@ -1,0 +1,79 @@
+"""Convolution backends built on the Pallas GEMM schedules.
+
+Convolution is lowered as im2col + GEMM: patch extraction is a pure
+data-movement op (differentiable through JAX — its transpose is the
+col2im scatter XLA already implements), and *all* FLOPs flow through the
+Pallas ``matmul`` kernels, fwd and bwd.  The backend name selects the
+GEMM schedule per DESIGN.md §Hardware-Adaptation:
+
+  refconv   -> XLA lax.conv (the "Caffe" comparator; no Pallas)
+  convnet   -> naive full-K panels   (cuda-convnet analog)
+  cudnn_r1  -> output-stationary K-tiled (cuDNN R1 analog)
+  cudnn_r2  -> K-tiled + wide-N + fused bias+ReLU epilogue (cuDNN R2)
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import ref
+from .matmul_pallas import matmul, matmul_bias_relu_fused
+
+BACKENDS = ("refconv", "convnet", "cudnn_r1", "cudnn_r2")
+
+
+def _im2col(x, kh, kw, stride, padding):
+    """[N,C,H,W] -> ([N*Ho*Wo, C*Kh*Kw], Ho, Wo). Differentiable."""
+    n, _, h, w = x.shape
+    ho = (h + 2 * padding - kh) // stride + 1
+    wo = (w + 2 * padding - kw) // stride + 1
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [N, C*Kh*Kw, Ho, Wo]
+    ckk = patches.shape[1]
+    cols = jnp.moveaxis(patches, 1, -1).reshape(n * ho * wo, ckk)
+    return cols, ho, wo
+
+
+def conv2d(x, w, *, stride=1, padding=0, backend="cudnn_r1"):
+    """NCHW conv: x [N,Cin,H,W], w [Cout,Cin,Kh,Kw] -> [N,Cout,Ho,Wo]."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown conv backend {backend!r}; want one of {BACKENDS}")
+    if backend == "refconv":
+        return ref.conv2d_ref(x, w, stride=stride, padding=padding)
+    n = x.shape[0]
+    cout, _, kh, kw = w.shape
+    cols, ho, wo = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(cout, -1).T  # [Cin*Kh*Kw, Cout]
+    y = matmul(cols, wmat, backend)  # [N*Ho*Wo, Cout]
+    return jnp.moveaxis(y.reshape(n, ho, wo, cout), -1, 1)
+
+
+def conv2d_bias_relu(x, w, b, *, stride=1, padding=0, backend="cudnn_r1"):
+    """conv + bias + ReLU; on cudnn_r2 the epilogue is fused into the GEMM."""
+    if backend == "cudnn_r2":
+        n = x.shape[0]
+        cout, _, kh, kw = w.shape
+        cols, ho, wo = _im2col(x, kh, kw, stride, padding)
+        wmat = w.reshape(cout, -1).T
+        y = matmul_bias_relu_fused(cols, wmat, b)
+        return jnp.moveaxis(y.reshape(n, ho, wo, cout), -1, 1)
+    y = conv2d(x, w, stride=stride, padding=padding, backend=backend)
+    return jnp.maximum(y + b[None, :, None, None], 0.0)
+
+
+def linear(x, w, *, backend="cudnn_r1"):
+    """Fully-connected layer through the same GEMM engine. x [B,D], w [D,K]."""
+    if backend == "refconv":
+        return ref.matmul_ref(x, w)
+    return matmul(x, w, backend)
+
+
+def linear_bias_relu(x, w, b, *, backend="cudnn_r1"):
+    """FC + bias + ReLU; fused epilogue on cudnn_r2."""
+    if backend == "cudnn_r2":
+        return matmul_bias_relu_fused(x, w, b)
+    return jnp.maximum(linear(x, w, backend=backend) + b[None, :], 0.0)

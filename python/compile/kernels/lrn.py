@@ -1,0 +1,62 @@
+"""Pallas local response normalization (AlexNet §3.3, across channels).
+
+Forward is a Pallas kernel over one image per grid step: the channel
+window sum is a static unroll over the 2r+1 shifted channel slices of a
+zero-padded square tensor.  Backward differentiates the reference
+implementation at the saved input (same numerics, XLA-generated).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_INTERPRET = True
+
+
+def _lrn_kernel(x_ref, o_ref, *, radius, bias, alpha, beta, channels):
+    x = x_ref[...]  # [1, C, H, W]
+    sq = (x * x).astype(jnp.float32)
+    n = 2 * radius + 1
+    pad = jnp.pad(sq, ((0, 0), (radius, radius), (0, 0), (0, 0)))
+    acc = pad[:, 0:channels]
+    for d in range(1, n):
+        acc = acc + pad[:, d : d + channels]
+    scale = (bias + (alpha / n) * acc) ** beta
+    o_ref[...] = (x / scale).astype(o_ref.dtype)
+
+
+def _lrn_raw(x, radius, bias, alpha, beta):
+    n, c, h, w = x.shape
+    kern = partial(
+        _lrn_kernel, radius=radius, bias=bias, alpha=alpha, beta=beta, channels=c
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=_INTERPRET,
+    )(x)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def lrn(x, depth_radius=2, bias=2.0, alpha=1e-4, beta=0.75):
+    """AlexNet cross-channel LRN; defaults match Krizhevsky et al. 2012."""
+    return _lrn_raw(x, depth_radius, bias, alpha, beta)
+
+
+def _lrn_fwd(x, depth_radius, bias, alpha, beta):
+    return _lrn_raw(x, depth_radius, bias, alpha, beta), x
+
+
+def _lrn_bwd(depth_radius, bias, alpha, beta, x, g):
+    _, vjp = jax.vjp(lambda t: ref.lrn_ref(t, depth_radius, bias, alpha, beta), x)
+    return (vjp(g)[0],)
+
+
+lrn.defvjp(_lrn_fwd, _lrn_bwd)

@@ -1,0 +1,237 @@
+"""Tiled GEMM Pallas kernels — the compute hot-spot of every conv backend.
+
+The paper timed three GPU convolution backends (cuda-convnet, cuDNN-R1,
+cuDNN-R2).  On this stack convolution lowers to im2col + GEMM (see
+``conv.py``), so the backend differences become *GEMM schedule*
+differences, exactly as they were threadblock-tiling differences on GPU
+(DESIGN.md §Hardware-Adaptation):
+
+- ``convnet``  — naive schedule: 2-D grid, each program reads a full
+  [bm, K] row-panel and [K, bn] col-panel (no K tiling).  Large VMEM
+  blocks, lowest arithmetic-intensity-per-byte-staged; the cuda-convnet
+  analog.
+- ``cudnn_r1`` — output-stationary: 3-D grid with K innermost, f32
+  accumulation into the revisited output block.  The implicit-GEMM
+  cuDNN-R1 analog.
+- ``cudnn_r2`` — like r1 but with a wider N block (fewer grid trips)
+  and an optional fused bias+ReLU epilogue on the last K step, the
+  cuDNN-R2 "fused ops" analog.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); TPU viability is asserted structurally via the VMEM
+budget check in ``vmem_block_bytes`` and the pytest suite.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shapes per schedule.  (bm, bn, bk); bk=None means "full K".
+# 128 is the MXU-native tile edge; r2 widens N to 256 to halve grid trips.
+SCHEDULES = {
+    "convnet": dict(bm=128, bn=128, bk=None),
+    "cudnn_r1": dict(bm=128, bn=128, bk=128),
+    "cudnn_r2": dict(bm=128, bn=256, bk=128),
+}
+
+_INTERPRET = True  # CPU PJRT: Mosaic custom-calls are not executable.
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def vmem_block_bytes(m: int, n: int, k: int, schedule: str, dtype=jnp.float32) -> int:
+    """Estimated VMEM bytes resident per grid step for a schedule.
+
+    Used by the pytest structural checks and by DESIGN.md §Perf to argue
+    TPU viability: blocks must fit the ~16 MiB VMEM budget.
+    """
+    cfg = SCHEDULES[schedule]
+    bm, bn = cfg["bm"], cfg["bn"]
+    bk = cfg["bk"] if cfg["bk"] is not None else _ceil_to(k, 128)
+    esize = jnp.dtype(dtype).itemsize
+    # A block + B block + output accumulator (f32).
+    return bm * bk * esize + bk * bn * esize + bm * bn * 4
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, schedule: str) -> float:
+    """Fraction of MXU-issue slots doing useful work (padding overhead).
+
+    The MXU consumes 128x128 tiles; padded rows/cols are wasted issue
+    slots.  This is the structural utilization estimate recorded in
+    EXPERIMENTS.md §Perf (interpret mode gives no real TPU timing).
+    """
+    cfg = SCHEDULES[schedule]
+    bm, bn = cfg["bm"], cfg["bn"]
+    bk = cfg["bk"] if cfg["bk"] is not None else _ceil_to(k, 128)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued
+
+
+def _mm_naive_kernel(a_ref, b_ref, o_ref):
+    """convnet schedule: full-K panels, one shot per output block."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _mm_ktiled_kernel(a_ref, b_ref, o_ref, *, nk: int, epilogue: bool, bias_ref=None):
+    """cudnn_r1/r2 schedule: output-stationary accumulation over K steps.
+
+    The output block is revisited across the innermost grid dimension;
+    f32 accumulation happens in the output ref (interpret mode executes
+    the grid sequentially, matching TPU's arbitrary-dimension semantics).
+    """
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    if epilogue:
+
+        @pl.when(kstep == nk - 1)
+        def _epilogue():
+            acc = o_ref[...] + bias_ref[...]
+            o_ref[...] = jnp.maximum(acc, jnp.zeros_like(acc))
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = m0 - x.shape[0], m1 - x.shape[1]
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _matmul_pallas_raw(a, b, schedule: str, bias=None, fuse_bias_relu=False):
+    """Dispatch one GEMM through the requested Pallas schedule.
+
+    a: [M, K]; b: [K, N]; bias: [N] (only with ``fuse_bias_relu``).
+    Inputs are zero-padded to block multiples and the result sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    if fuse_bias_relu and schedule != "cudnn_r2":
+        raise ValueError("fused bias+relu epilogue is the cudnn_r2 schedule only")
+
+    m, k = a.shape
+    _, n = b.shape
+    cfg = SCHEDULES[schedule]
+    bm = min(cfg["bm"], _ceil_to(m, 8))
+    bn = min(cfg["bn"], _ceil_to(n, 8))
+    bk_cfg = cfg["bk"]
+    # Accumulate in f32 regardless of operand dtype (MXU-style), cast at
+    # the end — keeps the K-tiled += accumulation exact for bf16 inputs.
+    out_dtype = jnp.float32
+
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+
+    if bk_cfg is None:
+        # convnet: no K tiling — panels span the whole contraction dim.
+        kp = max(k, 1)
+        ap = _pad2(a, mp, kp)
+        bp = _pad2(b, kp, np_)
+        out = pl.pallas_call(
+            _mm_naive_kernel,
+            grid=(mp // bm, np_ // bn),
+            in_specs=[
+                pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+                pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+            interpret=_INTERPRET,
+        )(ap, bp)
+    else:
+        bk = min(bk_cfg, _ceil_to(k, 8))
+        kp = _ceil_to(k, bk)
+        ap = _pad2(a, mp, kp)
+        bp = _pad2(b, kp, np_)
+        nk = kp // bk
+        kern = partial(
+            _mm_ktiled_kernel,
+            nk=nk,
+            epilogue=fuse_bias_relu,
+        )
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ]
+        operands = [ap, bp]
+        if fuse_bias_relu:
+            bias_p = jnp.pad(bias, (0, np_ - n)).reshape(1, np_)
+
+            def kern(a_ref, b_ref, bias_ref, o_ref, nk=nk):  # noqa: F811
+                _mm_ktiled_kernel(
+                    a_ref, b_ref, o_ref, nk=nk, epilogue=True, bias_ref=bias_ref
+                )
+
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+            operands.append(bias_p)
+        out = pl.pallas_call(
+            kern,
+            grid=(mp // bm, np_ // bn, nk),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+            interpret=_INTERPRET,
+        )(*operands)
+
+    return out[:m, :n].astype(a.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def matmul(a, b, schedule="cudnn_r1"):
+    """Differentiable Pallas GEMM; bwd also runs through Pallas GEMMs."""
+    return _matmul_pallas_raw(a, b, schedule)
+
+
+def _matmul_fwd(a, b, schedule):
+    return _matmul_pallas_raw(a, b, schedule), (a, b)
+
+
+def _matmul_bwd(schedule, res, g):
+    a, b = res
+    # dA = g @ B^T, dB = A^T @ g — the same schedule serves the bwd GEMMs,
+    # mirroring how cuDNN's bwd-data/bwd-filter reuse its GEMM engine.
+    da = _matmul_pallas_raw(g, b.T, schedule)
+    db = _matmul_pallas_raw(a.T, g, schedule)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=())
+def matmul_bias_relu_fused(a, b, bias):
+    """cudnn_r2's fused GEMM+bias+ReLU epilogue (fwd hot path)."""
+    return _matmul_pallas_raw(a, b, "cudnn_r2", bias=bias, fuse_bias_relu=True)
+
+
+def _mmbr_fwd(a, b, bias):
+    y = _matmul_pallas_raw(a, b, "cudnn_r2", bias=bias, fuse_bias_relu=True)
+    return y, (a, b, y)
+
+
+def _mmbr_bwd(res, g):
+    a, b, y = res
+    # ReLU mask from the saved output (y > 0 iff pre-activation > 0).
+    g = g * (y > 0).astype(g.dtype)
+    da = _matmul_pallas_raw(g, b.T, "cudnn_r2")
+    db = _matmul_pallas_raw(a.T, g, "cudnn_r2")
+    dbias = jnp.sum(g, axis=0)
+    return da.astype(a.dtype), db.astype(b.dtype), dbias.astype(g.dtype)
+
+
+matmul_bias_relu_fused.defvjp(_mmbr_fwd, _mmbr_bwd)

@@ -1,0 +1,72 @@
+"""Pallas max-pooling kernel (AlexNet's overlapping 3x3/2 pooling).
+
+Forward is a Pallas kernel that walks the window positions with static
+slices inside one block (the whole [C,H,W] plane of one image per grid
+step — AlexNet planes are far under the VMEM budget).  Backward routes
+through the XLA reduce-window gradient of the reference implementation
+so tie-breaking semantics exactly match the oracle.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+_INTERPRET = True
+
+
+def _pool_kernel(x_ref, o_ref, *, window: int, stride: int, ho: int, wo: int):
+    x = x_ref[...]  # [1, C, H, W] block: one image per grid step
+    parts = []
+    # Static unroll over the window offsets: each (dy, dx) contributes a
+    # strided slice; the running max across offsets is the pooled output.
+    for dy in range(window):
+        for dx in range(window):
+            sl = jax.lax.slice(
+                x,
+                (0, 0, dy, dx),
+                (x.shape[0], x.shape[1], dy + (ho - 1) * stride + 1, dx + (wo - 1) * stride + 1),
+                (1, 1, stride, stride),
+            )
+            parts.append(sl)
+    acc = parts[0]
+    for p in parts[1:]:
+        acc = jnp.maximum(acc, p)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _maxpool_raw(x, window, stride):
+    n, c, h, w = x.shape
+    ho = (h - window) // stride + 1
+    wo = (w - window) // stride + 1
+    kern = partial(_pool_kernel, window=window, stride=stride, ho=ho, wo=wo)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, c, h, w), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((1, c, ho, wo), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, ho, wo), x.dtype),
+        interpret=_INTERPRET,
+    )(x)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def maxpool(x, window=3, stride=2):
+    """Overlapping max pool, NCHW, VALID padding (AlexNet: 3x3 stride 2)."""
+    return _maxpool_raw(x, window, stride)
+
+
+def _maxpool_fwd(x, window, stride):
+    return _maxpool_raw(x, window, stride), x
+
+
+def _maxpool_bwd(window, stride, x, g):
+    # Gradient of the oracle at the saved input: identical tie semantics.
+    _, vjp = jax.vjp(lambda t: ref.maxpool_ref(t, window, stride), x)
+    return (vjp(g)[0],)
+
+
+maxpool.defvjp(_maxpool_fwd, _maxpool_bwd)

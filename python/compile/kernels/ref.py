@@ -1,0 +1,139 @@
+"""Pure-jnp correctness oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` function is the semantic ground truth: pytest (and the
+hypothesis sweeps) assert that the Pallas implementations match these to
+tight tolerances across shapes and dtypes.  The refs are also used as
+the backward rule for kernels whose fwd is a Pallas kernel but whose
+bwd we route through XLA (maxpool, LRN) — see the kernel modules.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain GEMM oracle: ``a @ b`` with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def bias_relu_ref(x: jax.Array, bias: jax.Array) -> jax.Array:
+    """Fused bias+ReLU oracle; bias broadcasts over the leading axis."""
+    return jnp.maximum(x + bias, 0.0).astype(x.dtype)
+
+
+def conv2d_ref(
+    x: jax.Array,
+    w: jax.Array,
+    stride: int = 1,
+    padding: int = 0,
+) -> jax.Array:
+    """NCHW convolution oracle via XLA's conv (the "Caffe" analog).
+
+    x: [N, Cin, H, W]; w: [Cout, Cin, Kh, Kw] -> [N, Cout, Ho, Wo].
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def im2col_ref(x: jax.Array, kh: int, kw: int, stride: int, padding: int) -> jax.Array:
+    """Patch extraction oracle: [N,C,H,W] -> [N*Ho*Wo, C*Kh*Kw].
+
+    Column order is (C, Kh, Kw) — the filter matrix below must match.
+    """
+    n = x.shape[0]
+    patches = lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # [N, C*Kh*Kw, Ho, Wo] with feature dim ordered (C, Kh, Kw)
+    ckk = patches.shape[1]
+    patches = jnp.moveaxis(patches, 1, -1)  # [N, Ho, Wo, C*Kh*Kw]
+    return patches.reshape(n * patches.shape[1] * patches.shape[2], ckk)
+
+
+def filter_matrix_ref(w: jax.Array) -> jax.Array:
+    """Filter [Cout, Cin, Kh, Kw] -> GEMM operand [Cin*Kh*Kw, Cout]."""
+    cout = w.shape[0]
+    return w.reshape(cout, -1).T
+
+
+def maxpool_ref(x: jax.Array, window: int, stride: int) -> jax.Array:
+    """Overlapping max pooling oracle (NCHW, VALID padding)."""
+    # NB: the init value must be a Python scalar so lax recognizes the
+    # max-monoid and binds reduce_window_max_p (which has autodiff
+    # rules); an array init falls back to generic reduce_window_p,
+    # which does not support reverse-mode AD.
+    init = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min
+    return lax.reduce_window(
+        x,
+        init,
+        lax.max,
+        window_dimensions=(1, 1, window, window),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def lrn_ref(
+    x: jax.Array,
+    depth_radius: int = 2,
+    bias: float = 2.0,
+    alpha: float = 1e-4,
+    beta: float = 0.75,
+) -> jax.Array:
+    """AlexNet local response normalization across channels (NCHW).
+
+    ``b_c = a_c / (k + alpha/n * sum_{c' in [c-r, c+r]} a_{c'}^2)^beta``
+    with n = 2r+1, matching Krizhevsky et al. (2012) §3.3.
+    """
+    n = 2 * depth_radius + 1
+    sq = (x * x).astype(jnp.float32)
+    pad = [(0, 0), (depth_radius, depth_radius), (0, 0), (0, 0)]
+    sq = jnp.pad(sq, pad)
+    window_sum = lax.reduce_window(
+        sq,
+        0.0,  # Python scalar: keeps the add-monoid primitive (AD-capable)
+        lax.add,
+        window_dimensions=(1, n, 1, 1),
+        window_strides=(1, 1, 1, 1),
+        padding="VALID",
+    )
+    scale = (bias + (alpha / n) * window_sum) ** beta
+    return (x / scale).astype(x.dtype)
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy oracle. logits [B,K], labels s32 [B]."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def sgd_momentum_ref(w, v, g, lr, mu=0.9, wd=5e-4):
+    """Paper's update rule: v <- mu*v - lr*(g + wd*w); w <- w + v."""
+    v_new = mu * v - lr * (g + wd * w)
+    return w + v_new, v_new
+
+
+def avg_ref(a, b):
+    """Fig-2 step-3 oracle: elementwise mean of two replicas."""
+    return 0.5 * (a + b)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def topk_correct_ref(logits: jax.Array, labels: jax.Array, k: int) -> jax.Array:
+    """Count of examples whose label is within the top-k logits."""
+    _, idx = lax.top_k(logits, k)
+    hit = jnp.any(idx == labels[:, None], axis=-1)
+    return jnp.sum(hit.astype(jnp.int32))

@@ -1,0 +1,220 @@
+"""L2: AlexNet family — fwd pass, parameter specs, model configs.
+
+Three sizes of the paper's architecture (5 conv / 3 pool / 2 LRN /
+2 FC / softmax for the full net; scaled-down ``tiny`` and ``micro``
+variants for the CPU testbed), all expressed over the L1 kernel surface
+(``kernels.conv`` / ``kernels.maxpool`` / ``kernels.lrn``) so every
+backend in Table 1 is a one-line switch.
+
+Parameters are a flat *ordered* list of (name, shape, init) — the ABI
+contract with the Rust side: ``params/store.rs`` materializes and feeds
+them in exactly this order (see artifacts/manifest.json).
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels.lrn import lrn
+from .kernels.maxpool import maxpool
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """One conv stage: conv(+bias+ReLU) [+ LRN] [+ overlapping maxpool]."""
+
+    cout: int
+    kernel: int
+    stride: int
+    pad: int
+    lrn: bool = False
+    pool: bool = False
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description; hashable so jit caches per config."""
+
+    name: str
+    image_hw: int
+    in_channels: int
+    num_classes: int
+    convs: Tuple[ConvSpec, ...]
+    fc_dims: Tuple[int, ...]
+    dropout: float = 0.0
+    pool_window: int = 3
+    pool_stride: int = 2
+
+    @property
+    def input_shape(self) -> Tuple[int, int, int]:
+        return (self.in_channels, self.image_hw, self.image_hw)
+
+
+# --- The model zoo -------------------------------------------------------
+
+# Krizhevsky et al. (2012) as described in the paper: 5 convs (3 pooled,
+# 2 LRN'd), 2 FC + softmax.  227x227 input, 1000 classes.
+ALEXNET = ModelConfig(
+    name="alexnet",
+    image_hw=227,
+    in_channels=3,
+    num_classes=1000,
+    convs=(
+        ConvSpec(96, 11, 4, 0, lrn=True, pool=True),
+        ConvSpec(256, 5, 1, 2, lrn=True, pool=True),
+        ConvSpec(384, 3, 1, 1),
+        ConvSpec(384, 3, 1, 1),
+        ConvSpec(256, 3, 1, 1, pool=True),
+    ),
+    fc_dims=(4096, 4096),
+    dropout=0.5,
+)
+
+# CPU-testbed scale: same topology (5 convs, 2 LRN, 3 pools, 2 FC), a
+# 64x64 synthetic-ImageNet input, 100 classes.  ~0.9 M parameters.
+ALEXNET_TINY = ModelConfig(
+    name="alexnet-tiny",
+    image_hw=64,
+    in_channels=3,
+    num_classes=100,
+    convs=(
+        ConvSpec(32, 5, 2, 2, lrn=True, pool=True),
+        ConvSpec(64, 3, 1, 1, lrn=True, pool=True),
+        ConvSpec(96, 3, 1, 1),
+        ConvSpec(96, 3, 1, 1),
+        ConvSpec(64, 3, 1, 1, pool=True),
+    ),
+    fc_dims=(512, 256),
+)
+
+# Test/bench scale: 2 convs, one pool, one FC.  Seconds to lower.
+ALEXNET_MICRO = ModelConfig(
+    name="alexnet-micro",
+    image_hw=32,
+    in_channels=3,
+    num_classes=10,
+    convs=(
+        ConvSpec(8, 5, 2, 2, lrn=True, pool=True),
+        ConvSpec(16, 3, 1, 1),
+    ),
+    fc_dims=(64,),
+)
+
+MODELS = {m.name: m for m in (ALEXNET, ALEXNET_TINY, ALEXNET_MICRO)}
+
+
+# --- Parameter specs -----------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape + init recipe for one tensor; mirrored into manifest.json."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "normal" | "zeros" | "ones_scaled"
+    std: float = 0.01
+    bias_value: float = 0.0
+
+    @property
+    def size(self) -> int:
+        out = 1
+        for d in self.shape:
+            out *= d
+        return out
+
+
+def _conv_out_hw(hw: int, spec: ConvSpec, cfg: ModelConfig) -> int:
+    hw = (hw + 2 * spec.pad - spec.kernel) // spec.stride + 1
+    if spec.pool:
+        hw = (hw - cfg.pool_window) // cfg.pool_stride + 1
+    return hw
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Ordered parameter list. He-scaled normals for the scaled variants
+    (they must actually learn on the synthetic corpus); AlexNet's paper
+    init (N(0, 0.01^2), ones on conv2/4/5+fc biases) for the full net."""
+    specs: List[ParamSpec] = []
+    paper_init = cfg.name == "alexnet"
+    cin = cfg.in_channels
+    hw = cfg.image_hw
+    for i, cs in enumerate(cfg.convs):
+        fan_in = cin * cs.kernel * cs.kernel
+        std = 0.01 if paper_init else (2.0 / fan_in) ** 0.5
+        bias = 1.0 if (paper_init and i in (1, 3, 4)) else 0.0
+        specs.append(
+            ParamSpec(f"conv{i + 1}_w", (cs.cout, cin, cs.kernel, cs.kernel), "normal", std)
+        )
+        specs.append(ParamSpec(f"conv{i + 1}_b", (cs.cout,), "zeros", 0.0, bias))
+        cin = cs.cout
+        hw = _conv_out_hw(hw, cs, cfg)
+    feat = cin * hw * hw
+    dims = [feat, *cfg.fc_dims, cfg.num_classes]
+    nfc = len(dims) - 1
+    for j in range(nfc):
+        std = 0.01 if paper_init else (2.0 / dims[j]) ** 0.5
+        bias = 1.0 if paper_init and j < nfc - 1 else 0.0
+        specs.append(ParamSpec(f"fc{j + 1}_w", (dims[j], dims[j + 1]), "normal", std))
+        specs.append(ParamSpec(f"fc{j + 1}_b", (dims[j + 1],), "zeros", 0.0, bias))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """Python-side init (tests only; the runtime init lives in Rust)."""
+    out = []
+    for spec in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if spec.init == "normal":
+            out.append(spec.std * jax.random.normal(sub, spec.shape, jnp.float32))
+        else:
+            out.append(jnp.full(spec.shape, spec.bias_value, jnp.float32))
+    return out
+
+
+# --- Forward pass ---------------------------------------------------------
+
+
+def forward(
+    cfg: ModelConfig,
+    params: List[jax.Array],
+    images: jax.Array,
+    *,
+    backend: str = "refconv",
+    train: bool = False,
+    dropout_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """AlexNet forward: images [B,C,H,W] f32 -> logits [B,num_classes].
+
+    ``backend`` selects the conv/GEMM engine per Table 1; dropout is
+    applied on the FC hidden layers only when ``train`` and
+    ``cfg.dropout > 0`` (paper's full net).
+    """
+    it = iter(params)
+    x = images
+    for cs in cfg.convs:
+        w, b = next(it), next(it)
+        x = kconv.conv2d_bias_relu(
+            x, w, b, stride=cs.stride, padding=cs.pad, backend=backend
+        )
+        if cs.lrn:
+            x = lrn(x)
+        if cs.pool:
+            x = maxpool(x, cfg.pool_window, cfg.pool_stride)
+    bsz = x.shape[0]
+    x = x.reshape(bsz, -1)
+    nfc = len(cfg.fc_dims)
+    for j in range(nfc):
+        w, b = next(it), next(it)
+        x = kconv.linear_bias_relu(x, w, b, backend=backend)
+        if train and cfg.dropout > 0.0:
+            assert dropout_key is not None
+            dropout_key, sub = jax.random.split(dropout_key)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, x.shape)
+            x = jnp.where(keep, x / (1.0 - cfg.dropout), 0.0)
+    w, b = next(it), next(it)
+    logits = kconv.linear(x, w, backend=backend) + b[None, :]
+    return logits

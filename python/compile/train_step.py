@@ -1,0 +1,114 @@
+"""L2: the AOT-lowered train/eval step functions (the "Theano function").
+
+The paper compiled one Theano function per GPU that consumed a staged
+minibatch and updated device-resident weights + momenta in place.  The
+equivalent here is a pure function over explicit state:
+
+  train_step(images, labels, lr, seed, *params, *momenta)
+    -> (loss, correct1, *new_params, *new_momenta)
+
+  eval_step(images, labels, *params) -> (loss, correct1, correct5)
+
+Update rule (paper §2 / Krizhevsky et al. 2012):
+  v <- mu * v - lr * (grad + wd * w);   w <- w + v
+with mu = 0.9, wd = 5e-4.
+
+The Fig-2 exchange averages *params and momenta* on the Rust side, so
+both are step outputs; everything stays device-resident between steps
+(``execute_b`` over PjRtBuffers in rust/src/runtime/).
+"""
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.ref import softmax_xent_ref
+from .model import ModelConfig, forward
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: List[jax.Array],
+    images: jax.Array,
+    labels: jax.Array,
+    *,
+    backend: str,
+    train: bool,
+    dropout_key=None,
+) -> Tuple[jax.Array, jax.Array]:
+    logits = forward(
+        cfg, params, images, backend=backend, train=train, dropout_key=dropout_key
+    )
+    loss = softmax_xent_ref(logits, labels)
+    return loss, logits
+
+
+def _topk_correct(logits, labels, k):
+    """Top-k correctness via rank counting.
+
+    Deliberately avoids ``lax.top_k``: jax >= 0.6 lowers it to a
+    ``topk(..., largest=true)`` HLO attribute that xla_extension 0.5.1's
+    text parser rejects.  An example is top-k correct iff fewer than k
+    logits strictly exceed the gold logit — plain compare+reduce HLO.
+    (Equivalent to top_k membership up to ties; verified against the
+    real top_k in python/tests.)
+    """
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)
+    rank = jnp.sum((logits > gold).astype(jnp.int32), axis=-1)
+    return jnp.sum((rank < k).astype(jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, backend: str, n_params: int):
+    """Build the flat-signature train step for (cfg, backend)."""
+
+    def train_step(images, labels, lr, seed, *state):
+        assert len(state) == 2 * n_params, (len(state), n_params)
+        params = list(state[:n_params])
+        momenta = list(state[n_params:])
+        dropout_key = jax.random.key(seed) if cfg.dropout > 0.0 else None
+
+        def scalar_loss(ps):
+            return loss_fn(
+                cfg,
+                ps,
+                images,
+                labels,
+                backend=backend,
+                train=True,
+                dropout_key=dropout_key,
+            )
+
+        # Single fwd+bwd; correct1 reuses the training logits (dropout
+        # noise in the running accuracy is acceptable — a second
+        # eval-mode fwd would double the step cost).
+        (loss, logits), grads = jax.value_and_grad(scalar_loss, has_aux=True)(params)
+        correct1 = _topk_correct(logits, labels, 1)
+
+        new_params, new_momenta = [], []
+        for w, v, g in zip(params, momenta, grads):
+            v_new = MOMENTUM * v - lr * (g + WEIGHT_DECAY * w)
+            new_params.append(w + v_new)
+            new_momenta.append(v_new)
+        return (loss, correct1, *new_params, *new_momenta)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, backend: str, n_params: int):
+    """Build the flat-signature eval step for (cfg, backend)."""
+
+    def eval_step(images, labels, *params):
+        assert len(params) == n_params
+        loss, logits = loss_fn(
+            cfg, list(params), images, labels, backend=backend, train=False
+        )
+        correct1 = _topk_correct(logits, labels, 1)
+        correct5 = _topk_correct(logits, labels, min(5, cfg.num_classes))
+        return loss, correct1, correct5
+
+    return eval_step

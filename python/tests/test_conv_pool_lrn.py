@@ -1,0 +1,164 @@
+"""Conv backends, maxpool and LRN kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as kconv
+from compile.kernels import lrn as klrn
+from compile.kernels import maxpool as kpool
+from compile.kernels import ref
+
+PALLAS_BACKENDS = ["convnet", "cudnn_r1", "cudnn_r2"]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@pytest.mark.parametrize("backend", PALLAS_BACKENDS)
+@pytest.mark.parametrize(
+    "n,cin,h,cout,k,stride,pad",
+    [
+        (1, 1, 8, 1, 3, 1, 0),
+        (2, 3, 13, 7, 3, 2, 1),
+        (2, 5, 11, 4, 5, 2, 2),   # AlexNet-ish conv1
+        (1, 4, 7, 6, 1, 1, 0),    # 1x1 conv
+        (3, 2, 9, 5, 3, 3, 1),
+    ],
+)
+def test_conv2d_matches_lax(backend, n, cin, h, cout, k, stride, pad):
+    rng = np.random.default_rng(0)
+    x = rand(rng, n, cin, h, h)
+    w = rand(rng, cout, cin, k, k)
+    got = kconv.conv2d(x, w, stride=stride, padding=pad, backend=backend)
+    want = ref.conv2d_ref(x, w, stride, pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", PALLAS_BACKENDS + ["refconv"])
+def test_conv_bias_relu(backend):
+    rng = np.random.default_rng(1)
+    x = rand(rng, 2, 3, 10, 10)
+    w = rand(rng, 6, 3, 3, 3)
+    b = rand(rng, 6)
+    got = kconv.conv2d_bias_relu(x, w, b, stride=1, padding=1, backend=backend)
+    want = jnp.maximum(ref.conv2d_ref(x, w, 1, 1) + b[None, :, None, None], 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert bool(jnp.all(got >= 0))
+
+
+@pytest.mark.parametrize("backend", PALLAS_BACKENDS)
+def test_conv_grads_match_ref(backend):
+    rng = np.random.default_rng(2)
+    x = rand(rng, 2, 3, 8, 8)
+    w = rand(rng, 4, 3, 3, 3)
+
+    def f(x_, w_):
+        return jnp.sum(kconv.conv2d(x_, w_, stride=1, padding=1, backend=backend) ** 2)
+
+    def fr(x_, w_):
+        return jnp.sum(ref.conv2d_ref(x_, w_, 1, 1) ** 2)
+
+    gx, gw = jax.grad(f, argnums=(0, 1))(x, w)
+    grx, grw = jax.grad(fr, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, grx, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gw, grw, rtol=1e-3, atol=1e-4)
+
+
+def test_linear_layers():
+    rng = np.random.default_rng(3)
+    x, w, b = rand(rng, 9, 15), rand(rng, 15, 8), rand(rng, 8)
+    for backend in PALLAS_BACKENDS + ["refconv"]:
+        got = kconv.linear_bias_relu(x, w, b, backend=backend)
+        want = ref.bias_relu_ref(ref.matmul_ref(x, w), b)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window,stride,h", [(3, 2, 13), (2, 2, 8), (3, 3, 9), (3, 2, 32)])
+def test_maxpool_matches_ref(window, stride, h):
+    rng = np.random.default_rng(4)
+    x = rand(rng, 2, 3, h, h)
+    got = kpool.maxpool(x, window, stride)
+    want = ref.maxpool_ref(x, window, stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want)
+
+
+def test_maxpool_grad_matches_ref():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 2, 2, 9, 9)
+    g = jax.grad(lambda t: jnp.sum(kpool.maxpool(t, 3, 2) ** 2))(x)
+    gr = jax.grad(lambda t: jnp.sum(ref.maxpool_ref(t, 3, 2) ** 2))(x)
+    np.testing.assert_allclose(g, gr)
+
+
+def test_lrn_matches_ref_and_grad():
+    rng = np.random.default_rng(6)
+    x = rand(rng, 2, 16, 6, 6)
+    np.testing.assert_allclose(klrn.lrn(x), ref.lrn_ref(x), rtol=1e-5, atol=1e-6)
+    g = jax.grad(lambda t: jnp.sum(klrn.lrn(t) ** 2))(x)
+    gr = jax.grad(lambda t: jnp.sum(ref.lrn_ref(t) ** 2))(x)
+    np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_lrn_few_channels_edge():
+    # Fewer channels than the window: padding path must still be exact.
+    rng = np.random.default_rng(7)
+    x = rand(rng, 1, 2, 4, 4)
+    np.testing.assert_allclose(klrn.lrn(x), ref.lrn_ref(x), rtol=1e-5, atol=1e-6)
+
+
+def test_lrn_suppresses_high_activity():
+    # LRN divides by local channel energy: uniform big activations
+    # shrink more than sparse ones (the "competition" AlexNet wanted).
+    hot = jnp.ones((1, 8, 4, 4)) * 50.0
+    cold = jnp.zeros((1, 8, 4, 4)).at[:, 0].set(50.0)
+    out_hot = klrn.lrn(hot)[0, 0, 0, 0]
+    out_cold = klrn.lrn(cold)[0, 0, 0, 0]
+    assert out_cold > out_hot
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    cin=st.integers(1, 6),
+    h=st.integers(5, 17),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 3),
+    backend=st.sampled_from(PALLAS_BACKENDS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_conv_shapes(n, cin, h, cout, k, stride, backend, seed):
+    pad = k // 2
+    if h + 2 * pad < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, cin, h, h)
+    w = rand(rng, cout, cin, k, k)
+    got = kconv.conv2d(x, w, stride=stride, padding=pad, backend=backend)
+    want = ref.conv2d_ref(x, w, stride, pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    window=st.sampled_from([2, 3]),
+    stride=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_maxpool_shapes(h, window, stride, seed):
+    if h < window:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, 2, h, h)
+    got = kpool.maxpool(x, window, stride)
+    want = ref.maxpool_ref(x, window, stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want)

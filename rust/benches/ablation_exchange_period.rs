@@ -1,0 +1,103 @@
+//! E6 — ablation: exchange period k and transport choice.
+//!
+//! The paper exchanges every step; this ablation shows the tradeoff it
+//! bought: larger k amortizes the exchange cost (simulated at AlexNet
+//! scale) but lets the replicas drift (measured, real micro-model
+//! training when artifacts are present).
+
+include!("harness.rs");
+
+use theano_mgpu::config::{ClusterConfig, DataConfig, TrainConfig, TransportKind};
+use theano_mgpu::coordinator::trainer::train;
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+use theano_mgpu::sim::pipeline::{simulate, PipelineParams};
+
+fn main() {
+    let mut b = Bench::new("ablation_exchange_period");
+
+    // --- Simulated time saving at AlexNet scale ---
+    for period in [1usize, 2, 4, 8] {
+        let p = PipelineParams {
+            workers: 2,
+            compute_s: 1.0,
+            load_s: 0.25,
+            exchange_s: 0.25,
+            period,
+            parallel_loading: true,
+            jitter: 0.0,
+            seed: 6,
+        };
+        b.record(
+            &format!("sim s/20it @period={period}"),
+            simulate(&p, 200).mean_per20(),
+            "s",
+        );
+    }
+
+    // --- Real replica drift on the micro model ---
+    if artifacts_present() {
+        let dir = std::env::temp_dir().join("tmg_bench_ablation");
+        if !dir.join("meta.json").exists() {
+            let spec = SynthSpec { classes: 10, hw: 36, seed: 11, ..Default::default() };
+            generate_dataset(&dir, &spec, 640, 64, 320).unwrap();
+        }
+        for period in [1usize, 2, 4] {
+            let mut cfg = TrainConfig::default();
+            cfg.model = "alexnet-micro".into();
+            cfg.backend = "refconv".into();
+            cfg.batch_per_worker = 8;
+            // 9 steps: not a multiple of any period > 1, so the final
+            // state shows genuine inter-exchange drift.
+            cfg.steps = 9;
+            cfg.log_every = 0;
+            cfg.schedule.base_lr = 0.02;
+            cfg.exchange.period = period;
+            cfg.cluster = ClusterConfig::pair_same_switch();
+            cfg.data = DataConfig {
+                dir: dir.clone(),
+                train_examples: 640,
+                val_examples: 64,
+                shard_examples: 320,
+                seed: 11,
+                stored_hw: 36,
+            };
+            let s = train(&cfg).unwrap();
+            b.record(
+                &format!("real divergence @period={period}"),
+                s.final_divergence as f64,
+                "max|dw|",
+            );
+            b.record(
+                &format!("real final loss @period={period}"),
+                *s.losses.last().unwrap() as f64,
+                "",
+            );
+        }
+    } else {
+        println!("  (artifacts missing; skipping real-drift half)");
+    }
+
+    // --- Transport ablation at fixed period (simulated AlexNet) ---
+    use theano_mgpu::comm::cost::CommCostModel;
+    use theano_mgpu::sim::flops::alexnet;
+    let model = CommCostModel::default();
+    let bytes = alexnet().exchange_bytes() as usize;
+    for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
+        let p = PipelineParams {
+            workers: 2,
+            compute_s: 1.0,
+            load_s: 0.25,
+            exchange_s: model.exchange_round_time(kind, bytes),
+            period: 1,
+            parallel_loading: true,
+            jitter: 0.0,
+            seed: 6,
+        };
+        b.record(
+            &format!("sim s/20it transport={}", kind.name()),
+            simulate(&p, 200).mean_per20(),
+            "s",
+        );
+    }
+    b.write_csv();
+}

@@ -1,0 +1,80 @@
+//! E3 — **Fig 1** behaviour: the parallel-loading pipeline.
+//!
+//! Two measurements:
+//! 1. *Real*: SerialLoader vs ParallelLoader over a generated shard set
+//!    with a synthetic compute phase, reporting per-batch wall time and
+//!    trainer stall — the actual double-buffer implementation.
+//! 2. *Simulated*: overlap-efficiency sweep across load/compute ratios
+//!    (the regime map the paper's Fig-1 design targets).
+
+include!("harness.rs");
+
+use theano_mgpu::data::loader::{BatchSource, LoaderCfg, ParallelLoader, SerialLoader};
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+use theano_mgpu::sim::pipeline::{simulate, PipelineParams};
+
+fn main() {
+    let mut b = Bench::new("fig1_overlap");
+
+    // --- Real pipeline ---
+    let dir = std::env::temp_dir().join("tmg_bench_fig1");
+    if !dir.join("meta.json").exists() {
+        let spec = SynthSpec { classes: 16, hw: 72, seed: 4, ..Default::default() };
+        generate_dataset(&dir, &spec, 2048, 128, 512).unwrap();
+    }
+    let cfg = LoaderCfg {
+        data_dir: &dir,
+        split: "train",
+        batch: 64,
+        crop_hw: 64,
+        worker: 0,
+        workers: 1,
+        seed: 1,
+        train_augment: true,
+        verify_shards: false,
+    };
+    let compute = std::time::Duration::from_millis(8);
+
+    let mut serial = SerialLoader::new(&cfg).unwrap();
+    let t_serial = b.case("real serial: load+compute per step", 2, 12, || {
+        let _ = serial.next_batch().unwrap();
+        std::thread::sleep(compute);
+    });
+
+    let mut parallel = ParallelLoader::new(&cfg).unwrap();
+    let t_par = b.case("real parallel: max(load,compute) per step", 2, 12, || {
+        let _ = parallel.next_batch().unwrap();
+        std::thread::sleep(compute);
+    });
+    let st = parallel.stats();
+    b.record("real parallel: producer load/batch", st.load_seconds / st.batches as f64, "s");
+    b.record("real parallel: trainer stall/batch", st.stall_seconds / st.batches as f64, "s");
+    b.record("real loading saving (paper ~19-25%)", 100.0 * (1.0 - t_par / t_serial), "%");
+
+    // --- Simulated regime sweep ---
+    for ratio in [0.1, 0.25, 0.5, 0.75, 1.0, 1.5] {
+        let base = PipelineParams {
+            workers: 1,
+            compute_s: 1.0,
+            load_s: ratio,
+            exchange_s: 0.0,
+            period: 1,
+            parallel_loading: true,
+            jitter: 0.0,
+            seed: 3,
+        };
+        let par = simulate(&base, 200);
+        let ser = simulate(&PipelineParams { parallel_loading: false, ..base }, 200);
+        b.record(
+            &format!("sim saving @load/compute={ratio}"),
+            100.0 * (1.0 - par.mean_per20() / ser.mean_per20()),
+            "%",
+        );
+        b.record(
+            &format!("sim overlap efficiency @{ratio}"),
+            par.overlap_efficiency,
+            "",
+        );
+    }
+    b.write_csv();
+}

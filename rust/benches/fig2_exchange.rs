@@ -1,0 +1,82 @@
+//! E4 — **Fig 2** behaviour: exchange-and-average latency.
+//!
+//! Measures real exchange rounds between two threads across the three
+//! transports and a sweep of payload sizes (up to AlexNet-scale), and
+//! prints the cost-model predictions for the same points.  The paper's
+//! §4.3 claim under test: P2P < host-staged < serialized, with the
+//! serialized (multiprocessing) path paying an encode/decode tax.
+
+include!("harness.rs");
+
+use theano_mgpu::comm::cost::CommCostModel;
+use theano_mgpu::comm::exchange::ExchangePort;
+use theano_mgpu::comm::link::transport_pair;
+use theano_mgpu::config::TransportKind;
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::runtime::artifact::ParamManifestSpec;
+use theano_mgpu::tensor::Shape;
+
+fn store_of(elements: usize, seed: u64) -> ParamStore {
+    let specs = vec![ParamManifestSpec {
+        name: "w".into(),
+        shape: Shape::of(&[elements]),
+        init: "normal".into(),
+        std: 0.1,
+        bias_value: 0.0,
+    }];
+    ParamStore::init(&specs, seed)
+}
+
+/// One timed round: both sides exchange; returns port for stats.
+fn run_rounds(kind: TransportKind, elements: usize, rounds: usize) -> (f64, f64) {
+    let (ea, eb) = transport_pair(kind);
+    let mut sa = store_of(elements, 1);
+    let mut sb = store_of(elements, 2);
+    let h = std::thread::spawn(move || {
+        let mut port = ExchangePort::new(eb);
+        for _ in 0..rounds {
+            port.exchange(&mut sb, true).unwrap();
+        }
+    });
+    let mut port = ExchangePort::new(ea);
+    let t = theano_mgpu::util::Timer::start();
+    for _ in 0..rounds {
+        port.exchange(&mut sa, true).unwrap();
+    }
+    let total = t.elapsed_secs();
+    h.join().unwrap();
+    (total / rounds as f64, port.stats.average_seconds / rounds as f64)
+}
+
+fn main() {
+    let mut b = Bench::new("fig2_exchange");
+    let model = CommCostModel::default();
+
+    // Payload sweep: 256 KiB .. 64 MiB of params(+momenta flattened x2).
+    for &elements in &[32_768usize, 262_144, 2_097_152, 8_388_608] {
+        let bytes = elements * 2 * 4; // params + momenta
+        for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
+            let rounds = if elements > 1_000_000 { 3 } else { 10 };
+            let (per_round, avg_s) = run_rounds(kind, elements, rounds);
+            b.record(
+                &format!("real {} {:>8} KiB/round", kind.name(), bytes / 1024),
+                per_round,
+                "s",
+            );
+            let _ = avg_s;
+            b.record(
+                &format!("model {} {:>7} KiB/round", kind.name(), bytes / 1024),
+                model.exchange_round_time(kind, bytes),
+                "s",
+            );
+        }
+    }
+
+    // Ordering check at AlexNet-class payload.
+    let (p2p, _) = run_rounds(TransportKind::P2p, 8_388_608, 3);
+    let (host, _) = run_rounds(TransportKind::HostStaged, 8_388_608, 3);
+    let (ser, _) = run_rounds(TransportKind::Serialized, 8_388_608, 3);
+    b.record("ordering host/p2p (>1 expected)", host / p2p, "x");
+    b.record("ordering serialized/p2p (>1 expected, §4.3)", ser / p2p, "x");
+    b.write_csv();
+}

@@ -1,0 +1,58 @@
+// Shared bench harness (no criterion in the offline crate set).
+//
+// Each bench binary `include!`s this file and uses [`Bench`] to time
+// named cases with warmup + median-of-runs, printing a uniform table
+// and optionally appending CSV rows under `target/bench_results/`.
+
+use std::path::PathBuf;
+
+use theano_mgpu::util::timer::{measure_runs, median};
+
+pub struct Bench {
+    name: &'static str,
+    rows: Vec<(String, f64, String)>,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("== bench: {name} ==");
+        Bench { name, rows: Vec::new() }
+    }
+
+    /// Time `f` with `warmup` + `runs`, record the median under `label`.
+    pub fn case(&mut self, label: &str, warmup: usize, runs: usize, mut f: impl FnMut()) -> f64 {
+        let times = measure_runs(warmup, runs, &mut f);
+        let med = median(&times);
+        println!(
+            "  {label:<44} {:>12}  (min {:>10}, n={runs})",
+            theano_mgpu::util::fmt::secs(med),
+            theano_mgpu::util::fmt::secs(times[0]),
+        );
+        self.rows.push((label.to_string(), med, String::new()));
+        med
+    }
+
+    /// Record a pre-computed metric (e.g. a simulated table cell).
+    pub fn record(&mut self, label: &str, value: f64, unit: &str) {
+        println!("  {label:<44} {value:>12.4} {unit}");
+        self.rows.push((label.to_string(), value, unit.to_string()));
+    }
+
+    /// Append results to target/bench_results/<name>.csv.
+    pub fn write_csv(&self) {
+        let dir = PathBuf::from("target/bench_results");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join(format!("{}.csv", self.name));
+        let mut body = String::from("label,value,unit\n");
+        for (label, v, unit) in &self.rows {
+            body.push_str(&format!("{label},{v},{unit}\n"));
+        }
+        let _ = std::fs::write(&path, body);
+        println!("  -> {}", path.display());
+    }
+}
+
+/// True when the AOT artifacts are present (some benches need them).
+pub fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}

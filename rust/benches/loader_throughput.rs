@@ -1,0 +1,91 @@
+//! E7 — data-pipeline stage throughput (the Fig-1 substrate).
+//!
+//! Breaks the loading path into its stages and reports images/second:
+//! synthetic generation (dataset build), shard disk read, preprocess
+//! (mean-subtract + crop + flip), and the assembled serial/parallel
+//! loaders.
+
+include!("harness.rs");
+
+use theano_mgpu::data::loader::{BatchSource, LoaderCfg, ParallelLoader, SerialLoader};
+use theano_mgpu::data::preprocess::{preprocess_into, Augment, MeanImage};
+use theano_mgpu::data::shard::ShardedDataset;
+use theano_mgpu::data::synth::{generate_dataset, generate_example, SynthSpec};
+use theano_mgpu::util::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("loader_throughput");
+    let dir = std::env::temp_dir().join("tmg_bench_loader");
+    let spec = SynthSpec { classes: 16, hw: 72, seed: 21, ..Default::default() };
+
+    // Stage 0: generation (includes shard writing + mean image).
+    if !dir.join("meta.json").exists() {
+        let t = b.case("generate 1024+128 examples (72px)", 0, 1, || {
+            let _ = std::fs::remove_dir_all(&dir);
+            generate_dataset(&dir, &spec, 1024, 128, 512).unwrap();
+        });
+        b.record("generation rate", 1152.0 / t, "img/s");
+    }
+
+    // Stage 1: pure example synthesis.
+    let t = b.case("synthesize 64 examples (no I/O)", 1, 5, || {
+        for i in 0..64u64 {
+            std::hint::black_box(generate_example(&spec, (i % 16) as usize, i));
+        }
+    });
+    b.record("synthesis rate", 64.0 / t, "img/s");
+
+    // Stage 2: shard point reads.
+    let mut ds = ShardedDataset::open(&dir, "train", true).unwrap();
+    let mut buf = Vec::new();
+    let mut rng = Pcg32::seeded(3);
+    let t = b.case("read 256 random records", 1, 5, || {
+        for _ in 0..256 {
+            let i = rng.below(1024) as usize;
+            ds.read_into(i, &mut buf).unwrap();
+        }
+    });
+    b.record("disk read rate", 256.0 / t, "img/s");
+
+    // Stage 3: preprocessing.
+    let mean = MeanImage::load(&dir.join("mean.f32"), 3, 72).unwrap();
+    ds.read_into(0, &mut buf).unwrap();
+    let mut out = vec![0f32; 3 * 64 * 64];
+    let mut prng = Pcg32::seeded(9);
+    let t = b.case("preprocess 256 images (72->64 crop+flip)", 1, 5, || {
+        for _ in 0..256 {
+            let aug = Augment::random(&mut prng, 72, 64);
+            preprocess_into(&buf, &mean, 72, 64, aug, &mut out).unwrap();
+        }
+    });
+    b.record("preprocess rate", 256.0 / t, "img/s");
+
+    // Stage 4: assembled loaders.
+    let cfg = LoaderCfg {
+        data_dir: &dir,
+        split: "train",
+        batch: 64,
+        crop_hw: 64,
+        worker: 0,
+        workers: 1,
+        seed: 5,
+        train_augment: true,
+        verify_shards: false,
+    };
+    let mut serial = SerialLoader::new(&cfg).unwrap();
+    let t = b.case("serial loader, 4 batches of 64", 1, 5, || {
+        for _ in 0..4 {
+            std::hint::black_box(serial.next_batch().unwrap());
+        }
+    });
+    b.record("serial loader rate", 256.0 / t, "img/s");
+
+    let mut parallel = ParallelLoader::new(&cfg).unwrap();
+    let t = b.case("parallel loader, 4 batches of 64 (consumer)", 1, 5, || {
+        for _ in 0..4 {
+            std::hint::black_box(parallel.next_batch().unwrap());
+        }
+    });
+    b.record("parallel loader rate (consumer-side)", 256.0 / t, "img/s");
+    b.write_csv();
+}

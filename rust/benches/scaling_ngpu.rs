@@ -1,0 +1,32 @@
+//! E5 — the N-GPU scaling study (paper §4.2/§4.4 future work).
+
+include!("harness.rs");
+
+use theano_mgpu::sim::calibrate::{CalibratedCosts, Calibration};
+use theano_mgpu::sim::scaling::{render, scaling_study};
+
+fn main() {
+    let mut b = Bench::new("scaling_ngpu");
+    let costs = if artifacts_present() {
+        let scratch = std::env::temp_dir().join("tmg_bench_calib");
+        Calibration::measure(std::path::Path::new("artifacts"), &scratch, 3)
+            .unwrap_or_else(|_| CalibratedCosts::canned())
+    } else {
+        CalibratedCosts::canned()
+    };
+    let rows = scaling_study(&costs, 100).unwrap();
+    println!("\n{}", render(&rows));
+    for r in &rows {
+        b.record(
+            &format!("speedup n={} {} {}", r.workers, r.topology, r.algorithm),
+            r.speedup,
+            "x",
+        );
+        b.record(
+            &format!("exchange n={} {} {}", r.workers, r.topology, r.algorithm),
+            r.exchange_s,
+            "s",
+        );
+    }
+    b.write_csv();
+}

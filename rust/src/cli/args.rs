@@ -1,0 +1,114 @@
+//! Tiny `--key value` / `--flag` argument parser.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed flags/options plus positional arguments.
+#[derive(Debug, Default)]
+pub struct ArgMap {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgMap {
+    /// `--key value` pairs become options; a `--key` followed by
+    /// another `--...` (or nothing) becomes a boolean flag.
+    pub fn parse(argv: &[String]) -> Result<ArgMap> {
+        let mut out = ArgMap::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::msg("bare `--` not supported"));
+                }
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.opts.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::msg(format!("--{key} wants an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::msg(format!("--{key} wants an integer, got {v:?}"))),
+        }
+    }
+
+    pub fn required(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::msg(format!("missing required option --{key}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = ArgMap::parse(&argv("table1 --steps 40 --real --csv out.csv")).unwrap();
+        assert_eq!(a.positional, vec!["table1"]);
+        assert_eq!(a.get("steps"), Some("40"));
+        assert!(a.has_flag("real"));
+        assert_eq!(a.str_or("csv", "x"), "out.csv");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 40);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn errors() {
+        let a = ArgMap::parse(&argv("--steps forty")).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+        assert!(a.required("nope").is_err());
+        assert!(ArgMap::parse(&argv("-- x")).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = ArgMap::parse(&argv("--verbose")).unwrap();
+        assert!(a.has_flag("verbose"));
+    }
+}

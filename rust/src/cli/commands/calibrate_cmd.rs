@@ -1,0 +1,30 @@
+//! `tmg calibrate` — measure this machine's costs.
+
+use std::path::PathBuf;
+
+use crate::cli::args::ArgMap;
+use crate::error::Result;
+use crate::sim::calibrate::Calibration;
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let a = ArgMap::parse(argv)?;
+    let artifacts = PathBuf::from(a.str_or("artifacts", "artifacts"));
+    let runs = a.usize_or("runs", 5)?;
+    let scratch = std::env::temp_dir().join("tmg_calibrate_data");
+
+    let costs = Calibration::measure(&artifacts, &scratch, runs)?;
+    println!("calibrated costs on this machine:");
+    for (backend, secs) in &costs.backend_step_s {
+        println!("  step[{backend:<9}] = {}", crate::util::fmt::secs(*secs));
+    }
+    println!(
+        "  loader          = {} / image (stored {}px)",
+        crate::util::fmt::secs(costs.load_s_per_image),
+        costs.load_hw
+    );
+    println!(
+        "  host memcpy     = {:.2} GB/s",
+        costs.host_copy_bytes_per_s / 1e9
+    );
+    Ok(0)
+}

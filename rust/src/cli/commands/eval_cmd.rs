@@ -1,0 +1,38 @@
+//! `tmg eval` — evaluate a checkpoint on the validation split.
+
+use std::path::Path;
+
+use crate::cli::args::ArgMap;
+use crate::config::TrainConfig;
+use crate::coordinator::eval::evaluate;
+use crate::error::{Error, Result};
+use crate::params::{load_checkpoint, ParamStore};
+use crate::runtime::{Manifest, RuntimeClient};
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let a = ArgMap::parse(argv)?;
+    let cfg = TrainConfig::load(Path::new(a.required("config")?))?;
+    let ckpt = Path::new(a.required("checkpoint")?);
+
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let model = manifest.model(&cfg.model)?;
+    let spec = manifest
+        .eval_artifact_for(&cfg.model)
+        .ok_or_else(|| Error::msg(format!("no eval artifact for model {:?}", cfg.model)))?;
+
+    let mut store = ParamStore::init(&model.params, cfg.seed);
+    let step = load_checkpoint(ckpt, &mut store)?;
+
+    let client = RuntimeClient::cpu()?;
+    let exe = client.load_step(spec)?;
+    let crop = model.image_hw;
+    let result = evaluate(&cfg, &exe, &store, crop, a.usize_or("max-batches", 0)?)?;
+    println!(
+        "checkpoint @step {step}: top-1 error {:.2}%  top-5 error {:.2}%  loss {:.4}  ({} examples)",
+        100.0 * result.top1_error(),
+        100.0 * result.top5_error(),
+        result.mean_loss,
+        result.examples
+    );
+    Ok(0)
+}

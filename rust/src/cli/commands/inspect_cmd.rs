@@ -1,0 +1,44 @@
+//! `tmg inspect` — list artifacts and their ABIs.
+
+use std::path::PathBuf;
+
+use crate::cli::args::ArgMap;
+use crate::error::Result;
+use crate::runtime::Manifest;
+use crate::util::fmt;
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let a = ArgMap::parse(argv)?;
+    let dir = PathBuf::from(a.str_or("artifacts", "artifacts"));
+    let m = Manifest::load(&dir)?;
+
+    println!("models:");
+    for model in &m.models {
+        let elems = model.total_param_elements();
+        println!(
+            "  {:<15} {}x{}x{}  {} classes  {} tensors, {} params ({})",
+            model.name,
+            model.in_channels,
+            model.image_hw,
+            model.image_hw,
+            model.num_classes,
+            model.param_count(),
+            fmt::count(elems as u64),
+            fmt::bytes(elems * 4)
+        );
+    }
+    println!("artifacts:");
+    for art in &m.artifacts {
+        let in_bytes: usize = art.inputs.iter().map(|i| i.byte_size()).sum();
+        println!(
+            "  {:<38} kind={:<5?} batch={:<3} inputs={} ({}) outputs={}",
+            art.name,
+            art.kind,
+            art.batch_size,
+            art.inputs.len(),
+            fmt::bytes(in_bytes),
+            art.outputs.len()
+        );
+    }
+    Ok(0)
+}

@@ -1,0 +1,95 @@
+//! `tmg simulate` — regenerate the paper's tables from the calibrated
+//! simulator.
+//!
+//! - `table1`: the headline Table 1 (E1)
+//! - `scaling`: the N-GPU study (E5)
+//! - `overlap`: Fig-1 overlap-efficiency sweep (E3)
+
+use std::path::PathBuf;
+
+use crate::cli::args::ArgMap;
+use crate::error::{Error, Result};
+use crate::metrics::CsvWriter;
+use crate::sim::calibrate::{CalibratedCosts, Calibration};
+use crate::sim::pipeline::{simulate, PipelineParams};
+use crate::sim::scaling::{render as render_scaling, scaling_study};
+use crate::sim::table1::{render, table1, Table1Options};
+
+fn costs(a: &ArgMap) -> Result<CalibratedCosts> {
+    if a.has_flag("real") {
+        let artifacts = PathBuf::from(a.str_or("artifacts", "artifacts"));
+        let scratch = std::env::temp_dir().join("tmg_calibrate_data");
+        Calibration::measure(&artifacts, &scratch, a.usize_or("runs", 5)?)
+    } else {
+        Ok(CalibratedCosts::canned())
+    }
+}
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let a = ArgMap::parse(argv)?;
+    let which = a
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| Error::msg("simulate wants table1|scaling|overlap"))?;
+    match which {
+        "table1" => {
+            let mut opts = Table1Options::with_costs(costs(&a)?);
+            opts.steps = a.usize_or("steps", 100)?;
+            let cells = table1(&opts)?;
+            print!("{}", render(&cells));
+            if let Some(csv) = a.get("csv") {
+                let mut w = CsvWriter::create(
+                    std::path::Path::new(csv),
+                    &["backend", "gpus", "parallel_loading", "per20_s"],
+                )?;
+                for c in &cells {
+                    w.row(&[
+                        c.backend.clone(),
+                        c.gpus.to_string(),
+                        c.parallel_loading.to_string(),
+                        format!("{:.4}", c.per20_s),
+                    ])?;
+                }
+                w.flush()?;
+            }
+            Ok(0)
+        }
+        "scaling" => {
+            let rows = scaling_study(&costs(&a)?, a.usize_or("steps", 60)?)?;
+            print!("{}", render_scaling(&rows));
+            Ok(0)
+        }
+        "overlap" => {
+            // Fig-1 sweep: hidden fraction vs load/compute ratio.
+            println!("load/compute  serial_s/20it  parallel_s/20it  saving  overlap_eff");
+            for ratio in [0.1, 0.25, 0.5, 0.75, 1.0, 1.5, 2.0] {
+                let base = PipelineParams {
+                    workers: 1,
+                    compute_s: 1.0,
+                    load_s: ratio,
+                    exchange_s: 0.0,
+                    period: 1,
+                    parallel_loading: true,
+                    jitter: 0.0,
+                    seed: 3,
+                };
+                let par = simulate(&base, a.usize_or("steps", 100)?);
+                let ser = simulate(
+                    &PipelineParams { parallel_loading: false, ..base },
+                    a.usize_or("steps", 100)?,
+                );
+                println!(
+                    "{:>11.2}  {:>13.2}  {:>15.2}  {:>5.1}%  {:>10.2}",
+                    ratio,
+                    ser.mean_per20(),
+                    par.mean_per20(),
+                    100.0 * (1.0 - par.mean_per20() / ser.mean_per20()),
+                    par.overlap_efficiency
+                );
+            }
+            Ok(0)
+        }
+        other => Err(Error::msg(format!("unknown simulation {other:?}"))),
+    }
+}

@@ -1,0 +1,97 @@
+//! `tmg train` — run a training job.
+
+use std::path::{Path, PathBuf};
+
+use crate::cli::args::ArgMap;
+use crate::config::{LoaderMode, TrainConfig, TransportKind};
+use crate::coordinator::trainer::train;
+use crate::error::Result;
+
+/// Apply CLI overrides on top of the TOML config.
+pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
+    if let Some(v) = a.get("steps") {
+        cfg.steps = v.parse().map_err(|_| crate::Error::msg("--steps wants int"))?;
+    }
+    if let Some(v) = a.get("workers") {
+        let w: usize = v.parse().map_err(|_| crate::Error::msg("--workers wants int"))?;
+        cfg.cluster.workers = w;
+        cfg.cluster.switch_of_worker = vec![0; w];
+    }
+    if let Some(v) = a.get("backend") {
+        cfg.backend = v.to_string();
+    }
+    if let Some(v) = a.get("loader") {
+        cfg.loader_mode = LoaderMode::parse(v)?;
+    }
+    if let Some(v) = a.get("transport") {
+        cfg.exchange.transport = TransportKind::parse(v)?;
+    }
+    if let Some(v) = a.get("period") {
+        cfg.exchange.period = v.parse().map_err(|_| crate::Error::msg("--period wants int"))?;
+    }
+    if let Some(v) = a.get("batch") {
+        cfg.batch_per_worker =
+            v.parse().map_err(|_| crate::Error::msg("--batch wants int"))?;
+    }
+    if let Some(v) = a.get("csv") {
+        cfg.metrics_csv = Some(PathBuf::from(v));
+    }
+    cfg.validate()
+}
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let a = ArgMap::parse(argv)?;
+    let mut cfg = TrainConfig::load(Path::new(a.required("config")?))?;
+    apply_overrides(&mut cfg, &a)?;
+
+    // Auto-generate the dataset if missing (classes follow the model).
+    if !cfg.data.dir.join("meta.json").exists() {
+        log::info!("dataset missing; generating into {:?}", cfg.data.dir);
+        let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
+        let classes = manifest.model(&cfg.model)?.num_classes;
+        let spec = crate::data::synth::SynthSpec {
+            classes,
+            channels: 3,
+            hw: cfg.data.stored_hw,
+            noise: 24.0,
+            seed: cfg.data.seed,
+        };
+        crate::data::synth::generate_dataset(
+            &cfg.data.dir,
+            &spec,
+            cfg.data.train_examples,
+            cfg.data.val_examples,
+            cfg.data.shard_examples,
+        )?;
+    }
+
+    let summary = train(&cfg)?;
+    println!(
+        "trained {} steps on {} worker(s) in {:.1}s  ({:.2} s/20it)",
+        summary.steps, summary.workers, summary.wall_seconds, summary.secs_per_20_iters
+    );
+    if let Some(last) = summary.losses.last() {
+        let first = summary.losses.first().copied().unwrap_or(*last);
+        println!("loss: {first:.4} -> {last:.4}");
+    }
+    println!(
+        "replica divergence after final exchange: {:.3e}",
+        summary.final_divergence
+    );
+    for (w, st) in summary.loader.iter().enumerate() {
+        println!(
+            "worker {w} loader: {} batches, load {:.2}s, stall {:.2}s",
+            st.batches, st.load_seconds, st.stall_seconds
+        );
+    }
+    if let Some(e) = summary.eval {
+        println!(
+            "validation: top-1 error {:.1}%  top-5 error {:.1}%  (loss {:.4}, {} examples)",
+            100.0 * e.top1_error(),
+            100.0 * e.top5_error(),
+            e.mean_loss,
+            e.examples
+        );
+    }
+    Ok(0)
+}

@@ -1,0 +1,88 @@
+//! The `tmg` command line.
+//!
+//! Subcommands:
+//!
+//! - `gen-data`  — generate the synthetic corpus shards
+//! - `train`     — run a training job from a TOML config (+ overrides)
+//! - `eval`      — evaluate a checkpoint on the validation split
+//! - `calibrate` — measure step/loader/memcpy costs on this machine
+//! - `simulate`  — regenerate Table 1 / the scaling study
+//! - `inspect`   — list artifacts, models and their ABI
+//!
+//! (Hand-rolled parsing: the offline crate set has no clap.)
+
+pub mod args;
+pub mod commands;
+
+use crate::error::{Error, Result};
+
+/// Simple stderr logger honouring TMG_LOG (error|warn|info|debug).
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _m: &log::Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:<5}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent).
+pub fn init_logging() {
+    let level = match std::env::var("TMG_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        _ => log::LevelFilter::Info,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+const USAGE: &str = "\
+tmg — Theano-multi-GPU reproduction (rust + jax + pallas)
+
+USAGE:
+  tmg gen-data  --dir DIR [--classes N] [--train N] [--val N]
+                [--shard N] [--hw N] [--seed N]
+  tmg train     --config FILE [--steps N] [--workers N] [--backend B]
+                [--loader parallel|serial] [--transport K] [--period N]
+                [--csv FILE]
+  tmg eval      --config FILE --checkpoint FILE
+  tmg calibrate [--artifacts DIR] [--runs N]
+  tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]
+  tmg inspect   [--artifacts DIR]
+  tmg help
+";
+
+/// Entry point used by main.rs; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    init_logging();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(2);
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "gen-data" => commands::gen_data::run(rest),
+        "train" => commands::train_cmd::run(rest),
+        "eval" => commands::eval_cmd::run(rest),
+        "calibrate" => commands::calibrate_cmd::run(rest),
+        "simulate" => commands::simulate_cmd::run(rest),
+        "inspect" => commands::inspect_cmd::run(rest),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => Err(Error::msg(format!("unknown command {other:?}; see `tmg help`"))),
+    }
+}

@@ -1,0 +1,126 @@
+//! Analytic transfer-cost model.
+//!
+//! Drives the discrete-event simulator's Table-1 regeneration: given a
+//! transport kind and payload size, predict the copy time on the
+//! paper's testbed-class hardware.  Defaults are PCIe-gen3-era figures
+//! (Titan Black / 2014): GPUDirect P2P under one switch sustains close
+//! to the x16 link, host-staged pays two hops at lower efficiency, and
+//! the multiprocessing path adds a serialize/deserialize stage at
+//! memory-bandwidth-bound pickle speeds.  `sim::calibrate` can rescale
+//! all rates from measured copies on the current machine.
+
+use crate::config::TransportKind;
+
+/// One link: fixed latency + linear byte cost.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkCost {
+    pub latency_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl LinkCost {
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+/// Full communication cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct CommCostModel {
+    /// Same-switch GPUDirect peer copy.
+    pub p2p: LinkCost,
+    /// Device->host or host->device copy (one hop).
+    pub host_hop: LinkCost,
+    /// Byte encode/decode rate for the serialized path.
+    pub codec_bytes_per_s: f64,
+}
+
+impl Default for CommCostModel {
+    fn default() -> Self {
+        CommCostModel {
+            // ~10.5 GB/s effective PCIe3 x16 P2P, 10 µs setup.
+            p2p: LinkCost { latency_s: 10e-6, bytes_per_s: 10.5e9 },
+            // ~6 GB/s effective pinned-memory hop, 15 µs setup.
+            host_hop: LinkCost { latency_s: 15e-6, bytes_per_s: 6.0e9 },
+            // ~1.8 GB/s pickle-ish encode.
+            codec_bytes_per_s: 1.8e9,
+        }
+    }
+}
+
+impl CommCostModel {
+    /// One-way transfer time of `bytes` over `kind`.
+    pub fn transfer_time(&self, kind: TransportKind, bytes: usize) -> f64 {
+        match kind {
+            TransportKind::P2p => self.p2p.transfer_time(bytes),
+            // d2h + h2d.
+            TransportKind::HostStaged => 2.0 * self.host_hop.transfer_time(bytes),
+            // encode + d2h + h2d + decode.
+            TransportKind::Serialized => {
+                2.0 * self.host_hop.transfer_time(bytes)
+                    + 2.0 * bytes as f64 / self.codec_bytes_per_s
+            }
+        }
+    }
+
+    /// Fig-2 round time: both directions overlap on independent links,
+    /// so the round is one transfer + the (memory-bound) average pass.
+    pub fn exchange_round_time(&self, kind: TransportKind, bytes: usize) -> f64 {
+        // Average pass: read peer + read/write local at ~8 GB/s.
+        let avg = bytes as f64 / 8.0e9;
+        self.transfer_time(kind, bytes) + avg
+    }
+
+    /// Uniform scale of all bandwidths (calibration hook).
+    pub fn scaled(&self, factor: f64) -> CommCostModel {
+        CommCostModel {
+            p2p: LinkCost {
+                latency_s: self.p2p.latency_s,
+                bytes_per_s: self.p2p.bytes_per_s * factor,
+            },
+            host_hop: LinkCost {
+                latency_s: self.host_hop.latency_s,
+                bytes_per_s: self.host_hop.bytes_per_s * factor,
+            },
+            codec_bytes_per_s: self.codec_bytes_per_s * factor,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_matches_the_paper() {
+        // §4.3/§4.4: P2P < host-staged < serialized for any real payload.
+        let m = CommCostModel::default();
+        let bytes = 245 * 1024 * 1024; // AlexNet params+momenta fp32
+        let p2p = m.transfer_time(TransportKind::P2p, bytes);
+        let host = m.transfer_time(TransportKind::HostStaged, bytes);
+        let ser = m.transfer_time(TransportKind::Serialized, bytes);
+        assert!(p2p < host && host < ser, "{p2p} {host} {ser}");
+    }
+
+    #[test]
+    fn latency_dominates_small_payloads() {
+        let m = CommCostModel::default();
+        let t = m.transfer_time(TransportKind::P2p, 64);
+        assert!(t < 2.0 * m.p2p.latency_s);
+    }
+
+    #[test]
+    fn linear_in_bytes() {
+        let m = CommCostModel::default();
+        let t1 = m.transfer_time(TransportKind::P2p, 1 << 20);
+        let t2 = m.transfer_time(TransportKind::P2p, 2 << 20);
+        let marginal = t2 - t1;
+        assert!((marginal - (1 << 20) as f64 / m.p2p.bytes_per_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaling_rescales() {
+        let m = CommCostModel::default().scaled(2.0);
+        assert!((m.p2p.bytes_per_s - 21.0e9).abs() < 1e6);
+    }
+}

@@ -1,0 +1,214 @@
+//! The Fig-2 exchange-and-average engine.
+//!
+//! Per round, on both workers symmetrically:
+//!
+//! 1. the local step produced fresh params/momenta (caller did this);
+//! 2. `flatten` + `send`, then `recv` the peer's state — the paper's
+//!    cross-GPU copy into the dedicated "peer" shared variable;
+//! 3. `average_with_flat` — both sides compute the same midpoint, so
+//!    replicas re-synchronize exactly.
+//!
+//! Sequence numbers implement the paper's §4.3 synchronization
+//! workaround: averaging against a stale round is detected, not
+//! silently computed.
+
+use crate::comm::link::Endpoint;
+use crate::error::Result;
+use crate::params::ParamStore;
+use crate::util::Timer;
+
+/// Timing/traffic summary of one exchange round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExchangeStats {
+    pub rounds: u64,
+    pub bytes_per_round: usize,
+    pub flatten_seconds: f64,
+    pub transfer_seconds: f64,
+    pub average_seconds: f64,
+}
+
+impl ExchangeStats {
+    pub fn total_seconds(&self) -> f64 {
+        self.flatten_seconds + self.transfer_seconds + self.average_seconds
+    }
+}
+
+/// One worker's handle on the pairwise exchange.
+pub struct ExchangePort {
+    endpoint: Endpoint,
+    seq: u64,
+    recv_buf: Vec<f32>,
+    /// Outgoing staging buffer; ping-pongs with `recv_buf` so the P2P
+    /// path performs zero allocations in steady state (§Perf).
+    flat_buf: Vec<f32>,
+    pub stats: ExchangeStats,
+}
+
+impl ExchangePort {
+    pub fn new(endpoint: Endpoint) -> Self {
+        ExchangePort {
+            endpoint,
+            seq: 0,
+            recv_buf: Vec::new(),
+            flat_buf: Vec::new(),
+            stats: ExchangeStats::default(),
+        }
+    }
+
+    /// Round counter (must advance in lockstep on both sides).
+    pub fn round(&self) -> u64 {
+        self.seq
+    }
+
+    /// Execute one Fig-2 round on this worker's store.
+    pub fn exchange(&mut self, store: &mut ParamStore, include_momentum: bool) -> Result<()> {
+        let t0 = Timer::start();
+        store.flatten_into(&mut self.flat_buf, include_momentum);
+        let bytes = self.flat_buf.len() * 4;
+        let t_flat = t0.elapsed_secs();
+
+        let t1 = Timer::start();
+        // P2P moves the staging buffer onto the wire (zero-copy); the
+        // buffer received from the peer becomes next round's staging
+        // buffer, so steady state allocates nothing.
+        let outgoing = std::mem::take(&mut self.flat_buf);
+        self.endpoint.send_vec(self.seq, outgoing)?;
+        self.endpoint.recv(self.seq, &mut self.recv_buf)?;
+        let t_xfer = t1.elapsed_secs();
+
+        let t2 = Timer::start();
+        store.average_with_flat(&self.recv_buf, include_momentum)?;
+        let t_avg = t2.elapsed_secs();
+        std::mem::swap(&mut self.flat_buf, &mut self.recv_buf);
+
+        self.stats.rounds += 1;
+        self.stats.bytes_per_round = bytes;
+        self.stats.flatten_seconds += t_flat;
+        self.stats.transfer_seconds += t_xfer;
+        self.stats.average_seconds += t_avg;
+        self.seq += 1;
+        Ok(())
+    }
+
+    /// Link-layer counters.
+    pub fn link_stats(&self) -> crate::comm::link::LinkStats {
+        self.endpoint.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::link::transport_pair;
+    use crate::config::TransportKind;
+    use crate::runtime::artifact::ParamManifestSpec;
+    use crate::tensor::Shape;
+
+    fn specs() -> Vec<ParamManifestSpec> {
+        vec![ParamManifestSpec {
+            name: "w".into(),
+            shape: Shape::of(&[64, 32]),
+            init: "normal".into(),
+            std: 0.1,
+            bias_value: 0.0,
+        }]
+    }
+
+    /// Drive both sides of an exchange from two threads.
+    fn run_symmetric(kind: TransportKind, rounds: usize, include_momentum: bool) -> (ParamStore, ParamStore) {
+        let (ea, eb) = transport_pair(kind);
+        let mut store_a = ParamStore::init(&specs(), 1);
+        let mut store_b = ParamStore::init(&specs(), 1);
+        // Desynchronize the replicas as local steps would.
+        for v in store_a.params[0].as_mut_slice() {
+            *v += 0.5;
+        }
+        for v in store_b.momenta[0].as_mut_slice() {
+            *v -= 0.25;
+        }
+        let hb = std::thread::spawn(move || {
+            let mut port = ExchangePort::new(eb);
+            for _ in 0..rounds {
+                port.exchange(&mut store_b, include_momentum).unwrap();
+            }
+            store_b
+        });
+        let mut port = ExchangePort::new(ea);
+        for _ in 0..rounds {
+            port.exchange(&mut store_a, include_momentum).unwrap();
+        }
+        assert_eq!(port.round(), rounds as u64);
+        (store_a, hb.join().unwrap())
+    }
+
+    #[test]
+    fn replicas_converge_after_one_round() {
+        for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
+            let (a, b) = run_symmetric(kind, 1, true);
+            assert!(
+                a.max_divergence(&b) < 1e-7,
+                "replicas disagree after exchange over {kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn average_is_midpoint() {
+        let (ea, eb) = transport_pair(TransportKind::P2p);
+        let mut a = ParamStore::init(&specs(), 1);
+        let mut b = ParamStore::init(&specs(), 1);
+        for v in a.params[0].as_mut_slice() {
+            *v = 1.0;
+        }
+        for v in b.params[0].as_mut_slice() {
+            *v = 3.0;
+        }
+        let hb = std::thread::spawn(move || {
+            let mut port = ExchangePort::new(eb);
+            port.exchange(&mut b, true).unwrap();
+            b
+        });
+        let mut port = ExchangePort::new(ea);
+        port.exchange(&mut a, true).unwrap();
+        let b = hb.join().unwrap();
+        assert!(a.params[0].as_slice().iter().all(|&v| (v - 2.0).abs() < 1e-7));
+        assert!(b.params[0].as_slice().iter().all(|&v| (v - 2.0).abs() < 1e-7));
+    }
+
+    #[test]
+    fn momentum_excluded_when_configured() {
+        let (a, b) = run_symmetric(TransportKind::P2p, 1, false);
+        // Params converge, momenta still differ.
+        let pdiff = crate::util::math::max_abs_diff(
+            a.params[0].as_slice(),
+            b.params[0].as_slice(),
+        );
+        let mdiff = crate::util::math::max_abs_diff(
+            a.momenta[0].as_slice(),
+            b.momenta[0].as_slice(),
+        );
+        assert!(pdiff < 1e-7);
+        assert!(mdiff > 0.1);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (a, _b) = run_symmetric(TransportKind::Serialized, 3, true);
+        let _ = a;
+        // run_symmetric asserts protocol success; stats sanity below on
+        // a fresh pair (the port from run_symmetric is consumed).
+        let (ea, eb) = transport_pair(TransportKind::P2p);
+        let mut sa = ParamStore::init(&specs(), 1);
+        let mut sb = ParamStore::init(&specs(), 1);
+        let hb = std::thread::spawn(move || {
+            let mut port = ExchangePort::new(eb);
+            port.exchange(&mut sb, true).unwrap();
+        });
+        let mut port = ExchangePort::new(ea);
+        port.exchange(&mut sa, true).unwrap();
+        hb.join().unwrap();
+        assert_eq!(port.stats.rounds, 1);
+        assert_eq!(port.stats.bytes_per_round, 64 * 32 * 2 * 4);
+        assert!(port.stats.total_seconds() > 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Paired transport endpoints.
+//!
+//! A message is `(seq, payload)`; `seq` lets the exchange protocol
+//! detect skew (a worker averaging against a stale round — exactly the
+//! hazard the paper hit with unsynchronized device-to-device copies,
+//! §4.3).  Three implementations differ in *real* work performed:
+//!
+//! | kind        | copies                 | extra work        |
+//! |-------------|------------------------|-------------------|
+//! | P2p         | 1 (payload -> wire)    | —                 |
+//! | HostStaged  | 2 (payload -> host staging -> wire) | —    |
+//! | Serialized  | 2 + byte encode/decode | f32<->LE bytes    |
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::config::TransportKind;
+use crate::error::{Error, Result};
+
+/// Wire format: either raw f32 vectors or encoded bytes.
+enum Wire {
+    Raw(u64, Vec<f32>),
+    Bytes(u64, Vec<u8>),
+}
+
+/// Per-endpoint traffic counters (E4 bench data).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LinkStats {
+    pub messages: u64,
+    pub bytes_sent: u64,
+    /// Host-side copies performed on the send path (P2p=1, staged=2).
+    pub send_copies: u64,
+    /// Seconds spent encoding/decoding (Serialized only).
+    pub codec_seconds: f64,
+}
+
+/// One side of a bidirectional link.
+pub struct Endpoint {
+    kind: TransportKind,
+    tx: Sender<Wire>,
+    rx: Receiver<Wire>,
+    staging: Vec<f32>,
+    pub stats: LinkStats,
+}
+
+/// Build a connected pair of endpoints of the given kind.
+pub fn transport_pair(kind: TransportKind) -> (Endpoint, Endpoint) {
+    let (tx_ab, rx_ab) = channel();
+    let (tx_ba, rx_ba) = channel();
+    (
+        Endpoint { kind, tx: tx_ab, rx: rx_ba, staging: Vec::new(), stats: LinkStats::default() },
+        Endpoint { kind, tx: tx_ba, rx: rx_ab, staging: Vec::new(), stats: LinkStats::default() },
+    )
+}
+
+impl Endpoint {
+    pub fn kind(&self) -> TransportKind {
+        self.kind
+    }
+
+    /// Send an owned payload tagged with `seq`.  On the P2P path the
+    /// buffer is *moved* onto the wire — zero copies, the GPUDirect
+    /// analog (§Perf: this is the exchange hot path; `send` below is
+    /// the borrowing convenience wrapper).
+    pub fn send_vec(&mut self, seq: u64, payload: Vec<f32>) -> Result<()> {
+        self.stats.messages += 1;
+        self.stats.bytes_sent += (payload.len() * 4) as u64;
+        if self.kind == TransportKind::P2p {
+            return self
+                .tx
+                .send(Wire::Raw(seq, payload))
+                .map_err(|_| Error::Protocol("peer endpoint dropped".into()));
+        }
+        self.stats.messages -= 1;
+        self.stats.bytes_sent -= (payload.len() * 4) as u64;
+        self.send(seq, &payload)
+    }
+
+    /// Send `payload` tagged with `seq`.
+    pub fn send(&mut self, seq: u64, payload: &[f32]) -> Result<()> {
+        self.stats.messages += 1;
+        self.stats.bytes_sent += (payload.len() * 4) as u64;
+        let wire = match self.kind {
+            TransportKind::P2p => {
+                // GPUDirect analog: one copy, device to device.
+                self.stats.send_copies += 1;
+                Wire::Raw(seq, payload.to_vec())
+            }
+            TransportKind::HostStaged => {
+                // d2h into the staging buffer, then h2d onto the wire.
+                self.staging.clear();
+                self.staging.extend_from_slice(payload);
+                self.stats.send_copies += 2;
+                Wire::Raw(seq, self.staging.clone())
+            }
+            TransportKind::Serialized => {
+                // The multiprocessing path: pickle-style byte encode.
+                let t = crate::util::Timer::start();
+                let mut bytes = Vec::with_capacity(payload.len() * 4);
+                for v in payload {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                self.stats.codec_seconds += t.elapsed_secs();
+                self.stats.send_copies += 2;
+                Wire::Bytes(seq, bytes)
+            }
+        };
+        self.tx
+            .send(wire)
+            .map_err(|_| Error::Protocol("peer endpoint dropped".into()))
+    }
+
+    /// Receive the message for `expected_seq` into `out`.
+    pub fn recv(&mut self, expected_seq: u64, out: &mut Vec<f32>) -> Result<()> {
+        let wire = self
+            .rx
+            .recv()
+            .map_err(|_| Error::Protocol("peer endpoint dropped".into()))?;
+        let (seq, n) = match wire {
+            Wire::Raw(seq, v) => {
+                // Take ownership of the wire buffer — no copy.
+                let n = v.len();
+                *out = v;
+                (seq, n)
+            }
+            Wire::Bytes(seq, bytes) => {
+                if bytes.len() % 4 != 0 {
+                    return Err(Error::Protocol("serialized payload not f32-aligned".into()));
+                }
+                let t = crate::util::Timer::start();
+                out.clear();
+                out.reserve(bytes.len() / 4);
+                for c in bytes.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                self.stats.codec_seconds += t.elapsed_secs();
+                (seq, bytes.len() / 4)
+            }
+        };
+        if seq != expected_seq {
+            return Err(Error::Protocol(format!(
+                "exchange skew: received round {seq}, expected {expected_seq} \
+                 (unsynchronized peer copy — the §4.3 hazard)"
+            )));
+        }
+        let _ = n;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(kind: TransportKind) {
+        let (mut a, mut b) = transport_pair(kind);
+        let payload: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        a.send(0, &payload).unwrap();
+        let mut out = Vec::new();
+        b.recv(0, &mut out).unwrap();
+        assert_eq!(out, payload);
+        // Reverse direction.
+        b.send(0, &payload).unwrap();
+        a.recv(0, &mut out).unwrap();
+        assert_eq!(out, payload);
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        roundtrip(TransportKind::P2p);
+        roundtrip(TransportKind::HostStaged);
+        roundtrip(TransportKind::Serialized);
+    }
+
+    #[test]
+    fn seq_skew_detected() {
+        let (mut a, mut b) = transport_pair(TransportKind::P2p);
+        a.send(3, &[1.0]).unwrap();
+        let mut out = Vec::new();
+        let err = b.recv(4, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)));
+    }
+
+    #[test]
+    fn stats_reflect_path_costs() {
+        let payload = vec![1.0f32; 256];
+        let (mut p, _pb) = transport_pair(TransportKind::P2p);
+        p.send(0, &payload).unwrap();
+        assert_eq!(p.stats.send_copies, 1);
+        assert_eq!(p.stats.bytes_sent, 1024);
+        assert_eq!(p.stats.codec_seconds, 0.0);
+
+        let (mut h, _hb) = transport_pair(TransportKind::HostStaged);
+        h.send(0, &payload).unwrap();
+        assert_eq!(h.stats.send_copies, 2);
+
+        let (mut s, mut sb) = transport_pair(TransportKind::Serialized);
+        s.send(0, &payload).unwrap();
+        let mut out = Vec::new();
+        sb.recv(0, &mut out).unwrap();
+        assert_eq!(s.stats.send_copies, 2);
+        assert!(s.stats.codec_seconds >= 0.0);
+    }
+
+    #[test]
+    fn dropped_peer_errors() {
+        let (mut a, b) = transport_pair(TransportKind::P2p);
+        drop(b);
+        assert!(a.send(0, &[1.0]).is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Inter-replica communication: the paper's §2.2/§4.3 machinery.
+//!
+//! - [`link`]: paired endpoints with three copy paths — `P2p`
+//!   (GPUDirect analog: one staged copy), `HostStaged` (bounce through
+//!   host memory, the cross-switch fallback of §4.4) and `Serialized`
+//!   (the `multiprocessing` pickle path of §4.3: encode + copy +
+//!   decode).  The paths do genuinely different amounts of work, so
+//!   the E4 bench measures real cost ratios.
+//! - [`exchange`]: the Fig-2 engine — 3-step exchange-and-average of
+//!   params (+ momenta) with sequence-number protocol checking (the
+//!   paper's CUDA-context-sync workaround).
+//! - [`barrier`]: timed step barrier.
+//! - [`ring`]: chunked ring all-reduce — the N-GPU extension the paper
+//!   leaves as future work (§4.4), used by the E5 scaling study.
+//! - [`cost`]: analytic transfer-time model, calibrated by `sim`.
+
+pub mod barrier;
+pub mod cost;
+pub mod exchange;
+pub mod link;
+pub mod ring;
+
+pub use barrier::TimedBarrier;
+pub use cost::{CommCostModel, LinkCost};
+pub use exchange::{ExchangePort, ExchangeStats};
+pub use link::{transport_pair, Endpoint, LinkStats};
+pub use ring::RingNode;

@@ -1,0 +1,201 @@
+//! Chunked ring all-reduce (average) — the N-GPU extension.
+//!
+//! The paper's pairwise exchange does not scale past 2 GPUs (§4.4,
+//! "situations involved with more GPUs are discussed in Krizhevsky
+//! (2014)"); this module implements the standard bandwidth-optimal
+//! ring from that reference: N-1 reduce-scatter rounds + N-1
+//! all-gather rounds over equal chunks, then divide by N.  Used by the
+//! E5 scaling study and available to the coordinator for `workers > 2`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::error::{Error, Result};
+use crate::params::average::{accumulate, scale_in_place};
+
+/// One rank's handle: a sender to the next rank and receiver from the
+/// previous rank.
+pub struct RingNode {
+    pub rank: usize,
+    pub n: usize,
+    tx_next: Sender<(u64, usize, Vec<f32>)>,
+    rx_prev: Receiver<(u64, usize, Vec<f32>)>,
+    round: u64,
+    pub bytes_sent: u64,
+}
+
+/// Build a ring of N connected nodes.
+pub fn ring(n: usize) -> Vec<RingNode> {
+    assert!(n >= 2);
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    // Node i sends to (i+1) % n, so it owns txs[(i+1)%n]'s sender side.
+    let mut nodes: Vec<Option<RingNode>> = (0..n).map(|_| None).collect();
+    let mut rx_iter: Vec<Option<Receiver<_>>> = rxs.into_iter().map(Some).collect();
+    for i in 0..n {
+        let tx_next = txs[(i + 1) % n].clone();
+        let rx_prev = rx_iter[i].take().unwrap();
+        nodes[i] = Some(RingNode {
+            rank: i,
+            n,
+            tx_next,
+            rx_prev,
+            round: 0,
+            bytes_sent: 0,
+        });
+    }
+    nodes.into_iter().map(|n| n.unwrap()).collect()
+}
+
+/// Chunk boundaries: N nearly-equal spans covering `len`.
+fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut off = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < rem);
+        out.push((off, off + sz));
+        off += sz;
+    }
+    out
+}
+
+impl RingNode {
+    /// All-reduce `data` to the elementwise mean across ranks.
+    /// Every rank must call this with identically-sized buffers.
+    pub fn allreduce_average(&mut self, data: &mut [f32]) -> Result<()> {
+        let n = self.n;
+        let bounds = chunk_bounds(data.len(), n);
+        self.round += 1;
+        let tag = self.round;
+
+        // Reduce-scatter: after n-1 steps, chunk (rank+1)%n holds the sum.
+        for step in 0..n - 1 {
+            let send_chunk = (self.rank + n - step) % n;
+            let (s0, s1) = bounds[send_chunk];
+            self.send(tag, send_chunk, data[s0..s1].to_vec())?;
+            let (seq, idx, payload) = self.recv()?;
+            self.check(seq, tag, idx, (self.rank + n - step - 1) % n)?;
+            let (r0, r1) = bounds[idx];
+            accumulate(&mut data[r0..r1], &payload);
+        }
+        // All-gather: circulate the completed chunks.
+        for step in 0..n - 1 {
+            let send_chunk = (self.rank + 1 + n - step) % n;
+            let (s0, s1) = bounds[send_chunk];
+            self.send(tag, send_chunk, data[s0..s1].to_vec())?;
+            let (seq, idx, payload) = self.recv()?;
+            self.check(seq, tag, idx, (self.rank + n - step) % n)?;
+            let (r0, r1) = bounds[idx];
+            data[r0..r1].copy_from_slice(&payload);
+        }
+        scale_in_place(data, 1.0 / n as f32);
+        Ok(())
+    }
+
+    fn send(&mut self, seq: u64, idx: usize, payload: Vec<f32>) -> Result<()> {
+        self.bytes_sent += (payload.len() * 4) as u64;
+        self.tx_next
+            .send((seq, idx, payload))
+            .map_err(|_| Error::Protocol("ring neighbour dropped".into()))
+    }
+
+    fn recv(&mut self) -> Result<(u64, usize, Vec<f32>)> {
+        self.rx_prev
+            .recv()
+            .map_err(|_| Error::Protocol("ring neighbour dropped".into()))
+    }
+
+    fn check(&self, seq: u64, tag: u64, idx: usize, expect_idx: usize) -> Result<()> {
+        if seq != tag {
+            return Err(Error::Protocol(format!(
+                "ring round skew: got {seq}, expected {tag}"
+            )));
+        }
+        if idx != expect_idx {
+            return Err(Error::Protocol(format!(
+                "ring chunk skew: got chunk {idx}, expected {expect_idx}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_ring(n: usize, len: usize) -> Vec<Vec<f32>> {
+        let nodes = ring(n);
+        let mut joins = Vec::new();
+        for (r, mut node) in nodes.into_iter().enumerate() {
+            joins.push(std::thread::spawn(move || {
+                // Rank r holds the constant vector r+1.
+                let mut data = vec![(r + 1) as f32; len];
+                node.allreduce_average(&mut data).unwrap();
+                data
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn averages_across_ranks() {
+        for n in [2, 3, 4, 8] {
+            let out = run_ring(n, 37); // non-divisible length
+            let want = (1..=n).sum::<usize>() as f32 / n as f32;
+            for (r, d) in out.iter().enumerate() {
+                assert_eq!(d.len(), 37);
+                for &v in d {
+                    assert!((v - want).abs() < 1e-5, "rank {r}: {v} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_handles_tiny_buffers() {
+        let out = run_ring(4, 3); // fewer elements than some chunks
+        for d in out {
+            for &v in &d {
+                assert!((v - 2.5).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_cover() {
+        let b = chunk_bounds(10, 3);
+        assert_eq!(b, vec![(0, 4), (4, 7), (7, 10)]);
+        let b = chunk_bounds(3, 4);
+        assert_eq!(b.last().unwrap().1, 3);
+    }
+
+    #[test]
+    fn bandwidth_counter_matches_theory() {
+        // Ring moves 2*(n-1)/n of the buffer per rank.
+        let n = 4;
+        let len = 1024;
+        let nodes = ring(n);
+        let joins: Vec<_> = nodes
+            .into_iter()
+            .map(|mut node| {
+                std::thread::spawn(move || {
+                    let mut data = vec![1.0f32; len];
+                    node.allreduce_average(&mut data).unwrap();
+                    node.bytes_sent
+                })
+            })
+            .collect();
+        for j in joins {
+            let sent = j.join().unwrap() as usize;
+            let theory = 2 * (n - 1) * (len / n) * 4;
+            assert_eq!(sent, theory);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Configuration system: a TOML-subset parser plus typed experiment
+//! configs with validation.
+//!
+//! `tmg train --config experiments/tiny2gpu.toml` drives everything the
+//! paper's scripts hard-coded: model/backend/batch selection, worker
+//! count, exchange transport and period, loader mode, LR schedule,
+//! dataset location and sizes.
+
+mod toml;
+mod types;
+
+pub use toml::TomlDoc;
+pub use types::{
+    ClusterConfig, DataConfig, ExchangeCfg, LoaderMode, LrSchedule, TrainConfig,
+    TransportKind,
+};

@@ -1,0 +1,280 @@
+//! Minimal TOML-subset parser (offline crate set has no `toml`).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!
+//! - `[section]` and `[nested.section]` headers
+//! - `key = "string" | integer | float | true/false | [scalar, ...]`
+//! - `#` comments, blank lines
+//!
+//! Unsupported (rejected loudly): inline tables, arrays-of-tables,
+//! multi-line strings, datetimes.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section -> key -> value`.  Top-level keys live
+/// under the empty-string section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        doc.sections.entry(current.clone()).or_default();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| cfg_err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() || name.starts_with('[') {
+                    return Err(cfg_err(lineno, "bad section header"));
+                }
+                current = name.to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| cfg_err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(cfg_err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let section = doc.sections.get_mut(&current).unwrap();
+            if section.insert(key.to_string(), value).is_some() {
+                return Err(cfg_err(lineno, &format!("duplicate key {key:?}")));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        let src = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        Self::parse(&src)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Typed getters with defaults — the shape every config loader wants.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn cfg_err(lineno: usize, msg: &str) -> Error {
+    Error::Config(format!("line {}: {msg}", lineno + 1))
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(cfg_err(lineno, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| cfg_err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(cfg_err(lineno, "embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| cfg_err(lineno, "unterminated array"))?
+            .trim();
+        let mut items = Vec::new();
+        if !inner.is_empty() {
+            for part in split_array_items(inner) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(cfg_err(lineno, &format!("cannot parse value {s:?}")))
+}
+
+/// Split array items on top-level commas (strings may contain commas).
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"
+# experiment config
+name = "tiny-2gpu"
+steps = 400
+
+[training]
+lr = 0.01
+momentum = 0.9
+use_parallel_loading = true
+milestones = [100, 200, 300]
+
+[cluster.links]
+kind = "p2p"
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.get("", "name").unwrap().as_str(), Some("tiny-2gpu"));
+        assert_eq!(d.get("", "steps").unwrap().as_i64(), Some(400));
+        assert_eq!(d.get("training", "lr").unwrap().as_f64(), Some(0.01));
+        assert_eq!(d.get("training", "use_parallel_loading").unwrap().as_bool(), Some(true));
+        assert_eq!(d.get("cluster.links", "kind").unwrap().as_str(), Some("p2p"));
+        let arr = match d.get("training", "milestones").unwrap() {
+            TomlValue::Array(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn defaults() {
+        let d = TomlDoc::parse(DOC).unwrap();
+        assert_eq!(d.i64_or("training", "zzz", 7), 7);
+        assert_eq!(d.str_or("", "name", "x"), "tiny-2gpu");
+        assert_eq!(d.f64_or("training", "lr", 1.0), 0.01);
+        assert!(!d.bool_or("", "nope", false));
+    }
+
+    #[test]
+    fn comment_handling() {
+        let d = TomlDoc::parse("a = \"x # not comment\" # real comment").unwrap();
+        assert_eq!(d.get("", "a").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn int_in_float_position() {
+        let d = TomlDoc::parse("lr = 1").unwrap();
+        assert_eq!(d.f64_or("", "lr", 0.0), 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("k = zzz").is_err());
+    }
+}

@@ -1,0 +1,368 @@
+//! Typed experiment configuration, loaded from the TOML subset.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::toml::{TomlDoc, TomlValue};
+use crate::error::{Error, Result};
+
+/// How minibatches reach the trainer (paper Fig 1 vs the baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoaderMode {
+    /// Loading overlapped with compute in a separate thread (Fig 1).
+    Parallel,
+    /// Load-then-train in the training thread (the "No" rows of Table 1).
+    Serial,
+}
+
+impl LoaderMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "parallel" => Ok(LoaderMode::Parallel),
+            "serial" => Ok(LoaderMode::Serial),
+            _ => Err(Error::Config(format!("loader mode {s:?} (want parallel|serial)"))),
+        }
+    }
+}
+
+/// Inter-replica copy path (paper §2.2 / §4.3 / §4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// GPUDirect peer-to-peer analog: direct move, no staging copy.
+    P2p,
+    /// Through host memory (GPUs on different switches, §4.4).
+    HostStaged,
+    /// `multiprocessing`-style: serialize + copy through host (§4.3).
+    Serialized,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "p2p" => Ok(TransportKind::P2p),
+            "host" | "host_staged" => Ok(TransportKind::HostStaged),
+            "serialized" | "multiprocessing" => Ok(TransportKind::Serialized),
+            _ => Err(Error::Config(format!(
+                "transport {s:?} (want p2p|host_staged|serialized)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::P2p => "p2p",
+            TransportKind::HostStaged => "host_staged",
+            TransportKind::Serialized => "serialized",
+        }
+    }
+}
+
+/// Exchange-and-average settings (Fig 2).
+#[derive(Clone, Debug)]
+pub struct ExchangeCfg {
+    pub transport: TransportKind,
+    /// Exchange every `period` steps (1 = the paper's every-step scheme;
+    /// >1 is the E6 ablation).
+    pub period: usize,
+    /// Whether momenta are exchanged along with weights (paper: yes).
+    pub include_momentum: bool,
+}
+
+impl Default for ExchangeCfg {
+    fn default() -> Self {
+        ExchangeCfg { transport: TransportKind::P2p, period: 1, include_momentum: true }
+    }
+}
+
+/// Step-decay learning-rate schedule (AlexNet's "divide by 10 when the
+/// validation error plateaus", expressed as fixed milestones).
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub decay_factor: f32,
+    pub milestones: Vec<usize>,
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        let decays = self.milestones.iter().filter(|&&m| step >= m).count();
+        self.base_lr * self.decay_factor.powi(decays as i32)
+    }
+}
+
+impl Default for LrSchedule {
+    fn default() -> Self {
+        LrSchedule { base_lr: 0.01, decay_factor: 0.1, milestones: vec![] }
+    }
+}
+
+/// Dataset location + sizes.
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub dir: PathBuf,
+    pub train_examples: usize,
+    pub val_examples: usize,
+    pub shard_examples: usize,
+    pub seed: u64,
+    /// Stored image edge; training crops to the model's input edge.
+    pub stored_hw: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            dir: PathBuf::from("data/synth"),
+            train_examples: 8_192,
+            val_examples: 1_024,
+            shard_examples: 1_024,
+            seed: 1234,
+            stored_hw: 72,
+        }
+    }
+}
+
+/// Worker topology (which virtual GPU sits on which PCIe switch).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    /// switch id per worker; same id => P2P-eligible (paper §4.4).
+    pub switch_of_worker: Vec<usize>,
+}
+
+impl ClusterConfig {
+    pub fn single() -> Self {
+        ClusterConfig { workers: 1, switch_of_worker: vec![0] }
+    }
+
+    pub fn pair_same_switch() -> Self {
+        ClusterConfig { workers: 2, switch_of_worker: vec![0, 0] }
+    }
+
+    pub fn pair_cross_switch() -> Self {
+        ClusterConfig { workers: 2, switch_of_worker: vec![0, 1] }
+    }
+}
+
+/// Everything `tmg train` needs.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub name: String,
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub backend: String,
+    pub batch_per_worker: usize,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub seed: u64,
+    pub loader_mode: LoaderMode,
+    pub exchange: ExchangeCfg,
+    pub schedule: LrSchedule,
+    pub data: DataConfig,
+    pub cluster: ClusterConfig,
+    pub checkpoint_dir: Option<PathBuf>,
+    pub metrics_csv: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            name: "default".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "alexnet-tiny".into(),
+            backend: "refconv".into(),
+            batch_per_worker: 16,
+            steps: 200,
+            eval_every: 0,
+            log_every: 20,
+            seed: 42,
+            loader_mode: LoaderMode::Parallel,
+            exchange: ExchangeCfg::default(),
+            schedule: LrSchedule::default(),
+            data: DataConfig::default(),
+            cluster: ClusterConfig::pair_same_switch(),
+            checkpoint_dir: None,
+            metrics_csv: None,
+        }
+    }
+}
+
+fn usize_list(doc: &TomlDoc, section: &str, key: &str) -> Result<Vec<usize>> {
+    match doc.get(section, key) {
+        None => Ok(vec![]),
+        Some(TomlValue::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_i64()
+                    .filter(|&i| i >= 0)
+                    .map(|i| i as usize)
+                    .ok_or_else(|| Error::Config(format!("{section}.{key}: non-integer item")))
+            })
+            .collect(),
+        Some(_) => Err(Error::Config(format!("{section}.{key}: expected array"))),
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML file; unknown keys are ignored, missing keys
+    /// fall back to the defaults above.
+    pub fn load(path: &Path) -> Result<TrainConfig> {
+        let doc = TomlDoc::load(path)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let workers = doc.i64_or("cluster", "workers", 2).max(1) as usize;
+        let switches = usize_list(doc, "cluster", "switch_of_worker")?;
+        let switch_of_worker = if switches.is_empty() {
+            vec![0; workers]
+        } else if switches.len() == workers {
+            switches
+        } else {
+            return Err(Error::Config(format!(
+                "cluster.switch_of_worker has {} entries for {} workers",
+                switches.len(),
+                workers
+            )));
+        };
+
+        let cfg = TrainConfig {
+            name: doc.str_or("", "name", &d.name),
+            artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
+            model: doc.str_or("model", "name", &d.model),
+            backend: doc.str_or("model", "backend", &d.backend),
+            batch_per_worker: doc.i64_or("training", "batch_per_worker", 16) as usize,
+            steps: doc.i64_or("training", "steps", d.steps as i64) as usize,
+            eval_every: doc.i64_or("training", "eval_every", 0) as usize,
+            log_every: doc.i64_or("training", "log_every", 20) as usize,
+            seed: doc.i64_or("training", "seed", 42) as u64,
+            loader_mode: LoaderMode::parse(&doc.str_or("training", "loader", "parallel"))?,
+            exchange: ExchangeCfg {
+                transport: TransportKind::parse(&doc.str_or("exchange", "transport", "p2p"))?,
+                period: doc.i64_or("exchange", "period", 1).max(1) as usize,
+                include_momentum: doc.bool_or("exchange", "include_momentum", true),
+            },
+            schedule: LrSchedule {
+                base_lr: doc.f64_or("training", "lr", 0.01) as f32,
+                decay_factor: doc.f64_or("training", "lr_decay", 0.1) as f32,
+                milestones: usize_list(doc, "training", "lr_milestones")?,
+            },
+            data: DataConfig {
+                dir: PathBuf::from(doc.str_or("data", "dir", "data/synth")),
+                train_examples: doc.i64_or("data", "train_examples", 8192) as usize,
+                val_examples: doc.i64_or("data", "val_examples", 1024) as usize,
+                shard_examples: doc.i64_or("data", "shard_examples", 1024) as usize,
+                seed: doc.i64_or("data", "seed", 1234) as u64,
+                stored_hw: doc.i64_or("data", "stored_hw", 72) as usize,
+            },
+            cluster: ClusterConfig { workers, switch_of_worker },
+            checkpoint_dir: doc
+                .get("training", "checkpoint_dir")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from),
+            metrics_csv: doc
+                .get("training", "metrics_csv")
+                .and_then(|v| v.as_str())
+                .map(PathBuf::from),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_per_worker == 0 {
+            return Err(Error::Config("batch_per_worker must be > 0".into()));
+        }
+        if self.cluster.workers == 0 || self.cluster.workers > 64 {
+            return Err(Error::Config("workers must be in 1..=64".into()));
+        }
+        if self.cluster.switch_of_worker.len() != self.cluster.workers {
+            return Err(Error::Config("switch_of_worker length != workers".into()));
+        }
+        if self.exchange.period == 0 {
+            return Err(Error::Config("exchange.period must be >= 1".into()));
+        }
+        if self.data.shard_examples == 0 {
+            return Err(Error::Config("data.shard_examples must be > 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Artifact name this config resolves to (manifest lookup key).
+    pub fn train_artifact_name(&self) -> String {
+        format!("train_{}_{}_b{}", self.model, self.backend, self.batch_per_worker)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn lr_schedule_decays() {
+        let s = LrSchedule { base_lr: 0.1, decay_factor: 0.1, milestones: vec![10, 20] };
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(9), 0.1);
+        assert!((s.lr_at(10) - 0.01).abs() < 1e-9);
+        assert!((s.lr_at(25) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn load_from_doc() {
+        let doc = TomlDoc::parse(
+            r#"
+name = "exp1"
+[model]
+name = "alexnet-micro"
+backend = "cudnn_r2"
+[training]
+batch_per_worker = 8
+steps = 40
+lr = 0.05
+lr_milestones = [20]
+loader = "serial"
+[exchange]
+transport = "host_staged"
+period = 2
+[cluster]
+workers = 2
+switch_of_worker = [0, 1]
+"#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "exp1");
+        assert_eq!(cfg.backend, "cudnn_r2");
+        assert_eq!(cfg.loader_mode, LoaderMode::Serial);
+        assert_eq!(cfg.exchange.transport, TransportKind::HostStaged);
+        assert_eq!(cfg.exchange.period, 2);
+        assert_eq!(cfg.cluster.switch_of_worker, vec![0, 1]);
+        assert_eq!(cfg.train_artifact_name(), "train_alexnet-micro_cudnn_r2_b8");
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let doc = TomlDoc::parse("[cluster]\nworkers = 2\nswitch_of_worker = [0]").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse("[training]\nloader = \"warp\"").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse("[exchange]\ntransport = \"carrier-pigeon\"").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn transport_parse_names() {
+        for (s, k) in [
+            ("p2p", TransportKind::P2p),
+            ("host_staged", TransportKind::HostStaged),
+            ("multiprocessing", TransportKind::Serialized),
+        ] {
+            assert_eq!(TransportKind::parse(s).unwrap(), k);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Validation evaluation: center-crop, no flip, top-1/top-5 counts.
+//!
+//! Mirrors the paper's §3 measurement ("top-1 class validation error
+//! rate is 42.6%, top-5 is 19.9%") on the substituted corpus.
+
+use crate::config::TrainConfig;
+use crate::data::loader::{BatchSource, LoaderCfg, SerialLoader};
+use crate::error::Result;
+use crate::params::ParamStore;
+use crate::runtime::literal_bridge::{
+    i32_to_literal, literal_f32, literal_i32, tensor_to_literal,
+};
+use crate::runtime::StepExecutable;
+
+/// Aggregate eval result.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalResult {
+    pub examples: usize,
+    pub mean_loss: f32,
+    pub top1_correct: usize,
+    pub top5_correct: usize,
+}
+
+impl EvalResult {
+    pub fn top1_error(&self) -> f32 {
+        1.0 - self.top1_correct as f32 / self.examples.max(1) as f32
+    }
+
+    pub fn top5_error(&self) -> f32 {
+        1.0 - self.top5_correct as f32 / self.examples.max(1) as f32
+    }
+}
+
+/// Run the eval executable over (a prefix of) the validation split.
+///
+/// `max_batches = 0` means the full split (floor to whole batches —
+/// the fixed-batch compiled function cannot take a ragged tail).
+pub fn evaluate(
+    cfg: &TrainConfig,
+    eval_exe: &StepExecutable,
+    store: &ParamStore,
+    crop_hw: usize,
+    max_batches: usize,
+) -> Result<EvalResult> {
+    let batch = eval_exe.spec.batch_size;
+    let lcfg = LoaderCfg {
+        data_dir: &cfg.data.dir,
+        split: "val",
+        batch,
+        crop_hw,
+        worker: 0,
+        workers: 1,
+        seed: cfg.seed,
+        train_augment: false, // center crop, no flip
+        verify_shards: false,
+    };
+    let mut loader = SerialLoader::new(&lcfg)?;
+    let total_batches = cfg.data.val_examples / batch;
+    let n_batches = if max_batches == 0 {
+        total_batches
+    } else {
+        total_batches.min(max_batches)
+    };
+
+    let mut out = EvalResult::default();
+    let mut loss_sum = 0f64;
+    for _ in 0..n_batches {
+        let b = loader.next_batch()?;
+        let mut inputs = Vec::with_capacity(2 + store.n_tensors());
+        inputs.push(tensor_to_literal(&b.images)?);
+        inputs.push(i32_to_literal(&b.labels)?);
+        for p in &store.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        let outs = eval_exe.run(&inputs)?;
+        loss_sum += literal_f32(&outs[0])? as f64;
+        out.top1_correct += literal_i32(&outs[1])? as usize;
+        out.top5_correct += literal_i32(&outs[2])? as usize;
+        out.examples += b.labels.len();
+    }
+    out.mean_loss = if n_batches > 0 { (loss_sum / n_batches as f64) as f32 } else { 0.0 };
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_rates() {
+        let r = EvalResult { examples: 200, mean_loss: 1.0, top1_correct: 80, top5_correct: 150 };
+        assert!((r.top1_error() - 0.6).abs() < 1e-6);
+        assert!((r.top5_error() - 0.25).abs() < 1e-6);
+        let empty = EvalResult::default();
+        assert_eq!(empty.top1_error(), 1.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The training coordinator — the paper's system contribution, L3.
+//!
+//! [`worker`] is one replica: a thread owning a PJRT client, compiled
+//! train/eval steps, its parameter store, a (serial or Fig-1 parallel)
+//! loader and one side of the exchange fabric.  [`trainer`] wires N
+//! workers together — pairwise Fig-2 exchange for the paper's N=2,
+//! ring all-reduce beyond — runs the step loop, logs Table-1-style
+//! per-20-iteration windows, evaluates and checkpoints.
+
+pub mod eval;
+pub mod trainer;
+pub mod worker;
+
+pub use trainer::{train, TrainSummary, WindowRecord};
+pub use worker::{CommFabric, StepRecord};

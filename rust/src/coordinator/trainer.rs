@@ -1,0 +1,216 @@
+//! The leader: spawns workers, wires the exchange fabric, aggregates
+//! metrics, evaluates and checkpoints.
+//!
+//! Topology-aware transport selection reproduces §4.4: if the config
+//! asks for P2P but the two workers sit on different PCIe switches,
+//! the fabric silently falls back to host-staged copies — exactly what
+//! the hardware would force.
+
+use std::sync::mpsc::channel;
+
+use crate::comm::exchange::ExchangePort;
+use crate::comm::link::transport_pair;
+use crate::comm::ring::ring;
+use crate::config::{TrainConfig, TransportKind};
+use crate::coordinator::eval::{evaluate, EvalResult};
+use crate::coordinator::worker::{run_worker, CommFabric, StepRecord, WorkerSpec};
+use crate::data::loader::LoaderStats;
+use crate::error::{Error, Result};
+use crate::interconnect::topology::PcieTopology;
+use crate::metrics::{CsvWriter, ThroughputMeter};
+use crate::runtime::{Manifest, RuntimeClient};
+use crate::util::Timer;
+
+/// One closed 20-iteration window (Table 1's unit).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowRecord {
+    pub end_step: usize,
+    pub seconds: f64,
+    pub images_per_sec: f64,
+    pub mean_loss: f32,
+}
+
+/// Aggregate training outcome.
+#[derive(Debug)]
+pub struct TrainSummary {
+    pub steps: usize,
+    pub workers: usize,
+    pub wall_seconds: f64,
+    pub windows: Vec<WindowRecord>,
+    pub losses: Vec<f32>,
+    pub loader: Vec<LoaderStats>,
+    pub exchange_rounds: u64,
+    pub exchange_seconds: f64,
+    pub compute_seconds: f64,
+    pub final_divergence: f32,
+    pub eval: Option<EvalResult>,
+    /// Mean seconds per 20 iterations (the paper's headline unit).
+    pub secs_per_20_iters: f64,
+}
+
+/// Resolve the effective transport per the PCIe topology (§4.4 rule).
+pub fn effective_transport(cfg: &TrainConfig) -> TransportKind {
+    if cfg.cluster.workers != 2 {
+        return cfg.exchange.transport;
+    }
+    let topo = PcieTopology {
+        switches: cfg.cluster.switch_of_worker.iter().max().unwrap_or(&0) + 1,
+        switch_of_device: cfg.cluster.switch_of_worker.clone(),
+    };
+    match (cfg.exchange.transport, topo.p2p_allowed(0, 1)) {
+        (TransportKind::P2p, Ok(false)) => {
+            log::warn!(
+                "workers on different PCIe switches: falling back to host-staged \
+                 copies (paper §4.4)"
+            );
+            TransportKind::HostStaged
+        }
+        (kind, _) => kind,
+    }
+}
+
+/// Run a full training job per the config.
+pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
+    cfg.validate()?;
+    let workers = cfg.cluster.workers;
+    let transport = effective_transport(cfg);
+
+    // Build the exchange fabric (endpoints move into the threads).
+    let mut fabrics: Vec<CommFabric> = Vec::with_capacity(workers);
+    if workers == 1 {
+        fabrics.push(CommFabric::None);
+    } else if workers == 2 {
+        let (a, b) = transport_pair(transport);
+        fabrics.push(CommFabric::Pair(ExchangePort::new(a)));
+        fabrics.push(CommFabric::Pair(ExchangePort::new(b)));
+    } else {
+        for node in ring(workers) {
+            fabrics.push(CommFabric::Ring(node));
+        }
+    }
+
+    let (tx, rx) = channel::<StepRecord>();
+    let wall = Timer::start();
+
+    // Spawn the replicas.
+    let mut joins = Vec::with_capacity(workers);
+    for (w, fabric) in fabrics.into_iter().enumerate() {
+        let spec = WorkerSpec {
+            worker: w,
+            cfg: cfg.clone(),
+            fabric,
+            reports: tx.clone(),
+            restore: None,
+        };
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("tmg-worker-{w}"))
+                .spawn(move || run_worker(spec))
+                .map_err(Error::RawIo)?,
+        );
+    }
+    drop(tx);
+
+    // Leader loop: aggregate per-step reports into windows + CSV.
+    let mut meter = ThroughputMeter::new(20);
+    let mut windows = Vec::new();
+    let mut losses = Vec::new();
+    let mut window_losses: Vec<f32> = Vec::new();
+    let mut csv = match &cfg.metrics_csv {
+        Some(p) => Some(CsvWriter::create(
+            p,
+            &["step", "worker", "loss", "correct1", "lr", "step_secs", "exchange_secs"],
+        )?),
+        None => None,
+    };
+    while let Ok(rec) = rx.recv() {
+        if let Some(c) = csv.as_mut() {
+            c.row(&[
+                rec.step.to_string(),
+                rec.worker.to_string(),
+                format!("{:.6}", rec.loss),
+                rec.correct1.to_string(),
+                format!("{:.6}", rec.lr),
+                format!("{:.6}", rec.step_seconds),
+                format!("{:.6}", rec.exchange_seconds),
+            ])?;
+        }
+        if rec.worker == 0 {
+            losses.push(rec.loss);
+            window_losses.push(rec.loss);
+            // Window images: all workers advance together.
+            if let Some(secs) = meter.step(rec.batch * workers) {
+                let mean_loss =
+                    window_losses.iter().sum::<f32>() / window_losses.len().max(1) as f32;
+                windows.push(WindowRecord {
+                    end_step: rec.step + 1,
+                    seconds: secs,
+                    images_per_sec: meter.last_images_per_sec,
+                    mean_loss,
+                });
+                if cfg.log_every > 0 {
+                    log::info!(
+                        "step {:>5}  loss {:.4}  {:>7.1} img/s  {:.2}s/20it",
+                        rec.step + 1,
+                        mean_loss,
+                        meter.last_images_per_sec,
+                        secs
+                    );
+                }
+                window_losses.clear();
+            }
+        }
+    }
+
+    // Join replicas and cross-check the Fig-2 invariant.
+    let mut outcomes = Vec::with_capacity(workers);
+    for j in joins {
+        outcomes.push(j.join().map_err(|_| Error::msg("worker thread panicked"))??);
+    }
+    outcomes.sort_by_key(|o| o.worker);
+
+    let final_divergence = if workers >= 2 && cfg.exchange.period == 1 && cfg.exchange.include_momentum
+    {
+        outcomes[0].store.max_divergence(&outcomes[1].store)
+    } else if workers >= 2 {
+        outcomes[0].store.max_divergence(&outcomes[1].store)
+    } else {
+        0.0
+    };
+
+    // Checkpoint replica 0 (post-exchange replicas agree).
+    if let Some(dir) = &cfg.checkpoint_dir {
+        let path = dir.join(format!("{}_step{}.ckpt", cfg.name, cfg.steps));
+        crate::params::save_checkpoint(&path, &outcomes[0].store, cfg.steps as u64)?;
+        log::info!("checkpoint written to {path:?}");
+    }
+
+    // Final evaluation on the validation split, if an eval artifact exists.
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let eval = match manifest.eval_artifact_for(&cfg.model) {
+        Some(spec) if cfg.data.val_examples >= spec.batch_size => {
+            let client = RuntimeClient::cpu()?;
+            let exe = client.load_step(spec)?;
+            let model = manifest.model(&cfg.model)?;
+            Some(evaluate(cfg, &exe, &outcomes[0].store, model.image_hw, 0)?)
+        }
+        _ => None,
+    };
+
+    Ok(TrainSummary {
+        steps: cfg.steps,
+        workers,
+        wall_seconds: wall.elapsed_secs(),
+        secs_per_20_iters: meter.mean_window_secs(),
+        windows,
+        losses,
+        loader: outcomes.iter().map(|o| o.loader).collect(),
+        exchange_rounds: outcomes[0].exchange_rounds,
+        exchange_seconds: outcomes.iter().map(|o| o.exchange_seconds).sum::<f64>()
+            / workers as f64,
+        compute_seconds: outcomes.iter().map(|o| o.compute_seconds).sum::<f64>()
+            / workers as f64,
+        final_divergence,
+        eval,
+    })
+}

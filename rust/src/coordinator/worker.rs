@@ -1,0 +1,251 @@
+//! One replica ("virtual GPU") worker.
+
+use std::path::PathBuf;
+use std::sync::mpsc::Sender;
+
+use crate::comm::exchange::ExchangePort;
+use crate::comm::ring::RingNode;
+use crate::config::{LoaderMode, TrainConfig};
+use crate::data::loader::{BatchSource, LoaderCfg, LoaderStats, ParallelLoader, SerialLoader};
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::runtime::literal_bridge::{
+    f32_scalar, i32_scalar, i32_to_literal, literal_f32, literal_i32, literal_to_tensor,
+    tensor_to_literal,
+};
+use crate::runtime::{Manifest, RuntimeClient};
+use crate::util::Timer;
+
+/// Exchange fabric handed to a worker thread.
+pub enum CommFabric {
+    /// Single worker: no exchange.
+    None,
+    /// The paper's 2-GPU pairwise exchange (Fig 2).
+    Pair(ExchangePort),
+    /// N > 2 extension: ring all-reduce averaging.
+    Ring(RingNode),
+}
+
+/// Per-step record streamed to the trainer for logging.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub worker: usize,
+    pub step: usize,
+    pub loss: f32,
+    pub correct1: i32,
+    pub batch: usize,
+    pub lr: f32,
+    pub step_seconds: f64,
+    pub exchange_seconds: f64,
+}
+
+/// Final report returned from a worker thread.
+#[derive(Debug)]
+pub struct WorkerOutcome {
+    pub worker: usize,
+    pub steps: usize,
+    pub store: ParamStore,
+    pub loader: LoaderStats,
+    pub exchange_rounds: u64,
+    pub exchange_seconds: f64,
+    pub compute_seconds: f64,
+}
+
+/// Everything a worker thread needs (built on the spawning side; all
+/// XLA state is created *inside* the thread).
+pub struct WorkerSpec {
+    pub worker: usize,
+    pub cfg: TrainConfig,
+    pub fabric: CommFabric,
+    pub reports: Sender<StepRecord>,
+    /// Checkpoint path this worker should restore from, if any.
+    pub restore: Option<PathBuf>,
+}
+
+/// Build this worker's batch source per the configured loader mode.
+fn build_loader(cfg: &TrainConfig, worker: usize, crop_hw: usize) -> Result<Box<dyn BatchSource>> {
+    let lcfg = LoaderCfg {
+        data_dir: &cfg.data.dir,
+        split: "train",
+        batch: cfg.batch_per_worker,
+        crop_hw,
+        worker,
+        workers: cfg.cluster.workers,
+        seed: cfg.seed,
+        train_augment: true,
+        verify_shards: false,
+    };
+    Ok(match cfg.loader_mode {
+        LoaderMode::Parallel => Box::new(ParallelLoader::new(&lcfg)?),
+        LoaderMode::Serial => Box::new(SerialLoader::new(&lcfg)?),
+    })
+}
+
+/// The worker thread body: runs `cfg.steps` local steps with exchange
+/// every `cfg.exchange.period` steps.
+pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
+    let WorkerSpec { worker, cfg, mut fabric, reports, restore } = spec;
+
+    // --- Setup (the paper's per-GPU Theano process initialization) ---
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let model = manifest.model(&cfg.model)?.clone_spec();
+    let artifact = manifest.artifact(&cfg.train_artifact_name())?;
+    let client = RuntimeClient::cpu()?;
+    let step_exe = client.load_step(artifact)?;
+
+    let mut store = ParamStore::init(&model.params, cfg.seed);
+    let mut start_step = 0usize;
+    if let Some(ckpt) = restore {
+        start_step = crate::params::load_checkpoint(&ckpt, &mut store)? as usize;
+    }
+
+    // Guard the label space: a corpus with more classes than the model
+    // produces out-of-range gathers (NaN losses) inside the compiled step.
+    let meta_path = cfg.data.dir.join("meta.json");
+    if let Ok(src) = std::fs::read_to_string(&meta_path) {
+        let meta = crate::data::synth::DatasetMeta::from_json(&src)?;
+        if meta.classes > model.num_classes {
+            return Err(Error::msg(format!(
+                "dataset at {:?} has {} classes but model {:?} expects {}",
+                cfg.data.dir, meta.classes, model.name, model.num_classes
+            )));
+        }
+    }
+
+    let mut loader = build_loader(&cfg, worker, model.image_hw)?;
+
+    let n_params = store.n_tensors();
+    let include_momentum = cfg.exchange.include_momentum;
+    let mut compute_seconds = 0.0;
+    let mut exchange_seconds = 0.0;
+    let mut exchange_rounds = 0u64;
+    let mut ring_buf: Vec<f32> = Vec::new();
+
+    // --- The step loop (Fig 1 + Fig 2 composed) ---
+    for step in start_step..cfg.steps {
+        let step_timer = Timer::start();
+        let batch = loader.next_batch()?;
+        let lr = cfg.schedule.lr_at(step);
+
+        // Assemble the ABI input list: images, labels, lr, seed, params, momenta.
+        let mut inputs = Vec::with_capacity(4 + 2 * n_params);
+        inputs.push(tensor_to_literal(&batch.images)?);
+        inputs.push(i32_to_literal(&batch.labels)?);
+        inputs.push(f32_scalar(lr));
+        inputs.push(i32_scalar((cfg.seed as i32) ^ (step as i32) ^ ((worker as i32) << 20)));
+        for p in &store.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        for m in &store.momenta {
+            inputs.push(tensor_to_literal(m)?);
+        }
+
+        let t_compute = Timer::start();
+        let outputs = step_exe.run(&inputs)?;
+        let dt_compute = t_compute.elapsed_secs();
+        compute_seconds += dt_compute;
+
+        let loss = literal_f32(&outputs[0])?;
+        if !loss.is_finite() {
+            return Err(Error::msg(format!(
+                "worker {worker}: non-finite loss {loss} at step {step} (lr too high?)"
+            )));
+        }
+        let correct1 = literal_i32(&outputs[1])?;
+        let mut new_params = Vec::with_capacity(n_params);
+        let mut new_momenta = Vec::with_capacity(n_params);
+        for (i, lit) in outputs[2..2 + n_params].iter().enumerate() {
+            new_params.push(literal_to_tensor(lit, store.specs[i].shape.clone())?);
+        }
+        for (i, lit) in outputs[2 + n_params..].iter().enumerate() {
+            new_momenta.push(literal_to_tensor(lit, store.specs[i].shape.clone())?);
+        }
+        store.update_from(new_params, new_momenta)?;
+
+        // --- Fig-2 exchange at the configured period ---
+        let mut dt_exchange = 0.0;
+        if (step + 1) % cfg.exchange.period == 0 {
+            let t_ex = Timer::start();
+            match &mut fabric {
+                CommFabric::None => {}
+                CommFabric::Pair(port) => {
+                    port.exchange(&mut store, include_momentum)?;
+                    exchange_rounds += 1;
+                }
+                CommFabric::Ring(node) => {
+                    ring_buf.clear();
+                    ring_buf.extend(store.flatten(include_momentum));
+                    node.allreduce_average(&mut ring_buf)?;
+                    apply_flat(&mut store, &ring_buf, include_momentum)?;
+                    exchange_rounds += 1;
+                }
+            }
+            dt_exchange = t_ex.elapsed_secs();
+            exchange_seconds += dt_exchange;
+        }
+
+        let _ = reports.send(StepRecord {
+            worker,
+            step,
+            loss,
+            correct1,
+            batch: batch.labels.len(),
+            lr,
+            step_seconds: step_timer.elapsed_secs(),
+            exchange_seconds: dt_exchange,
+        });
+    }
+
+    Ok(WorkerOutcome {
+        worker,
+        steps: cfg.steps.saturating_sub(start_step),
+        store,
+        loader: loader.stats(),
+        exchange_rounds,
+        exchange_seconds,
+        compute_seconds,
+    })
+}
+
+/// Overwrite a store's state from a flat (ring-averaged) buffer.
+fn apply_flat(store: &mut ParamStore, flat: &[f32], include_momentum: bool) -> Result<()> {
+    let want = store.total_elements() * if include_momentum { 2 } else { 1 };
+    if flat.len() != want {
+        return Err(Error::Shape(format!(
+            "apply_flat: {} values, want {want}",
+            flat.len()
+        )));
+    }
+    let mut off = 0;
+    for p in store.params.iter_mut() {
+        let n = p.numel();
+        p.as_mut_slice().copy_from_slice(&flat[off..off + n]);
+        off += n;
+    }
+    if include_momentum {
+        for m in store.momenta.iter_mut() {
+            let n = m.numel();
+            m.as_mut_slice().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+    }
+    Ok(())
+}
+
+// Small helper so worker doesn't hold a borrow of Manifest across the
+// client setup (ModelSpec is cheap to clone).
+trait CloneSpec {
+    fn clone_spec(&self) -> crate::runtime::ModelSpec;
+}
+
+impl CloneSpec for crate::runtime::ModelSpec {
+    fn clone_spec(&self) -> crate::runtime::ModelSpec {
+        crate::runtime::ModelSpec {
+            name: self.name.clone(),
+            image_hw: self.image_hw,
+            in_channels: self.in_channels,
+            num_classes: self.num_classes,
+            params: self.params.clone(),
+        }
+    }
+}

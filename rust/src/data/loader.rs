@@ -1,0 +1,362 @@
+//! Minibatch loaders — the paper's Fig 1.
+//!
+//! [`SerialLoader`] is the "No parallel loading" baseline of Table 1:
+//! read + preprocess happen on the training thread, so every step pays
+//! `load + compute`.
+//!
+//! [`ParallelLoader`] is the paper's contribution: a loading thread
+//! (the paper's separate *process*; Rust has no GIL so a thread
+//! suffices — DESIGN.md substitution table) prefetches and preprocesses
+//! the next minibatch while the trainer computes, handing over through
+//! a depth-1 bounded channel — the exact double-buffer the paper built
+//! with two shared GPU variables.  A step then pays
+//! `max(load, compute)`; the `stall_seconds` stat measures the residue
+//! (E3's overlap-efficiency metric).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::data::preprocess::{preprocess_into, Augment, MeanImage};
+use crate::data::sampler::EpochSampler;
+use crate::data::shard::ShardedDataset;
+use crate::error::{Error, Result};
+use crate::tensor::{HostTensor, Shape};
+use crate::util::{Pcg32, Timer};
+
+/// One staged minibatch: preprocessed images (NCHW) + labels.
+#[derive(Clone, Debug)]
+pub struct HostBatch {
+    pub images: HostTensor,
+    pub labels: Vec<i32>,
+    /// Monotone sequence number (step the batch is destined for).
+    pub seq: usize,
+}
+
+/// Loader-side counters for the Fig-1 experiments.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoaderStats {
+    pub batches: u64,
+    /// Producer time: disk read + preprocess (+ staging copy).
+    pub load_seconds: f64,
+    /// Consumer time blocked waiting for a batch (0 when fully hidden).
+    pub stall_seconds: f64,
+}
+
+/// Anything the trainer can pull batches from.
+pub trait BatchSource: Send {
+    fn next_batch(&mut self) -> Result<HostBatch>;
+    fn stats(&self) -> LoaderStats;
+}
+
+/// Shared innards: one worker's view of the dataset + augmentation.
+struct BatchProducer {
+    dataset: ShardedDataset,
+    sampler: EpochSampler,
+    mean: MeanImage,
+    rng: Pcg32,
+    crop_hw: usize,
+    batch: usize,
+    seq: usize,
+    idx_buf: Vec<usize>,
+    pix_buf: Vec<u8>,
+    train_augment: bool,
+}
+
+impl BatchProducer {
+    fn produce(&mut self) -> Result<HostBatch> {
+        let c = self.dataset.channels;
+        let stored_hw = self.dataset.height;
+        let hw = self.crop_hw;
+        let mut images = HostTensor::zeros(Shape::of(&[self.batch, c, hw, hw]));
+        let mut labels = Vec::with_capacity(self.batch);
+        // Split the borrows before the loop: sampler fills the index
+        // buffer, then each example is read + preprocessed in place.
+        let mut idx_buf = std::mem::take(&mut self.idx_buf);
+        self.sampler.next_batch_indices(&mut idx_buf);
+        let stride = c * hw * hw;
+        let out = images.as_mut_slice();
+        for (bi, &ex) in idx_buf.iter().enumerate() {
+            let label = self.dataset.read_into(ex, &mut self.pix_buf)?;
+            let aug = if self.train_augment {
+                Augment::random(&mut self.rng, stored_hw, hw)
+            } else {
+                Augment::center(stored_hw, hw)
+            };
+            preprocess_into(
+                &self.pix_buf,
+                &self.mean,
+                stored_hw,
+                hw,
+                aug,
+                &mut out[bi * stride..(bi + 1) * stride],
+            )?;
+            labels.push(label as i32);
+        }
+        self.idx_buf = idx_buf;
+        let seq = self.seq;
+        self.seq += 1;
+        Ok(HostBatch { images, labels, seq })
+    }
+}
+
+/// Configuration for constructing either loader.
+pub struct LoaderCfg<'a> {
+    pub data_dir: &'a std::path::Path,
+    pub split: &'a str,
+    pub batch: usize,
+    pub crop_hw: usize,
+    pub worker: usize,
+    pub workers: usize,
+    pub seed: u64,
+    pub train_augment: bool,
+    pub verify_shards: bool,
+}
+
+fn build_producer(cfg: &LoaderCfg) -> Result<BatchProducer> {
+    let dataset = ShardedDataset::open(cfg.data_dir, cfg.split, cfg.verify_shards)?;
+    if cfg.crop_hw > dataset.height {
+        return Err(Error::Shape(format!(
+            "crop {} larger than stored image {}",
+            cfg.crop_hw, dataset.height
+        )));
+    }
+    let mean = MeanImage::load(
+        &cfg.data_dir.join("mean.f32"),
+        dataset.channels,
+        dataset.height,
+    )?;
+    let sampler = EpochSampler::new(dataset.len(), cfg.batch, cfg.worker, cfg.workers, cfg.seed);
+    Ok(BatchProducer {
+        rng: Pcg32::new(cfg.seed ^ 0xAAB0_57E0, cfg.worker as u64 + 101),
+        dataset,
+        sampler,
+        mean,
+        crop_hw: cfg.crop_hw,
+        batch: cfg.batch,
+        seq: 0,
+        idx_buf: Vec::new(),
+        pix_buf: Vec::new(),
+        train_augment: cfg.train_augment,
+    })
+}
+
+/// Table 1's "parallel loading: No" baseline.
+pub struct SerialLoader {
+    producer: BatchProducer,
+    stats: LoaderStats,
+}
+
+impl SerialLoader {
+    pub fn new(cfg: &LoaderCfg) -> Result<Self> {
+        Ok(SerialLoader { producer: build_producer(cfg)?, stats: LoaderStats::default() })
+    }
+}
+
+impl BatchSource for SerialLoader {
+    fn next_batch(&mut self) -> Result<HostBatch> {
+        let t = Timer::start();
+        let b = self.producer.produce()?;
+        let dt = t.elapsed_secs();
+        self.stats.batches += 1;
+        self.stats.load_seconds += dt;
+        // Serial loading is *all* stall: the trainer sat idle for it.
+        self.stats.stall_seconds += dt;
+        Ok(b)
+    }
+
+    fn stats(&self) -> LoaderStats {
+        self.stats
+    }
+}
+
+/// The paper's Fig-1 prefetching loader.
+pub struct ParallelLoader {
+    rx: Receiver<Result<HostBatch>>,
+    handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    batches: u64,
+    stall_nanos: u64,
+    load_nanos: Arc<AtomicU64>,
+}
+
+impl ParallelLoader {
+    pub fn new(cfg: &LoaderCfg) -> Result<Self> {
+        let mut producer = build_producer(cfg)?;
+        // Depth-1 channel: exactly one staged batch, as in Fig 1.
+        let (tx, rx): (SyncSender<Result<HostBatch>>, _) = std::sync::mpsc::sync_channel(1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let load_nanos = Arc::new(AtomicU64::new(0));
+        let stop2 = stop.clone();
+        let load2 = load_nanos.clone();
+        let handle = std::thread::Builder::new()
+            .name("tmg-loader".into())
+            .spawn(move || loop {
+                if stop2.load(Ordering::Relaxed) {
+                    return;
+                }
+                let t = Timer::start();
+                let item = producer.produce();
+                load2.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                let failed = item.is_err();
+                // Block until the trainer takes the staged batch (the
+                // paper's "wait for the training process to swap").
+                let mut pending = item;
+                loop {
+                    match tx.try_send(pending) {
+                        Ok(()) => break,
+                        Err(TrySendError::Full(it)) => {
+                            if stop2.load(Ordering::Relaxed) {
+                                return;
+                            }
+                            pending = it;
+                            std::thread::sleep(std::time::Duration::from_micros(50));
+                        }
+                        Err(TrySendError::Disconnected(_)) => return,
+                    }
+                }
+                if failed {
+                    return;
+                }
+            })
+            .map_err(Error::RawIo)?;
+        Ok(ParallelLoader {
+            rx,
+            handle: Some(handle),
+            stop,
+            batches: 0,
+            stall_nanos: 0,
+            load_nanos,
+        })
+    }
+}
+
+impl BatchSource for ParallelLoader {
+    fn next_batch(&mut self) -> Result<HostBatch> {
+        let t = Timer::start();
+        let item = self
+            .rx
+            .recv()
+            .map_err(|_| Error::msg("loader thread terminated unexpectedly"))?;
+        self.stall_nanos += t.elapsed().as_nanos() as u64;
+        self.batches += 1;
+        item
+    }
+
+    fn stats(&self) -> LoaderStats {
+        LoaderStats {
+            batches: self.batches,
+            load_seconds: self.load_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+            stall_seconds: self.stall_nanos as f64 * 1e-9,
+        }
+    }
+}
+
+impl Drop for ParallelLoader {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Drain anything staged so the producer unblocks, then join.
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_dataset, SynthSpec};
+    use std::path::PathBuf;
+
+    fn make_dataset(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("tmg_loader_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = SynthSpec { classes: 7, hw: 20, seed: 3, ..Default::default() };
+        generate_dataset(&dir, &spec, 128, 32, 64).unwrap();
+        dir
+    }
+
+    fn cfg(dir: &std::path::Path, worker: usize, workers: usize) -> LoaderCfg<'_> {
+        LoaderCfg {
+            data_dir: dir,
+            split: "train",
+            batch: 8,
+            crop_hw: 16,
+            worker,
+            workers,
+            seed: 11,
+            train_augment: true,
+            verify_shards: true,
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_yield_same_batches() {
+        let dir = make_dataset("same");
+        let mut s = SerialLoader::new(&cfg(&dir, 0, 1)).unwrap();
+        let mut p = ParallelLoader::new(&cfg(&dir, 0, 1)).unwrap();
+        for _ in 0..6 {
+            let a = s.next_batch().unwrap();
+            let b = p.next_batch().unwrap();
+            assert_eq!(a.seq, b.seq);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.images.as_slice(), b.images.as_slice());
+        }
+    }
+
+    #[test]
+    fn batch_shape_and_labels() {
+        let dir = make_dataset("shape");
+        let mut s = SerialLoader::new(&cfg(&dir, 0, 1)).unwrap();
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.images.shape().dims(), &[8, 3, 16, 16]);
+        assert_eq!(b.labels.len(), 8);
+        assert!(b.labels.iter().all(|&l| (0..7).contains(&l)));
+        let st = s.stats();
+        assert_eq!(st.batches, 1);
+        assert!(st.load_seconds > 0.0);
+        assert_eq!(st.load_seconds, st.stall_seconds);
+    }
+
+    #[test]
+    fn two_workers_disjoint_streams() {
+        let dir = make_dataset("workers");
+        let mut w0 = SerialLoader::new(&cfg(&dir, 0, 2)).unwrap();
+        let mut w1 = SerialLoader::new(&cfg(&dir, 1, 2)).unwrap();
+        let a = w0.next_batch().unwrap();
+        let b = w1.next_batch().unwrap();
+        // Same epoch order, different slots => different content.
+        assert_ne!(a.images.as_slice(), b.images.as_slice());
+    }
+
+    #[test]
+    fn parallel_loader_hides_load_when_compute_dominates() {
+        let dir = make_dataset("hide");
+        let mut p = ParallelLoader::new(&cfg(&dir, 0, 1)).unwrap();
+        // Simulate compute long enough to cover load.
+        let mut stalled_after_warmup = 0.0;
+        for i in 0..8 {
+            let _b = p.next_batch().unwrap();
+            if i == 2 {
+                stalled_after_warmup = p.stats().stall_seconds;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(12));
+        }
+        let st = p.stats();
+        let steady_stall = st.stall_seconds - stalled_after_warmup;
+        assert!(
+            steady_stall < 0.5 * st.load_seconds,
+            "stall {steady_stall} should be well under load {}",
+            st.load_seconds
+        );
+    }
+
+    #[test]
+    fn parallel_loader_shuts_down_cleanly() {
+        let dir = make_dataset("drop");
+        let p = ParallelLoader::new(&cfg(&dir, 0, 1)).unwrap();
+        drop(p); // must not hang
+    }
+}

@@ -1,0 +1,22 @@
+//! Data pipeline: the paper's ImageNet substrate, substituted per
+//! DESIGN.md with a deterministic synthetic corpus that exercises the
+//! identical code path — disk shards -> host read -> preprocessing
+//! (mean subtraction, random crop, horizontal flip; paper footnote 2)
+//! -> staged device batch — with a real, hideable loading cost.
+//!
+//! [`loader`] implements Fig 1: a loading thread prefetches and
+//! preprocesses minibatch *k+1* while the trainer consumes minibatch
+//! *k*, handing over through a bounded (depth-1) channel = the paper's
+//! double-buffered shared-GPU staging variable.
+
+pub mod loader;
+pub mod mean_image;
+pub mod preprocess;
+pub mod sampler;
+pub mod shard;
+pub mod synth;
+
+pub use loader::{BatchSource, HostBatch, LoaderStats, ParallelLoader, SerialLoader};
+pub use sampler::EpochSampler;
+pub use shard::{ShardReader, ShardWriter, ShardedDataset};
+pub use synth::{generate_dataset, DatasetMeta, SynthSpec};

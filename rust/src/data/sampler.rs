@@ -1,0 +1,146 @@
+//! Epoch sampling: deterministic shuffles, partitioned across workers.
+//!
+//! The paper trains the two replicas on *different* minibatches of the
+//! same epoch stream (§2.2).  `EpochSampler` reproduces that: one
+//! shared seed shuffles each epoch, then worker `w` of `n` takes every
+//! n-th minibatch — so the union of what all workers see per epoch is
+//! exactly the dataset, with no overlap.
+
+use crate::util::Pcg32;
+
+/// Deterministic per-worker epoch iterator over example indices.
+#[derive(Clone, Debug)]
+pub struct EpochSampler {
+    dataset_len: usize,
+    batch: usize,
+    worker: usize,
+    workers: usize,
+    seed: u64,
+    epoch: usize,
+    order: Vec<u32>,
+    /// Next *global* batch number within the epoch assigned to us.
+    next_batch: usize,
+}
+
+impl EpochSampler {
+    pub fn new(dataset_len: usize, batch: usize, worker: usize, workers: usize, seed: u64) -> Self {
+        assert!(batch > 0 && workers > 0 && worker < workers);
+        assert!(
+            dataset_len >= batch * workers,
+            "dataset ({dataset_len}) smaller than one round of batches ({})",
+            batch * workers
+        );
+        let mut s = EpochSampler {
+            dataset_len,
+            batch,
+            worker,
+            workers,
+            seed,
+            epoch: 0,
+            order: Vec::new(),
+            next_batch: 0,
+        };
+        s.reshuffle();
+        s
+    }
+
+    fn reshuffle(&mut self) {
+        self.order = (0..self.dataset_len as u32).collect();
+        // Same (seed, epoch) on every worker => identical epoch order;
+        // partitioning below keeps their minibatches disjoint.
+        let mut rng = Pcg32::new(self.seed, 0xE90C ^ self.epoch as u64);
+        rng.shuffle(&mut self.order);
+        self.next_batch = self.worker;
+    }
+
+    /// Number of whole batches per epoch (shared across workers).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.dataset_len / self.batch
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    /// Indices of the next minibatch for this worker, advancing epochs
+    /// as needed (partial trailing batches are dropped, as the paper's
+    /// fixed-size Theano functions required).
+    pub fn next_batch_indices(&mut self, out: &mut Vec<usize>) {
+        if self.next_batch >= self.batches_per_epoch() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let start = self.next_batch * self.batch;
+        out.clear();
+        out.extend(
+            self.order[start..start + self.batch]
+                .iter()
+                .map(|&i| i as usize),
+        );
+        self.next_batch += self.workers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn workers_partition_an_epoch() {
+        let n = 64;
+        let batch = 4;
+        let mut w0 = EpochSampler::new(n, batch, 0, 2, 9);
+        let mut w1 = EpochSampler::new(n, batch, 1, 2, 9);
+        let mut seen = HashSet::new();
+        let mut buf = Vec::new();
+        let rounds = n / batch / 2;
+        for _ in 0..rounds {
+            w0.next_batch_indices(&mut buf);
+            seen.extend(buf.iter().copied());
+            w1.next_batch_indices(&mut buf);
+            seen.extend(buf.iter().copied());
+        }
+        assert_eq!(seen.len(), n, "epoch must cover the dataset exactly once");
+        assert_eq!(w0.epoch(), 0);
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let mut s = EpochSampler::new(16, 4, 0, 1, 5);
+        let mut e0 = Vec::new();
+        let mut buf = Vec::new();
+        for _ in 0..4 {
+            s.next_batch_indices(&mut buf);
+            e0.extend(buf.iter().copied());
+        }
+        let mut e1 = Vec::new();
+        for _ in 0..4 {
+            s.next_batch_indices(&mut buf);
+            e1.extend(buf.iter().copied());
+        }
+        assert_eq!(s.epoch(), 1);
+        let h0: HashSet<_> = e0.iter().collect();
+        let h1: HashSet<_> = e1.iter().collect();
+        assert_eq!(h0, h1, "same elements");
+        assert_ne!(e0, e1, "different order");
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = EpochSampler::new(32, 4, 1, 2, 77);
+        let mut b = EpochSampler::new(32, 4, 1, 2, 77);
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        for _ in 0..10 {
+            a.next_batch_indices(&mut ba);
+            b.next_batch_indices(&mut bb);
+            assert_eq!(ba, bb);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_tiny_dataset() {
+        EpochSampler::new(4, 4, 0, 2, 0);
+    }
+}

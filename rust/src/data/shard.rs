@@ -1,0 +1,392 @@
+//! On-disk shard format + readers.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   u32  = 0x544D4753        ("TMGS")
+//! version u32  = 1
+//! channels u32, height u32, width u32
+//! count   u32                       (records in this shard)
+//! records: count x { label u32, pixels u8[c*h*w] }
+//! crc32   u32                       (over all record bytes)
+//! ```
+//!
+//! A `ShardedDataset` maps a global example index to (shard, offset)
+//! and serves point reads; the loader wraps it with batching and
+//! prefetch.  CRC verification happens once per shard at open.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::tensor::Image8;
+use crate::util::crc32::Hasher;
+
+pub const MAGIC: u32 = 0x544D_4753;
+pub const VERSION: u32 = 1;
+const HEADER_BYTES: u64 = 24;
+
+/// Streaming shard writer.
+pub struct ShardWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    channels: u32,
+    height: u32,
+    width: u32,
+    count: u32,
+    crc: Hasher,
+    finished: bool,
+}
+
+impl ShardWriter {
+    pub fn create(path: &Path, channels: usize, height: usize, width: usize) -> Result<Self> {
+        let file = File::create(path).map_err(|e| Error::io(path, e))?;
+        let mut w = ShardWriter {
+            path: path.to_path_buf(),
+            file: BufWriter::new(file),
+            channels: channels as u32,
+            height: height as u32,
+            width: width as u32,
+            count: 0,
+            crc: Hasher::new(),
+            finished: false,
+        };
+        // Placeholder header; rewritten with the real count on finish.
+        w.write_header(0)?;
+        Ok(w)
+    }
+
+    fn write_header(&mut self, count: u32) -> Result<()> {
+        let mut hdr = Vec::with_capacity(HEADER_BYTES as usize);
+        for v in [MAGIC, VERSION, self.channels, self.height, self.width, count] {
+            hdr.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file.write_all(&hdr).map_err(|e| Error::io(&self.path, e))
+    }
+
+    /// Append one record.
+    pub fn append(&mut self, label: u32, img: &Image8) -> Result<()> {
+        debug_assert!(!self.finished);
+        let expect =
+            (self.channels * self.height * self.width) as usize;
+        if img.numel() != expect {
+            return Err(Error::Shape(format!(
+                "shard record: image has {} pixels, shard expects {expect}",
+                img.numel()
+            )));
+        }
+        let lbl = label.to_le_bytes();
+        self.file.write_all(&lbl).map_err(|e| Error::io(&self.path, e))?;
+        self.file.write_all(&img.pixels).map_err(|e| Error::io(&self.path, e))?;
+        self.crc.update(&lbl);
+        self.crc.update(&img.pixels);
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Write trailer + fixed-up header.  Must be called exactly once.
+    pub fn finish(mut self) -> Result<()> {
+        let crc = self.crc.finalize();
+        self.file
+            .write_all(&crc.to_le_bytes())
+            .map_err(|e| Error::io(&self.path, e))?;
+        self.file.flush().map_err(|e| Error::io(&self.path, e))?;
+        let mut f = self
+            .file
+            .into_inner()
+            .map_err(|e| Error::io(&self.path, e.into_error()))?;
+        f.seek(SeekFrom::Start(0)).map_err(|e| Error::io(&self.path, e))?;
+        let mut hdr = Vec::with_capacity(HEADER_BYTES as usize);
+        for v in [MAGIC, VERSION, self.channels, self.height, self.width, self.count] {
+            hdr.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&hdr).map_err(|e| Error::io(&self.path, e))?;
+        f.sync_all().map_err(|e| Error::io(&self.path, e))?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+/// Header of an opened shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub count: usize,
+}
+
+impl ShardHeader {
+    pub fn record_bytes(&self) -> usize {
+        4 + self.channels * self.height * self.width
+    }
+}
+
+/// Random-access reader over one shard file.
+pub struct ShardReader {
+    path: PathBuf,
+    file: BufReader<File>,
+    pub header: ShardHeader,
+}
+
+fn read_u32(r: &mut impl Read, path: &Path) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).map_err(|e| Error::io(path, e))?;
+    Ok(u32::from_le_bytes(b))
+}
+
+impl ShardReader {
+    /// Open and header-check; `verify` additionally streams the whole
+    /// payload through CRC32 (done once per shard by `ShardedDataset`).
+    pub fn open(path: &Path, verify: bool) -> Result<Self> {
+        let file = File::open(path).map_err(|e| Error::io(path, e))?;
+        let mut br = BufReader::new(file);
+        let magic = read_u32(&mut br, path)?;
+        if magic != MAGIC {
+            return Err(Error::Shard {
+                path: path.into(),
+                msg: format!("bad magic {magic:#x}"),
+            });
+        }
+        let version = read_u32(&mut br, path)?;
+        if version != VERSION {
+            return Err(Error::Shard {
+                path: path.into(),
+                msg: format!("unsupported version {version}"),
+            });
+        }
+        let channels = read_u32(&mut br, path)? as usize;
+        let height = read_u32(&mut br, path)? as usize;
+        let width = read_u32(&mut br, path)? as usize;
+        let count = read_u32(&mut br, path)? as usize;
+        let header = ShardHeader { channels, height, width, count };
+
+        let mut rd = ShardReader { path: path.to_path_buf(), file: br, header };
+        if verify {
+            rd.verify_crc()?;
+        }
+        Ok(rd)
+    }
+
+    fn verify_crc(&mut self) -> Result<()> {
+        let payload = self.header.count * self.header.record_bytes();
+        self.file
+            .seek(SeekFrom::Start(HEADER_BYTES))
+            .map_err(|e| Error::io(&self.path, e))?;
+        let mut hasher = Hasher::new();
+        let mut remaining = payload;
+        let mut buf = vec![0u8; 1 << 16];
+        while remaining > 0 {
+            let n = remaining.min(buf.len());
+            self.file
+                .read_exact(&mut buf[..n])
+                .map_err(|e| Error::io(&self.path, e))?;
+            hasher.update(&buf[..n]);
+            remaining -= n;
+        }
+        let stored = read_u32(&mut self.file, &self.path)?;
+        let computed = hasher.finalize();
+        if stored != computed {
+            return Err(Error::Shard {
+                path: self.path.clone(),
+                msg: format!("crc mismatch: stored {stored:#x}, computed {computed:#x}"),
+            });
+        }
+        Ok(())
+    }
+
+    /// Read record `i` into (label, pixel buffer).
+    pub fn read_into(&mut self, i: usize, pixels: &mut Vec<u8>) -> Result<u32> {
+        if i >= self.header.count {
+            return Err(Error::Shard {
+                path: self.path.clone(),
+                msg: format!("record {i} out of range (count {})", self.header.count),
+            });
+        }
+        let off = HEADER_BYTES + (i * self.header.record_bytes()) as u64;
+        self.file
+            .seek(SeekFrom::Start(off))
+            .map_err(|e| Error::io(&self.path, e))?;
+        let label = read_u32(&mut self.file, &self.path)?;
+        let n = self.header.record_bytes() - 4;
+        pixels.resize(n, 0);
+        self.file
+            .read_exact(pixels)
+            .map_err(|e| Error::io(&self.path, e))?;
+        Ok(label)
+    }
+}
+
+/// A split ("train"/"val") of shards under one directory, addressable
+/// by global example index.
+pub struct ShardedDataset {
+    readers: Vec<ShardReader>,
+    /// Cumulative example counts: offsets[i] = first global index of shard i.
+    offsets: Vec<usize>,
+    total: usize,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+impl ShardedDataset {
+    /// Open all `{split}_NNNN.shard` files in `dir` (sorted), verifying
+    /// CRCs once.
+    pub fn open(dir: &Path, split: &str, verify: bool) -> Result<Self> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| Error::io(dir, e))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with(&format!("{split}_")) && n.ends_with(".shard"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Shard {
+                path: dir.into(),
+                msg: format!("no {split} shards found"),
+            });
+        }
+        let mut readers = Vec::with_capacity(paths.len());
+        let mut offsets = Vec::with_capacity(paths.len());
+        let mut total = 0usize;
+        for p in &paths {
+            let r = ShardReader::open(p, verify)?;
+            offsets.push(total);
+            total += r.header.count;
+            readers.push(r);
+        }
+        let h = readers[0].header;
+        for r in &readers {
+            if (r.header.channels, r.header.height, r.header.width)
+                != (h.channels, h.height, h.width)
+            {
+                return Err(Error::Shard {
+                    path: r.path.clone(),
+                    msg: "inconsistent image dims across shards".into(),
+                });
+            }
+        }
+        Ok(ShardedDataset {
+            readers,
+            offsets,
+            total,
+            channels: h.channels,
+            height: h.height,
+            width: h.width,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Read global example `idx`.
+    pub fn read_into(&mut self, idx: usize, pixels: &mut Vec<u8>) -> Result<u32> {
+        if idx >= self.total {
+            return Err(Error::msg(format!("example {idx} out of range ({})", self.total)));
+        }
+        // Binary search the shard containing idx.
+        let shard = match self.offsets.binary_search(&idx) {
+            Ok(s) => s,
+            Err(s) => s - 1,
+        };
+        self.readers[shard].read_into(idx - self.offsets[shard], pixels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate_example, SynthSpec};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("tmg_shard_test_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = tmpdir("rt");
+        let spec = SynthSpec { classes: 5, hw: 16, ..Default::default() };
+        let path = dir.join("train_0000.shard");
+        let mut w = ShardWriter::create(&path, 3, 16, 16).unwrap();
+        let mut expect = Vec::new();
+        for i in 0..10u64 {
+            let img = generate_example(&spec, (i % 5) as usize, i);
+            w.append((i % 5) as u32, &img).unwrap();
+            expect.push((i % 5, img));
+        }
+        w.finish().unwrap();
+
+        let mut r = ShardReader::open(&path, true).unwrap();
+        assert_eq!(r.header.count, 10);
+        let mut buf = Vec::new();
+        for (i, (lbl, img)) in expect.iter().enumerate() {
+            let got = r.read_into(i, &mut buf).unwrap();
+            assert_eq!(got as u64, *lbl);
+            assert_eq!(&buf, &img.pixels);
+        }
+        assert!(r.read_into(10, &mut buf).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmpdir("crc");
+        let path = dir.join("train_0000.shard");
+        let mut w = ShardWriter::create(&path, 1, 4, 4).unwrap();
+        w.append(0, &Image8::new(1, 4, 4)).unwrap();
+        w.finish().unwrap();
+        // Flip one payload byte.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 8] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ShardReader::open(&path, true).is_err());
+        // Without verify, the header still opens.
+        assert!(ShardReader::open(&path, false).is_ok());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = tmpdir("magic");
+        let path = dir.join("train_0000.shard");
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(ShardReader::open(&path, false).is_err());
+    }
+
+    #[test]
+    fn sharded_dataset_global_index() {
+        let dir = tmpdir("ds");
+        for s in 0..3 {
+            let path = dir.join(format!("train_{s:04}.shard"));
+            let mut w = ShardWriter::create(&path, 1, 2, 2).unwrap();
+            for i in 0..4 {
+                let mut img = Image8::new(1, 2, 2);
+                img.pixels = vec![(s * 4 + i) as u8; 4];
+                w.append((s * 4 + i) as u32, &img).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        let mut ds = ShardedDataset::open(&dir, "train", true).unwrap();
+        assert_eq!(ds.len(), 12);
+        let mut buf = Vec::new();
+        for idx in 0..12 {
+            let lbl = ds.read_into(idx, &mut buf).unwrap();
+            assert_eq!(lbl as usize, idx);
+            assert_eq!(buf[0] as usize, idx);
+        }
+        assert!(ds.read_into(12, &mut buf).is_err());
+        assert!(ShardedDataset::open(&dir, "val", false).is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! Synthetic class-conditional image corpus (the ImageNet substitute).
+//!
+//! Each class is a distinct oriented sinusoidal texture: class `k`
+//! fixes a (frequency, orientation, per-channel phase) triple, and an
+//! example is that texture plus uniform pixel noise and a random DC
+//! shift.  Properties that matter for the reproduction:
+//!
+//! - **learnable**: a small ConvNet separates classes quickly, so the
+//!   E2 accuracy-shape experiment (replica averaging vs large batch)
+//!   is meaningful;
+//! - **deterministic**: (seed, index) fully determines an example, so
+//!   runs are bit-reproducible across loader modes and worker counts;
+//! - **real cost**: examples are written to (and re-read from) real
+//!   shard files as u8 pixels and preprocessed per batch, giving the
+//!   Fig-1 pipeline a genuine loading stage to hide.
+
+use std::f32::consts::PI;
+use std::path::Path;
+
+use crate::data::shard::ShardWriter;
+use crate::error::{Error, Result};
+use crate::tensor::Image8;
+use crate::util::Pcg32;
+
+/// Generation parameters.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub classes: usize,
+    pub channels: usize,
+    /// Stored edge (larger than the model input; training crops down).
+    pub hw: usize,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec { classes: 100, channels: 3, hw: 72, noise: 24.0, seed: 1234 }
+    }
+}
+
+/// Dataset metadata persisted alongside the shards (meta.json).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetMeta {
+    pub classes: usize,
+    pub channels: usize,
+    pub hw: usize,
+    pub train_examples: usize,
+    pub val_examples: usize,
+    pub shard_examples: usize,
+    pub seed: u64,
+}
+
+impl DatasetMeta {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"classes\": {}, \"channels\": {}, \"hw\": {}, \"train_examples\": {}, \
+             \"val_examples\": {}, \"shard_examples\": {}, \"seed\": {}}}",
+            self.classes,
+            self.channels,
+            self.hw,
+            self.train_examples,
+            self.val_examples,
+            self.shard_examples,
+            self.seed
+        )
+    }
+
+    pub fn from_json(src: &str) -> Result<DatasetMeta> {
+        let v = crate::util::Json::parse(src)?;
+        Ok(DatasetMeta {
+            classes: v.num_field("classes")? as usize,
+            channels: v.num_field("channels")? as usize,
+            hw: v.num_field("hw")? as usize,
+            train_examples: v.num_field("train_examples")? as usize,
+            val_examples: v.num_field("val_examples")? as usize,
+            shard_examples: v.num_field("shard_examples")? as usize,
+            seed: v.num_field("seed")? as u64,
+        })
+    }
+}
+
+/// Class-conditional texture parameters, derived deterministically from
+/// (seed, class) so generator and tests agree without shared state.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassTexture {
+    pub freq: f32,
+    pub angle: f32,
+    pub phase: [f32; 4],
+}
+
+pub fn class_texture(seed: u64, class: usize) -> ClassTexture {
+    let mut r = Pcg32::new(seed ^ 0xC1A5_5E5E, class as u64 + 1);
+    ClassTexture {
+        freq: 0.15 + 0.55 * r.next_f32(),
+        angle: PI * r.next_f32(),
+        phase: [
+            2.0 * PI * r.next_f32(),
+            2.0 * PI * r.next_f32(),
+            2.0 * PI * r.next_f32(),
+            2.0 * PI * r.next_f32(),
+        ],
+    }
+}
+
+/// Deterministically generate example `index` of class `label`.
+pub fn generate_example(spec: &SynthSpec, label: usize, index: u64) -> Image8 {
+    let tex = class_texture(spec.seed, label);
+    let mut r = Pcg32::new(spec.seed ^ 0xE7A3_11D0, index + 1);
+    let dc = (r.next_f32() - 0.5) * 40.0;
+    let amp = 70.0 + 30.0 * r.next_f32();
+    let (sin_a, cos_a) = tex.angle.sin_cos();
+    let mut img = Image8::new(spec.channels, spec.hw, spec.hw);
+    for c in 0..spec.channels {
+        let phase = tex.phase[c % 4];
+        for y in 0..spec.hw {
+            for x in 0..spec.hw {
+                let u = cos_a * x as f32 + sin_a * y as f32;
+                let base = 128.0 + dc + amp * (tex.freq * u + phase).sin();
+                let noise = (r.next_f32() - 0.5) * 2.0 * spec.noise;
+                img.set(c, y, x, (base + noise).clamp(0.0, 255.0) as u8);
+            }
+        }
+    }
+    img
+}
+
+/// Label for example `index` (round-robin keeps classes balanced).
+pub fn label_of(spec: &SynthSpec, index: u64) -> usize {
+    // Mix the index so shard boundaries don't align with class blocks.
+    let mut r = Pcg32::new(spec.seed ^ 0x1AB3_7E, index + 1);
+    r.below(spec.classes as u32) as usize
+}
+
+/// Write a full train/val dataset to `dir`: sharded images, labels,
+/// meta.json and the preprocessing mean image (mean.f32).
+pub fn generate_dataset(
+    dir: &Path,
+    spec: &SynthSpec,
+    train_examples: usize,
+    val_examples: usize,
+    shard_examples: usize,
+) -> Result<DatasetMeta> {
+    if shard_examples == 0 {
+        return Err(Error::msg("shard_examples must be > 0"));
+    }
+    std::fs::create_dir_all(dir).map_err(|e| Error::io(dir, e))?;
+
+    let mut mean_acc = vec![0f64; spec.channels * spec.hw * spec.hw];
+    let mut write_split = |split: &str, count: usize, base_index: u64| -> Result<()> {
+        let mut written = 0usize;
+        let mut shard_idx = 0usize;
+        while written < count {
+            let n = shard_examples.min(count - written);
+            let path = dir.join(format!("{split}_{shard_idx:04}.shard"));
+            let mut w = ShardWriter::create(&path, spec.channels, spec.hw, spec.hw)?;
+            for i in 0..n {
+                let gidx = base_index + (written + i) as u64;
+                let label = label_of(spec, gidx);
+                let img = generate_example(spec, label, gidx);
+                if split == "train" {
+                    for (acc, &p) in mean_acc.iter_mut().zip(&img.pixels) {
+                        *acc += p as f64;
+                    }
+                }
+                w.append(label as u32, &img)?;
+            }
+            w.finish()?;
+            written += n;
+            shard_idx += 1;
+        }
+        Ok(())
+    };
+
+    write_split("train", train_examples, 0)?;
+    // Validation examples draw from a disjoint index range.
+    write_split("val", val_examples, 1u64 << 40)?;
+
+    // Mean image over the training split (paper footnote 2).
+    let inv = 1.0 / train_examples.max(1) as f64;
+    let mean: Vec<f32> = mean_acc.iter().map(|&a| (a * inv) as f32).collect();
+    let mut bytes = Vec::with_capacity(mean.len() * 4);
+    for v in &mean {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let mean_path = dir.join("mean.f32");
+    std::fs::write(&mean_path, &bytes).map_err(|e| Error::io(&mean_path, e))?;
+
+    let meta = DatasetMeta {
+        classes: spec.classes,
+        channels: spec.channels,
+        hw: spec.hw,
+        train_examples,
+        val_examples,
+        shard_examples,
+        seed: spec.seed,
+    };
+    let meta_path = dir.join("meta.json");
+    std::fs::write(&meta_path, meta.to_json()).map_err(|e| Error::io(&meta_path, e))?;
+    Ok(meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = SynthSpec::default();
+        let a = generate_example(&spec, 3, 17);
+        let b = generate_example(&spec, 3, 17);
+        assert_eq!(a, b);
+        let c = generate_example(&spec, 3, 18);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn classes_have_distinct_textures() {
+        let t1 = class_texture(1, 0);
+        let t2 = class_texture(1, 1);
+        assert!((t1.freq - t2.freq).abs() > 1e-6 || (t1.angle - t2.angle).abs() > 1e-6);
+    }
+
+    #[test]
+    fn labels_balanced_roughly() {
+        let spec = SynthSpec { classes: 10, ..Default::default() };
+        let mut counts = [0usize; 10];
+        for i in 0..5_000 {
+            counts[label_of(&spec, i)] += 1;
+        }
+        for &c in &counts {
+            assert!((300..800).contains(&c), "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn meta_roundtrip() {
+        let m = DatasetMeta {
+            classes: 10,
+            channels: 3,
+            hw: 40,
+            train_examples: 100,
+            val_examples: 10,
+            shard_examples: 64,
+            seed: 7,
+        };
+        assert_eq!(DatasetMeta::from_json(&m.to_json()).unwrap(), m);
+    }
+}

@@ -1,0 +1,84 @@
+//! Crate-wide error type.
+//!
+//! Thin `thiserror` enum so every layer (IO, manifest parsing, PJRT,
+//! protocol violations) surfaces through one `Result` alias without
+//! stringly-typed loss of provenance.
+
+use std::path::PathBuf;
+
+/// Unified error for all `theano-mgpu` operations.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Underlying I/O failure, annotated with the path when known.
+    #[error("io error on {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Raw I/O failure with no path context.
+    #[error(transparent)]
+    RawIo(#[from] std::io::Error),
+
+    /// XLA / PJRT failure (compile, execute, transfer).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// artifacts/manifest.json was malformed or inconsistent.
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// JSON syntax error at byte offset.
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Config file (TOML subset) syntax/validation error.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Shard file corruption (bad magic / CRC / truncation).
+    #[error("shard {path:?}: {msg}")]
+    Shard { path: PathBuf, msg: String },
+
+    /// Shape mismatch between host tensors / literals / specs.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Exchange/barrier protocol violation (the Fig-2 state machine).
+    #[error("protocol: {0}")]
+    Protocol(String),
+
+    /// Interconnect topology rejected a requested route.
+    #[error("topology: {0}")]
+    Topology(String),
+
+    /// Checkpoint serialization problems.
+    #[error("checkpoint: {0}")]
+    Checkpoint(String),
+
+    /// Anything the CLI needs to report verbatim.
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Attach a path to a raw IO error.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Free-form error helper.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,16 @@
+//! PCIe interconnect model — the paper's §4.4 hardware constraint.
+//!
+//! "To use the fast peer-to-peer GPU memory copy, GPUs have to be under
+//! the same PCI-E switch.  Otherwise, communication has to go through
+//! the host memory which results in longer latency."
+//!
+//! [`topology`] models the device/switch/root-complex tree of the
+//! paper's testbed (2 Titan Blacks under one switch, a third elsewhere)
+//! and arbitrary N-GPU machines for the E5 scaling study; [`routing`]
+//! turns device pairs into effective transports + transfer costs.
+
+pub mod routing;
+pub mod topology;
+
+pub use routing::{route, Route};
+pub use topology::{PcieTopology, TopologyBuilder};

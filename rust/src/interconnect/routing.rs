@@ -1,0 +1,76 @@
+//! Routing: device pair -> effective transport + predicted cost.
+
+use crate::comm::cost::CommCostModel;
+use crate::config::TransportKind;
+use crate::error::Result;
+use crate::interconnect::topology::PcieTopology;
+
+/// A resolved route between two devices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Route {
+    pub src: usize,
+    pub dst: usize,
+    pub transport: TransportKind,
+    pub hops: usize,
+}
+
+/// Resolve the transport the hardware permits for (a, b): P2P under a
+/// shared switch, otherwise staged through host memory (§4.4).
+pub fn route(topo: &PcieTopology, a: usize, b: usize) -> Result<Route> {
+    let transport = if topo.p2p_allowed(a, b)? {
+        TransportKind::P2p
+    } else {
+        TransportKind::HostStaged
+    };
+    Ok(Route { src: a, dst: b, transport, hops: topo.hops(a, b)? })
+}
+
+impl Route {
+    /// Predicted one-way transfer time for `bytes` over this route.
+    pub fn transfer_time(&self, model: &CommCostModel, bytes: usize) -> f64 {
+        model.transfer_time(self.transport, bytes)
+    }
+}
+
+/// Predicted Fig-2 exchange round time between two devices.
+pub fn exchange_time(
+    topo: &PcieTopology,
+    model: &CommCostModel,
+    a: usize,
+    b: usize,
+    bytes: usize,
+) -> Result<f64> {
+    let r = route(topo, a, b)?;
+    Ok(model.exchange_round_time(r.transport, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_switch_routes_p2p() {
+        let t = PcieTopology::paper_testbed();
+        let r = route(&t, 0, 1).unwrap();
+        assert_eq!(r.transport, TransportKind::P2p);
+        assert_eq!(r.hops, 2);
+    }
+
+    #[test]
+    fn cross_switch_routes_host() {
+        let t = PcieTopology::paper_testbed();
+        let r = route(&t, 0, 2).unwrap();
+        assert_eq!(r.transport, TransportKind::HostStaged);
+        assert_eq!(r.hops, 4);
+    }
+
+    #[test]
+    fn cross_switch_costs_more() {
+        let t = PcieTopology::paper_testbed();
+        let m = CommCostModel::default();
+        let bytes = 64 << 20;
+        let same = exchange_time(&t, &m, 0, 1, bytes).unwrap();
+        let cross = exchange_time(&t, &m, 0, 2, bytes).unwrap();
+        assert!(cross > 1.5 * same, "cross {cross} vs same {same}");
+    }
+}

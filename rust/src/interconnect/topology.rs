@@ -1,0 +1,127 @@
+//! PCIe tree: devices attach to switches, switches to the root complex.
+
+use crate::error::{Error, Result};
+
+/// A PCIe tree with `switches` switch nodes under one root complex and
+/// each device attached to exactly one switch.
+#[derive(Clone, Debug)]
+pub struct PcieTopology {
+    pub switches: usize,
+    /// switch id per device.
+    pub switch_of_device: Vec<usize>,
+}
+
+impl PcieTopology {
+    pub fn devices(&self) -> usize {
+        self.switch_of_device.len()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.switches == 0 {
+            return Err(Error::Topology("need at least one switch".into()));
+        }
+        for (d, &s) in self.switch_of_device.iter().enumerate() {
+            if s >= self.switches {
+                return Err(Error::Topology(format!(
+                    "device {d} on switch {s}, only {} switches",
+                    self.switches
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The §4.4 rule: P2P iff both devices share a switch.
+    pub fn p2p_allowed(&self, a: usize, b: usize) -> Result<bool> {
+        let n = self.devices();
+        if a >= n || b >= n {
+            return Err(Error::Topology(format!("device out of range ({a},{b}) of {n}")));
+        }
+        Ok(self.switch_of_device[a] == self.switch_of_device[b])
+    }
+
+    /// Hop count between two devices: 2 within a switch (dev–switch–dev),
+    /// 4 across switches (dev–switch–root–switch–dev).
+    pub fn hops(&self, a: usize, b: usize) -> Result<usize> {
+        if a == b {
+            return Ok(0);
+        }
+        Ok(if self.p2p_allowed(a, b)? { 2 } else { 4 })
+    }
+
+    /// The paper's testbed: three Titan Blacks, two under switch 0 (the
+    /// pair used for the 2-GPU runs) and one under switch 1 (unused).
+    pub fn paper_testbed() -> PcieTopology {
+        PcieTopology { switches: 2, switch_of_device: vec![0, 0, 1] }
+    }
+}
+
+/// Convenience builder for scaling-study machines.
+pub struct TopologyBuilder {
+    switches: usize,
+    switch_of_device: Vec<usize>,
+}
+
+impl TopologyBuilder {
+    pub fn new() -> Self {
+        TopologyBuilder { switches: 0, switch_of_device: Vec::new() }
+    }
+
+    /// Add a switch with `devices` GPUs attached; returns the switch id.
+    pub fn switch_with(mut self, devices: usize) -> Self {
+        let sid = self.switches;
+        self.switches += 1;
+        for _ in 0..devices {
+            self.switch_of_device.push(sid);
+        }
+        self
+    }
+
+    pub fn build(self) -> Result<PcieTopology> {
+        let t = PcieTopology { switches: self.switches, switch_of_device: self.switch_of_device };
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+impl Default for TopologyBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_rules() {
+        let t = PcieTopology::paper_testbed();
+        t.validate().unwrap();
+        assert_eq!(t.devices(), 3);
+        assert!(t.p2p_allowed(0, 1).unwrap());
+        assert!(!t.p2p_allowed(0, 2).unwrap());
+        assert_eq!(t.hops(0, 1).unwrap(), 2);
+        assert_eq!(t.hops(1, 2).unwrap(), 4);
+        assert_eq!(t.hops(1, 1).unwrap(), 0);
+    }
+
+    #[test]
+    fn builder_assigns_switches() {
+        let t = TopologyBuilder::new().switch_with(2).switch_with(2).build().unwrap();
+        assert_eq!(t.devices(), 4);
+        assert!(t.p2p_allowed(0, 1).unwrap());
+        assert!(t.p2p_allowed(2, 3).unwrap());
+        assert!(!t.p2p_allowed(1, 2).unwrap());
+    }
+
+    #[test]
+    fn invalid_topologies_rejected() {
+        let t = PcieTopology { switches: 1, switch_of_device: vec![0, 3] };
+        assert!(t.validate().is_err());
+        let t = PcieTopology { switches: 0, switch_of_device: vec![] };
+        assert!(t.validate().is_err());
+        let t = PcieTopology::paper_testbed();
+        assert!(t.p2p_allowed(0, 9).is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! `theano-mgpu` — a Rust + JAX + Pallas reproduction of
+//! *"Theano-based Large-Scale Visual Recognition with Multiple GPUs"*
+//! (Ding, Wang, Mao & Taylor, ICLR 2015 workshop).
+//!
+//! The paper's two coordination contributions — a parallel data-loading
+//! pipeline (Fig 1) and naive 2-GPU data parallelism with per-step
+//! parameter/momentum exchange-and-average (Fig 2) — are implemented as
+//! a Rust coordinator (L3) over AOT-compiled JAX/Pallas train steps
+//! (L2/L1) executed through PJRT.  Python never runs on the training
+//! path: `make artifacts` lowers the model once to HLO text, and this
+//! crate loads, compiles and drives it.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`util`], [`tensor`], [`config`], [`metrics`] — substrates.
+//! - [`data`] — synthetic ImageNet-like corpus, shard files,
+//!   preprocessing and the double-buffered prefetch loader (Fig 1).
+//! - [`runtime`] — PJRT client/executable wrappers + artifact manifest.
+//! - [`params`] — parameter store, host init, averaging, checkpoints.
+//! - [`comm`] — transports (P2P / host-staged / serialized), the Fig-2
+//!   exchange engine, barriers and a ring all-reduce extension.
+//! - [`interconnect`] — PCIe topology model (same-switch P2P rule).
+//! - [`coordinator`] — worker threads + the training/eval loops.
+//! - [`sim`] — calibrated discrete-event simulator regenerating the
+//!   paper's Table 1 and the N-GPU scaling study.
+//! - [`cli`] — the `tmg` command line.
+//! - [`testing`] — in-repo property-testing mini-framework.
+
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod interconnect;
+pub mod metrics;
+pub mod params;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,12 @@
+//! `tmg` — leader entrypoint.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match theano_mgpu::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}

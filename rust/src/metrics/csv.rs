@@ -1,0 +1,81 @@
+//! Tiny CSV writer for loss curves and bench tables.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Append-only CSV file with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| Error::io(parent, e))?;
+            }
+        }
+        let f = File::create(path).map_err(|e| Error::io(path, e))?;
+        let mut w = CsvWriter { out: BufWriter::new(f), columns: header.len() };
+        w.write_row_str(header)?;
+        Ok(w)
+    }
+
+    fn write_row_str(&mut self, cells: &[&str]) -> Result<()> {
+        let mut line = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if c.contains(',') || c.contains('"') {
+                line.push('"');
+                line.push_str(&c.replace('"', "\"\""));
+                line.push('"');
+            } else {
+                line.push_str(c);
+            }
+        }
+        line.push('\n');
+        self.out.write_all(line.as_bytes()).map_err(Error::RawIo)
+    }
+
+    /// Write one data row (must match the header width).
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        if cells.len() != self.columns {
+            return Err(Error::msg(format!(
+                "csv row has {} cells, header has {}",
+                cells.len(),
+                self.columns
+            )));
+        }
+        let refs: Vec<&str> = cells.iter().map(|s| s.as_str()).collect();
+        self.write_row_str(&refs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush().map_err(Error::RawIo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let path = std::env::temp_dir().join(format!("tmg_csv_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&["1".into(), "2.5".into()]).unwrap();
+            w.row(&["2".into(), "2,1".into()]).unwrap();
+            w.flush().unwrap();
+            assert!(w.row(&["only-one".into()]).is_err());
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "step,loss\n1,2.5\n2,\"2,1\"\n");
+    }
+}

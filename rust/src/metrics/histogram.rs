@@ -1,0 +1,90 @@
+//! Fixed-bucket latency histogram (log-spaced) with quantile queries.
+
+/// Log-spaced histogram from 1 µs to ~1000 s, for step/exchange/copy
+/// latencies in the benches.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    total: u64,
+    lo: f64,
+    ratio: f64,
+}
+
+impl Histogram {
+    /// 180 buckets, factor ~1.12 apart, covering [1e-6, ~1e3] seconds.
+    pub fn new_latency() -> Self {
+        Histogram::new(1e-6, 1.12, 180)
+    }
+
+    pub fn new(lo: f64, ratio: f64, buckets: usize) -> Self {
+        assert!(lo > 0.0 && ratio > 1.0 && buckets > 0);
+        Histogram { buckets: vec![0; buckets], total: 0, lo, ratio }
+    }
+
+    fn bucket_of(&self, v: f64) -> usize {
+        if v <= self.lo {
+            return 0;
+        }
+        let idx = ((v / self.lo).ln() / self.ratio.ln()) as usize;
+        idx.min(self.buckets.len() - 1)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let b = self.bucket_of(v);
+        self.buckets[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper edge of the bucket containing quantile `q` (0..=1).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.lo * self.ratio.powi(i as i32 + 1);
+            }
+        }
+        self.lo * self.ratio.powi(self.buckets.len() as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_ordered() {
+        let mut h = Histogram::new_latency();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 < p99);
+        // p50 of uniform [1e-5, 1e-2] is ~5e-3; allow a bucket factor.
+        assert!((2e-3..9e-3).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        let h = Histogram::new_latency();
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let mut h = Histogram::new(1e-6, 2.0, 4);
+        h.record(1e-9);
+        h.record(1e9);
+        assert_eq!(h.count(), 2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Training/bench metrics: running statistics, histograms, throughput
+//! meters and a CSV sink for loss curves and bench tables.
+
+mod csv;
+mod histogram;
+mod stats;
+mod throughput;
+
+pub use csv::CsvWriter;
+pub use histogram::Histogram;
+pub use stats::RunningStats;
+pub use throughput::ThroughputMeter;

@@ -1,0 +1,117 @@
+//! Images/second + seconds-per-20-iterations meters.
+//!
+//! Table 1's unit is "training time per 20 iterations"; the meter keeps
+//! that native so logs read like the paper.
+
+use crate::util::Timer;
+
+/// Windowed throughput meter.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    timer: Timer,
+    window_steps: usize,
+    steps_in_window: usize,
+    images_in_window: usize,
+    pub last_window_secs: f64,
+    pub last_images_per_sec: f64,
+    total_steps: usize,
+    total_images: usize,
+    total_secs: f64,
+}
+
+impl ThroughputMeter {
+    /// `window_steps` = 20 reproduces the paper's reporting unit.
+    pub fn new(window_steps: usize) -> Self {
+        ThroughputMeter {
+            timer: Timer::start(),
+            window_steps: window_steps.max(1),
+            steps_in_window: 0,
+            images_in_window: 0,
+            last_window_secs: 0.0,
+            last_images_per_sec: 0.0,
+            total_steps: 0,
+            total_images: 0,
+            total_secs: 0.0,
+        }
+    }
+
+    /// Record one step of `images` examples; returns Some(window secs)
+    /// when a window just closed.
+    pub fn step(&mut self, images: usize) -> Option<f64> {
+        self.steps_in_window += 1;
+        self.images_in_window += images;
+        self.total_steps += 1;
+        self.total_images += images;
+        if self.steps_in_window == self.window_steps {
+            let secs = self.timer.restart().as_secs_f64();
+            self.last_window_secs = secs;
+            self.last_images_per_sec =
+                if secs > 0.0 { self.images_in_window as f64 / secs } else { 0.0 };
+            self.total_secs += secs;
+            self.steps_in_window = 0;
+            self.images_in_window = 0;
+            Some(secs)
+        } else {
+            None
+        }
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.total_steps
+    }
+
+    /// Mean seconds per `window_steps` iterations across closed windows.
+    pub fn mean_window_secs(&self) -> f64 {
+        let windows = self.total_steps / self.window_steps;
+        if windows == 0 {
+            0.0
+        } else {
+            self.total_secs / windows as f64
+        }
+    }
+
+    pub fn overall_images_per_sec(&self) -> f64 {
+        if self.total_secs > 0.0 {
+            // Count only images inside closed windows.
+            let closed = (self.total_steps / self.window_steps) * self.window_steps;
+            let per_step = if self.total_steps > 0 {
+                self.total_images as f64 / self.total_steps as f64
+            } else {
+                0.0
+            };
+            closed as f64 * per_step / self.total_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_closes_every_n_steps() {
+        let mut m = ThroughputMeter::new(5);
+        let mut closes = 0;
+        for _ in 0..12 {
+            if m.step(4).is_some() {
+                closes += 1;
+            }
+        }
+        assert_eq!(closes, 2);
+        assert_eq!(m.total_steps(), 12);
+    }
+
+    #[test]
+    fn rates_positive() {
+        let mut m = ThroughputMeter::new(2);
+        m.step(8);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.step(8);
+        assert!(m.last_window_secs > 0.0);
+        assert!(m.last_images_per_sec > 0.0);
+        assert!(m.mean_window_secs() > 0.0);
+        assert!(m.overall_images_per_sec() > 0.0);
+    }
+}

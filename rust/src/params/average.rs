@@ -1,0 +1,68 @@
+//! Averaging kernels (Fig-2 step 3) as standalone slice ops.
+//!
+//! Kept separate from `ParamStore` so the comm layer and the N-GPU
+//! ring extension can reuse them on raw buffers, and so the perf pass
+//! can optimize one single-pass loop.
+
+/// `a <- (a + b) / 2`, elementwise.  The Fig-2 pairwise average.
+pub fn average_pair(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = 0.5 * (*x + y);
+    }
+}
+
+/// `a <- wa * a + wb * b` — generalized weighted average, used by the
+/// ring all-reduce (weights 1/N) and the ablation configurations.
+pub fn average_weighted(a: &mut [f32], wa: f32, b: &[f32], wb: f32) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = wa * *x + wb * y;
+    }
+}
+
+/// `acc <- acc + b` (ring reduce-scatter accumulate step).
+pub fn accumulate(acc: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    for (x, &y) in acc.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+/// `a <- a * s` (ring finalization: divide by N).
+pub fn scale_in_place(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_is_midpoint() {
+        let mut a = [1.0, 3.0];
+        average_pair(&mut a, &[3.0, 1.0]);
+        assert_eq!(a, [2.0, 2.0]);
+    }
+
+    #[test]
+    fn weighted_generalizes_pair() {
+        let mut a = [1.0, 3.0];
+        average_weighted(&mut a, 0.5, &[3.0, 1.0], 0.5);
+        assert_eq!(a, [2.0, 2.0]);
+        let mut b = [1.0];
+        average_weighted(&mut b, 0.25, &[2.0], 0.75);
+        assert_eq!(b, [1.75]);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut acc = [1.0, 2.0];
+        accumulate(&mut acc, &[3.0, 4.0]);
+        assert_eq!(acc, [4.0, 6.0]);
+        scale_in_place(&mut acc, 0.5);
+        assert_eq!(acc, [2.0, 3.0]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Binary checkpoints: params + momenta + step counter, CRC-protected.
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//! magic u32 = 0x544D4743 ("TMGC"), version u32 = 1
+//! step u64, n_tensors u32
+//! per tensor: name_len u32, name bytes, rank u32, dims u32[rank]
+//! payload: params f32s then momenta f32s, manifest order
+//! crc32 u32 over payload bytes
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::params::store::ParamStore;
+use crate::tensor::{HostTensor, Shape};
+use crate::util::crc32::Hasher;
+
+const MAGIC: u32 = 0x544D_4743;
+const VERSION: u32 = 1;
+
+/// Serialize a replica's state.
+pub fn save_checkpoint(path: &Path, store: &ParamStore, step: u64) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| Error::io(parent, e))?;
+        }
+    }
+    let f = std::fs::File::create(path).map_err(|e| Error::io(path, e))?;
+    let mut w = BufWriter::new(f);
+    let put_u32 = |w: &mut BufWriter<std::fs::File>, v: u32| -> Result<()> {
+        w.write_all(&v.to_le_bytes()).map_err(Error::RawIo)
+    };
+    put_u32(&mut w, MAGIC)?;
+    put_u32(&mut w, VERSION)?;
+    w.write_all(&step.to_le_bytes()).map_err(Error::RawIo)?;
+    put_u32(&mut w, store.n_tensors() as u32)?;
+    for (spec, p) in store.specs.iter().zip(&store.params) {
+        put_u32(&mut w, spec.name.len() as u32)?;
+        w.write_all(spec.name.as_bytes()).map_err(Error::RawIo)?;
+        put_u32(&mut w, p.shape().rank() as u32)?;
+        for &d in p.shape().dims() {
+            put_u32(&mut w, d as u32)?;
+        }
+    }
+    let mut crc = Hasher::new();
+    let write_tensor = |w: &mut BufWriter<std::fs::File>, t: &HostTensor, crc: &mut Hasher| -> Result<()> {
+        let mut bytes = Vec::with_capacity(t.numel() * 4);
+        for v in t.as_slice() {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        crc.update(&bytes);
+        w.write_all(&bytes).map_err(Error::RawIo)
+    };
+    for p in &store.params {
+        write_tensor(&mut w, p, &mut crc)?;
+    }
+    for m in &store.momenta {
+        write_tensor(&mut w, m, &mut crc)?;
+    }
+    put_u32(&mut w, crc.finalize())?;
+    w.flush().map_err(Error::RawIo)
+}
+
+/// Load a checkpoint into a store initialized from the same manifest;
+/// returns the saved step.  Validates names, shapes and CRC.
+pub fn load_checkpoint(path: &Path, store: &mut ParamStore) -> Result<u64> {
+    let f = std::fs::File::open(path).map_err(|e| Error::io(path, e))?;
+    let mut r = BufReader::new(f);
+    let get_u32 = |r: &mut BufReader<std::fs::File>| -> Result<u32> {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b).map_err(Error::RawIo)?;
+        Ok(u32::from_le_bytes(b))
+    };
+    if get_u32(&mut r)? != MAGIC {
+        return Err(Error::Checkpoint(format!("{path:?}: bad magic")));
+    }
+    if get_u32(&mut r)? != VERSION {
+        return Err(Error::Checkpoint(format!("{path:?}: bad version")));
+    }
+    let mut step_b = [0u8; 8];
+    r.read_exact(&mut step_b).map_err(Error::RawIo)?;
+    let step = u64::from_le_bytes(step_b);
+    let n = get_u32(&mut r)? as usize;
+    if n != store.n_tensors() {
+        return Err(Error::Checkpoint(format!(
+            "{path:?}: {n} tensors, store has {}",
+            store.n_tensors()
+        )));
+    }
+    for spec in &store.specs {
+        let name_len = get_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name).map_err(Error::RawIo)?;
+        let name = String::from_utf8(name)
+            .map_err(|_| Error::Checkpoint("non-utf8 tensor name".into()))?;
+        if name != spec.name {
+            return Err(Error::Checkpoint(format!(
+                "{path:?}: tensor {name:?} where {:?} expected (manifest changed?)",
+                spec.name
+            )));
+        }
+        let rank = get_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(get_u32(&mut r)? as usize);
+        }
+        if Shape(dims.clone()) != spec.shape {
+            return Err(Error::Checkpoint(format!(
+                "{path:?}: {name:?} has shape {dims:?}, manifest wants {}",
+                spec.shape
+            )));
+        }
+    }
+    let mut crc = Hasher::new();
+    let read_tensor = |r: &mut BufReader<std::fs::File>, t: &mut HostTensor, crc: &mut Hasher| -> Result<()> {
+        let mut bytes = vec![0u8; t.numel() * 4];
+        r.read_exact(&mut bytes).map_err(Error::RawIo)?;
+        crc.update(&bytes);
+        for (v, c) in t.as_mut_slice().iter_mut().zip(bytes.chunks_exact(4)) {
+            *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(())
+    };
+    let mut params = store.params.clone();
+    let mut momenta = store.momenta.clone();
+    for p in params.iter_mut() {
+        read_tensor(&mut r, p, &mut crc)?;
+    }
+    for m in momenta.iter_mut() {
+        read_tensor(&mut r, m, &mut crc)?;
+    }
+    let stored = get_u32(&mut r)?;
+    if stored != crc.finalize() {
+        return Err(Error::Checkpoint(format!("{path:?}: payload CRC mismatch")));
+    }
+    store.params = params;
+    store.momenta = momenta;
+    Ok(step)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ParamManifestSpec;
+
+    fn specs() -> Vec<ParamManifestSpec> {
+        vec![
+            ParamManifestSpec {
+                name: "conv1_w".into(),
+                shape: Shape::of(&[4, 3, 2, 2]),
+                init: "normal".into(),
+                std: 0.1,
+                bias_value: 0.0,
+            },
+            ParamManifestSpec {
+                name: "conv1_b".into(),
+                shape: Shape::of(&[4]),
+                init: "zeros".into(),
+                std: 0.0,
+                bias_value: 0.0,
+            },
+        ]
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tmg_ckpt_{tag}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut a = ParamStore::init(&specs(), 3);
+        for v in a.momenta[0].as_mut_slice() {
+            *v = 0.25;
+        }
+        let path = tmp("rt");
+        save_checkpoint(&path, &a, 1234).unwrap();
+        let mut b = ParamStore::init(&specs(), 999); // different init
+        let step = load_checkpoint(&path, &mut b).unwrap();
+        assert_eq!(step, 1234);
+        assert_eq!(a.max_divergence(&b), 0.0);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let a = ParamStore::init(&specs(), 3);
+        let path = tmp("corrupt");
+        save_checkpoint(&path, &a, 1).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 10] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut b = ParamStore::init(&specs(), 3);
+        assert!(load_checkpoint(&path, &mut b).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_manifest() {
+        let a = ParamStore::init(&specs(), 3);
+        let path = tmp("mismatch");
+        save_checkpoint(&path, &a, 1).unwrap();
+        let mut other_specs = specs();
+        other_specs[1].name = "renamed".into();
+        let mut b = ParamStore::init(&other_specs, 3);
+        assert!(load_checkpoint(&path, &mut b).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Host-side parameter initialization from manifest specs.
+//!
+//! Both replicas call this with the *same* seed, reproducing the
+//! paper's "they are initialized identically": the tensors are
+//! generated from per-tensor PCG streams derived from (seed, index),
+//! so the result is independent of iteration order and worker id.
+
+use crate::runtime::artifact::ParamManifestSpec;
+use crate::tensor::HostTensor;
+use crate::util::Pcg32;
+
+/// Materialize parameters per manifest recipe.
+pub fn init_params(specs: &[ParamManifestSpec], seed: u64) -> Vec<HostTensor> {
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut t = HostTensor::zeros(s.shape.clone());
+            match s.init.as_str() {
+                "normal" => {
+                    let mut rng = Pcg32::new(seed ^ 0x9A17_AB1E, i as u64 + 1);
+                    rng.fill_normal(t.as_mut_slice(), s.std);
+                }
+                // "zeros" honours bias_value (AlexNet sets some biases to 1).
+                _ => {
+                    if s.bias_value != 0.0 {
+                        t.as_mut_slice().fill(s.bias_value);
+                    }
+                }
+            }
+            t
+        })
+        .collect()
+}
+
+/// Zero momenta matching the parameter shapes.
+pub fn zero_momenta(specs: &[ParamManifestSpec]) -> Vec<HostTensor> {
+    specs.iter().map(|s| HostTensor::zeros(s.shape.clone())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    fn spec(name: &str, shape: &[usize], init: &str, std: f32, bias: f32) -> ParamManifestSpec {
+        ParamManifestSpec {
+            name: name.into(),
+            shape: Shape::of(shape),
+            init: init.into(),
+            std,
+            bias_value: bias,
+        }
+    }
+
+    #[test]
+    fn identical_across_calls() {
+        let specs = vec![spec("w", &[32, 16], "normal", 0.05, 0.0)];
+        let a = init_params(&specs, 7);
+        let b = init_params(&specs, 7);
+        assert_eq!(a[0].as_slice(), b[0].as_slice());
+        let c = init_params(&specs, 8);
+        assert_ne!(a[0].as_slice(), c[0].as_slice());
+    }
+
+    #[test]
+    fn respects_std() {
+        let specs = vec![spec("w", &[10_000], "normal", 0.02, 0.0)];
+        let p = init_params(&specs, 1);
+        let std = crate::util::math::stddev(
+            &p[0].as_slice().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        assert!((std - 0.02).abs() < 0.002, "std {std}");
+    }
+
+    #[test]
+    fn bias_fill() {
+        let specs = vec![
+            spec("b0", &[4], "zeros", 0.0, 0.0),
+            spec("b1", &[4], "zeros", 0.0, 1.0),
+        ];
+        let p = init_params(&specs, 1);
+        assert_eq!(p[0].as_slice(), &[0.0; 4]);
+        assert_eq!(p[1].as_slice(), &[1.0; 4]);
+    }
+
+    #[test]
+    fn per_tensor_streams_differ() {
+        let specs = vec![
+            spec("w1", &[64], "normal", 1.0, 0.0),
+            spec("w2", &[64], "normal", 1.0, 0.0),
+        ];
+        let p = init_params(&specs, 3);
+        assert_ne!(p[0].as_slice(), p[1].as_slice());
+    }
+
+    #[test]
+    fn momenta_zero() {
+        let specs = vec![spec("w", &[3, 3], "normal", 0.1, 0.0)];
+        let m = zero_momenta(&specs);
+        assert!(m[0].as_slice().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! Parameter state: host-side init (identical across replicas, paper
+//! §2.2), the per-worker store of weights + momenta, averaging kernels
+//! (Fig-2 step 3) and binary checkpoints.
+
+pub mod average;
+pub mod checkpoint;
+pub mod init;
+pub mod store;
+
+pub use average::{average_pair, average_weighted};
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use init::init_params;
+pub use store::ParamStore;

@@ -1,0 +1,223 @@
+//! Per-worker parameter store: weights + momenta, addressable by the
+//! manifest order the step ABI expects.
+
+use crate::error::{Error, Result};
+use crate::params::init::{init_params, zero_momenta};
+use crate::runtime::artifact::ParamManifestSpec;
+use crate::tensor::HostTensor;
+
+/// Weights and momenta for one replica.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub specs: Vec<ParamManifestSpec>,
+    pub params: Vec<HostTensor>,
+    pub momenta: Vec<HostTensor>,
+}
+
+impl ParamStore {
+    /// Fresh store per manifest; same seed => identical replicas.
+    pub fn init(specs: &[ParamManifestSpec], seed: u64) -> Self {
+        ParamStore {
+            specs: specs.to_vec(),
+            params: init_params(specs, seed),
+            momenta: zero_momenta(specs),
+        }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Bytes exchanged per Fig-2 round: params (+ momenta if included).
+    pub fn exchange_bytes(&self, include_momentum: bool) -> usize {
+        let p = self.total_elements() * 4;
+        if include_momentum {
+            2 * p
+        } else {
+            p
+        }
+    }
+
+    /// Replace state from step outputs (same order as `params` then
+    /// `momenta`).
+    pub fn update_from(&mut self, new_params: Vec<HostTensor>, new_momenta: Vec<HostTensor>) -> Result<()> {
+        if new_params.len() != self.params.len() || new_momenta.len() != self.momenta.len() {
+            return Err(Error::Shape(format!(
+                "update_from: {}+{} tensors, store holds {}+{}",
+                new_params.len(),
+                new_momenta.len(),
+                self.params.len(),
+                self.momenta.len()
+            )));
+        }
+        for (slot, t) in self.params.iter_mut().zip(new_params) {
+            if slot.shape() != t.shape() {
+                return Err(Error::Shape(format!(
+                    "update_from: param shape {} -> {}",
+                    slot.shape(),
+                    t.shape()
+                )));
+            }
+            *slot = t;
+        }
+        for (slot, t) in self.momenta.iter_mut().zip(new_momenta) {
+            if slot.shape() != t.shape() {
+                return Err(Error::Shape("update_from: momentum shape mismatch".into()));
+            }
+            *slot = t;
+        }
+        Ok(())
+    }
+
+    /// Flatten all state (params then momenta) into one contiguous
+    /// buffer — the wire format of the exchange transports.
+    pub fn flatten(&self, include_momentum: bool) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.flatten_into(&mut out, include_momentum);
+        out
+    }
+
+    /// Allocation-reusing flatten (§Perf: the exchange hot path calls
+    /// this every round; steady-state it performs zero allocations).
+    pub fn flatten_into(&self, out: &mut Vec<f32>, include_momentum: bool) {
+        let n = self.total_elements() * if include_momentum { 2 } else { 1 };
+        out.clear();
+        out.reserve(n);
+        for p in &self.params {
+            out.extend_from_slice(p.as_slice());
+        }
+        if include_momentum {
+            for m in &self.momenta {
+                out.extend_from_slice(m.as_slice());
+            }
+        }
+    }
+
+    /// Average our state with a peer's flattened state in place
+    /// (Fig-2 step 3).  The peer buffer must come from `flatten` with
+    /// the same `include_momentum`.
+    pub fn average_with_flat(&mut self, peer: &[f32], include_momentum: bool) -> Result<()> {
+        let want = self.total_elements() * if include_momentum { 2 } else { 1 };
+        if peer.len() != want {
+            return Err(Error::Shape(format!(
+                "average_with_flat: peer has {} values, want {want}",
+                peer.len()
+            )));
+        }
+        let mut off = 0;
+        for p in self.params.iter_mut() {
+            let n = p.numel();
+            for (a, &b) in p.as_mut_slice().iter_mut().zip(&peer[off..off + n]) {
+                *a = 0.5 * (*a + b);
+            }
+            off += n;
+        }
+        if include_momentum {
+            for m in self.momenta.iter_mut() {
+                let n = m.numel();
+                for (a, &b) in m.as_mut_slice().iter_mut().zip(&peer[off..off + n]) {
+                    *a = 0.5 * (*a + b);
+                }
+                off += n;
+            }
+        }
+        Ok(())
+    }
+
+    /// Max |a-b| across all state of two stores (divergence metric for
+    /// the exchange-period ablation E6).
+    pub fn max_divergence(&self, other: &ParamStore) -> f32 {
+        let mut d = 0f32;
+        for (a, b) in self.params.iter().zip(&other.params) {
+            d = d.max(crate::util::math::max_abs_diff(a.as_slice(), b.as_slice()));
+        }
+        for (a, b) in self.momenta.iter().zip(&other.momenta) {
+            d = d.max(crate::util::math::max_abs_diff(a.as_slice(), b.as_slice()));
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    fn specs() -> Vec<ParamManifestSpec> {
+        vec![
+            ParamManifestSpec {
+                name: "w".into(),
+                shape: Shape::of(&[2, 3]),
+                init: "normal".into(),
+                std: 0.1,
+                bias_value: 0.0,
+            },
+            ParamManifestSpec {
+                name: "b".into(),
+                shape: Shape::of(&[3]),
+                init: "zeros".into(),
+                std: 0.0,
+                bias_value: 0.5,
+            },
+        ]
+    }
+
+    #[test]
+    fn init_identical_replicas() {
+        let a = ParamStore::init(&specs(), 5);
+        let b = ParamStore::init(&specs(), 5);
+        assert_eq!(a.max_divergence(&b), 0.0);
+        assert_eq!(a.total_elements(), 9);
+        assert_eq!(a.exchange_bytes(true), 72);
+        assert_eq!(a.exchange_bytes(false), 36);
+    }
+
+    #[test]
+    fn flatten_average_roundtrip() {
+        let mut a = ParamStore::init(&specs(), 5);
+        let mut b = ParamStore::init(&specs(), 5);
+        // Perturb b.
+        for v in b.params[0].as_mut_slice() {
+            *v += 1.0;
+        }
+        for v in b.momenta[1].as_mut_slice() {
+            *v += 2.0;
+        }
+        let fa = a.flatten(true);
+        let fb = b.flatten(true);
+        a.average_with_flat(&fb, true).unwrap();
+        b.average_with_flat(&fa, true).unwrap();
+        // After symmetric averaging both replicas agree (Fig-2 invariant).
+        assert!(a.max_divergence(&b) < 1e-7);
+        // And the averaged value is midway.
+        assert!((a.params[0].as_slice()[0]
+            - (fa[0] + fb[0]) * 0.5)
+            .abs()
+            < 1e-7);
+    }
+
+    #[test]
+    fn average_without_momentum_leaves_momenta() {
+        let mut a = ParamStore::init(&specs(), 5);
+        let mut b = ParamStore::init(&specs(), 5);
+        for v in b.momenta[0].as_mut_slice() {
+            *v += 3.0;
+        }
+        let fb = b.flatten(false);
+        let before = a.momenta[0].clone();
+        a.average_with_flat(&fb, false).unwrap();
+        assert_eq!(a.momenta[0], before);
+    }
+
+    #[test]
+    fn shape_guards() {
+        let mut a = ParamStore::init(&specs(), 5);
+        assert!(a.average_with_flat(&[0.0; 3], true).is_err());
+        let wrong = vec![HostTensor::zeros(Shape::of(&[1]))];
+        assert!(a.update_from(wrong, vec![]).is_err());
+    }
+}

@@ -1,0 +1,301 @@
+//! `artifacts/manifest.json` schema (see python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::tensor::{DType, Shape};
+use crate::util::Json;
+
+/// One named input or output of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Shape,
+}
+
+impl IoSpec {
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        let name = v.str_field("name")?.to_string();
+        let dtype_s = v.str_field("dtype")?;
+        let dtype = DType::parse(dtype_s)
+            .ok_or_else(|| Error::Manifest(format!("unknown dtype {dtype_s:?}")))?;
+        let shape = Shape(
+            v.arr_field("shape")?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::Manifest("non-integer shape dim".into()))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        );
+        Ok(IoSpec { name, dtype, shape })
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.shape.numel() * self.dtype.size_bytes()
+    }
+}
+
+/// Parameter init recipe from the model entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamManifestSpec {
+    pub name: String,
+    pub shape: Shape,
+    pub init: String,
+    pub std: f32,
+    pub bias_value: f32,
+}
+
+/// Model metadata (shared across that model's artifacts).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub image_hw: usize,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub params: Vec<ParamManifestSpec>,
+}
+
+impl ModelSpec {
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.shape.numel()).sum()
+    }
+}
+
+/// Artifact kind tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Train,
+    Eval,
+}
+
+/// One compiled-step artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub model: String,
+    pub backend: String,
+    pub batch_size: usize,
+    pub file: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelSpec>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path).map_err(|e| Error::io(&path, e))?;
+        Self::parse(dir, &src)
+    }
+
+    pub fn parse(dir: &Path, src: &str) -> Result<Manifest> {
+        let v = Json::parse(src)?;
+        let version = v.num_field("version")? as u64;
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported manifest version {version}")));
+        }
+
+        let mut models = Vec::new();
+        for (name, m) in v
+            .field("models")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("models is not an object".into()))?
+        {
+            let mut params = Vec::new();
+            for p in m.arr_field("params")? {
+                params.push(ParamManifestSpec {
+                    name: p.str_field("name")?.to_string(),
+                    shape: Shape(
+                        p.arr_field("shape")?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize().ok_or_else(|| {
+                                    Error::Manifest("non-integer param dim".into())
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                    ),
+                    init: p.str_field("init")?.to_string(),
+                    std: p.num_field("std")? as f32,
+                    bias_value: p.num_field("bias_value")? as f32,
+                });
+            }
+            models.push(ModelSpec {
+                name: name.clone(),
+                image_hw: m.num_field("image_hw")? as usize,
+                in_channels: m.num_field("in_channels")? as usize,
+                num_classes: m.num_field("num_classes")? as usize,
+                params,
+            });
+        }
+
+        let mut artifacts = Vec::new();
+        for a in v.arr_field("artifacts")? {
+            let kind = match a.str_field("kind")? {
+                "train" => ArtifactKind::Train,
+                "eval" => ArtifactKind::Eval,
+                other => return Err(Error::Manifest(format!("unknown kind {other:?}"))),
+            };
+            artifacts.push(ArtifactSpec {
+                name: a.str_field("name")?.to_string(),
+                kind,
+                model: a.str_field("model")?.to_string(),
+                backend: a.str_field("backend")?.to_string(),
+                batch_size: a.num_field("batch_size")? as usize,
+                file: dir.join(a.str_field("file")?),
+                inputs: a
+                    .arr_field("inputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .arr_field("outputs")?
+                    .iter()
+                    .map(IoSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+
+        let man = Manifest { dir: dir.to_path_buf(), models, artifacts };
+        man.validate()?;
+        Ok(man)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for a in &self.artifacts {
+            let model = self.model(&a.model)?;
+            // Train artifacts carry params + momenta after the 4 data
+            // inputs and after the 2 scalar outputs.
+            if a.kind == ArtifactKind::Train {
+                let p = model.param_count();
+                if a.inputs.len() != 4 + 2 * p {
+                    return Err(Error::Manifest(format!(
+                        "{}: expected {} inputs, manifest lists {}",
+                        a.name,
+                        4 + 2 * p,
+                        a.inputs.len()
+                    )));
+                }
+                if a.outputs.len() != 2 + 2 * p {
+                    return Err(Error::Manifest(format!(
+                        "{}: expected {} outputs, manifest lists {}",
+                        a.name,
+                        2 + 2 * p,
+                        a.outputs.len()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| Error::Manifest(format!("model {name:?} not in manifest")))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| {
+                let available: Vec<_> = self.artifacts.iter().map(|a| a.name.as_str()).collect();
+                Error::Manifest(format!(
+                    "artifact {name:?} not found; available: {available:?} \
+                     (run `make artifacts`?)"
+                ))
+            })
+    }
+
+    /// Find the eval artifact for a model, if present.
+    pub fn eval_artifact_for(&self, model: &str) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Eval && a.model == model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1,
+      "models": {
+        "m": {"image_hw": 8, "in_channels": 1, "num_classes": 2,
+              "params": [{"name": "w", "shape": [2, 2], "init": "normal",
+                          "std": 0.01, "bias_value": 0.0}]}
+      },
+      "artifacts": [
+        {"name": "train_m_ref_b2", "kind": "train", "model": "m",
+         "backend": "ref", "batch_size": 2, "file": "t.hlo.txt",
+         "inputs": [
+            {"name": "images", "dtype": "float32", "shape": [2,1,8,8]},
+            {"name": "labels", "dtype": "int32", "shape": [2]},
+            {"name": "lr", "dtype": "float32", "shape": []},
+            {"name": "seed", "dtype": "int32", "shape": []},
+            {"name": "w", "dtype": "float32", "shape": [2,2]},
+            {"name": "w.m", "dtype": "float32", "shape": [2,2]}],
+         "outputs": [
+            {"name": "loss", "dtype": "float32", "shape": []},
+            {"name": "correct1", "dtype": "int32", "shape": []},
+            {"name": "w", "dtype": "float32", "shape": [2,2]},
+            {"name": "w.m", "dtype": "float32", "shape": [2,2]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), MINI).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let a = m.artifact("train_m_ref_b2").unwrap();
+        assert_eq!(a.batch_size, 2);
+        assert_eq!(a.inputs[0].shape.dims(), &[2, 1, 8, 8]);
+        assert_eq!(a.inputs[0].byte_size(), 2 * 64 * 4);
+        assert_eq!(m.model("m").unwrap().total_param_elements(), 4);
+        assert!(m.artifact("zzz").is_err());
+        assert!(m.eval_artifact_for("m").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_io_count() {
+        let bad = MINI.replace(
+            r#"{"name": "w.m", "dtype": "float32", "shape": [2,2]}],
+         "outputs""#,
+            r#"],
+         "outputs""#,
+        );
+        // Removing an input breaks the 4+2P invariant.
+        assert!(Manifest::parse(Path::new("/tmp/a"), &bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            let a = m.artifact("train_alexnet-micro_refconv_b8").unwrap();
+            assert_eq!(a.batch_size, 8);
+            let model = m.model("alexnet-micro").unwrap();
+            assert_eq!(a.inputs.len(), 4 + 2 * model.param_count());
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! PJRT client wrapper — one per worker thread.
+//!
+//! The paper pinned one Theano process per GPU; here each worker thread
+//! owns a `RuntimeClient` (PJRT CPU client) and compiles its own
+//! executables from the shared HLO text.  Clients are intentionally
+//! *not* shared across threads (the underlying handles are raw C++
+//! pointers with no Sync guarantee).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::executable::StepExecutable;
+
+/// A PJRT client plus compile entry points.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU PJRT client (the "virtual GPU" substrate).
+    pub fn cpu() -> Result<Self> {
+        Ok(RuntimeClient { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        if !path.exists() {
+            return Err(Error::msg(format!(
+                "HLO artifact {path:?} missing — run `make artifacts` first"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::msg(format!("non-utf8 path {path:?}")))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Load + compile one manifest artifact into a step executable.
+    pub fn load_step(&self, spec: &ArtifactSpec) -> Result<StepExecutable> {
+        let exe = self.compile_hlo_file(&spec.file)?;
+        Ok(StepExecutable::new(exe, spec.clone()))
+    }
+}

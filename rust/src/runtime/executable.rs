@@ -1,0 +1,56 @@
+//! A compiled step function with its manifest ABI.
+//!
+//! `run` takes literals in manifest input order and returns the
+//! decomposed output tuple in manifest output order.  All jax modules
+//! are lowered with `return_tuple=True`, so the executable produces a
+//! single tuple buffer; we sync it to host and decompose — on the CPU
+//! PJRT backend "device" memory is host memory, so this is the same
+//! memcpy the paper's host<->GPU staging performed (and it is what the
+//! calibration pass measures as the step cost).
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::literal_bridge::check_against_spec;
+
+/// A loaded + compiled artifact.
+pub struct StepExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl StepExecutable {
+    pub fn new(exe: xla::PjRtLoadedExecutable, spec: ArtifactSpec) -> Self {
+        StepExecutable { exe, spec }
+    }
+
+    /// Execute with literals in manifest input order.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: got {} inputs, ABI wants {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let buf = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Xla("execute returned no outputs".into()))?;
+        let tuple = buf.to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{}: executable returned {} outputs, ABI wants {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        for (lit, spec) in outs.iter().zip(&self.spec.outputs) {
+            check_against_spec(lit, spec)?;
+        }
+        Ok(outs)
+    }
+}

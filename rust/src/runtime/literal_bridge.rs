@@ -1,0 +1,73 @@
+//! Host tensor <-> `xla::Literal` bridging.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::IoSpec;
+use crate::tensor::{DType, HostTensor, Shape};
+
+/// Build an f32 literal from a host tensor.
+pub fn tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.as_slice());
+    if t.shape().rank() == 0 {
+        // vec1 of a single element reshaped to scalar.
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&t.shape().dims_i64())?)
+    }
+}
+
+/// Build an i32 vector literal (labels).
+pub fn i32_to_literal(v: &[i32]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(v))
+}
+
+/// Scalar literals.
+pub fn f32_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Pull an f32 literal back into a host tensor with the given shape.
+pub fn literal_to_tensor(lit: &xla::Literal, shape: Shape) -> Result<HostTensor> {
+    let v = lit.to_vec::<f32>()?;
+    HostTensor::from_vec(shape, v)
+}
+
+/// Read a scalar from a literal.
+pub fn literal_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+pub fn literal_i32(lit: &xla::Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}
+
+/// Check a literal's element count against an IoSpec (cheap sanity
+/// check on every step output in debug builds, on load in release).
+pub fn check_against_spec(lit: &xla::Literal, spec: &IoSpec) -> Result<()> {
+    let n = lit.element_count();
+    if n != spec.shape.numel() {
+        return Err(Error::Shape(format!(
+            "output {:?}: literal has {n} elements, spec {} wants {}",
+            spec.name,
+            spec.shape,
+            spec.shape.numel()
+        )));
+    }
+    let ty = lit.ty()?;
+    let ok = matches!(
+        (ty, spec.dtype),
+        (xla::ElementType::F32, DType::F32)
+            | (xla::ElementType::S32, DType::I32)
+            | (xla::ElementType::U8, DType::U8)
+    );
+    if !ok {
+        return Err(Error::Shape(format!(
+            "output {:?}: literal type {ty:?} vs spec {:?}",
+            spec.name, spec.dtype
+        )));
+    }
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! This is the Theano-compiled-function analog.  `make artifacts` emits
+//! `artifacts/*.hlo.txt` + `manifest.json` once; at run time each
+//! worker thread builds a [`RuntimeClient`] (PJRT CPU client), loads
+//! its train/eval [`StepExecutable`]s and drives them with literals
+//! bridged from host tensors.  Python never runs here.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see aot.py and /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod literal_bridge;
+
+pub use artifact::{ArtifactSpec, IoSpec, Manifest, ModelSpec, ParamManifestSpec};
+pub use client::RuntimeClient;
+pub use executable::StepExecutable;

@@ -1,0 +1,252 @@
+//! Structural (roofline) model of the three GEMM schedules on the
+//! target accelerator — the DESIGN.md §Hardware-Adaptation estimate.
+//!
+//! Interpret-mode CPU timings cannot rank TPU/GPU kernel schedules: at
+//! micro scale XLA fuses the naive full-K dot into one efficient CPU
+//! GEMM while the K-tiled schedules pay interpreter bookkeeping, so a
+//! raw CPU calibration *inverts* the paper's backend ordering (see
+//! EXPERIMENTS.md E1 caveat).  What distinguishes the schedules on the
+//! real device is structure: on-chip memory footprint, bytes staged per
+//! MAC, launch count, and epilogue fusion.  This module prices those
+//! structural terms for AlexNet's im2col GEMMs on Titan-Black-class
+//! constants and yields the backend time *ratios* the Table-1 simulator
+//! combines with measured absolute scale.
+
+use crate::sim::flops::{alexnet, ArchDesc};
+
+/// Accelerator constants (Titan-Black class, 2014).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Peak MAC rate (MAC/s).  Titan Black: ~5.1 TFLOP/s = 2.55e12 MAC/s.
+    pub mac_rate: f64,
+    /// Device memory bandwidth (bytes/s).  GDDR5: ~336 GB/s.
+    pub mem_bw: f64,
+    /// On-chip staging budget per block (bytes).  Shared-mem/VMEM class.
+    pub onchip_bytes: usize,
+    /// Fixed cost per kernel invocation (one per GEMM call).
+    pub launch_s: f64,
+    /// Cost per grid trip (a Pallas grid step is a loop iteration with
+    /// a block-spec address swap, not a kernel launch).
+    pub grid_trip_s: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        DeviceModel {
+            mac_rate: 2.55e12,
+            mem_bw: 336e9,
+            onchip_bytes: 16 << 20, // VMEM-class budget per DESIGN.md
+            launch_s: 6e-6,
+            grid_trip_s: 1e-7,
+        }
+    }
+}
+
+/// One GEMM in the network: [M x K] @ [K x N].
+#[derive(Clone, Copy, Debug)]
+pub struct Gemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+/// Block schedule mirroring python/compile/kernels/matmul_pallas.py.
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub name: &'static str,
+    pub bm: usize,
+    pub bn: usize,
+    /// None = full-K panels (the convnet schedule).
+    pub bk: Option<usize>,
+    /// Whether bias+ReLU is fused into the GEMM epilogue.
+    pub fused_epilogue: bool,
+    /// Per-shape tile autotuning (cuDNN-R2's heuristic dispatch): pick
+    /// the better of the narrow/wide N tiles per GEMM.
+    pub autotune: bool,
+}
+
+pub const SCHEDULES: [Schedule; 3] = [
+    Schedule { name: "convnet", bm: 128, bn: 128, bk: None, fused_epilogue: false, autotune: false },
+    Schedule { name: "cudnn_r1", bm: 128, bn: 128, bk: Some(128), fused_epilogue: false, autotune: false },
+    Schedule { name: "cudnn_r2", bm: 128, bn: 256, bk: Some(128), fused_epilogue: true, autotune: true },
+];
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// The im2col GEMMs of one training step (fwd; bwd ≈ 2x fwd traffic
+/// through the same schedule — a uniform factor that cancels in ratios
+/// but is included for absolute sanity).
+pub fn arch_gemms(arch: &ArchDesc, batch: usize) -> Vec<Gemm> {
+    let mut out = Vec::new();
+    let mut cin = arch.in_channels;
+    let mut hw = arch.image_hw;
+    for c in &arch.convs {
+        let out_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
+        out.push(Gemm {
+            m: batch * out_hw * out_hw,
+            k: cin * c.kernel * c.kernel,
+            n: c.cout,
+        });
+        hw = out_hw;
+        if c.pool {
+            hw = (hw - arch.pool_window) / arch.pool_stride + 1;
+        }
+        cin = c.cout;
+    }
+    let mut feat = cin * hw * hw;
+    for &d in &arch.fc_dims {
+        out.push(Gemm { m: batch, k: feat, n: d });
+        feat = d;
+    }
+    out.push(Gemm { m: batch, k: feat, n: arch.num_classes });
+    out
+}
+
+/// Effective block shape after shrinking to the on-chip budget
+/// (the convnet schedule's full-K panels may not fit; it must halve
+/// its tiles, multiplying panel re-reads — its structural penalty).
+fn effective_blocks(s: &Schedule, g: &Gemm, dev: &DeviceModel) -> (usize, usize, usize) {
+    let bk = s.bk.unwrap_or(g.k.max(1));
+    let mut bm = s.bm;
+    let mut bn = s.bn;
+    // f32 staging: A block + B block + f32 accumulator.
+    let fits = |bm: usize, bn: usize| (bm * bk + bk * bn + bm * bn) * 4 <= dev.onchip_bytes;
+    while !fits(bm, bn) && (bm > 8 || bn > 8) {
+        if bm >= bn && bm > 8 {
+            bm /= 2;
+        } else if bn > 8 {
+            bn /= 2;
+        } else {
+            break;
+        }
+    }
+    (bm, bn, bk)
+}
+
+/// Roofline time of one GEMM under a schedule (autotuning schedules
+/// pick the better of their narrow/wide N tiles per shape).
+pub fn gemm_time(s: &Schedule, g: &Gemm, dev: &DeviceModel) -> f64 {
+    if s.autotune {
+        let narrow = Schedule { bn: 128, autotune: false, ..*s };
+        let wide = Schedule { bn: 256, autotune: false, ..*s };
+        return gemm_time(&narrow, g, dev).min(gemm_time(&wide, g, dev));
+    }
+    gemm_time_fixed(s, g, dev)
+}
+
+fn gemm_time_fixed(s: &Schedule, g: &Gemm, dev: &DeviceModel) -> f64 {
+    let (bm, bn, bk) = effective_blocks(s, g, dev);
+    let (gm, gn, gk) = (ceil_div(g.m, bm), ceil_div(g.n, bn), ceil_div(g.k, bk));
+    // MACs issued include padding waste (MXU consumes whole tiles).
+    let macs_issued = (gm * bm) as f64 * (gn * bn) as f64 * (gk * bk) as f64;
+    // HBM traffic: A panels re-read once per N block, B panels once per
+    // M block, output written once (+read+rewritten by an unfused
+    // bias+ReLU epilogue pass).
+    let a_bytes = (gn * gm * gk) as f64 * (bm * bk) as f64 * 4.0;
+    let b_bytes = (gm * gn * gk) as f64 * (bk * bn) as f64 * 4.0;
+    let mut out_bytes = (g.m * g.n) as f64 * 4.0;
+    if !s.fused_epilogue {
+        out_bytes += (g.m * g.n) as f64 * 8.0; // separate epilogue: read+write
+    }
+    let compute_t = macs_issued / dev.mac_rate;
+    let mem_t = (a_bytes + b_bytes + out_bytes) / dev.mem_bw;
+    let grid_trips = (gm * gn) as f64 * if s.bk.is_some() { gk as f64 } else { 1.0 };
+    // K-tiled schedules double-buffer: HBM traffic overlaps compute
+    // (roofline max).  The full-K-panel schedule fills the staging
+    // budget with one panel pair, leaving no room to prefetch — memory
+    // time serializes with compute (cuda-convnet's structural penalty).
+    let body = if s.bk.is_some() {
+        compute_t.max(mem_t)
+    } else {
+        compute_t + mem_t
+    };
+    // An unfused epilogue is a second kernel launch per GEMM.
+    let kernel_launches = if s.fused_epilogue { 1.0 } else { 2.0 };
+    body + kernel_launches * dev.launch_s + grid_trips * dev.grid_trip_s
+}
+
+/// Total fwd+bwd GEMM time of one train step under a schedule
+/// (bwd-data + bwd-filter re-run the GEMM engine: ~3x fwd volume).
+pub fn step_time(s: &Schedule, arch: &ArchDesc, batch: usize, dev: &DeviceModel) -> f64 {
+    3.0 * arch_gemms(arch, batch)
+        .iter()
+        .map(|g| gemm_time(s, g, dev))
+        .sum::<f64>()
+}
+
+/// Backend time ratios relative to `cudnn_r2` for AlexNet at `batch`.
+/// These carry the paper's backend ordering into the Table-1 simulator;
+/// measured CPU costs provide the absolute anchor.
+pub fn backend_ratios(batch: usize) -> Vec<(&'static str, f64)> {
+    let dev = DeviceModel::default();
+    let arch = alexnet();
+    let base = step_time(&SCHEDULES[2], &arch, batch, &dev);
+    SCHEDULES
+        .iter()
+        .map(|s| (s.name, step_time(s, &arch, batch, &dev) / base))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_backend_ordering_holds_structurally() {
+        // cudnn_r2 <= cudnn_r1 <= convnet, as in Table 1.
+        for batch in [128usize, 256] {
+            let r = backend_ratios(batch);
+            let get = |n: &str| r.iter().find(|(name, _)| *name == n).unwrap().1;
+            assert!(get("cudnn_r2") <= get("cudnn_r1"), "{r:?}");
+            assert!(get("cudnn_r1") <= get("convnet"), "{r:?}");
+            // And the spread is in the paper's band (R2 is ~15-20%
+            // faster than convnet, not 10x): 23.39/19.72 = 1.19.
+            let spread = get("convnet") / get("cudnn_r2");
+            assert!((1.02..2.0).contains(&spread), "spread {spread}");
+        }
+    }
+
+    #[test]
+    fn convnet_pays_serial_memory_time() {
+        // AlexNet conv2-shaped GEMM: the full-K schedule serializes
+        // HBM traffic with compute, the K-tiled ones overlap it.
+        let dev = DeviceModel::default();
+        let g = Gemm { m: 186_624, k: 2_400, n: 256 };
+        let naive = gemm_time(&SCHEDULES[0], &g, &dev);
+        let tiled = gemm_time(&SCHEDULES[1], &g, &dev);
+        assert!(naive > tiled, "naive {naive} vs tiled {tiled}");
+    }
+
+    #[test]
+    fn huge_k_panels_do_shrink() {
+        // A pathological K forces even the full-K schedule to shrink
+        // its panels to the on-chip budget.
+        let dev = DeviceModel::default();
+        let g = Gemm { m: 4_096, k: 200_000, n: 4_096 };
+        let (bm, bn, _) = effective_blocks(&SCHEDULES[0], &g, &dev);
+        assert!(bm < 128 || bn < 128, "got {bm}x{bn}");
+    }
+
+    #[test]
+    fn gemm_list_matches_layer_count() {
+        let arch = alexnet();
+        let gemms = arch_gemms(&arch, 128);
+        assert_eq!(gemms.len(), 5 + 2 + 1);
+        // conv1: 55x55 output, K = 3*11*11.
+        assert_eq!(gemms[0].k, 363);
+        assert_eq!(gemms[0].m, 128 * 55 * 55);
+        assert_eq!(gemms[0].n, 96);
+    }
+
+    #[test]
+    fn times_scale_with_batch() {
+        let dev = DeviceModel::default();
+        let arch = alexnet();
+        let t128 = step_time(&SCHEDULES[2], &arch, 128, &dev);
+        let t256 = step_time(&SCHEDULES[2], &arch, 256, &dev);
+        let ratio = t256 / t128;
+        assert!((1.7..2.3).contains(&ratio), "batch scaling {ratio}");
+    }
+}

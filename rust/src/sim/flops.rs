@@ -1,0 +1,198 @@
+//! Analytic FLOP/parameter counts for the AlexNet family.
+//!
+//! Mirrors python/compile/model.py's architecture descriptions; used to
+//! scale measured micro-model step times to paper-scale AlexNet without
+//! having to run the full net on this CPU testbed.
+
+/// One conv stage (see model.py ConvSpec).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvStage {
+    pub cout: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub pool: bool,
+}
+
+/// Architecture description sufficient for FLOP counting.
+#[derive(Clone, Debug)]
+pub struct ArchDesc {
+    pub name: &'static str,
+    pub image_hw: usize,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub convs: Vec<ConvStage>,
+    pub fc_dims: Vec<usize>,
+    pub pool_window: usize,
+    pub pool_stride: usize,
+}
+
+/// The full AlexNet of the paper.
+pub fn alexnet() -> ArchDesc {
+    ArchDesc {
+        name: "alexnet",
+        image_hw: 227,
+        in_channels: 3,
+        num_classes: 1000,
+        convs: vec![
+            ConvStage { cout: 96, kernel: 11, stride: 4, pad: 0, pool: true },
+            ConvStage { cout: 256, kernel: 5, stride: 1, pad: 2, pool: true },
+            ConvStage { cout: 384, kernel: 3, stride: 1, pad: 1, pool: false },
+            ConvStage { cout: 384, kernel: 3, stride: 1, pad: 1, pool: false },
+            ConvStage { cout: 256, kernel: 3, stride: 1, pad: 1, pool: true },
+        ],
+        fc_dims: vec![4096, 4096],
+        pool_window: 3,
+        pool_stride: 2,
+    }
+}
+
+/// The CPU-scale variant the end-to-end driver trains.
+pub fn alexnet_tiny() -> ArchDesc {
+    ArchDesc {
+        name: "alexnet-tiny",
+        image_hw: 64,
+        in_channels: 3,
+        num_classes: 100,
+        convs: vec![
+            ConvStage { cout: 32, kernel: 5, stride: 2, pad: 2, pool: true },
+            ConvStage { cout: 64, kernel: 3, stride: 1, pad: 1, pool: true },
+            ConvStage { cout: 96, kernel: 3, stride: 1, pad: 1, pool: false },
+            ConvStage { cout: 96, kernel: 3, stride: 1, pad: 1, pool: false },
+            ConvStage { cout: 64, kernel: 3, stride: 1, pad: 1, pool: true },
+        ],
+        fc_dims: vec![512, 256],
+        pool_window: 3,
+        pool_stride: 2,
+    }
+}
+
+/// Test-scale variant (the calibration workhorse).
+pub fn alexnet_micro() -> ArchDesc {
+    ArchDesc {
+        name: "alexnet-micro",
+        image_hw: 32,
+        in_channels: 3,
+        num_classes: 10,
+        convs: vec![
+            ConvStage { cout: 8, kernel: 5, stride: 2, pad: 2, pool: true },
+            ConvStage { cout: 16, kernel: 3, stride: 1, pad: 1, pool: false },
+        ],
+        fc_dims: vec![64],
+        pool_window: 3,
+        pool_stride: 2,
+    }
+}
+
+pub fn arch_by_name(name: &str) -> Option<ArchDesc> {
+    match name {
+        "alexnet" => Some(alexnet()),
+        "alexnet-tiny" => Some(alexnet_tiny()),
+        "alexnet-micro" => Some(alexnet_micro()),
+        _ => None,
+    }
+}
+
+impl ArchDesc {
+    /// Forward multiply-accumulates for one example.
+    pub fn forward_macs(&self) -> u64 {
+        let mut macs = 0u64;
+        let mut cin = self.in_channels;
+        let mut hw = self.image_hw;
+        for c in &self.convs {
+            let out_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
+            macs += (c.cout * cin * c.kernel * c.kernel) as u64 * (out_hw * out_hw) as u64;
+            hw = out_hw;
+            if c.pool {
+                hw = (hw - self.pool_window) / self.pool_stride + 1;
+            }
+            cin = c.cout;
+        }
+        let mut feat = cin * hw * hw;
+        for &d in &self.fc_dims {
+            macs += (feat * d) as u64;
+            feat = d;
+        }
+        macs += (feat * self.num_classes) as u64;
+        macs
+    }
+
+    /// Train-step MACs per example: fwd + bwd (~2x fwd) = 3x fwd.
+    pub fn train_macs(&self) -> u64 {
+        3 * self.forward_macs()
+    }
+
+    /// Parameter element count (weights + biases).
+    pub fn param_elements(&self) -> u64 {
+        let mut n = 0u64;
+        let mut cin = self.in_channels;
+        let mut hw = self.image_hw;
+        for c in &self.convs {
+            n += (c.cout * cin * c.kernel * c.kernel + c.cout) as u64;
+            let out_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
+            hw = out_hw;
+            if c.pool {
+                hw = (hw - self.pool_window) / self.pool_stride + 1;
+            }
+            cin = c.cout;
+        }
+        let mut feat = cin * hw * hw;
+        for &d in &self.fc_dims {
+            n += (feat * d + d) as u64;
+            feat = d;
+        }
+        n += (feat * self.num_classes + self.num_classes) as u64;
+        n
+    }
+
+    /// Bytes of one Fig-2 exchange payload (params + momenta, f32).
+    pub fn exchange_bytes(&self) -> u64 {
+        self.param_elements() * 4 * 2
+    }
+}
+
+/// Compute-cost scale factor from a measured (arch_a, batch_a) step to
+/// a target (arch_b, batch_b) step.
+pub fn scale_factor(from: &ArchDesc, batch_from: usize, to: &ArchDesc, batch_to: usize) -> f64 {
+    (to.train_macs() as f64 * batch_to as f64) / (from.train_macs() as f64 * batch_from as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_params_near_60m() {
+        // Krizhevsky et al. report ~60M parameters.
+        let n = alexnet().param_elements();
+        assert!((55_000_000..66_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn alexnet_fwd_flops_near_700m_macs() {
+        // Literature: ~0.7 GMACs (1.4 GFLOPs) per 227x227 forward pass.
+        let m = alexnet().forward_macs();
+        assert!((600_000_000..1_300_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn ordering_micro_tiny_full() {
+        let micro = alexnet_micro().train_macs();
+        let tiny = alexnet_tiny().train_macs();
+        let full = alexnet().train_macs();
+        assert!(micro < tiny && tiny < full);
+    }
+
+    #[test]
+    fn scale_factor_linear_in_batch() {
+        let a = alexnet_micro();
+        let f1 = scale_factor(&a, 8, &a, 16);
+        assert!((f1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(arch_by_name("alexnet").is_some());
+        assert!(arch_by_name("resnet").is_none());
+    }
+}

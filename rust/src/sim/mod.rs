@@ -1,0 +1,20 @@
+//! Calibrated discrete-event simulation — regenerates the paper's
+//! timing results on hardware we don't have (DESIGN.md substitution).
+//!
+//! The chain: [`calibrate`] measures *real* costs on this machine
+//! (per-backend compiled-step time, loader time per image, memcpy
+//! bandwidth); [`flops`] scales compute costs analytically between
+//! model sizes/batches; [`pipeline`] plays the Fig-1/Fig-2 schedule
+//! step by step; [`table1`] assembles the paper's Table 1 and
+//! [`scaling`] the §4.4 N-GPU study.
+
+pub mod backend_model;
+pub mod calibrate;
+pub mod flops;
+pub mod pipeline;
+pub mod scaling;
+pub mod table1;
+
+pub use calibrate::{CalibratedCosts, Calibration};
+pub use pipeline::{PipelineParams, SimOutcome};
+pub use table1::{table1, Table1Cell, Table1Options};

@@ -1,0 +1,311 @@
+//! Discrete-event simulation of the Fig-1 + Fig-2 schedule.
+//!
+//! State advances through the exact event structure of the paper's
+//! pipeline: per worker, a loader (depth-1 double buffer) and a
+//! trainer; per exchange period, a synchronization point where all
+//! replicas barrier and pay the exchange cost.  Costs are sampled per
+//! event from calibrated means with multiplicative jitter, so window
+//! times fluctuate realistically rather than being `n * mean`.
+//!
+//! Event recurrence (worker w, step k):
+//!
+//! ```text
+//! start[w,k]  = max(done[w,k-1], ready[w,k])        (need batch + free trainer)
+//! ready[w,k+1]= max(start[w,k], ready[w,k]) + load  (buffer freed at handoff)
+//! comp[w,k]   = start[w,k] + compute
+//! done[w,k]   = comp[w,k]                    if no exchange this step
+//!             = max_w(comp[w,k]) + exchange  otherwise (barrier + Fig 2)
+//! ```
+//!
+//! Serial loading is the same recurrence with `ready[w,k+1]` forced to
+//! `start loading at done[w,k]` — i.e. load happens inside the step.
+
+use crate::util::Pcg32;
+
+/// Inputs to one simulation run.
+#[derive(Clone, Debug)]
+pub struct PipelineParams {
+    pub workers: usize,
+    /// Mean seconds of one local compute step.
+    pub compute_s: f64,
+    /// Mean seconds to load + preprocess + stage one minibatch.
+    pub load_s: f64,
+    /// Seconds of one exchange round (0 disables).
+    pub exchange_s: f64,
+    /// Exchange every `period` steps.
+    pub period: usize,
+    /// Parallel (Fig 1) vs serial loading.
+    pub parallel_loading: bool,
+    /// Multiplicative jitter half-width (0.05 = ±5%).
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for PipelineParams {
+    fn default() -> Self {
+        PipelineParams {
+            workers: 2,
+            compute_s: 1.0,
+            load_s: 0.3,
+            exchange_s: 0.05,
+            period: 1,
+            parallel_loading: true,
+            jitter: 0.03,
+            seed: 7,
+        }
+    }
+}
+
+/// Simulation result.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    pub steps: usize,
+    pub total_s: f64,
+    /// Completion time of each step (synchronized across workers).
+    pub step_done_s: Vec<f64>,
+    /// Seconds per 20 iterations (Table 1's unit), per closed window.
+    pub per20: Vec<f64>,
+    /// Mean trainer stall waiting on the loader.
+    pub stall_s: f64,
+    /// Fraction of load time hidden under compute (1.0 = fully hidden).
+    pub overlap_efficiency: f64,
+}
+
+impl SimOutcome {
+    pub fn mean_per20(&self) -> f64 {
+        if self.per20.is_empty() {
+            // Extrapolate from total when the run is shorter than a window.
+            self.total_s / self.steps as f64 * 20.0
+        } else {
+            self.per20.iter().sum::<f64>() / self.per20.len() as f64
+        }
+    }
+}
+
+fn sample(rng: &mut Pcg32, mean: f64, jitter: f64) -> f64 {
+    if jitter <= 0.0 {
+        return mean;
+    }
+    let u = rng.next_f32() as f64 * 2.0 - 1.0;
+    mean * (1.0 + jitter * u)
+}
+
+/// Run the schedule for `steps` steps.
+pub fn simulate(p: &PipelineParams, steps: usize) -> SimOutcome {
+    assert!(p.workers >= 1 && steps > 0 && p.period >= 1);
+    let w = p.workers;
+    let mut rng = Pcg32::new(p.seed, 0x51B);
+
+    // ready[w] = completion time of the *staged* next batch.
+    // For parallel loading the loader starts prefetching at t=0.
+    let mut ready = vec![0.0f64; w];
+    let mut loader_free = vec![0.0f64; w]; // when the loader can start the next load
+    let mut done = vec![0.0f64; w];
+    let mut stall = 0.0f64;
+    let mut load_total = 0.0f64;
+    let mut load_hidden = 0.0f64;
+    let mut step_done = Vec::with_capacity(steps);
+
+    if p.parallel_loading {
+        for i in 0..w {
+            let l = sample(&mut rng, p.load_s, p.jitter);
+            ready[i] = l; // first batch prefetched from t=0
+            loader_free[i] = l;
+            load_total += l;
+        }
+    }
+
+    for k in 0..steps {
+        let mut comp_end = vec![0.0f64; w];
+        for i in 0..w {
+            let start;
+            if p.parallel_loading {
+                start = done[i].max(ready[i]);
+                stall += (ready[i] - done[i]).max(0.0);
+                // Loader begins the next batch at handoff (buffer freed),
+                // or when it finished the previous one, whichever is later.
+                let l = sample(&mut rng, p.load_s, p.jitter);
+                let lstart = loader_free[i].max(start);
+                loader_free[i] = lstart + l;
+                // Hidden fraction: how much of this load fits under compute.
+                load_total += l;
+                ready[i] = loader_free[i];
+            } else {
+                // Serial: load happens inside the step, on the trainer.
+                let l = sample(&mut rng, p.load_s, p.jitter);
+                start = done[i] + l;
+                stall += l;
+                load_total += l;
+            }
+            let c = sample(&mut rng, p.compute_s, p.jitter);
+            comp_end[i] = start + c;
+            if p.parallel_loading {
+                // Load time overlapped with this step's compute window.
+                let window = c.min((loader_free[i] - start).max(0.0));
+                load_hidden += window.min(c);
+            }
+        }
+        // Exchange boundary: replicas barrier, then pay the round cost.
+        let step_end = if p.exchange_s > 0.0 && w > 1 && (k + 1) % p.period == 0 {
+            let barrier = comp_end.iter().cloned().fold(0.0f64, f64::max);
+            let e = sample(&mut rng, p.exchange_s, p.jitter);
+            barrier + e
+        } else if w > 1 && (k + 1) % p.period == 0 {
+            comp_end.iter().cloned().fold(0.0f64, f64::max)
+        } else {
+            // No sync this step: workers proceed independently; for
+            // reporting we track the slowest.
+            comp_end.iter().cloned().fold(0.0f64, f64::max)
+        };
+        for i in 0..w {
+            done[i] = if w > 1 && (k + 1) % p.period == 0 {
+                step_end
+            } else {
+                comp_end[i]
+            };
+        }
+        step_done.push(step_end);
+    }
+
+    let total = *step_done.last().unwrap();
+    let mut per20 = Vec::new();
+    let mut prev = 0.0;
+    let mut count = 0;
+    for (i, &t) in step_done.iter().enumerate() {
+        count += 1;
+        if count == 20 {
+            per20.push(t - prev);
+            prev = t;
+            count = 0;
+        }
+        let _ = i;
+    }
+
+    SimOutcome {
+        steps,
+        total_s: total,
+        step_done_s: step_done,
+        per20,
+        stall_s: stall / (steps * w) as f64,
+        overlap_efficiency: if load_total > 0.0 && p.parallel_loading {
+            (load_hidden / load_total).min(1.0)
+        } else {
+            0.0
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> PipelineParams {
+        PipelineParams { jitter: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn serial_is_load_plus_compute() {
+        let p = PipelineParams {
+            workers: 1,
+            parallel_loading: false,
+            exchange_s: 0.0,
+            compute_s: 1.0,
+            load_s: 0.25,
+            ..base()
+        };
+        let out = simulate(&p, 40);
+        assert!((out.total_s - 40.0 * 1.25).abs() < 1e-9);
+        assert_eq!(out.per20.len(), 2);
+        assert!((out.mean_per20() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_hides_load_when_compute_dominates() {
+        let p = PipelineParams {
+            workers: 1,
+            parallel_loading: true,
+            exchange_s: 0.0,
+            compute_s: 1.0,
+            load_s: 0.25,
+            ..base()
+        };
+        let out = simulate(&p, 40);
+        // First batch can't be hidden; steady state is compute-bound.
+        let expect = 0.25 + 40.0 * 1.0;
+        assert!((out.total_s - expect).abs() < 1e-6, "{}", out.total_s);
+        assert!(out.overlap_efficiency > 0.9);
+    }
+
+    #[test]
+    fn loader_bound_when_load_dominates() {
+        let p = PipelineParams {
+            workers: 1,
+            parallel_loading: true,
+            exchange_s: 0.0,
+            compute_s: 0.2,
+            load_s: 1.0,
+            ..base()
+        };
+        let out = simulate(&p, 30);
+        // Pipeline is loader-bound: ~load per step.
+        assert!((out.total_s - (1.0 * 30.0 + 0.2)).abs() < 1e-6, "{}", out.total_s);
+        assert!(out.stall_s > 0.5);
+    }
+
+    #[test]
+    fn two_workers_pay_exchange_each_period() {
+        let base_p = PipelineParams {
+            workers: 2,
+            parallel_loading: true,
+            compute_s: 1.0,
+            load_s: 0.1,
+            exchange_s: 0.2,
+            period: 1,
+            ..base()
+        };
+        let with = simulate(&base_p, 20);
+        let without = simulate(&PipelineParams { exchange_s: 0.0, ..base_p.clone() }, 20);
+        let delta = with.total_s - without.total_s;
+        assert!((delta - 20.0 * 0.2).abs() < 1e-6, "delta {delta}");
+        // Period 2 halves the exchange bill.
+        let p2 = simulate(&PipelineParams { period: 2, ..base_p }, 20);
+        let delta2 = p2.total_s - without.total_s;
+        assert!((delta2 - 10.0 * 0.2).abs() < 1e-6, "delta2 {delta2}");
+    }
+
+    #[test]
+    fn parallel_beats_serial() {
+        for workers in [1, 2] {
+            let p = PipelineParams {
+                workers,
+                compute_s: 1.0,
+                load_s: 0.4,
+                exchange_s: 0.05,
+                ..base()
+            };
+            let par = simulate(&PipelineParams { parallel_loading: true, ..p.clone() }, 60);
+            let ser = simulate(&PipelineParams { parallel_loading: false, ..p }, 60);
+            assert!(
+                par.total_s < 0.8 * ser.total_s,
+                "workers={workers}: par {} ser {}",
+                par.total_s,
+                ser.total_s
+            );
+        }
+    }
+
+    #[test]
+    fn jitter_preserves_mean_roughly() {
+        let p = PipelineParams {
+            workers: 1,
+            parallel_loading: false,
+            exchange_s: 0.0,
+            compute_s: 1.0,
+            load_s: 0.0,
+            jitter: 0.05,
+            ..Default::default()
+        };
+        let out = simulate(&p, 400);
+        assert!((out.total_s - 400.0).abs() < 400.0 * 0.02);
+    }
+}

@@ -1,0 +1,180 @@
+//! Dense host tensors (`f32`) and raw `u8` images.
+
+use crate::error::{Error, Result};
+use crate::tensor::Shape;
+
+/// Dense row-major `f32` tensor on the host.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: Shape) -> Self {
+        let n = shape.numel();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: Shape, v: f32) -> Self {
+        let n = shape.numel();
+        HostTensor { shape, data: vec![v; n] }
+    }
+
+    /// Wrap an existing buffer (must match the shape's element count).
+    pub fn from_vec(shape: Shape, data: Vec<f32>) -> Result<Self> {
+        if shape.numel() != data.len() {
+            return Err(Error::Shape(format!(
+                "buffer of {} elements does not match shape {shape}",
+                data.len()
+            )));
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// In-place elementwise average with another tensor (Fig-2 step 3).
+    pub fn average_with(&mut self, other: &HostTensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "average_with: {} vs {}",
+                self.shape, other.shape
+            )));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = 0.5 * (*a + *b);
+        }
+        Ok(())
+    }
+
+    /// `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &HostTensor) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!("axpy: {} vs {}", self.shape, other.shape)));
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Scale all elements in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+}
+
+/// A raw `u8` image batch or single image in NCHW / CHW layout.
+///
+/// The on-disk shard format and the staging side of the loading
+/// pipeline both traffic in `u8` pixels (as JPEG-decoded ImageNet did);
+/// conversion to `f32` happens in preprocessing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Image8 {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub pixels: Vec<u8>,
+}
+
+impl Image8 {
+    pub fn new(channels: usize, height: usize, width: usize) -> Self {
+        Image8 { channels, height, width, pixels: vec![0; channels * height * width] }
+    }
+
+    pub fn from_pixels(
+        channels: usize,
+        height: usize,
+        width: usize,
+        pixels: Vec<u8>,
+    ) -> Result<Self> {
+        if pixels.len() != channels * height * width {
+            return Err(Error::Shape(format!(
+                "pixel buffer {} != {}x{}x{}",
+                pixels.len(),
+                channels,
+                height,
+                width
+            )));
+        }
+        Ok(Image8 { channels, height, width, pixels })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.pixels.len()
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> u8 {
+        self.pixels[(c * self.height + y) * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: u8) {
+        self.pixels[(c * self.height + y) * self.width + x] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_mismatch() {
+        let t = HostTensor::zeros(Shape::of(&[2, 3]));
+        assert_eq!(t.numel(), 6);
+        assert!(HostTensor::from_vec(Shape::of(&[2, 2]), vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn average() {
+        let mut a = HostTensor::from_vec(Shape::of(&[3]), vec![1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::from_vec(Shape::of(&[3]), vec![3.0, 2.0, 1.0]).unwrap();
+        a.average_with(&b).unwrap();
+        assert_eq!(a.as_slice(), &[2.0, 2.0, 2.0]);
+        let c = HostTensor::zeros(Shape::of(&[4]));
+        assert!(a.average_with(&c).is_err());
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = HostTensor::from_vec(Shape::of(&[2]), vec![1.0, 1.0]).unwrap();
+        let b = HostTensor::from_vec(Shape::of(&[2]), vec![2.0, 4.0]).unwrap();
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.as_slice(), &[2.0, 3.0]);
+        a.scale(2.0);
+        assert_eq!(a.as_slice(), &[4.0, 6.0]);
+    }
+
+    #[test]
+    fn image_indexing() {
+        let mut im = Image8::new(3, 4, 5);
+        im.set(2, 3, 4, 77);
+        assert_eq!(im.at(2, 3, 4), 77);
+        assert_eq!(im.numel(), 60);
+        assert!(Image8::from_pixels(3, 4, 5, vec![0; 59]).is_err());
+    }
+}

@@ -1,0 +1,55 @@
+//! Host-side tensors.
+//!
+//! The coordinator moves raw `f32`/`u8`/`i32` buffers between the data
+//! pipeline, the exchange engine and PJRT literals; this module gives
+//! those buffers shape-checked types without pulling in an ndarray
+//! dependency (offline crate set).  Layout is always dense row-major
+//! (NCHW for images), matching the L2 model ABI.
+
+mod host_tensor;
+mod shape;
+
+pub use host_tensor::{HostTensor, Image8};
+pub use shape::Shape;
+
+/// Element type tags mirroring the manifest's dtype strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    /// Parse a manifest dtype string ("float32", "int32", "uint8").
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "int32" | "i32" => Some(DType::I32),
+            "uint8" | "u8" => Some(DType::U8),
+            _ => None,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32"), Some(DType::F32));
+        assert_eq!(DType::parse("int32"), Some(DType::I32));
+        assert_eq!(DType::parse("uint8"), Some(DType::U8));
+        assert_eq!(DType::parse("bfloat16"), None);
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::U8.size_bytes(), 1);
+    }
+}

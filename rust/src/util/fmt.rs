@@ -1,0 +1,80 @@
+//! Human-readable formatting for logs, bench tables and the CLI.
+
+/// Format a byte count with binary units ("3.2 MiB").
+pub fn bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds adaptively ("183 µs", "12.3 ms", "4.56 s").
+pub fn secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+/// Format a count with thousands separators ("1,234,567").
+pub fn count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Fixed-width left-padded cell for ASCII tables.
+pub fn cell(s: &str, width: usize) -> String {
+    format!("{s:>width$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert_eq!(secs(0.5), "500.00 ms");
+        assert_eq!(secs(2.0), "2.00 s");
+        assert!(secs(1e-5).ends_with("µs"));
+        assert!(secs(1e-8).ends_with("ns"));
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(count(1), "1");
+        assert_eq!(count(1234), "1,234");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn cell_pads() {
+        assert_eq!(cell("x", 4), "   x");
+    }
+}

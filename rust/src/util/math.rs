@@ -1,0 +1,93 @@
+//! Numeric helpers shared by params, metrics and the simulator.
+
+/// Ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `a` up to the next multiple of `m`.
+pub fn ceil_to(a: usize, m: usize) -> usize {
+    ceil_div(a, m) * m
+}
+
+/// Product of a shape vector (element count).
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Max |a - b| over two equal-length slices.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// L2 norm of a slice (f64 accumulation).
+pub fn l2_norm(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Mean of a slice (0.0 on empty).
+pub fn mean(a: &[f64]) -> f64 {
+    if a.is_empty() {
+        0.0
+    } else {
+        a.iter().sum::<f64>() / a.len() as f64
+    }
+}
+
+/// Sample standard deviation (0.0 for n < 2).
+pub fn stddev(a: &[f64]) -> f64 {
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(a);
+    (a.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (a.len() - 1) as f64).sqrt()
+}
+
+/// Allclose with both relative and absolute tolerance (numpy-style).
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter()
+            .zip(b)
+            .all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_helpers() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_to(10, 8), 16);
+        assert_eq!(ceil_to(16, 8), 16);
+    }
+
+    #[test]
+    fn numel_products() {
+        assert_eq!(numel(&[2, 3, 4]), 24);
+        assert_eq!(numel(&[]), 1);
+    }
+
+    #[test]
+    fn diff_and_norm() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn allclose_tolerance() {
+        assert!(allclose(&[1.0, 2.0], &[1.0 + 1e-6, 2.0], 1e-5, 1e-5));
+        assert!(!allclose(&[1.0], &[1.1], 1e-5, 1e-5));
+        assert!(!allclose(&[1.0], &[1.0, 2.0], 1.0, 1.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! Small self-contained substrates: deterministic PRNG, a minimal JSON
+//! parser (for `artifacts/manifest.json`), CRC32 (shard integrity),
+//! wall-clock timers and human formatting.
+//!
+//! The offline crate set has no `serde`/`rand`/`humantime`, so these
+//! are implemented in-repo and unit-tested here.
+
+pub mod crc32;
+pub mod fmt;
+pub mod json;
+pub mod math;
+pub mod prng;
+pub mod timer;
+
+pub use crc32::crc32;
+pub use json::Json;
+pub use prng::Pcg32;
+pub use timer::Timer;

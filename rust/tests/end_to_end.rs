@@ -1,0 +1,208 @@
+//! Integration: full training jobs through the coordinator.
+//!
+//! These are the paper's claims at micro scale:
+//! - training converges (loss drops);
+//! - 2-replica exchange keeps the replicas bit-synchronized (Fig 2);
+//! - loader modes do not change the result, only the schedule (Fig 1);
+//! - PCIe topology downgrades the transport, not the math (§4.4).
+
+use std::path::{Path, PathBuf};
+
+use theano_mgpu::config::{ClusterConfig, DataConfig, LoaderMode, TrainConfig, TransportKind};
+use theano_mgpu::coordinator::trainer::{effective_transport, train};
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+
+fn artifacts_present() -> bool {
+    if Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        false
+    }
+}
+
+/// Shared micro dataset for all e2e tests (10 classes = micro model).
+fn dataset(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmg_e2e_{tag}_{}", std::process::id()));
+    if !dir.join("meta.json").exists() {
+        let spec = SynthSpec { classes: 10, hw: 36, seed: 42, ..Default::default() };
+        generate_dataset(&dir, &spec, 640, 64, 320).unwrap();
+    }
+    dir
+}
+
+fn micro_cfg(tag: &str, steps: usize, workers: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.name = format!("e2e-{tag}");
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "refconv".into();
+    cfg.batch_per_worker = 8;
+    cfg.steps = steps;
+    cfg.log_every = 0;
+    cfg.seed = 7;
+    cfg.schedule.base_lr = 0.02;
+    cfg.cluster = match workers {
+        1 => ClusterConfig::single(),
+        2 => ClusterConfig::pair_same_switch(),
+        n => ClusterConfig { workers: n, switch_of_worker: vec![0; n] },
+    };
+    cfg.data = DataConfig {
+        dir: dataset(tag),
+        train_examples: 640,
+        val_examples: 64,
+        shard_examples: 320,
+        seed: 42,
+        stored_hw: 36,
+    };
+    cfg
+}
+
+#[test]
+fn single_worker_converges() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = micro_cfg("single", 25, 1);
+    let s = train(&cfg).unwrap();
+    let first = s.losses[0];
+    let last = *s.losses.last().unwrap();
+    assert!(last < 0.7 * first, "loss {first} -> {last}");
+    assert_eq!(s.workers, 1);
+    let eval = s.eval.expect("micro has an eval artifact");
+    assert!(eval.examples > 0);
+    assert!(eval.top1_error() < 0.9);
+}
+
+#[test]
+fn two_workers_stay_synchronized_and_converge() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = micro_cfg("pair", 20, 2);
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.exchange_rounds, 20);
+    // Fig-2 invariant: after symmetric averaging, replicas are identical.
+    assert!(
+        s.final_divergence < 1e-6,
+        "replicas diverged: {}",
+        s.final_divergence
+    );
+    let first = s.losses[0];
+    let last = *s.losses.last().unwrap();
+    assert!(last < 0.8 * first, "loss {first} -> {last}");
+}
+
+#[test]
+fn loader_mode_does_not_change_the_math() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut a = micro_cfg("loadermath", 8, 1);
+    a.loader_mode = LoaderMode::Parallel;
+    let mut b = micro_cfg("loadermath", 8, 1);
+    b.loader_mode = LoaderMode::Serial;
+    let sa = train(&a).unwrap();
+    let sb = train(&b).unwrap();
+    assert_eq!(sa.losses, sb.losses, "Fig-1 pipeline must be semantically transparent");
+}
+
+#[test]
+fn transports_are_numerically_equivalent() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut base = micro_cfg("transport", 6, 2);
+    let mut reference: Option<Vec<f32>> = None;
+    for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
+        base.exchange.transport = kind;
+        let s = train(&base).unwrap();
+        assert!(s.final_divergence < 1e-6);
+        match &reference {
+            None => reference = Some(s.losses),
+            Some(want) => assert_eq!(&s.losses, want, "{kind:?} changed results"),
+        }
+    }
+}
+
+#[test]
+fn cross_switch_pair_falls_back_to_host_staged() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = micro_cfg("switch", 4, 2);
+    cfg.cluster = ClusterConfig::pair_cross_switch();
+    cfg.exchange.transport = TransportKind::P2p;
+    assert_eq!(effective_transport(&cfg), TransportKind::HostStaged);
+    // And training still works over the downgraded transport.
+    let s = train(&cfg).unwrap();
+    assert!(s.final_divergence < 1e-6);
+}
+
+#[test]
+fn exchange_period_controls_divergence() {
+    if !artifacts_present() {
+        return;
+    }
+    // With period > 1 and an off-cycle end, replicas end un-averaged.
+    let mut cfg = micro_cfg("period", 5, 2);
+    cfg.exchange.period = 2;
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.exchange_rounds, 2); // after steps 2 and 4 only
+    assert!(
+        s.final_divergence > 0.0,
+        "step 5 is un-exchanged; replicas must differ"
+    );
+}
+
+#[test]
+fn four_worker_ring_trains() {
+    if !artifacts_present() {
+        return;
+    }
+    let cfg = micro_cfg("ring4", 6, 4);
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.workers, 4);
+    // Ring averaging synchronizes every replica each step.
+    assert!(s.final_divergence < 1e-5, "divergence {}", s.final_divergence);
+}
+
+#[test]
+fn csv_metrics_written() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = micro_cfg("csv", 4, 1);
+    let csv = std::env::temp_dir().join(format!("tmg_e2e_metrics_{}.csv", std::process::id()));
+    cfg.metrics_csv = Some(csv.clone());
+    train(&cfg).unwrap();
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert!(content.starts_with("step,worker,loss"));
+    assert_eq!(content.lines().count(), 1 + 4);
+}
+
+#[test]
+fn checkpoint_written_and_evaluable() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut cfg = micro_cfg("ckpt", 4, 1);
+    let dir = std::env::temp_dir().join(format!("tmg_e2e_ckpt_{}", std::process::id()));
+    cfg.checkpoint_dir = Some(dir.clone());
+    train(&cfg).unwrap();
+    let path = dir.join("e2e-ckpt_step4.ckpt");
+    assert!(path.exists());
+
+    // Reload and evaluate through the public API.
+    let manifest = theano_mgpu::runtime::Manifest::load(Path::new("artifacts")).unwrap();
+    let model = manifest.model("alexnet-micro").unwrap();
+    let mut store = theano_mgpu::params::ParamStore::init(&model.params, 0);
+    let step = theano_mgpu::params::load_checkpoint(&path, &mut store).unwrap();
+    assert_eq!(step, 4);
+    let client = theano_mgpu::runtime::RuntimeClient::cpu().unwrap();
+    let exe = client
+        .load_step(manifest.eval_artifact_for("alexnet-micro").unwrap())
+        .unwrap();
+    let r = theano_mgpu::coordinator::eval::evaluate(&cfg, &exe, &store, model.image_hw, 2)
+        .unwrap();
+    assert!(r.examples > 0);
+}

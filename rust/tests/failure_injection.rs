@@ -1,0 +1,168 @@
+//! Failure injection: the coordinator must fail loudly and cleanly —
+//! no hangs, no silent corruption — when the substrate misbehaves.
+
+use std::path::PathBuf;
+
+use theano_mgpu::config::{ClusterConfig, DataConfig, TrainConfig};
+use theano_mgpu::coordinator::trainer::train;
+use theano_mgpu::data::loader::{BatchSource, LoaderCfg, ParallelLoader};
+use theano_mgpu::data::shard::ShardedDataset;
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+use theano_mgpu::error::Error;
+
+fn artifacts_present() -> bool {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts not built");
+        false
+    }
+}
+
+fn fresh_dataset(tag: &str, classes: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmg_fail_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = SynthSpec { classes, hw: 36, seed: 13, ..Default::default() };
+    generate_dataset(&dir, &spec, 256, 32, 128).unwrap();
+    dir
+}
+
+fn cfg_for(dir: PathBuf, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "refconv".into();
+    cfg.batch_per_worker = 8;
+    cfg.steps = steps;
+    cfg.log_every = 0;
+    cfg.cluster = ClusterConfig::single();
+    cfg.data = DataConfig {
+        dir,
+        train_examples: 256,
+        val_examples: 32,
+        shard_examples: 128,
+        seed: 13,
+        stored_hw: 36,
+    };
+    cfg
+}
+
+#[test]
+fn corrupt_shard_detected_at_open() {
+    let dir = fresh_dataset("crc", 10);
+    // Corrupt a payload byte of the first train shard.
+    let shard = dir.join("train_0000.shard");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&shard, &bytes).unwrap();
+    match ShardedDataset::open(&dir, "train", true) {
+        Err(err) => assert!(matches!(err, Error::Shard { .. }), "{err}"),
+        Ok(_) => panic!("corrupt shard must be rejected"),
+    }
+}
+
+#[test]
+fn missing_mean_image_is_a_clean_error() {
+    let dir = fresh_dataset("mean", 10);
+    std::fs::remove_file(dir.join("mean.f32")).unwrap();
+    let lcfg = LoaderCfg {
+        data_dir: &dir,
+        split: "train",
+        batch: 8,
+        crop_hw: 32,
+        worker: 0,
+        workers: 1,
+        seed: 1,
+        train_augment: true,
+        verify_shards: false,
+    };
+    assert!(ParallelLoader::new(&lcfg).is_err());
+}
+
+#[test]
+fn oversized_crop_rejected() {
+    let dir = fresh_dataset("crop", 10);
+    let lcfg = LoaderCfg {
+        data_dir: &dir,
+        split: "train",
+        batch: 8,
+        crop_hw: 99, // stored images are 36px
+        worker: 0,
+        workers: 1,
+        seed: 1,
+        train_augment: true,
+        verify_shards: false,
+    };
+    match ParallelLoader::new(&lcfg) {
+        Err(err) => assert!(matches!(err, Error::Shape(_)), "{err}"),
+        Ok(_) => panic!("oversized crop must be rejected"),
+    }
+}
+
+#[test]
+fn class_count_mismatch_rejected_before_training() {
+    if !artifacts_present() {
+        return;
+    }
+    // 50-class corpus against the 10-class micro model: out-of-range
+    // labels would NaN the loss inside the compiled step; the guard
+    // must catch it first.
+    let dir = fresh_dataset("classes", 50);
+    let cfg = cfg_for(dir, 2);
+    let err = train(&cfg).unwrap_err();
+    assert!(format!("{err}").contains("classes"), "{err}");
+}
+
+#[test]
+fn missing_artifact_names_alternatives() {
+    if !artifacts_present() {
+        return;
+    }
+    let dir = fresh_dataset("artifact", 10);
+    let mut cfg = cfg_for(dir, 2);
+    cfg.backend = "warp9000".into();
+    let err = train(&cfg).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("not found") && msg.contains("available"), "{msg}");
+}
+
+#[test]
+fn loader_drop_mid_stream_does_not_hang() {
+    let dir = fresh_dataset("drop", 10);
+    let lcfg = LoaderCfg {
+        data_dir: &dir,
+        split: "train",
+        batch: 8,
+        crop_hw: 32,
+        worker: 0,
+        workers: 1,
+        seed: 1,
+        train_augment: true,
+        verify_shards: false,
+    };
+    let mut loader = ParallelLoader::new(&lcfg).unwrap();
+    let _ = loader.next_batch().unwrap();
+    // Drop while the producer is mid-prefetch; Drop impl must join.
+    drop(loader);
+}
+
+#[test]
+fn dataset_too_small_for_batch_panics_cleanly() {
+    let dir = fresh_dataset("small", 10);
+    let lcfg = LoaderCfg {
+        data_dir: &dir,
+        split: "val", // 32 examples
+        batch: 64,
+        crop_hw: 32,
+        worker: 0,
+        workers: 1,
+        seed: 1,
+        train_augment: false,
+        verify_shards: false,
+    };
+    // EpochSampler asserts dataset >= batch*workers.
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = theano_mgpu::data::loader::SerialLoader::new(&lcfg);
+    }));
+    assert!(res.is_err());
+}

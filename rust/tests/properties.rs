@@ -1,0 +1,256 @@
+//! Property-based tests on coordinator invariants, via the in-repo
+//! mini-proptest framework (`theano_mgpu::testing`).
+
+use theano_mgpu::comm::link::transport_pair;
+use theano_mgpu::comm::ring::ring;
+use theano_mgpu::config::TransportKind;
+use theano_mgpu::data::sampler::EpochSampler;
+use theano_mgpu::interconnect::routing::route;
+use theano_mgpu::interconnect::topology::TopologyBuilder;
+use theano_mgpu::params::average::{average_pair, average_weighted};
+use theano_mgpu::runtime::artifact::ParamManifestSpec;
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::tensor::Shape;
+use theano_mgpu::testing::{props, props_err, Gen};
+use theano_mgpu::util::{Json, Pcg32};
+
+fn random_specs(g: &mut Gen) -> Vec<ParamManifestSpec> {
+    let n = g.usize_in(1, 5);
+    (0..n)
+        .map(|i| ParamManifestSpec {
+            name: format!("t{i}"),
+            shape: Shape(g.shape(3, 128)),
+            init: if g.bool() { "normal".into() } else { "zeros".into() },
+            std: g.f32_in(0.01, 0.5),
+            bias_value: 0.0,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_average_pair_is_symmetric_and_idempotent() {
+    props("average symmetry", 200, |g| {
+        let n = g.usize_in(1, 64);
+        let a0 = g.vec_f32(n, -10.0, 10.0);
+        let b0 = g.vec_f32(n, -10.0, 10.0);
+        // Symmetric averaging: both orders give the midpoint.
+        let mut a = a0.clone();
+        average_pair(&mut a, &b0);
+        let mut b = b0.clone();
+        average_pair(&mut b, &a0);
+        let sym = a.iter().zip(&b).all(|(x, y)| (x - y).abs() < 1e-5);
+        // Averaging with itself is identity.
+        let mut c = a0.clone();
+        let c0 = a0.clone();
+        average_pair(&mut c, &c0);
+        let idem = c.iter().zip(&a0).all(|(x, y)| (x - y).abs() < 1e-6);
+        sym && idem
+    });
+}
+
+#[test]
+fn prop_weighted_average_preserves_sum_weights_one() {
+    props("weighted average convexity", 200, |g| {
+        let n = g.usize_in(1, 32);
+        let a0 = g.vec_f32(n, -5.0, 5.0);
+        let b0 = g.vec_f32(n, -5.0, 5.0);
+        let w = g.f32_in(0.0, 1.0);
+        let mut a = a0.clone();
+        average_weighted(&mut a, w, &b0, 1.0 - w);
+        // Result bounded by min/max of the pair per element.
+        a.iter().zip(a0.iter().zip(&b0)).all(|(r, (x, y))| {
+            let lo = x.min(*y) - 1e-5;
+            let hi = x.max(*y) + 1e-5;
+            (lo..=hi).contains(r)
+        })
+    });
+}
+
+#[test]
+fn prop_store_flatten_average_equals_tensorwise() {
+    props_err("flatten/average equivalence", 60, |g| {
+        let specs = random_specs(g);
+        let mut a = ParamStore::init(&specs, g.rng().next_u64());
+        let mut b = ParamStore::init(&specs, g.rng().next_u64());
+        // Tensor-wise expected result.
+        let mut expect = a.clone();
+        for (t, u) in expect.params.iter_mut().zip(&b.params) {
+            t.average_with(u).map_err(|e| e.to_string())?;
+        }
+        for (t, u) in expect.momenta.iter_mut().zip(&b.momenta) {
+            t.average_with(u).map_err(|e| e.to_string())?;
+        }
+        // Flat exchange path.
+        let fb = b.flatten(true);
+        let fa = a.flatten(true);
+        a.average_with_flat(&fb, true).map_err(|e| e.to_string())?;
+        b.average_with_flat(&fa, true).map_err(|e| e.to_string())?;
+        if a.max_divergence(&expect) > 1e-6 {
+            return Err(format!("flat != tensorwise ({})", a.max_divergence(&expect)));
+        }
+        if a.max_divergence(&b) > 1e-6 {
+            return Err("asymmetric result".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exchange_seq_numbers_enforced() {
+    props("seq skew detection", 50, |g| {
+        let (mut a, mut b) = transport_pair(*g.pick(&[
+            TransportKind::P2p,
+            TransportKind::HostStaged,
+            TransportKind::Serialized,
+        ]));
+        let n = g.usize_in(1, 64);
+        let payload = g.vec_f32(n, -1.0, 1.0);
+        let seq = g.rng().next_u64() % 1000;
+        a.send(seq, &payload).unwrap();
+        let mut out = Vec::new();
+        let skewed = seq + 1 + g.rng().next_u64() % 5;
+        b.recv(skewed, &mut out).is_err()
+    });
+}
+
+#[test]
+fn prop_transport_roundtrip_exact() {
+    props("transport bit-exactness", 60, |g| {
+        let kind = *g.pick(&[
+            TransportKind::P2p,
+            TransportKind::HostStaged,
+            TransportKind::Serialized,
+        ]);
+        let (mut a, mut b) = transport_pair(kind);
+        let n = g.usize_in(0, 512);
+        // Include extreme values: serialization must be bit-exact.
+        let mut payload = g.vec_f32(n, -1e30, 1e30);
+        if n > 0 {
+            payload[0] = f32::MIN_POSITIVE;
+        }
+        a.send(0, &payload).unwrap();
+        let mut out = Vec::new();
+        b.recv(0, &mut out).unwrap();
+        out.iter().zip(&payload).all(|(x, y)| x.to_bits() == y.to_bits())
+            && out.len() == payload.len()
+    });
+}
+
+#[test]
+fn prop_ring_average_equals_arithmetic_mean() {
+    props_err("ring == mean", 12, |g| {
+        let n = g.usize_in(2, 6);
+        let len = g.usize_in(1, 200);
+        let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, -100.0, 100.0)).collect();
+        let mut expect = vec![0f32; len];
+        for v in &values {
+            for (e, x) in expect.iter_mut().zip(v) {
+                *e += x / n as f32;
+            }
+        }
+        let nodes = ring(n);
+        let joins: Vec<_> = nodes
+            .into_iter()
+            .zip(values)
+            .map(|(mut node, mut data)| {
+                std::thread::spawn(move || {
+                    node.allreduce_average(&mut data).unwrap();
+                    data
+                })
+            })
+            .collect();
+        for j in joins {
+            let got = j.join().unwrap();
+            for (a, b) in got.iter().zip(&expect) {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("ring {a} vs mean {b}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sampler_partitions_every_epoch() {
+    props_err("sampler partition", 40, |g| {
+        let workers = g.usize_in(1, 4);
+        let batch = g.usize_in(1, 8);
+        let batches_per_epoch = g.usize_in(workers.max(2), 12);
+        let n = batch * batches_per_epoch;
+        let seed = g.rng().next_u64();
+        let mut samplers: Vec<_> = (0..workers)
+            .map(|w| EpochSampler::new(n, batch, w, workers, seed))
+            .collect();
+        let rounds = batches_per_epoch / workers;
+        let mut seen = std::collections::HashSet::new();
+        let mut buf = Vec::new();
+        for _ in 0..rounds {
+            for s in samplers.iter_mut() {
+                s.next_batch_indices(&mut buf);
+                for &i in &buf {
+                    if !seen.insert(i) {
+                        return Err(format!("index {i} served twice in one epoch"));
+                    }
+                }
+            }
+        }
+        let expect = rounds * workers * batch;
+        if seen.len() != expect {
+            return Err(format!("coverage {} != {expect}", seen.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topology_routing_consistent() {
+    props_err("routing consistency", 60, |g| {
+        let s1 = g.usize_in(1, 4);
+        let s2 = g.usize_in(0, 4);
+        let mut builder = TopologyBuilder::new().switch_with(s1);
+        if s2 > 0 {
+            builder = builder.switch_with(s2);
+        }
+        let topo = builder.build().map_err(|e| e.to_string())?;
+        let n = topo.devices();
+        for a in 0..n {
+            for b in 0..n {
+                let r = route(&topo, a, b).map_err(|e| e.to_string())?;
+                let same = topo.p2p_allowed(a, b).map_err(|e| e.to_string())?;
+                let want = if same { TransportKind::P2p } else { TransportKind::HostStaged };
+                if r.transport != want {
+                    return Err(format!("({a},{b}): {:?} vs {:?}", r.transport, want));
+                }
+                // Symmetry.
+                let rb = route(&topo, b, a).map_err(|e| e.to_string())?;
+                if rb.transport != r.transport || rb.hops != r.hops {
+                    return Err("asymmetric route".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_numbers() {
+    props("json number roundtrip", 300, |g| {
+        let v = (g.rng().next_u32() as f64) * if g.bool() { -1.0 } else { 1.0 }
+            / (1 + g.rng().next_u32() % 1000) as f64;
+        let src = format!("{v:?}");
+        match Json::parse(&src) {
+            Ok(Json::Num(got)) => (got - v).abs() <= 1e-9 * v.abs().max(1.0),
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn prop_prng_below_bound() {
+    props("pcg below in range", 500, |g| {
+        let bound = 1 + g.rng().next_u32() % 10_000;
+        let mut rng = Pcg32::seeded(g.rng().next_u64());
+        rng.below(bound) < bound
+    });
+}

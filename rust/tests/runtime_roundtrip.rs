@@ -1,0 +1,145 @@
+//! Integration: AOT HLO artifacts load, compile and execute correctly
+//! through the PJRT runtime (the L2 <-> L3 contract).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) if absent.
+
+use std::path::Path;
+
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::runtime::literal_bridge::*;
+use theano_mgpu::runtime::{Manifest, RuntimeClient};
+use theano_mgpu::tensor::{HostTensor, Shape};
+use theano_mgpu::util::Pcg32;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest loads"))
+}
+
+fn run_one_step(
+    m: &Manifest,
+    artifact: &str,
+    seed: u64,
+) -> (f32, i32, ParamStore) {
+    let spec = m.artifact(artifact).unwrap();
+    let model = m.model(&spec.model).unwrap();
+    let client = RuntimeClient::cpu().unwrap();
+    let exe = client.load_step(spec).unwrap();
+
+    let b = spec.batch_size;
+    let hw = model.image_hw;
+    let mut rng = Pcg32::seeded(seed);
+    let mut images = HostTensor::zeros(Shape::of(&[b, model.in_channels, hw, hw]));
+    rng.fill_normal(images.as_mut_slice(), 1.0);
+    let labels: Vec<i32> = (0..b).map(|_| rng.below(model.num_classes as u32) as i32).collect();
+    let mut store = ParamStore::init(&model.params, seed);
+
+    let mut inputs = Vec::new();
+    inputs.push(tensor_to_literal(&images).unwrap());
+    inputs.push(i32_to_literal(&labels).unwrap());
+    inputs.push(f32_scalar(0.01));
+    inputs.push(i32_scalar(0));
+    for p in &store.params {
+        inputs.push(tensor_to_literal(p).unwrap());
+    }
+    for mm in &store.momenta {
+        inputs.push(tensor_to_literal(mm).unwrap());
+    }
+    let outs = exe.run(&inputs).unwrap();
+    let loss = literal_f32(&outs[0]).unwrap();
+    let correct1 = literal_i32(&outs[1]).unwrap();
+    let n = store.n_tensors();
+    let new_p: Vec<HostTensor> = outs[2..2 + n]
+        .iter()
+        .zip(&store.specs)
+        .map(|(l, s)| literal_to_tensor(l, s.shape.clone()).unwrap())
+        .collect();
+    let new_m: Vec<HostTensor> = outs[2 + n..]
+        .iter()
+        .zip(&store.specs)
+        .map(|(l, s)| literal_to_tensor(l, s.shape.clone()).unwrap())
+        .collect();
+    store.update_from(new_p, new_m).unwrap();
+    (loss, correct1, store)
+}
+
+#[test]
+fn micro_refconv_step_executes() {
+    let Some(m) = manifest() else { return };
+    let (loss, correct1, store) = run_one_step(&m, "train_alexnet-micro_refconv_b8", 3);
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert!((0..=8).contains(&correct1));
+    // Momentum must be nonzero after one update.
+    let mnorm: f32 = store.momenta.iter().map(|t| t.as_slice().iter().map(|v| v.abs()).sum::<f32>()).sum();
+    assert!(mnorm > 0.0);
+}
+
+#[test]
+fn pallas_backends_agree_with_refconv() {
+    let Some(m) = manifest() else { return };
+    let (loss_ref, _, store_ref) = run_one_step(&m, "train_alexnet-micro_refconv_b8", 7);
+    for backend in ["convnet", "cudnn_r1", "cudnn_r2"] {
+        let name = format!("train_alexnet-micro_{backend}_b8");
+        let (loss, _, store) = run_one_step(&m, &name, 7);
+        assert!(
+            (loss - loss_ref).abs() < 1e-3 * loss_ref.abs().max(1.0),
+            "{backend}: loss {loss} vs refconv {loss_ref}"
+        );
+        let div = store.max_divergence(&store_ref);
+        assert!(div < 5e-3, "{backend}: param divergence {div}");
+    }
+}
+
+#[test]
+fn step_is_deterministic() {
+    let Some(m) = manifest() else { return };
+    let (l1, c1, s1) = run_one_step(&m, "train_alexnet-micro_cudnn_r2_b8", 11);
+    let (l2, c2, s2) = run_one_step(&m, "train_alexnet-micro_cudnn_r2_b8", 11);
+    assert_eq!(l1, l2);
+    assert_eq!(c1, c2);
+    assert_eq!(s1.max_divergence(&s2), 0.0);
+}
+
+#[test]
+fn eval_artifact_counts_consistent() {
+    let Some(m) = manifest() else { return };
+    let spec = m.artifact("eval_alexnet-micro_refconv_b8").unwrap();
+    let model = m.model(&spec.model).unwrap();
+    let client = RuntimeClient::cpu().unwrap();
+    let exe = client.load_step(spec).unwrap();
+    let b = spec.batch_size;
+    let hw = model.image_hw;
+    let mut rng = Pcg32::seeded(5);
+    let mut images = HostTensor::zeros(Shape::of(&[b, model.in_channels, hw, hw]));
+    rng.fill_normal(images.as_mut_slice(), 1.0);
+    let labels: Vec<i32> = (0..b).map(|i| (i % model.num_classes) as i32).collect();
+    let store = ParamStore::init(&model.params, 5);
+    let mut inputs = vec![
+        tensor_to_literal(&images).unwrap(),
+        i32_to_literal(&labels).unwrap(),
+    ];
+    for p in &store.params {
+        inputs.push(tensor_to_literal(p).unwrap());
+    }
+    let outs = exe.run(&inputs).unwrap();
+    let c1 = literal_i32(&outs[1]).unwrap();
+    let c5 = literal_i32(&outs[2]).unwrap();
+    assert!(0 <= c1 && c1 <= c5 && c5 <= b as i32, "c1 {c1} c5 {c5}");
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let Some(m) = manifest() else { return };
+    let spec = m.artifact("train_alexnet-micro_refconv_b8").unwrap();
+    let client = RuntimeClient::cpu().unwrap();
+    let exe = client.load_step(spec).unwrap();
+    let err = match exe.run(&[f32_scalar(1.0)]) {
+        Err(e) => e,
+        Ok(_) => panic!("under-supplied inputs must be rejected"),
+    };
+    assert!(format!("{err}").contains("inputs"));
+}
