@@ -48,9 +48,17 @@ fn report(tag: &str, s: &TrainSummary) {
         s.steps, s.workers, s.wall_seconds, s.secs_per_20_iters
     );
     println!("  loss {first:.3} -> {final_loss:.3}");
+    let divergence = match s.final_divergence {
+        Some(d) => format!("{d:.2e}"),
+        None => "n/a (single worker)".into(),
+    };
     println!(
-        "  compute {:.1}s/worker, exchange {:.1}s ({} rounds), divergence {:.2e}",
-        s.compute_seconds, s.exchange_seconds, s.exchange_rounds, s.final_divergence
+        "  compute {:.1}s/worker, exchange {:.1}s ({} rounds), divergence {divergence}",
+        s.compute_seconds, s.exchange_seconds, s.exchange_rounds
+    );
+    println!(
+        "  collective phases/worker: flatten {:.2}s, transfer {:.2}s, average {:.2}s",
+        s.collective.flatten_seconds, s.collective.transfer_seconds, s.collective.average_seconds
     );
     for (w, l) in s.loader.iter().enumerate() {
         println!(

@@ -64,7 +64,7 @@ fn main() {
             let s = train(&cfg).unwrap();
             b.record(
                 &format!("real divergence @period={period}"),
-                s.final_divergence as f64,
+                f64::from(s.final_divergence.unwrap_or(0.0)),
                 "max|dw|",
             );
             b.record(

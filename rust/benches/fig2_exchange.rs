@@ -5,6 +5,10 @@
 //! prints the cost-model predictions for the same points.  The paper's
 //! §4.3 claim under test: P2P < host-staged < serialized, with the
 //! serialized (multiprocessing) path paying an encode/decode tax.
+//!
+//! Also measures the N-worker collective (chunked ring all-reduce over
+//! the same transports) for N in {2, 3, 4}, reporting the per-phase
+//! flatten/transfer/average breakdown the 2-GPU table reports.
 
 include!("harness.rs");
 
@@ -12,26 +16,12 @@ use theano_mgpu::comm::cost::CommCostModel;
 use theano_mgpu::comm::exchange::ExchangePort;
 use theano_mgpu::comm::link::transport_pair;
 use theano_mgpu::config::TransportKind;
-use theano_mgpu::params::ParamStore;
-use theano_mgpu::runtime::artifact::ParamManifestSpec;
-use theano_mgpu::tensor::Shape;
-
-fn store_of(elements: usize, seed: u64) -> ParamStore {
-    let specs = vec![ParamManifestSpec {
-        name: "w".into(),
-        shape: Shape::of(&[elements]),
-        init: "normal".into(),
-        std: 0.1,
-        bias_value: 0.0,
-    }];
-    ParamStore::init(&specs, seed)
-}
 
 /// One timed round: both sides exchange; returns port for stats.
 fn run_rounds(kind: TransportKind, elements: usize, rounds: usize) -> (f64, f64) {
     let (ea, eb) = transport_pair(kind);
-    let mut sa = store_of(elements, 1);
-    let mut sb = store_of(elements, 2);
+    let mut sa = bench_store(elements, 1);
+    let mut sb = bench_store(elements, 2);
     let h = std::thread::spawn(move || {
         let mut port = ExchangePort::new(eb);
         for _ in 0..rounds {
@@ -78,5 +68,28 @@ fn main() {
     let (ser, _) = run_rounds(TransportKind::Serialized, 8_388_608, 3);
     b.record("ordering host/p2p (>1 expected)", host / p2p, "x");
     b.record("ordering serialized/p2p (>1 expected, §4.3)", ser / p2p, "x");
+
+    // --- N-worker ring collective: per-phase stats for any N ---
+    let elements = 2_097_152usize; // 16 MiB params(+momenta) per replica
+    for &n in &[2usize, 3, 4] {
+        for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
+            let phases = measure_ring(n, kind, elements, 5);
+            b.record(
+                &format!("ring n={n} {} flatten/round", kind.name()),
+                phases.flatten_seconds,
+                "s",
+            );
+            b.record(
+                &format!("ring n={n} {} transfer/round", kind.name()),
+                phases.transfer_seconds,
+                "s",
+            );
+            b.record(
+                &format!("ring n={n} {} average/round", kind.name()),
+                phases.average_seconds,
+                "s",
+            );
+        }
+    }
     b.write_csv();
 }

@@ -53,6 +53,59 @@ impl Bench {
 }
 
 /// True when the AOT artifacts are present (some benches need them).
+#[allow(dead_code)]
 pub fn artifacts_present() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Single-tensor store of `elements` f32 params (+ zero momenta) —
+/// the standard payload for comm-layer benches.
+#[allow(dead_code)]
+pub fn bench_store(elements: usize, seed: u64) -> theano_mgpu::params::ParamStore {
+    let specs = vec![theano_mgpu::runtime::artifact::ParamManifestSpec {
+        name: "w".into(),
+        shape: theano_mgpu::tensor::Shape::of(&[elements]),
+        init: "normal".into(),
+        std: 0.1,
+        bias_value: 0.0,
+    }];
+    theano_mgpu::params::ParamStore::init(&specs, seed)
+}
+
+/// Run `rounds` ring all-reduce rounds across `n` threads over `kind`
+/// links and return the per-round per-phase stats averaged over ranks
+/// (the shared measurement core of the E4/E5 collective benches).
+#[allow(dead_code)]
+pub fn measure_ring(
+    n: usize,
+    kind: theano_mgpu::config::TransportKind,
+    elements: usize,
+    rounds: usize,
+) -> theano_mgpu::comm::CollectiveStats {
+    use theano_mgpu::comm::collective::{ring_fabric, Collective};
+    let joins: Vec<_> = ring_fabric(&vec![kind; n])
+        .into_iter()
+        .map(|mut node| {
+            std::thread::spawn(move || {
+                let mut store = bench_store(elements, node.rank as u64 + 1);
+                for _ in 0..rounds {
+                    node.all_reduce_average(&mut store, true).unwrap();
+                }
+                node.stats()
+            })
+        })
+        .collect();
+    let stats: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let scale = (stats.len() * rounds) as f64;
+    let mut out = theano_mgpu::comm::CollectiveStats {
+        rounds: rounds as u64,
+        bytes_per_round: stats[0].bytes_per_round,
+        ..Default::default()
+    };
+    for s in &stats {
+        out.flatten_seconds += s.flatten_seconds / scale;
+        out.transfer_seconds += s.transfer_seconds / scale;
+        out.average_seconds += s.average_seconds / scale;
+    }
+    out
 }

@@ -1,7 +1,12 @@
 //! E5 — the N-GPU scaling study (paper §4.2/§4.4 future work).
+//!
+//! Simulated speedups from the calibrated cost model, plus *measured*
+//! per-phase rounds of the real ring collective at each N (the same
+//! code path `train` uses for `workers > 2`).
 
 include!("harness.rs");
 
+use theano_mgpu::config::TransportKind;
 use theano_mgpu::sim::calibrate::{CalibratedCosts, Calibration};
 use theano_mgpu::sim::scaling::{render, scaling_study};
 
@@ -27,6 +32,16 @@ fn main() {
             r.exchange_s,
             "s",
         );
+    }
+
+    // --- Measured ring collective rounds (real comm layer, per phase) ---
+    let elements = 1_048_576usize;
+    for &n in &[2usize, 3, 4, 8] {
+        let phases = measure_ring(n, TransportKind::P2p, elements, 4);
+        b.record(&format!("measured ring n={n} flatten/round"), phases.flatten_seconds, "s");
+        b.record(&format!("measured ring n={n} transfer/round"), phases.transfer_seconds, "s");
+        b.record(&format!("measured ring n={n} average/round"), phases.average_seconds, "s");
+        b.record(&format!("measured ring n={n} total/round"), phases.total_seconds(), "s");
     }
     b.write_csv();
 }

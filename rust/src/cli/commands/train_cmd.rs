@@ -15,7 +15,27 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
     if let Some(v) = a.get("workers") {
         let w: usize = v.parse().map_err(|_| crate::Error::msg("--workers wants int"))?;
         cfg.cluster.workers = w;
-        cfg.cluster.switch_of_worker = vec![0; w];
+        // Keep the config file's PCIe topology when it still fits this
+        // worker count (so the §4.4 fallback stays live); only a count
+        // change forces the all-one-switch default.
+        if cfg.cluster.switch_of_worker.len() != w {
+            cfg.cluster.switch_of_worker = vec![0; w];
+        }
+    }
+    if let Some(v) = a.get("switches") {
+        // Per-worker PCIe switch ids, e.g. `--switches 0,0,1,1`; drives
+        // the per-hop §4.4 transport fallback for any worker count.
+        let switches = v
+            .split(',')
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<std::result::Result<Vec<_>, _>>()
+            .map_err(|_| {
+                crate::Error::msg("--switches wants comma-separated switch ids, e.g. 0,0,1")
+            })?;
+        if a.get("workers").is_none() {
+            cfg.cluster.workers = switches.len();
+        }
+        cfg.cluster.switch_of_worker = switches;
     }
     if let Some(v) = a.get("backend") {
         cfg.backend = v.to_string();
@@ -74,10 +94,18 @@ pub fn run(argv: &[String]) -> Result<i32> {
         let first = summary.losses.first().copied().unwrap_or(*last);
         println!("loss: {first:.4} -> {last:.4}");
     }
-    println!(
-        "replica divergence after final exchange: {:.3e}",
-        summary.final_divergence
-    );
+    if let Some(d) = summary.final_divergence {
+        println!("replica divergence after final exchange: {d:.3e}");
+    }
+    if summary.exchange_rounds > 0 {
+        println!(
+            "collective: {} rounds, {:.3}s flatten / {:.3}s transfer / {:.3}s average per worker",
+            summary.exchange_rounds,
+            summary.collective.flatten_seconds,
+            summary.collective.transfer_seconds,
+            summary.collective.average_seconds
+        );
+    }
     for (w, st) in summary.loader.iter().enumerate() {
         println!(
             "worker {w} loader: {} batches, load {:.2}s, stall {:.2}s",
@@ -94,4 +122,45 @@ pub fn run(argv: &[String]) -> Result<i32> {
         );
     }
     Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> ArgMap {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        ArgMap::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn workers_override_resets_switches_only_on_count_change() {
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--workers 4 --transport serialized")).unwrap();
+        assert_eq!(cfg.cluster.workers, 4);
+        assert_eq!(cfg.cluster.switch_of_worker, vec![0; 4]);
+        assert_eq!(cfg.exchange.transport, TransportKind::Serialized);
+        // Same count: the config's topology (and its §4.4 fallback) is kept.
+        let mut cfg = TrainConfig::default();
+        cfg.cluster.switch_of_worker = vec![0, 1];
+        apply_overrides(&mut cfg, &args("--workers 2")).unwrap();
+        assert_eq!(cfg.cluster.switch_of_worker, vec![0, 1]);
+    }
+
+    #[test]
+    fn switches_override_sets_topology_and_worker_count() {
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--switches 0,0,1")).unwrap();
+        assert_eq!(cfg.cluster.workers, 3);
+        assert_eq!(cfg.cluster.switch_of_worker, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn conflicting_workers_and_switches_rejected() {
+        let mut cfg = TrainConfig::default();
+        let err = apply_overrides(&mut cfg, &args("--workers 2 --switches 0,0,1"));
+        assert!(err.is_err(), "length mismatch must fail validation");
+        let mut cfg = TrainConfig::default();
+        assert!(apply_overrides(&mut cfg, &args("--switches 0,zebra")).is_err());
+    }
 }

@@ -54,9 +54,9 @@ tmg — Theano-multi-GPU reproduction (rust + jax + pallas)
 USAGE:
   tmg gen-data  --dir DIR [--classes N] [--train N] [--val N]
                 [--shard N] [--hw N] [--seed N]
-  tmg train     --config FILE [--steps N] [--workers N] [--backend B]
-                [--loader parallel|serial] [--transport K] [--period N]
-                [--csv FILE]
+  tmg train     --config FILE [--steps N] [--workers N] [--switches 0,0,1]
+                [--backend B] [--loader parallel|serial] [--transport K]
+                [--period N] [--csv FILE]
   tmg eval      --config FILE --checkpoint FILE
   tmg calibrate [--artifacts DIR] [--runs N]
   tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]

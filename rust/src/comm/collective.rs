@@ -1,0 +1,603 @@
+//! The N-worker collective fabric.
+//!
+//! The paper's headline result is a *pairwise* exchange between exactly
+//! two GPUs (Fig 2); Theano-MPI — its direct successor — generalizes
+//! the same exchange-and-average protocol to N workers over a proper
+//! collective layer.  This module is that generalization: a single
+//! [`Collective`] trait with three implementations, all driving the
+//! same [`ParamStore`] staging path:
+//!
+//! - [`NoopCollective`] — N = 1, nothing to synchronize;
+//! - [`PairwiseCollective`] — the N = 2 fast path, wrapping
+//!   [`ExchangePort`] so the paper's whole-buffer zero-copy exchange is
+//!   preserved byte-for-byte;
+//! - [`RingCollective`] — arbitrary N: a chunked ring all-reduce
+//!   (reduce-scatter + all-gather, Krizhevsky 2014) over the existing
+//!   [`comm::link`](crate::comm::link) transports, reusing the same
+//!   ping-pong staging-buffer discipline as `ExchangePort` so the P2P
+//!   path performs zero steady-state allocations.
+//!
+//! **Topology rule (§4.4, N-worker form).**  Each ring hop `i -> i+1`
+//! resolves its transport independently: a P2P request is downgraded to
+//! host-staged on hops whose endpoints sit on different PCIe switches,
+//! while same-switch hops keep the fast path.  The trainer computes the
+//! per-hop kinds via `effective_hop_transports` and hands them to
+//! [`build_fabric`].
+//!
+//! All three implementations report per-phase timing through
+//! [`CollectiveStats`] (flatten / transfer / average — the Fig-2
+//! decomposition), which flows into `WorkerOutcome`/`TrainSummary` and
+//! the E4/E5 benches for any N.
+//!
+//! Protocol safety: every message carries a sequence number checked by
+//! [`Endpoint::recv`]; a worker averaging against a stale round (the
+//! paper's §4.3 hazard) is detected, not silently computed.
+
+use crate::comm::exchange::{ExchangePort, ExchangeStats};
+use crate::comm::link::{transport_pair, Endpoint};
+use crate::config::TransportKind;
+use crate::error::{Error, Result};
+use crate::params::average::{accumulate, scale_in_place};
+use crate::params::ParamStore;
+use crate::util::Timer;
+
+/// Per-phase timing/traffic summary of collective rounds.
+///
+/// Field meanings follow Fig 2: `flatten` covers staging between the
+/// store and the wire buffer (both directions), `transfer` covers time
+/// on the links, `average` covers the arithmetic (accumulate / copy /
+/// scale).  A value returned from one `all_reduce_average` call is the
+/// delta of that round; `Collective::stats` returns the running total.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CollectiveStats {
+    pub rounds: u64,
+    pub bytes_per_round: usize,
+    pub flatten_seconds: f64,
+    pub transfer_seconds: f64,
+    pub average_seconds: f64,
+}
+
+impl CollectiveStats {
+    pub fn total_seconds(&self) -> f64 {
+        self.flatten_seconds + self.transfer_seconds + self.average_seconds
+    }
+
+    fn absorb(&mut self, round: &CollectiveStats) {
+        self.rounds += round.rounds;
+        self.bytes_per_round = round.bytes_per_round;
+        self.flatten_seconds += round.flatten_seconds;
+        self.transfer_seconds += round.transfer_seconds;
+        self.average_seconds += round.average_seconds;
+    }
+}
+
+impl From<ExchangeStats> for CollectiveStats {
+    fn from(e: ExchangeStats) -> Self {
+        CollectiveStats {
+            rounds: e.rounds,
+            bytes_per_round: e.bytes_per_round,
+            flatten_seconds: e.flatten_seconds,
+            transfer_seconds: e.transfer_seconds,
+            average_seconds: e.average_seconds,
+        }
+    }
+}
+
+/// One worker's handle on the group-wide exchange-and-average.
+///
+/// Every participant must call `all_reduce_average` once per round with
+/// the same `include_momentum`; after the call returns on all ranks,
+/// every replica holds the elementwise mean of the group's state.
+pub trait Collective: Send {
+    /// Execute one synchronization round on this worker's store;
+    /// returns the round's per-phase timing.
+    fn all_reduce_average(
+        &mut self,
+        store: &mut ParamStore,
+        include_momentum: bool,
+    ) -> Result<CollectiveStats>;
+
+    /// Cumulative stats across all rounds so far.
+    fn stats(&self) -> CollectiveStats;
+
+    /// Number of participants in the group.
+    fn world_size(&self) -> usize;
+
+    /// Rounds completed (lockstep across the group).
+    fn rounds(&self) -> u64 {
+        self.stats().rounds
+    }
+}
+
+/// N = 1: no peers, every round is a free no-op (no state to track —
+/// stats stay at zero by construction).
+#[derive(Debug, Default)]
+pub struct NoopCollective;
+
+impl NoopCollective {
+    pub fn new() -> Self {
+        NoopCollective
+    }
+}
+
+impl Collective for NoopCollective {
+    fn all_reduce_average(
+        &mut self,
+        _store: &mut ParamStore,
+        _include_momentum: bool,
+    ) -> Result<CollectiveStats> {
+        Ok(CollectiveStats::default())
+    }
+
+    fn stats(&self) -> CollectiveStats {
+        CollectiveStats::default()
+    }
+
+    fn world_size(&self) -> usize {
+        1
+    }
+}
+
+/// N = 2 fast path: the paper's Fig-2 whole-buffer exchange, preserved
+/// byte-for-byte (one send, one recv, midpoint average in place).
+pub struct PairwiseCollective {
+    port: ExchangePort,
+}
+
+impl PairwiseCollective {
+    pub fn new(endpoint: Endpoint) -> Self {
+        PairwiseCollective { port: ExchangePort::new(endpoint) }
+    }
+
+    /// Link-layer counters of the underlying endpoint.
+    pub fn link_stats(&self) -> crate::comm::link::LinkStats {
+        self.port.link_stats()
+    }
+}
+
+impl Collective for PairwiseCollective {
+    fn all_reduce_average(
+        &mut self,
+        store: &mut ParamStore,
+        include_momentum: bool,
+    ) -> Result<CollectiveStats> {
+        let before = self.port.stats;
+        self.port.exchange(store, include_momentum)?;
+        let after = self.port.stats;
+        Ok(CollectiveStats {
+            rounds: 1,
+            bytes_per_round: after.bytes_per_round,
+            flatten_seconds: after.flatten_seconds - before.flatten_seconds,
+            transfer_seconds: after.transfer_seconds - before.transfer_seconds,
+            average_seconds: after.average_seconds - before.average_seconds,
+        })
+    }
+
+    fn stats(&self) -> CollectiveStats {
+        self.port.stats.into()
+    }
+
+    fn world_size(&self) -> usize {
+        2
+    }
+}
+
+/// Arbitrary N: chunked ring all-reduce over link transports.
+///
+/// N-1 reduce-scatter steps followed by N-1 all-gather steps over
+/// nearly-equal chunks, then divide by N.  For N = 2 the arithmetic is
+/// identical to the pairwise midpoint (`0.5 * (a + b)` in the same
+/// f32 expression order), so results match the fast path exactly.
+pub struct RingCollective {
+    pub rank: usize,
+    n: usize,
+    to_next: Endpoint,
+    from_prev: Endpoint,
+    /// Message counter; advances once per hop message so skew anywhere
+    /// in the 2(N-1)-step schedule is detected by `Endpoint::recv`.
+    seq: u64,
+    flat_buf: Vec<f32>,
+    /// Outgoing chunk staging; ping-pongs with `chunk_in` (the buffer
+    /// received from the previous rank becomes the next send's staging
+    /// buffer), so the P2P path allocates nothing in steady state.
+    chunk_out: Vec<f32>,
+    chunk_in: Vec<f32>,
+    stats: CollectiveStats,
+}
+
+/// Chunk boundaries: N nearly-equal spans covering `len` (the first
+/// `len % n` chunks take one extra element; chunks may be empty when
+/// `len < n`).
+fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
+    let base = len / n;
+    let rem = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut off = 0;
+    for i in 0..n {
+        let sz = base + usize::from(i < rem);
+        out.push((off, off + sz));
+        off += sz;
+    }
+    out
+}
+
+impl RingCollective {
+    fn send_recv_chunk(&mut self, lo: usize, hi: usize) -> Result<()> {
+        let mut out = std::mem::take(&mut self.chunk_out);
+        out.clear();
+        out.extend_from_slice(&self.flat_buf[lo..hi]);
+        self.to_next.send_vec(self.seq, out)?;
+        self.from_prev.recv(self.seq, &mut self.chunk_in)?;
+        self.seq += 1;
+        Ok(())
+    }
+
+    fn check_chunk(&self, want: usize, phase: &str) -> Result<()> {
+        if self.chunk_in.len() != want {
+            return Err(Error::Protocol(format!(
+                "ring {phase}: rank {} received {} values, expected {want}",
+                self.rank,
+                self.chunk_in.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Collective for RingCollective {
+    fn all_reduce_average(
+        &mut self,
+        store: &mut ParamStore,
+        include_momentum: bool,
+    ) -> Result<CollectiveStats> {
+        let n = self.n;
+        let t = Timer::start();
+        store.flatten_into(&mut self.flat_buf, include_momentum);
+        let mut flatten_seconds = t.elapsed_secs();
+        let bytes = self.flat_buf.len() * 4;
+        let bounds = chunk_bounds(self.flat_buf.len(), n);
+        let mut transfer_seconds = 0.0;
+        let mut average_seconds = 0.0;
+
+        // Reduce-scatter: after N-1 steps chunk (rank+1)%n holds the sum.
+        for step in 0..n - 1 {
+            let send_chunk = (self.rank + n - step) % n;
+            let recv_chunk = (self.rank + n - step - 1) % n;
+            let (s0, s1) = bounds[send_chunk];
+            let t = Timer::start();
+            self.send_recv_chunk(s0, s1)?;
+            transfer_seconds += t.elapsed_secs();
+            let (r0, r1) = bounds[recv_chunk];
+            self.check_chunk(r1 - r0, "reduce-scatter")?;
+            let t = Timer::start();
+            accumulate(&mut self.flat_buf[r0..r1], &self.chunk_in);
+            average_seconds += t.elapsed_secs();
+            std::mem::swap(&mut self.chunk_out, &mut self.chunk_in);
+        }
+        // All-gather: circulate the completed chunks.
+        for step in 0..n - 1 {
+            let send_chunk = (self.rank + 1 + n - step) % n;
+            let recv_chunk = (self.rank + n - step) % n;
+            let (s0, s1) = bounds[send_chunk];
+            let t = Timer::start();
+            self.send_recv_chunk(s0, s1)?;
+            transfer_seconds += t.elapsed_secs();
+            let (r0, r1) = bounds[recv_chunk];
+            self.check_chunk(r1 - r0, "all-gather")?;
+            let t = Timer::start();
+            self.flat_buf[r0..r1].copy_from_slice(&self.chunk_in);
+            average_seconds += t.elapsed_secs();
+            std::mem::swap(&mut self.chunk_out, &mut self.chunk_in);
+        }
+
+        let t = Timer::start();
+        scale_in_place(&mut self.flat_buf, 1.0 / n as f32);
+        average_seconds += t.elapsed_secs();
+        let t = Timer::start();
+        store.unflatten_from(&self.flat_buf, include_momentum)?;
+        flatten_seconds += t.elapsed_secs();
+
+        let round = CollectiveStats {
+            rounds: 1,
+            bytes_per_round: bytes,
+            flatten_seconds,
+            transfer_seconds,
+            average_seconds,
+        };
+        self.stats.absorb(&round);
+        Ok(round)
+    }
+
+    fn stats(&self) -> CollectiveStats {
+        self.stats
+    }
+
+    fn world_size(&self) -> usize {
+        self.n
+    }
+}
+
+/// Connected pair of N = 2 fast-path collectives over one link.
+pub fn pair_fabric(kind: TransportKind) -> (PairwiseCollective, PairwiseCollective) {
+    let (a, b) = transport_pair(kind);
+    (PairwiseCollective::new(a), PairwiseCollective::new(b))
+}
+
+/// Build a ring of `hops.len()` connected nodes; `hops[i]` is the
+/// transport of the directed link `i -> (i+1) % n` (per-hop §4.4
+/// downgrades supported — hops may mix kinds).
+pub fn ring_fabric(hops: &[TransportKind]) -> Vec<RingCollective> {
+    let n = hops.len();
+    assert!(n >= 2, "a ring needs at least 2 nodes");
+    let mut send_sides: Vec<Option<Endpoint>> = Vec::with_capacity(n);
+    let mut recv_sides: Vec<Option<Endpoint>> = Vec::with_capacity(n);
+    for &kind in hops {
+        let (a, b) = transport_pair(kind);
+        send_sides.push(Some(a));
+        recv_sides.push(Some(b));
+    }
+    (0..n)
+        .map(|i| RingCollective {
+            rank: i,
+            n,
+            to_next: send_sides[i].take().unwrap(),
+            from_prev: recv_sides[(i + n - 1) % n].take().unwrap(),
+            seq: 0,
+            flat_buf: Vec::new(),
+            chunk_out: Vec::new(),
+            chunk_in: Vec::new(),
+            stats: CollectiveStats::default(),
+        })
+        .collect()
+}
+
+/// Build one collective handle per worker for the given hop transports
+/// (`hops[i]` = transport of ring hop `i -> (i+1) % workers`; ignored
+/// for N = 1, only `hops[0]` is used for the N = 2 fast path).
+pub fn build_fabric(workers: usize, hops: &[TransportKind]) -> Vec<Box<dyn Collective>> {
+    match workers {
+        0 | 1 => vec![Box::new(NoopCollective::new()) as Box<dyn Collective>],
+        2 => {
+            assert!(!hops.is_empty(), "need the pair's hop transport");
+            let (a, b) = pair_fabric(hops[0]);
+            vec![Box::new(a) as Box<dyn Collective>, Box::new(b) as Box<dyn Collective>]
+        }
+        n => {
+            assert_eq!(hops.len(), n, "need one hop transport per ring link");
+            ring_fabric(hops)
+                .into_iter()
+                .map(|node| Box::new(node) as Box<dyn Collective>)
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::ParamManifestSpec;
+    use crate::tensor::Shape;
+
+    fn specs() -> Vec<ParamManifestSpec> {
+        vec![
+            ParamManifestSpec {
+                name: "w".into(),
+                shape: Shape::of(&[16, 4]),
+                init: "normal".into(),
+                std: 0.1,
+                bias_value: 0.0,
+            },
+            ParamManifestSpec {
+                name: "b".into(),
+                shape: Shape::of(&[5]),
+                init: "zeros".into(),
+                std: 0.0,
+                bias_value: 0.0,
+            },
+        ]
+    }
+
+    /// A store whose params are the constant `rank + 1` and momenta the
+    /// constant `-(rank + 1)` — the group mean is exactly computable.
+    fn rank_store(rank: usize) -> ParamStore {
+        let mut s = ParamStore::init(&specs(), 0);
+        for t in s.params.iter_mut() {
+            t.as_mut_slice().fill((rank + 1) as f32);
+        }
+        for t in s.momenta.iter_mut() {
+            t.as_mut_slice().fill(-((rank + 1) as f32));
+        }
+        s
+    }
+
+    fn run_group(
+        mut fabrics: Vec<Box<dyn Collective>>,
+        rounds: usize,
+        include_momentum: bool,
+    ) -> Vec<ParamStore> {
+        let n = fabrics.len();
+        let mut joins = Vec::with_capacity(n);
+        for (rank, mut fabric) in fabrics.drain(..).enumerate() {
+            joins.push(std::thread::spawn(move || {
+                let mut store = rank_store(rank);
+                for _ in 0..rounds {
+                    fabric.all_reduce_average(&mut store, include_momentum).unwrap();
+                }
+                assert_eq!(fabric.rounds(), if n > 1 { rounds as u64 } else { 0 });
+                store
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_world_sizes_converge_to_the_exact_mean_on_all_transports() {
+        for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
+            for n in [1usize, 2, 3, 4] {
+                let fabrics = build_fabric(n, &vec![kind; n.max(1)]);
+                assert!(fabrics.iter().all(|f| f.world_size() == n.max(1)));
+                let stores = run_group(fabrics, 1, true);
+                // Mean of params 1..=n is (n+1)/2; momenta are its negative.
+                let want = (1..=n).sum::<usize>() as f32 / n as f32;
+                for (rank, s) in stores.iter().enumerate() {
+                    for t in &s.params {
+                        for &v in t.as_slice() {
+                            assert!(
+                                (v - want).abs() < 1e-5,
+                                "{kind:?} n={n} rank {rank}: param {v} vs {want}"
+                            );
+                        }
+                    }
+                    for t in &s.momenta {
+                        for &v in t.as_slice() {
+                            assert!((v + want).abs() < 1e-5, "{kind:?} n={n} rank {rank}");
+                        }
+                    }
+                }
+                // Every replica is bit-identical after the round.
+                for s in &stores[1..] {
+                    assert_eq!(stores[0].max_divergence(s), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_exclusion_respected_for_all_n() {
+        for n in [2usize, 3, 4] {
+            let fabrics = build_fabric(n, &vec![TransportKind::P2p; n]);
+            let stores = run_group(fabrics, 1, false);
+            let want = (1..=n).sum::<usize>() as f32 / n as f32;
+            for (rank, s) in stores.iter().enumerate() {
+                // Params averaged...
+                for t in &s.params {
+                    assert!(t.as_slice().iter().all(|v| (v - want).abs() < 1e-5));
+                }
+                // ...momenta untouched (still the per-rank constant).
+                let local = -((rank + 1) as f32);
+                for t in &s.momenta {
+                    assert!(t.as_slice().iter().all(|&v| v == local), "n={n} rank {rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_n2_matches_pairwise_bit_for_bit() {
+        let pair = build_fabric(2, &[TransportKind::P2p]);
+        let ring = ring_fabric(&[TransportKind::P2p; 2])
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn Collective>)
+            .collect::<Vec<_>>();
+        let via_pair = run_group(pair, 3, true);
+        let via_ring = run_group(ring, 3, true);
+        for (a, b) in via_pair.iter().zip(&via_ring) {
+            assert_eq!(a.max_divergence(b), 0.0, "N=2 ring must equal the pairwise path");
+        }
+    }
+
+    #[test]
+    fn per_phase_stats_accumulate() {
+        let fabrics = build_fabric(3, &[TransportKind::Serialized; 3]);
+        let mut joins = Vec::new();
+        for (rank, mut fabric) in fabrics.into_iter().enumerate() {
+            joins.push(std::thread::spawn(move || {
+                let mut store = rank_store(rank);
+                let round = fabric.all_reduce_average(&mut store, true).unwrap();
+                assert_eq!(round.rounds, 1);
+                fabric.all_reduce_average(&mut store, true).unwrap();
+                fabric.stats()
+            }));
+        }
+        for j in joins {
+            let stats = j.join().unwrap();
+            assert_eq!(stats.rounds, 2);
+            // params (16*4 + 5) + momenta, f32.
+            assert_eq!(stats.bytes_per_round, (16 * 4 + 5) * 2 * 4);
+            assert!(stats.total_seconds() > 0.0);
+            assert!(stats.transfer_seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn sequence_number_mismatch_detected() {
+        let mut nodes = ring_fabric(&[TransportKind::P2p; 2]);
+        let mut b = nodes.pop().unwrap();
+        let mut a = nodes.pop().unwrap();
+        // Inject a rogue message tagged with a stale round: rank 1's
+        // first recv expects seq 0 and must reject 99 (§4.3 hazard).
+        a.to_next.send_vec(99, vec![1.0, 2.0]).unwrap();
+        let h = std::thread::spawn(move || {
+            let mut store = rank_store(1);
+            b.all_reduce_average(&mut store, true)
+        });
+        let err = h.join().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        drop(a);
+    }
+
+    #[test]
+    fn chunk_bounds_cover_the_buffer() {
+        let b = chunk_bounds(10, 3);
+        assert_eq!(b, vec![(0, 4), (4, 7), (7, 10)]);
+        let b = chunk_bounds(3, 4);
+        assert_eq!(b.last().unwrap().1, 3);
+    }
+
+    #[test]
+    fn ring_handles_buffers_smaller_than_the_group() {
+        // A 3-element tensor across 4 ranks forces empty chunks.
+        let tiny = vec![ParamManifestSpec {
+            name: "w".into(),
+            shape: Shape::of(&[3]),
+            init: "zeros".into(),
+            std: 0.0,
+            bias_value: 0.0,
+        }];
+        let n = 4;
+        let mut joins = Vec::new();
+        for (rank, mut node) in ring_fabric(&vec![TransportKind::P2p; n]).into_iter().enumerate() {
+            let specs = tiny.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut store = ParamStore::init(&specs, 0);
+                store.params[0].as_mut_slice().fill((rank + 1) as f32);
+                node.all_reduce_average(&mut store, false).unwrap();
+                store
+            }));
+        }
+        for j in joins {
+            let store = j.join().unwrap();
+            assert!(store.params[0].as_slice().iter().all(|&v| (v - 2.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn noop_leaves_store_untouched_and_counts_nothing() {
+        let mut noop = NoopCollective::new();
+        let mut store = rank_store(4);
+        let before = store.clone();
+        let round = noop.all_reduce_average(&mut store, true).unwrap();
+        assert_eq!(round.rounds, 0);
+        assert_eq!(noop.rounds(), 0);
+        assert_eq!(noop.world_size(), 1);
+        assert_eq!(store.max_divergence(&before), 0.0);
+    }
+
+    #[test]
+    fn mixed_hop_transports_still_average_exactly() {
+        // The §4.4 shape: one same-switch P2P hop, two host-staged hops.
+        let hops = [TransportKind::P2p, TransportKind::HostStaged, TransportKind::HostStaged];
+        let fabrics = ring_fabric(&hops)
+            .into_iter()
+            .map(|n| Box::new(n) as Box<dyn Collective>)
+            .collect::<Vec<_>>();
+        let stores = run_group(fabrics, 2, true);
+        let want = (1 + 2 + 3) as f32 / 3.0;
+        // Two rounds of averaging an already-averaged group is stable.
+        for s in &stores {
+            for t in &s.params {
+                assert!(t.as_slice().iter().all(|v| (v - want).abs() < 1e-5));
+            }
+        }
+    }
+}

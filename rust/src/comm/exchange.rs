@@ -1,6 +1,9 @@
-//! The Fig-2 exchange-and-average engine.
+//! The Fig-2 exchange-and-average engine — the *pairwise* (N = 2)
+//! protocol, served to the trainer as the fast path behind
+//! [`crate::comm::collective::Collective`] (N-worker jobs use the ring
+//! all-reduce in that module instead).
 //!
-//! Per round, on both workers symmetrically:
+//! Per round, on the two peers symmetrically:
 //!
 //! 1. the local step produced fresh params/momenta (caller did this);
 //! 2. `flatten` + `send`, then `recv` the peer's state — the paper's

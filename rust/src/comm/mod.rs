@@ -1,4 +1,6 @@
-//! Inter-replica communication: the paper's §2.2/§4.3 machinery.
+//! Inter-replica communication: the paper's §2.2/§4.3 machinery,
+//! generalized from the 2-GPU special case to an N-worker collective
+//! fabric.
 //!
 //! - [`link`]: paired endpoints with three copy paths — `P2p`
 //!   (GPUDirect analog: one staged copy), `HostStaged` (bounce through
@@ -8,20 +10,26 @@
 //!   the E4 bench measures real cost ratios.
 //! - [`exchange`]: the Fig-2 engine — 3-step exchange-and-average of
 //!   params (+ momenta) with sequence-number protocol checking (the
-//!   paper's CUDA-context-sync workaround).
+//!   paper's CUDA-context-sync workaround).  Pairwise only; reused by
+//!   the collective layer as the N = 2 fast path.
+//! - [`collective`]: the [`Collective`] trait the coordinator trains
+//!   through for *any* N — no-op (N = 1), pairwise port (N = 2, byte-
+//!   for-byte the paper's path) and a chunked ring all-reduce over the
+//!   link transports (arbitrary N, per-hop §4.4 topology fallback).
 //! - [`barrier`]: timed step barrier.
-//! - [`ring`]: chunked ring all-reduce — the N-GPU extension the paper
-//!   leaves as future work (§4.4), used by the E5 scaling study.
 //! - [`cost`]: analytic transfer-time model, calibrated by `sim`.
 
 pub mod barrier;
+pub mod collective;
 pub mod cost;
 pub mod exchange;
 pub mod link;
-pub mod ring;
 
 pub use barrier::TimedBarrier;
+pub use collective::{
+    build_fabric, pair_fabric, ring_fabric, Collective, CollectiveStats, NoopCollective,
+    PairwiseCollective, RingCollective,
+};
 pub use cost::{CommCostModel, LinkCost};
 pub use exchange::{ExchangePort, ExchangeStats};
 pub use link::{transport_pair, Endpoint, LinkStats};
-pub use ring::RingNode;

@@ -2,9 +2,10 @@
 //!
 //! [`worker`] is one replica: a thread owning a PJRT client, compiled
 //! train/eval steps, its parameter store, a (serial or Fig-1 parallel)
-//! loader and one side of the exchange fabric.  [`trainer`] wires N
-//! workers together — pairwise Fig-2 exchange for the paper's N=2,
-//! ring all-reduce beyond — runs the step loop, logs Table-1-style
+//! loader and its handle on the group collective.  [`trainer`] wires N
+//! workers together through the `comm::collective` trait — no-op for
+//! N=1, the paper's pairwise Fig-2 exchange for N=2, chunked ring
+//! all-reduce beyond — runs the step loop, logs Table-1-style
 //! per-20-iteration windows, evaluates and checkpoints.
 
 pub mod eval;
@@ -12,4 +13,4 @@ pub mod trainer;
 pub mod worker;
 
 pub use trainer::{train, TrainSummary, WindowRecord};
-pub use worker::{CommFabric, StepRecord};
+pub use worker::{StepRecord, WorkerOutcome};

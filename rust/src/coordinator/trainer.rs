@@ -1,19 +1,19 @@
-//! The leader: spawns workers, wires the exchange fabric, aggregates
+//! The leader: spawns workers, wires the collective fabric, aggregates
 //! metrics, evaluates and checkpoints.
 //!
-//! Topology-aware transport selection reproduces §4.4: if the config
-//! asks for P2P but the two workers sit on different PCIe switches,
-//! the fabric silently falls back to host-staged copies — exactly what
-//! the hardware would force.
+//! Topology-aware transport selection generalizes §4.4 to any worker
+//! count: every ring hop `i -> (i+1) % N` is checked against the PCIe
+//! tree independently, and a P2P request silently falls back to
+//! host-staged copies on hops whose endpoints sit on different
+//! switches — exactly what the hardware would force.  Same-switch hops
+//! keep the fast path even when other hops are downgraded.
 
 use std::sync::mpsc::channel;
 
-use crate::comm::exchange::ExchangePort;
-use crate::comm::link::transport_pair;
-use crate::comm::ring::ring;
+use crate::comm::collective::{build_fabric, CollectiveStats};
 use crate::config::{TrainConfig, TransportKind};
 use crate::coordinator::eval::{evaluate, EvalResult};
-use crate::coordinator::worker::{run_worker, CommFabric, StepRecord, WorkerSpec};
+use crate::coordinator::worker::{run_worker, StepRecord, WorkerSpec};
 use crate::data::loader::LoaderStats;
 use crate::error::{Error, Result};
 use crate::interconnect::topology::PcieTopology;
@@ -41,31 +41,69 @@ pub struct TrainSummary {
     pub loader: Vec<LoaderStats>,
     pub exchange_rounds: u64,
     pub exchange_seconds: f64,
+    /// Per-phase collective timing (flatten/transfer/average), seconds
+    /// averaged across workers — the Table-1/Fig-2 bench breakdown for
+    /// any N.
+    pub collective: CollectiveStats,
     pub compute_seconds: f64,
-    pub final_divergence: f32,
+    /// Replica divergence after the final step.  `None` for a single
+    /// worker (no peer to compare).  When replicas are supposed to be
+    /// bit-synchronized (period 1 and momenta included) this is the
+    /// full-state Fig-2 invariant; otherwise it is the params-only
+    /// drift metric (momenta legitimately differ there).
+    pub final_divergence: Option<f32>,
     pub eval: Option<EvalResult>,
     /// Mean seconds per 20 iterations (the paper's headline unit).
     pub secs_per_20_iters: f64,
 }
 
-/// Resolve the effective transport per the PCIe topology (§4.4 rule).
-pub fn effective_transport(cfg: &TrainConfig) -> TransportKind {
-    if cfg.cluster.workers != 2 {
-        return cfg.exchange.transport;
-    }
-    let topo = PcieTopology {
+fn cluster_topology(cfg: &TrainConfig) -> PcieTopology {
+    PcieTopology {
         switches: cfg.cluster.switch_of_worker.iter().max().unwrap_or(&0) + 1,
         switch_of_device: cfg.cluster.switch_of_worker.clone(),
-    };
-    match (cfg.exchange.transport, topo.p2p_allowed(0, 1)) {
-        (TransportKind::P2p, Ok(false)) => {
-            log::warn!(
-                "workers on different PCIe switches: falling back to host-staged \
-                 copies (paper §4.4)"
-            );
-            TransportKind::HostStaged
-        }
-        (kind, _) => kind,
+    }
+}
+
+/// Per-hop effective transports for the ring `i -> (i+1) % N` (§4.4
+/// rule applied to every hop): a P2P request is downgraded to
+/// host-staged on cross-switch hops; other kinds pass through.  Empty
+/// for a single worker.
+pub fn effective_hop_transports(cfg: &TrainConfig) -> Vec<TransportKind> {
+    let n = cfg.cluster.workers;
+    if n < 2 {
+        return Vec::new();
+    }
+    let topo = cluster_topology(cfg);
+    (0..n)
+        .map(|i| {
+            let j = (i + 1) % n;
+            match (cfg.exchange.transport, topo.p2p_allowed(i, j)) {
+                (TransportKind::P2p, Ok(false)) => {
+                    // For N = 2 the two hops mirror one physical link, so
+                    // warn once; for a ring every directed hop is real.
+                    if i < j || n > 2 {
+                        log::warn!(
+                            "workers {i} and {j} sit on different PCIe switches: \
+                             hop falls back to host-staged copies (paper §4.4)"
+                        );
+                    }
+                    TransportKind::HostStaged
+                }
+                (kind, _) => kind,
+            }
+        })
+        .collect()
+}
+
+/// Summary form of the §4.4 rule for any N: the configured transport,
+/// downgraded to host-staged if *any* hop had to fall back.  Per-hop
+/// resolution (used to build the fabric) is `effective_hop_transports`.
+pub fn effective_transport(cfg: &TrainConfig) -> TransportKind {
+    let hops = effective_hop_transports(cfg);
+    if hops.iter().any(|&k| k != cfg.exchange.transport) {
+        TransportKind::HostStaged
+    } else {
+        cfg.exchange.transport
     }
 }
 
@@ -73,21 +111,12 @@ pub fn effective_transport(cfg: &TrainConfig) -> TransportKind {
 pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     cfg.validate()?;
     let workers = cfg.cluster.workers;
-    let transport = effective_transport(cfg);
 
-    // Build the exchange fabric (endpoints move into the threads).
-    let mut fabrics: Vec<CommFabric> = Vec::with_capacity(workers);
-    if workers == 1 {
-        fabrics.push(CommFabric::None);
-    } else if workers == 2 {
-        let (a, b) = transport_pair(transport);
-        fabrics.push(CommFabric::Pair(ExchangePort::new(a)));
-        fabrics.push(CommFabric::Pair(ExchangePort::new(b)));
-    } else {
-        for node in ring(workers) {
-            fabrics.push(CommFabric::Ring(node));
-        }
-    }
+    // Build the collective fabric (handles move into the threads).
+    // N = 1 -> no-op, N = 2 -> the paper's pairwise fast path,
+    // N > 2 -> chunked ring all-reduce; all behind one trait.
+    let hop_kinds = effective_hop_transports(cfg);
+    let fabrics = build_fabric(workers, &hop_kinds);
 
     let (tx, rx) = channel::<StepRecord>();
     let wall = Timer::start();
@@ -96,9 +125,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     let mut joins = Vec::with_capacity(workers);
     for (w, fabric) in fabrics.into_iter().enumerate() {
         let spec = WorkerSpec {
+            fabric,
             worker: w,
             cfg: cfg.clone(),
-            fabric,
             reports: tx.clone(),
             restore: None,
         };
@@ -162,20 +191,52 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         }
     }
 
-    // Join replicas and cross-check the Fig-2 invariant.
+    // Join replicas and measure the cross-replica divergence.
     let mut outcomes = Vec::with_capacity(workers);
     for j in joins {
         outcomes.push(j.join().map_err(|_| Error::msg("worker thread panicked"))??);
     }
     outcomes.sort_by_key(|o| o.worker);
 
-    let final_divergence = if workers >= 2 && cfg.exchange.period == 1 && cfg.exchange.include_momentum
-    {
-        outcomes[0].store.max_divergence(&outcomes[1].store)
-    } else if workers >= 2 {
-        outcomes[0].store.max_divergence(&outcomes[1].store)
+    // Divergence is only a *correctness invariant* when replicas are
+    // supposed to be fully synchronized after the last step: exchange
+    // every step with momenta included.  Otherwise the replicas are
+    // legitimately desynchronized (drifting params between exchanges,
+    // or private momenta), so report the params-only drift metric
+    // instead of flagging expected differences.  Max over all replica
+    // pairs against worker 0, not just workers 0 and 1.
+    let final_divergence: Option<f32> = if workers >= 2 {
+        let strict = cfg.exchange.period == 1 && cfg.exchange.include_momentum;
+        let mut d = 0f32;
+        for o in &outcomes[1..] {
+            d = d.max(if strict {
+                outcomes[0].store.max_divergence(&o.store)
+            } else {
+                outcomes[0].store.param_divergence(&o.store)
+            });
+        }
+        Some(d)
     } else {
-        0.0
+        None
+    };
+
+    // Per-phase collective stats: seconds averaged across workers,
+    // rounds/bytes taken from worker 0 (lockstep across the group).
+    let collective = {
+        let mut c = CollectiveStats {
+            rounds: outcomes[0].collective.rounds,
+            bytes_per_round: outcomes[0].collective.bytes_per_round,
+            ..CollectiveStats::default()
+        };
+        for o in &outcomes {
+            c.flatten_seconds += o.collective.flatten_seconds;
+            c.transfer_seconds += o.collective.transfer_seconds;
+            c.average_seconds += o.collective.average_seconds;
+        }
+        c.flatten_seconds /= workers as f64;
+        c.transfer_seconds /= workers as f64;
+        c.average_seconds /= workers as f64;
+        c
     };
 
     // Checkpoint replica 0 (post-exchange replicas agree).
@@ -205,12 +266,80 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         windows,
         losses,
         loader: outcomes.iter().map(|o| o.loader).collect(),
-        exchange_rounds: outcomes[0].exchange_rounds,
+        exchange_rounds: collective.rounds,
         exchange_seconds: outcomes.iter().map(|o| o.exchange_seconds).sum::<f64>()
             / workers as f64,
+        collective,
         compute_seconds: outcomes.iter().map(|o| o.compute_seconds).sum::<f64>()
             / workers as f64,
         final_divergence,
         eval,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cfg_with(switches: Vec<usize>, kind: TransportKind) -> TrainConfig {
+        let mut cfg = TrainConfig::default();
+        cfg.cluster = ClusterConfig { workers: switches.len(), switch_of_worker: switches };
+        cfg.exchange.transport = kind;
+        cfg
+    }
+
+    #[test]
+    fn single_worker_has_no_hops() {
+        let cfg = cfg_with(vec![0], TransportKind::P2p);
+        assert!(effective_hop_transports(&cfg).is_empty());
+        assert_eq!(effective_transport(&cfg), TransportKind::P2p);
+    }
+
+    #[test]
+    fn same_switch_pair_keeps_p2p() {
+        let cfg = cfg_with(vec![0, 0], TransportKind::P2p);
+        assert_eq!(
+            effective_hop_transports(&cfg),
+            vec![TransportKind::P2p, TransportKind::P2p]
+        );
+        assert_eq!(effective_transport(&cfg), TransportKind::P2p);
+    }
+
+    #[test]
+    fn cross_switch_pair_falls_back() {
+        let cfg = cfg_with(vec![0, 1], TransportKind::P2p);
+        assert_eq!(effective_transport(&cfg), TransportKind::HostStaged);
+    }
+
+    /// Regression for the seed bug: `effective_transport` silently
+    /// returned the configured transport whenever `workers != 2`, so a
+    /// P2P request across switches with N = 3 was never downgraded.
+    /// The §4.4 fallback must fire for N > 2, per hop.
+    #[test]
+    fn n3_cross_switch_hops_downgrade() {
+        let cfg = cfg_with(vec![0, 0, 1], TransportKind::P2p);
+        // Hop 0->1 shares switch 0; hops 1->2 and 2->0 cross the root.
+        assert_eq!(
+            effective_hop_transports(&cfg),
+            vec![TransportKind::P2p, TransportKind::HostStaged, TransportKind::HostStaged]
+        );
+        assert_eq!(effective_transport(&cfg), TransportKind::HostStaged);
+    }
+
+    #[test]
+    fn n4_single_switch_keeps_p2p_everywhere() {
+        let cfg = cfg_with(vec![0, 0, 0, 0], TransportKind::P2p);
+        assert_eq!(effective_hop_transports(&cfg), vec![TransportKind::P2p; 4]);
+        assert_eq!(effective_transport(&cfg), TransportKind::P2p);
+    }
+
+    #[test]
+    fn non_p2p_transports_pass_through_unchanged() {
+        for kind in [TransportKind::HostStaged, TransportKind::Serialized] {
+            let cfg = cfg_with(vec![0, 1, 1], kind);
+            assert_eq!(effective_hop_transports(&cfg), vec![kind; 3]);
+            assert_eq!(effective_transport(&cfg), kind);
+        }
+    }
 }

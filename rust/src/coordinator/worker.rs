@@ -1,10 +1,10 @@
-//! One replica ("virtual GPU") worker.
+//! One replica ("virtual GPU") worker: local steps plus its handle on
+//! the group collective (any N, see `comm::collective`).
 
 use std::path::PathBuf;
 use std::sync::mpsc::Sender;
 
-use crate::comm::exchange::ExchangePort;
-use crate::comm::ring::RingNode;
+use crate::comm::collective::{Collective, CollectiveStats};
 use crate::config::{LoaderMode, TrainConfig};
 use crate::data::loader::{BatchSource, LoaderCfg, LoaderStats, ParallelLoader, SerialLoader};
 use crate::error::{Error, Result};
@@ -15,16 +15,6 @@ use crate::runtime::literal_bridge::{
 };
 use crate::runtime::{Manifest, RuntimeClient};
 use crate::util::Timer;
-
-/// Exchange fabric handed to a worker thread.
-pub enum CommFabric {
-    /// Single worker: no exchange.
-    None,
-    /// The paper's 2-GPU pairwise exchange (Fig 2).
-    Pair(ExchangePort),
-    /// N > 2 extension: ring all-reduce averaging.
-    Ring(RingNode),
-}
 
 /// Per-step record streamed to the trainer for logging.
 #[derive(Clone, Copy, Debug)]
@@ -46,7 +36,10 @@ pub struct WorkerOutcome {
     pub steps: usize,
     pub store: ParamStore,
     pub loader: LoaderStats,
-    pub exchange_rounds: u64,
+    /// Cumulative per-phase collective timing (flatten/transfer/average).
+    pub collective: CollectiveStats,
+    /// Wall seconds spent inside collective rounds (includes overhead
+    /// the per-phase timers don't attribute).
     pub exchange_seconds: f64,
     pub compute_seconds: f64,
 }
@@ -54,9 +47,11 @@ pub struct WorkerOutcome {
 /// Everything a worker thread needs (built on the spawning side; all
 /// XLA state is created *inside* the thread).
 pub struct WorkerSpec {
+    /// This worker's handle on the group collective (no-op for N = 1,
+    /// pairwise port for N = 2, ring node beyond — see `comm::collective`).
+    pub fabric: Box<dyn Collective>,
     pub worker: usize,
     pub cfg: TrainConfig,
-    pub fabric: CommFabric,
     pub reports: Sender<StepRecord>,
     /// Checkpoint path this worker should restore from, if any.
     pub restore: Option<PathBuf>,
@@ -81,10 +76,10 @@ fn build_loader(cfg: &TrainConfig, worker: usize, crop_hw: usize) -> Result<Box<
     })
 }
 
-/// The worker thread body: runs `cfg.steps` local steps with exchange
-/// every `cfg.exchange.period` steps.
+/// The worker thread body: runs `cfg.steps` local steps with a
+/// collective exchange every `cfg.exchange.period` steps.
 pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
-    let WorkerSpec { worker, cfg, mut fabric, reports, restore } = spec;
+    let WorkerSpec { mut fabric, worker, cfg, reports, restore } = spec;
 
     // --- Setup (the paper's per-GPU Theano process initialization) ---
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
@@ -118,8 +113,6 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
     let include_momentum = cfg.exchange.include_momentum;
     let mut compute_seconds = 0.0;
     let mut exchange_seconds = 0.0;
-    let mut exchange_rounds = 0u64;
-    let mut ring_buf: Vec<f32> = Vec::new();
 
     // --- The step loop (Fig 1 + Fig 2 composed) ---
     for step in start_step..cfg.steps {
@@ -162,24 +155,12 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         }
         store.update_from(new_params, new_momenta)?;
 
-        // --- Fig-2 exchange at the configured period ---
+        // --- Collective exchange at the configured period (Fig 2 for
+        // --- N = 2, ring all-reduce beyond) ---
         let mut dt_exchange = 0.0;
-        if (step + 1) % cfg.exchange.period == 0 {
+        if fabric.world_size() > 1 && (step + 1) % cfg.exchange.period == 0 {
             let t_ex = Timer::start();
-            match &mut fabric {
-                CommFabric::None => {}
-                CommFabric::Pair(port) => {
-                    port.exchange(&mut store, include_momentum)?;
-                    exchange_rounds += 1;
-                }
-                CommFabric::Ring(node) => {
-                    ring_buf.clear();
-                    ring_buf.extend(store.flatten(include_momentum));
-                    node.allreduce_average(&mut ring_buf)?;
-                    apply_flat(&mut store, &ring_buf, include_momentum)?;
-                    exchange_rounds += 1;
-                }
-            }
+            fabric.all_reduce_average(&mut store, include_momentum)?;
             dt_exchange = t_ex.elapsed_secs();
             exchange_seconds += dt_exchange;
         }
@@ -201,35 +182,10 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         steps: cfg.steps.saturating_sub(start_step),
         store,
         loader: loader.stats(),
-        exchange_rounds,
+        collective: fabric.stats(),
         exchange_seconds,
         compute_seconds,
     })
-}
-
-/// Overwrite a store's state from a flat (ring-averaged) buffer.
-fn apply_flat(store: &mut ParamStore, flat: &[f32], include_momentum: bool) -> Result<()> {
-    let want = store.total_elements() * if include_momentum { 2 } else { 1 };
-    if flat.len() != want {
-        return Err(Error::Shape(format!(
-            "apply_flat: {} values, want {want}",
-            flat.len()
-        )));
-    }
-    let mut off = 0;
-    for p in store.params.iter_mut() {
-        let n = p.numel();
-        p.as_mut_slice().copy_from_slice(&flat[off..off + n]);
-        off += n;
-    }
-    if include_momentum {
-        for m in store.momenta.iter_mut() {
-            let n = m.numel();
-            m.as_mut_slice().copy_from_slice(&flat[off..off + n]);
-            off += n;
-        }
-    }
-    Ok(())
 }
 
 // Small helper so worker doesn't hold a borrow of Manifest across the

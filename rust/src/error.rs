@@ -1,65 +1,89 @@
 //! Crate-wide error type.
 //!
-//! Thin `thiserror` enum so every layer (IO, manifest parsing, PJRT,
-//! protocol violations) surfaces through one `Result` alias without
-//! stringly-typed loss of provenance.
+//! Hand-rolled enum (the offline crate set has no `thiserror`) so every
+//! layer (IO, manifest parsing, PJRT, protocol violations) surfaces
+//! through one `Result` alias without stringly-typed loss of
+//! provenance.
 
+use std::fmt;
 use std::path::PathBuf;
 
 /// Unified error for all `theano-mgpu` operations.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Underlying I/O failure, annotated with the path when known.
-    #[error("io error on {path:?}: {source}")]
-    Io {
-        path: PathBuf,
-        #[source]
-        source: std::io::Error,
-    },
+    Io { path: PathBuf, source: std::io::Error },
 
     /// Raw I/O failure with no path context.
-    #[error(transparent)]
-    RawIo(#[from] std::io::Error),
+    RawIo(std::io::Error),
 
     /// XLA / PJRT failure (compile, execute, transfer).
-    #[error("xla: {0}")]
     Xla(String),
 
     /// artifacts/manifest.json was malformed or inconsistent.
-    #[error("manifest: {0}")]
     Manifest(String),
 
     /// JSON syntax error at byte offset.
-    #[error("json parse error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Config file (TOML subset) syntax/validation error.
-    #[error("config: {0}")]
     Config(String),
 
     /// Shard file corruption (bad magic / CRC / truncation).
-    #[error("shard {path:?}: {msg}")]
     Shard { path: PathBuf, msg: String },
 
     /// Shape mismatch between host tensors / literals / specs.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
-    /// Exchange/barrier protocol violation (the Fig-2 state machine).
-    #[error("protocol: {0}")]
+    /// Exchange/collective protocol violation (the Fig-2 state machine
+    /// and its N-worker ring generalization).
     Protocol(String),
 
     /// Interconnect topology rejected a requested route.
-    #[error("topology: {0}")]
     Topology(String),
 
     /// Checkpoint serialization problems.
-    #[error("checkpoint: {0}")]
     Checkpoint(String),
 
     /// Anything the CLI needs to report verbatim.
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io { path, source } => write!(f, "io error on {path:?}: {source}"),
+            Error::RawIo(source) => write!(f, "{source}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+            Error::Manifest(m) => write!(f, "manifest: {m}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Shard { path, msg } => write!(f, "shard {path:?}: {msg}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Protocol(m) => write!(f, "protocol: {m}"),
+            Error::Topology(m) => write!(f, "topology: {m}"),
+            Error::Checkpoint(m) => write!(f, "checkpoint: {m}"),
+            Error::Msg(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            Error::RawIo(source) => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::RawIo(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -82,3 +106,24 @@ impl Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats_carry_provenance() {
+        assert_eq!(format!("{}", Error::Shape("a vs b".into())), "shape mismatch: a vs b");
+        assert_eq!(format!("{}", Error::msg("plain")), "plain");
+        let e = Error::Json { offset: 7, msg: "bad".into() };
+        assert_eq!(format!("{e}"), "json parse error at byte 7: bad");
+    }
+
+    #[test]
+    fn io_errors_keep_their_source() {
+        use std::error::Error as _;
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        assert!(format!("{e}").contains("/tmp/x"));
+        assert!(e.source().is_some());
+    }
+}

@@ -17,8 +17,9 @@
 //!   preprocessing and the double-buffered prefetch loader (Fig 1).
 //! - [`runtime`] — PJRT client/executable wrappers + artifact manifest.
 //! - [`params`] — parameter store, host init, averaging, checkpoints.
-//! - [`comm`] — transports (P2P / host-staged / serialized), the Fig-2
-//!   exchange engine, barriers and a ring all-reduce extension.
+//! - [`comm`] — transports (P2P / host-staged / serialized), the
+//!   N-worker [`Collective`](comm::Collective) fabric (no-op / pairwise
+//!   Fig-2 / chunked ring all-reduce) and barriers.
 //! - [`interconnect`] — PCIe topology model (same-switch P2P rule).
 //! - [`coordinator`] — worker threads + the training/eval loops.
 //! - [`sim`] — calibrated discrete-event simulator regenerating the

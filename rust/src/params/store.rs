@@ -128,6 +128,44 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Overwrite state from a flat buffer produced by [`Self::flatten`]
+    /// with the same `include_momentum` — the unstage step of the ring
+    /// collective (the inverse of `flatten_into`).
+    pub fn unflatten_from(&mut self, flat: &[f32], include_momentum: bool) -> Result<()> {
+        let want = self.total_elements() * if include_momentum { 2 } else { 1 };
+        if flat.len() != want {
+            return Err(Error::Shape(format!(
+                "unflatten_from: {} values, want {want}",
+                flat.len()
+            )));
+        }
+        let mut off = 0;
+        for p in self.params.iter_mut() {
+            let n = p.numel();
+            p.as_mut_slice().copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        if include_momentum {
+            for m in self.momenta.iter_mut() {
+                let n = m.numel();
+                m.as_mut_slice().copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+        Ok(())
+    }
+
+    /// Max |a-b| over params only — the drift metric when replicas are
+    /// *not* expected to be fully synchronized (exchange period > 1 or
+    /// momenta excluded), where momenta legitimately differ.
+    pub fn param_divergence(&self, other: &ParamStore) -> f32 {
+        let mut d = 0f32;
+        for (a, b) in self.params.iter().zip(&other.params) {
+            d = d.max(crate::util::math::max_abs_diff(a.as_slice(), b.as_slice()));
+        }
+        d
+    }
+
     /// Max |a-b| across all state of two stores (divergence metric for
     /// the exchange-period ablation E6).
     pub fn max_divergence(&self, other: &ParamStore) -> f32 {
@@ -211,6 +249,37 @@ mod tests {
         let before = a.momenta[0].clone();
         a.average_with_flat(&fb, false).unwrap();
         assert_eq!(a.momenta[0], before);
+    }
+
+    #[test]
+    fn unflatten_roundtrips_flatten() {
+        let mut a = ParamStore::init(&specs(), 5);
+        for v in a.momenta[0].as_mut_slice() {
+            *v = 0.75;
+        }
+        let flat = a.flatten(true);
+        let mut b = ParamStore::init(&specs(), 99);
+        b.unflatten_from(&flat, true).unwrap();
+        assert_eq!(a.max_divergence(&b), 0.0);
+        // Params-only buffer leaves momenta alone.
+        let mut c = ParamStore::init(&specs(), 99);
+        let before = c.momenta[0].clone();
+        c.unflatten_from(&a.flatten(false), false).unwrap();
+        assert_eq!(c.momenta[0], before);
+        assert_eq!(c.param_divergence(&a), 0.0);
+        // Wrong length rejected.
+        assert!(b.unflatten_from(&[0.0; 3], true).is_err());
+    }
+
+    #[test]
+    fn param_divergence_ignores_momenta() {
+        let a = ParamStore::init(&specs(), 5);
+        let mut b = ParamStore::init(&specs(), 5);
+        for v in b.momenta[0].as_mut_slice() {
+            *v += 9.0;
+        }
+        assert_eq!(a.param_divergence(&b), 0.0);
+        assert!(a.max_divergence(&b) > 8.0);
     }
 
     #[test]

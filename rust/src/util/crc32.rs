@@ -1,20 +1,25 @@
 //! CRC-32 (IEEE 802.3 polynomial) — shard file integrity checksums.
 //!
-//! Table-driven implementation; the table is built at first use.
+//! Table-driven implementation; the table is built at compile time
+//! (no `once_cell` in the offline crate set).
 
-use once_cell::sync::Lazy;
+const TABLE: [u32; 256] = crc_table();
 
-static TABLE: Lazy<[u32; 256]> = Lazy::new(|| {
+const fn crc_table() -> [u32; 256] {
     let mut table = [0u32; 256];
-    for (i, slot) in table.iter_mut().enumerate() {
+    let mut i = 0;
+    while i < 256 {
         let mut c = i as u32;
-        for _ in 0..8 {
+        let mut k = 0;
+        while k < 8 {
             c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
         }
-        *slot = c;
+        table[i] = c;
+        i += 1;
     }
     table
-});
+}
 
 /// One-shot CRC-32 of a byte slice.
 pub fn crc32(data: &[u8]) -> u32 {

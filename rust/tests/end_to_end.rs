@@ -71,6 +71,8 @@ fn single_worker_converges() {
     let eval = s.eval.expect("micro has an eval artifact");
     assert!(eval.examples > 0);
     assert!(eval.top1_error() < 0.9);
+    // No peer to compare against: divergence is None, not 0-or-NaN.
+    assert!(s.final_divergence.is_none());
 }
 
 #[test]
@@ -82,11 +84,8 @@ fn two_workers_stay_synchronized_and_converge() {
     let s = train(&cfg).unwrap();
     assert_eq!(s.exchange_rounds, 20);
     // Fig-2 invariant: after symmetric averaging, replicas are identical.
-    assert!(
-        s.final_divergence < 1e-6,
-        "replicas diverged: {}",
-        s.final_divergence
-    );
+    let divergence = s.final_divergence.expect("2 workers report divergence");
+    assert!(divergence < 1e-6, "replicas diverged: {divergence}");
     let first = s.losses[0];
     let last = *s.losses.last().unwrap();
     assert!(last < 0.8 * first, "loss {first} -> {last}");
@@ -116,7 +115,7 @@ fn transports_are_numerically_equivalent() {
     for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
         base.exchange.transport = kind;
         let s = train(&base).unwrap();
-        assert!(s.final_divergence < 1e-6);
+        assert!(s.final_divergence.unwrap() < 1e-6);
         match &reference {
             None => reference = Some(s.losses),
             Some(want) => assert_eq!(&s.losses, want, "{kind:?} changed results"),
@@ -135,7 +134,7 @@ fn cross_switch_pair_falls_back_to_host_staged() {
     assert_eq!(effective_transport(&cfg), TransportKind::HostStaged);
     // And training still works over the downgraded transport.
     let s = train(&cfg).unwrap();
-    assert!(s.final_divergence < 1e-6);
+    assert!(s.final_divergence.unwrap() < 1e-6);
 }
 
 #[test]
@@ -148,10 +147,26 @@ fn exchange_period_controls_divergence() {
     cfg.exchange.period = 2;
     let s = train(&cfg).unwrap();
     assert_eq!(s.exchange_rounds, 2); // after steps 2 and 4 only
+    // Replicas are legitimately desynchronized here, so the summary
+    // reports the params-only drift metric — still nonzero, because
+    // step 5 trained on different minibatches without an exchange.
     assert!(
-        s.final_divergence > 0.0,
+        s.final_divergence.unwrap() > 0.0,
         "step 5 is un-exchanged; replicas must differ"
     );
+}
+
+#[test]
+fn three_worker_ring_trains() {
+    if !artifacts_present() {
+        return;
+    }
+    // Odd N exercises the unequal-chunk path of the ring all-reduce.
+    let cfg = micro_cfg("ring3", 4, 3);
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.workers, 3);
+    assert_eq!(s.exchange_rounds, 4);
+    assert!(s.final_divergence.unwrap() < 1e-5);
 }
 
 #[test]
@@ -163,7 +178,12 @@ fn four_worker_ring_trains() {
     let s = train(&cfg).unwrap();
     assert_eq!(s.workers, 4);
     // Ring averaging synchronizes every replica each step.
-    assert!(s.final_divergence < 1e-5, "divergence {}", s.final_divergence);
+    let divergence = s.final_divergence.expect("4 workers report divergence");
+    assert!(divergence < 1e-5, "divergence {divergence}");
+    // Per-phase collective stats are populated for N > 2.
+    assert_eq!(s.collective.rounds, 6);
+    assert!(s.collective.bytes_per_round > 0);
+    assert!(s.collective.total_seconds() > 0.0);
 }
 
 #[test]

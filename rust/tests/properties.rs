@@ -1,15 +1,15 @@
 //! Property-based tests on coordinator invariants, via the in-repo
 //! mini-proptest framework (`theano_mgpu::testing`).
 
+use theano_mgpu::comm::collective::{ring_fabric, Collective};
 use theano_mgpu::comm::link::transport_pair;
-use theano_mgpu::comm::ring::ring;
 use theano_mgpu::config::TransportKind;
 use theano_mgpu::data::sampler::EpochSampler;
 use theano_mgpu::interconnect::routing::route;
 use theano_mgpu::interconnect::topology::TopologyBuilder;
 use theano_mgpu::params::average::{average_pair, average_weighted};
-use theano_mgpu::runtime::artifact::ParamManifestSpec;
 use theano_mgpu::params::ParamStore;
+use theano_mgpu::runtime::artifact::ParamManifestSpec;
 use theano_mgpu::tensor::Shape;
 use theano_mgpu::testing::{props, props_err, Gen};
 use theano_mgpu::util::{Json, Pcg32};
@@ -141,6 +141,11 @@ fn prop_ring_average_equals_arithmetic_mean() {
     props_err("ring == mean", 12, |g| {
         let n = g.usize_in(2, 6);
         let len = g.usize_in(1, 200);
+        let kind = *g.pick(&[
+            TransportKind::P2p,
+            TransportKind::HostStaged,
+            TransportKind::Serialized,
+        ]);
         let values: Vec<Vec<f32>> = (0..n).map(|_| g.vec_f32(len, -100.0, 100.0)).collect();
         let mut expect = vec![0f32; len];
         for v in &values {
@@ -148,14 +153,23 @@ fn prop_ring_average_equals_arithmetic_mean() {
                 *e += x / n as f32;
             }
         }
-        let nodes = ring(n);
-        let joins: Vec<_> = nodes
+        let spec = ParamManifestSpec {
+            name: "w".into(),
+            shape: Shape(vec![len]),
+            init: "zeros".into(),
+            std: 0.0,
+            bias_value: 0.0,
+        };
+        let joins: Vec<_> = ring_fabric(&vec![kind; n])
             .into_iter()
             .zip(values)
-            .map(|(mut node, mut data)| {
+            .map(|(mut node, data)| {
+                let spec = spec.clone();
                 std::thread::spawn(move || {
-                    node.allreduce_average(&mut data).unwrap();
-                    data
+                    let mut store = ParamStore::init(&[spec], 0);
+                    store.params[0].as_mut_slice().copy_from_slice(&data);
+                    node.all_reduce_average(&mut store, false).unwrap();
+                    store.params[0].as_slice().to_vec()
                 })
             })
             .collect();

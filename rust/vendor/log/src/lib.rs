@@ -1,0 +1,194 @@
+//! Minimal in-repo implementation of the `log` facade.
+//!
+//! The offline crate set has no crates.io access, so this vendored
+//! crate provides the subset of the real `log` API this workspace
+//! uses: the `Log` trait, `set_logger`/`set_max_level`, and the five
+//! level macros.  Semantics match the real facade: records are
+//! dropped until a logger is installed, and levels above the max are
+//! filtered before reaching the logger.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.pad(self.as_str())
+    }
+}
+
+/// Maximum-verbosity filter installed with [`set_max_level`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Metadata about a record (level only in this implementation).
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+/// One log record: metadata + preformatted arguments.
+#[derive(Clone, Copy, Debug)]
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink.
+pub trait Log: Sync + Send {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+/// Error returned when a logger is already installed.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first caller wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the maximum level that reaches the logger.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// Current maximum level.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing: filter, then dispatch to the installed logger.
+#[doc(hidden)]
+pub fn __private_log(level: Level, args: fmt::Arguments<'_>) {
+    if (level as usize) > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get().copied() {
+        let record = Record { metadata: Metadata { level }, args };
+        if logger.enabled(record.metadata()) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Error, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Warn, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Info, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Debug, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Trace, format_args!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_display() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(format!("{:<5}", Level::Warn), "WARN ");
+        assert_eq!(Level::Info.as_str(), "INFO");
+    }
+
+    #[test]
+    fn max_level_roundtrip() {
+        set_max_level(LevelFilter::Debug);
+        assert_eq!(max_level(), LevelFilter::Debug);
+        set_max_level(LevelFilter::Off);
+        assert_eq!(max_level(), LevelFilter::Off);
+    }
+
+    #[test]
+    fn logging_without_logger_is_a_noop() {
+        set_max_level(LevelFilter::Trace);
+        info!("no logger installed: {}", 42);
+        set_max_level(LevelFilter::Off);
+    }
+}

@@ -1,0 +1,303 @@
+//! Host-side stand-in for the `xla` (PJRT) bindings crate.
+//!
+//! The offline container carries no XLA/PJRT shared libraries, so this
+//! vendored crate supplies the API surface the workspace compiles
+//! against:
+//!
+//! - [`Literal`] is a *fully functional* host container (typed buffer +
+//!   dims) — the literal bridge, parameter staging and all tests that
+//!   traffic in literals work unchanged;
+//! - [`PjRtClient::compile`] / [`PjRtLoadedExecutable::execute`] report
+//!   [`Error::Unimplemented`]: executing AOT HLO requires the real
+//!   bindings.  Callers already treat that exactly like missing
+//!   artifacts (skip/fallback), so trainer-level tests degrade cleanly.
+//!
+//! Swapping the real bindings back in is a one-line Cargo.toml change;
+//! no call site needs to move.
+
+use std::fmt;
+
+/// Error type mirroring the bindings' error surface.
+#[derive(Debug)]
+pub enum Error {
+    Msg(String),
+    Unimplemented(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Msg(m) => write!(f, "{m}"),
+            Error::Unimplemented(what) => write!(
+                f,
+                "{what} is unavailable in this offline build (PJRT bindings not linked)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element type tags (the subset the manifest ABI uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElementType {
+    F32,
+    S32,
+    U8,
+}
+
+/// Typed storage behind a literal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    Tuple(Vec<Literal>),
+}
+
+/// Rust scalar types that can back a literal.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    fn slice(data: &LiteralData) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+    fn slice(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+    fn slice(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::U8(v)
+    }
+    fn slice(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::U8(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A host literal: typed dense buffer plus dims (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    /// Tuple literal (what a PJRT tuple output decomposes from).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: LiteralData::Tuple(elems) }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if matches!(self.data, LiteralData::Tuple(_)) {
+            return Err(Error::Msg("cannot reshape a tuple literal".into()));
+        }
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error::Msg(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+            LiteralData::U8(v) => v.len(),
+            LiteralData::Tuple(v) => v.len(),
+        }
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match &self.data {
+            LiteralData::F32(_) => Ok(ElementType::F32),
+            LiteralData::I32(_) => Ok(ElementType::S32),
+            LiteralData::U8(_) => Ok(ElementType::U8),
+            LiteralData::Tuple(_) => Err(Error::Msg("tuple literal has no element type".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::slice(&self.data).map(|s| s.to_vec()).ok_or_else(|| {
+            Error::Msg(format!("literal is not of the requested type {:?}", T::TY))
+        })
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::slice(&self.data)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error::Msg("literal empty or of the wrong type".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(v) => Ok(v),
+            _ => Err(Error::Msg("literal is not a tuple".into())),
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed (here: raw) HLO module text.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Msg(format!("reading HLO text {path:?}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation handle wrapping a module proto.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+
+    pub fn proto(&self) -> &HloModuleProto {
+        &self.proto
+    }
+}
+
+/// PJRT client stand-in.
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjRtClient { platform: "offline-stub-cpu" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unimplemented("HLO compilation"))
+    }
+}
+
+/// Compiled-executable stand-in (unreachable through the stub client).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsRef<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unimplemented("HLO execution"))
+    }
+}
+
+/// Device buffer stand-in.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unimplemented("device-to-host transfer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        assert_eq!(s.reshape(&[]).unwrap().element_count(), 1);
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(1.5f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn stub_client_reports_unimplemented() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "offline-stub-cpu");
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+}
