@@ -24,7 +24,7 @@ fn main() -> theano_mgpu::Result<()> {
 
     let mut cfg = TrainConfig::default();
     cfg.model = "alexnet-micro".into();
-    cfg.backend = "refconv".into();
+    cfg.backend = "native".into();
     cfg.batch_per_worker = 8;
     cfg.steps = 60;
     cfg.log_every = 0;

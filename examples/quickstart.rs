@@ -1,33 +1,33 @@
-//! Quickstart: load an AOT artifact, run one train step and one eval
-//! step through the public API.  `cargo run --release --example quickstart`
-//! (after `make artifacts`).
+//! Quickstart: run real train + eval steps through the public API with
+//! the native CPU backend — no AOT artifacts, no config files.
+//!
+//!     cargo run --release --example quickstart
 
+use theano_mgpu::backend::{NativeBackend, StepBackend};
 use theano_mgpu::params::ParamStore;
-use theano_mgpu::runtime::literal_bridge::*;
-use theano_mgpu::runtime::{Manifest, RuntimeClient};
+use theano_mgpu::sim::flops::alexnet_micro;
 use theano_mgpu::tensor::{HostTensor, Shape};
 use theano_mgpu::util::Pcg32;
 
 fn main() -> theano_mgpu::Result<()> {
-    // 1. The manifest describes every compiled step and its ABI.
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let spec = manifest.artifact("train_alexnet-micro_cudnn_r2_b8")?;
-    let model = manifest.model(&spec.model)?;
+    // 1. Compile the architecture description into a step backend.
+    //    (Swap in `alexnet_tiny()` or `alexnet()` for bigger runs, or
+    //    build from a config with `backend::build_backend`.)
+    let arch = alexnet_micro();
+    let mut backend = NativeBackend::new(&arch, 0.5);
+    let model = backend.model().clone();
     println!(
-        "artifact {} ({} backend, batch {}): {} inputs, {} outputs",
-        spec.name,
-        spec.backend,
-        spec.batch_size,
-        spec.inputs.len(),
-        spec.outputs.len()
+        "model {}: {}x{}x{} input, {} classes, {} param tensors",
+        model.name,
+        model.in_channels,
+        model.image_hw,
+        model.image_hw,
+        model.num_classes,
+        model.params.len()
     );
 
-    // 2. Compile it on the PJRT CPU client (the "virtual GPU").
-    let client = RuntimeClient::cpu()?;
-    let step = client.load_step(spec)?;
-
-    // 3. Initialize parameters per the manifest (both replicas of a
-    //    2-GPU job would call this with the same seed).
+    // 2. Initialize parameters per the derived manifest (both replicas
+    //    of a 2-GPU job would call this with the same seed).
     let mut store = ParamStore::init(&model.params, 42);
     println!(
         "initialized {} tensors, {} parameters",
@@ -35,45 +35,25 @@ fn main() -> theano_mgpu::Result<()> {
         store.total_elements()
     );
 
-    // 4. A synthetic minibatch (real training uses data::ParallelLoader).
-    let b = spec.batch_size;
+    // 3. A synthetic minibatch (real training uses data::ParallelLoader).
+    let b = 8usize;
     let hw = model.image_hw;
     let mut rng = Pcg32::seeded(7);
-    let mut images = HostTensor::zeros(Shape::of(&[b, model.in_channels, hw, hw]));
-    rng.fill_normal(images.as_mut_slice(), 1.0);
+    let images = HostTensor::rand_normal(Shape::of(&[b, model.in_channels, hw, hw]), &mut rng, 1.0);
     let labels: Vec<i32> = (0..b).map(|_| rng.below(model.num_classes as u32) as i32).collect();
 
-    // 5. Run three steps and watch the loss move.
+    // 4. Run three SGD-momentum steps and watch the loss move.
     for it in 0..3 {
-        let mut inputs = vec![
-            tensor_to_literal(&images)?,
-            i32_to_literal(&labels)?,
-            f32_scalar(0.05),
-            i32_scalar(it),
-        ];
-        for p in &store.params {
-            inputs.push(tensor_to_literal(p)?);
-        }
-        for m in &store.momenta {
-            inputs.push(tensor_to_literal(m)?);
-        }
-        let outs = step.run(&inputs)?;
-        let loss = literal_f32(&outs[0])?;
-        let correct = literal_i32(&outs[1])?;
-        println!("step {it}: loss {loss:.4}, {correct}/{b} correct");
-        let n = store.n_tensors();
-        let new_p = outs[2..2 + n]
-            .iter()
-            .zip(&store.specs)
-            .map(|(l, s)| literal_to_tensor(l, s.shape.clone()).unwrap())
-            .collect();
-        let new_m = outs[2 + n..]
-            .iter()
-            .zip(&store.specs)
-            .map(|(l, s)| literal_to_tensor(l, s.shape.clone()).unwrap())
-            .collect();
-        store.update_from(new_p, new_m)?;
+        let out = backend.train_step(&images, &labels, 0.05, it, &mut store)?;
+        println!("step {it}: loss {:.4}, {}/{b} correct", out.loss, out.correct1);
     }
+
+    // 5. An eval forward pass (dropout off, top-1/top-5 counts).
+    let e = backend.eval_batch(&images, &labels, &store)?;
+    println!(
+        "eval on the same batch: loss {:.4}, top-1 {}/{b}, top-5 {}/{b}",
+        e.loss, e.top1, e.top5
+    );
     println!("quickstart OK");
     Ok(())
 }

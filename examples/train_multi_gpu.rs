@@ -20,7 +20,8 @@ use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
 fn base_cfg(steps: usize, data_dir: PathBuf) -> TrainConfig {
     let mut cfg = TrainConfig::default();
     cfg.model = "alexnet-tiny".into();
-    cfg.backend = "refconv".into();
+    // Native CPU backend: runs everywhere, no AOT artifacts needed.
+    cfg.backend = "native".into();
     cfg.steps = steps;
     cfg.log_every = 20;
     cfg.seed = 17;

@@ -3,7 +3,7 @@
 //! The paper exchanges every step; this ablation shows the tradeoff it
 //! bought: larger k amortizes the exchange cost (simulated at AlexNet
 //! scale) but lets the replicas drift (measured, real micro-model
-//! training when artifacts are present).
+//! training on the native CPU backend).
 
 include!("harness.rs");
 
@@ -34,8 +34,8 @@ fn main() {
         );
     }
 
-    // --- Real replica drift on the micro model ---
-    if artifacts_present() {
+    // --- Real replica drift on the micro model (native backend) ---
+    {
         let dir = std::env::temp_dir().join("tmg_bench_ablation");
         if !dir.join("meta.json").exists() {
             let spec = SynthSpec { classes: 10, hw: 36, seed: 11, ..Default::default() };
@@ -44,7 +44,7 @@ fn main() {
         for period in [1usize, 2, 4] {
             let mut cfg = TrainConfig::default();
             cfg.model = "alexnet-micro".into();
-            cfg.backend = "refconv".into();
+            cfg.backend = "native".into();
             cfg.batch_per_worker = 8;
             // 9 steps: not a multiple of any period > 1, so the final
             // state shows genuine inter-exchange drift.
@@ -73,8 +73,6 @@ fn main() {
                 "",
             );
         }
-    } else {
-        println!("  (artifacts missing; skipping real-drift half)");
     }
 
     // --- Transport ablation at fixed period (simulated AlexNet) ---

@@ -1,0 +1,63 @@
+// Native-backend step cost — the start of the CPU perf trajectory.
+//
+// Times the pure-Rust train step (im2col + blocked SGEMM forward /
+// backward + SGD momentum) on synthetic batches and emits
+// `target/bench_results/BENCH_native_step.json` with steps/sec and
+// images/sec for alexnet-micro (plus an alexnet-tiny reading in the
+// table/CSV), so future optimizations have a baseline to beat.
+
+include!("harness.rs");
+
+use theano_mgpu::backend::{NativeBackend, StepBackend};
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::sim::flops::{alexnet_micro, alexnet_tiny, ArchDesc};
+use theano_mgpu::tensor::{HostTensor, Shape};
+use theano_mgpu::util::Pcg32;
+
+fn step_median(b: &mut Bench, arch: &ArchDesc, batch: usize, warmup: usize, runs: usize) -> f64 {
+    let mut backend = NativeBackend::new(arch, 0.5);
+    let model = backend.model().clone();
+    let mut store = ParamStore::init(&model.params, 1);
+    let mut rng = Pcg32::seeded(9);
+    let hw = model.image_hw;
+    let images =
+        HostTensor::rand_normal(Shape::of(&[batch, model.in_channels, hw, hw]), &mut rng, 1.0);
+    let labels: Vec<i32> =
+        (0..batch).map(|_| rng.below(model.num_classes as u32) as i32).collect();
+    let mut step = 0i32;
+    b.case(&format!("{} b{batch} train step", arch.name), warmup, runs, || {
+        backend.train_step(&images, &labels, 0.01, step, &mut store).unwrap();
+        step += 1;
+    })
+}
+
+fn main() {
+    let mut b = Bench::new("native_step");
+
+    let micro = alexnet_micro();
+    let micro_batch = 8usize;
+    let med = step_median(&mut b, &micro, micro_batch, 3, 10);
+    let steps_per_sec = 1.0 / med;
+    let images_per_sec = micro_batch as f64 / med;
+    b.record("alexnet-micro b8 steps/sec", steps_per_sec, "steps/s");
+    b.record("alexnet-micro b8 images/sec", images_per_sec, "img/s");
+
+    let tiny = alexnet_tiny();
+    let tiny_med = step_median(&mut b, &tiny, 16, 1, 3);
+    b.record("alexnet-tiny b16 images/sec", 16.0 / tiny_med, "img/s");
+
+    b.write_csv();
+
+    // Machine-readable perf record (consumed by CI / trend tracking).
+    let dir = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("BENCH_native_step.json");
+    let json = format!(
+        "{{\"bench\": \"native_step\", \"model\": \"{}\", \"batch\": {micro_batch}, \
+         \"median_step_seconds\": {med:.6}, \"steps_per_sec\": {steps_per_sec:.3}, \
+         \"images_per_sec\": {images_per_sec:.3}}}\n",
+        micro.name
+    );
+    let _ = std::fs::write(&path, json);
+    println!("  -> {}", path.display());
+}

@@ -1,0 +1,235 @@
+//! Step backends: *what* computes a train/eval step, behind one trait.
+//!
+//! The coordinator (worker threads, trainer, evaluator) is
+//! backend-agnostic: it drives a [`StepBackend`] that maps
+//! `(batch, lr, seed, params+momenta) → (loss, top-1, updated state)`.
+//! Two implementations exist:
+//!
+//! - [`native::NativeBackend`] — real AlexNet forward/backward in pure
+//!   Rust (im2col + blocked SGEMM, ReLU, max-pool, FC + dropout,
+//!   softmax cross-entropy, SGD momentum).  Runs anywhere, no
+//!   artifacts; the reproduction's reference path.
+//! - [`xla::XlaBackend`] — the AOT-compiled HLO path through PJRT
+//!   (`make artifacts`), the original device-speed substrate.
+//!
+//! [`build_backend`] resolves a config to a backend:
+//! `backend = "native"` selects the CPU path directly; any other value
+//! names an artifact backend tag (`refconv`, `cudnn_r2`, …) and loads
+//! the XLA path, **falling back to native** with a warning when the
+//! artifacts or PJRT bindings are unavailable — `tmg train` always
+//! trains.
+
+pub mod native;
+pub mod xla;
+
+pub use self::native::NativeBackend;
+pub use self::xla::XlaBackend;
+
+use crate::config::TrainConfig;
+use crate::error::Result;
+use crate::params::ParamStore;
+use crate::runtime::ModelSpec;
+use crate::sim::flops::arch_by_name;
+use crate::tensor::HostTensor;
+
+/// Scalar results of one training step (state updates go through the
+/// `ParamStore` the step mutated).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainStepOut {
+    pub loss: f32,
+    pub correct1: i32,
+}
+
+/// Scalar results of one evaluation forward pass.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalBatchOut {
+    pub loss: f32,
+    pub top1: i32,
+    pub top5: i32,
+}
+
+/// One replica's compute substrate.
+///
+/// Implementations own their scratch state (workspaces, compiled
+/// executables) but **not** the parameters: those live in the caller's
+/// [`ParamStore`] so the collective exchange, checkpointing and
+/// divergence checks see every backend identically.
+pub trait StepBackend: Send {
+    /// Short backend label for logs.
+    fn name(&self) -> &str;
+
+    /// The model this backend computes (shapes, classes, param
+    /// manifest — what `ParamStore::init` needs).
+    fn model(&self) -> &ModelSpec;
+
+    /// One SGD-momentum training step: forward, backward, update
+    /// `store` in place.
+    fn train_step(
+        &mut self,
+        images: &HostTensor,
+        labels: &[i32],
+        lr: f32,
+        step_seed: i32,
+        store: &mut ParamStore,
+    ) -> Result<TrainStepOut>;
+
+    /// Whether [`StepBackend::eval_batch`] is available (the XLA path
+    /// needs a separate eval artifact).
+    fn supports_eval(&self) -> bool;
+
+    /// Fixed evaluation batch size, if this backend compiled one in.
+    fn eval_batch_size(&self) -> Option<usize> {
+        None
+    }
+
+    /// Evaluation forward pass: mean loss + top-1/top-5 correct counts.
+    fn eval_batch(
+        &mut self,
+        images: &HostTensor,
+        labels: &[i32],
+        store: &ParamStore,
+    ) -> Result<EvalBatchOut>;
+}
+
+/// Which substrate a config's `backend` string selects.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// The pure-Rust CPU path.
+    Native,
+    /// The AOT-artifact path, with the artifact backend tag.
+    Xla(String),
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> BackendChoice {
+        match s {
+            "native" | "cpu" => BackendChoice::Native,
+            // Bare "xla" means "whatever reference artifacts exist".
+            "xla" => BackendChoice::Xla("refconv".into()),
+            tag => BackendChoice::Xla(tag.to_string()),
+        }
+    }
+}
+
+/// Build the backend a config asks for (see module docs for the
+/// native-fallback rule).
+pub fn build_backend(cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
+    match BackendChoice::parse(&cfg.backend) {
+        BackendChoice::Native => Ok(Box::new(NativeBackend::from_config(cfg)?)),
+        BackendChoice::Xla(tag) => match XlaBackend::load(cfg, &tag) {
+            Ok(b) => Ok(Box::new(b)),
+            Err(e) => match arch_by_name(&cfg.model) {
+                Some(arch) => {
+                    log::warn!(
+                        "XLA backend {tag:?} unavailable ({e}); \
+                         falling back to the native CPU backend"
+                    );
+                    Ok(Box::new(NativeBackend::new(&arch, cfg.dropout)))
+                }
+                None => Err(e),
+            },
+        },
+    }
+}
+
+/// Build a backend for checkpoint evaluation only: the XLA path loads
+/// just the eval artifact (no train executable is required or
+/// compiled), with the same native fallback rule as [`build_backend`].
+pub fn build_eval_backend(cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
+    match BackendChoice::parse(&cfg.backend) {
+        BackendChoice::Native => Ok(Box::new(NativeBackend::from_config(cfg)?)),
+        BackendChoice::Xla(_) => match XlaBackend::load_eval(cfg) {
+            Ok(b) => Ok(Box::new(b)),
+            Err(e) => match arch_by_name(&cfg.model) {
+                Some(arch) => {
+                    log::warn!(
+                        "XLA eval unavailable ({e}); evaluating on the native CPU backend"
+                    );
+                    Ok(Box::new(NativeBackend::new(&arch, cfg.dropout)))
+                }
+                None => Err(e),
+            },
+        },
+    }
+}
+
+/// Resolve just the model description a config trains — without
+/// building executables or workspaces.  Same fallback rule as
+/// [`build_backend`]: *any* failure to resolve the model through the
+/// manifest (missing file, model not listed) falls back to the
+/// architecture table when it knows the name.
+pub fn resolve_model(cfg: &TrainConfig) -> Result<ModelSpec> {
+    match BackendChoice::parse(&cfg.backend) {
+        BackendChoice::Native => native_model(cfg),
+        BackendChoice::Xla(_) => {
+            let from_manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)
+                .ok()
+                .and_then(|m| m.model(&cfg.model).ok().cloned());
+            match from_manifest {
+                Some(m) => Ok(m),
+                None => native_model(cfg),
+            }
+        }
+    }
+}
+
+fn native_model(cfg: &TrainConfig) -> Result<ModelSpec> {
+    let arch = arch_by_name(&cfg.model).ok_or_else(|| {
+        crate::error::Error::msg(format!("model {:?} is not a known architecture", cfg.model))
+    })?;
+    Ok(native::model::model_spec_of(&arch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parsing() {
+        assert_eq!(BackendChoice::parse("native"), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("cpu"), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("xla"), BackendChoice::Xla("refconv".into()));
+        assert_eq!(BackendChoice::parse("cudnn_r2"), BackendChoice::Xla("cudnn_r2".into()));
+    }
+
+    #[test]
+    fn build_falls_back_to_native_without_artifacts() {
+        // Default config names an artifact backend but points at a
+        // nonexistent artifacts dir — the factory must hand back the
+        // native path rather than a dead end.
+        let mut cfg = TrainConfig::default();
+        cfg.backend = "refconv".into();
+        cfg.artifacts_dir = std::path::PathBuf::from("/nonexistent/artifacts");
+        let b = build_backend(&cfg).unwrap();
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.model().num_classes, 100); // alexnet-tiny default
+        // The eval-only factory applies the same rule.
+        let e = build_eval_backend(&cfg).unwrap();
+        assert_eq!(e.name(), "native");
+        assert!(e.supports_eval());
+    }
+
+    #[test]
+    fn unknown_model_still_errors() {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = "refconv".into();
+        cfg.model = "resnet".into();
+        cfg.artifacts_dir = std::path::PathBuf::from("/nonexistent/artifacts");
+        assert!(build_backend(&cfg).is_err());
+        cfg.backend = "native".into();
+        assert!(build_backend(&cfg).is_err());
+    }
+
+    #[test]
+    fn resolve_model_matches_backend() {
+        let mut cfg = TrainConfig::default();
+        cfg.backend = "native".into();
+        cfg.model = "alexnet-micro".into();
+        let m = resolve_model(&cfg).unwrap();
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.image_hw, 32);
+        // Underscore spelling resolves to the same arch.
+        cfg.model = "alexnet_micro".into();
+        assert_eq!(resolve_model(&cfg).unwrap().total_param_elements(), m.total_param_elements());
+    }
+}

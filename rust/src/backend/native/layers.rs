@@ -1,0 +1,518 @@
+//! The layer zoo: im2col convolution, ReLU, max-pool, fully-connected,
+//! inverted dropout and softmax cross-entropy — forward *and* backward,
+//! in pure Rust over flat `f32` slices.
+//!
+//! Conventions shared by every kernel:
+//!
+//! - activations are batch-major NCHW (`[batch, channels, h, w]`) or
+//!   `[batch, features]`, row-major, matching [`HostTensor`]'s layout
+//!   (so the last conv output doubles as the first FC input with no
+//!   reshape);
+//! - weight gradients **accumulate** (the caller zeroes once per step),
+//!   input gradients are overwritten;
+//! - the im2col staging buffer is caller-owned and reused across
+//!   examples and steps (zero steady-state allocations, same discipline
+//!   as the exchange path).
+//!
+//! [`HostTensor`]: crate::tensor::HostTensor
+
+use crate::backend::native::gemm::{matmul_nn, matmul_nt, matmul_tn};
+use crate::util::Pcg32;
+
+/// Geometry of one conv layer (weights `[cout, cin, k, k]`).
+#[derive(Clone, Copy, Debug)]
+pub struct Conv2dShape {
+    pub batch: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub in_hw: usize,
+    pub out_hw: usize,
+}
+
+impl Conv2dShape {
+    /// Elements of one example's input plane stack.
+    pub fn in_elems(&self) -> usize {
+        self.cin * self.in_hw * self.in_hw
+    }
+
+    /// Elements of one example's output plane stack.
+    pub fn out_elems(&self) -> usize {
+        self.cout * self.out_hw * self.out_hw
+    }
+
+    /// Elements of the per-example im2col buffer `[cin·k², out_hw²]`.
+    pub fn col_elems(&self) -> usize {
+        self.cin * self.k * self.k * self.out_hw * self.out_hw
+    }
+}
+
+/// Geometry of one max-pool layer.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolShape {
+    pub batch: usize,
+    pub channels: usize,
+    pub in_hw: usize,
+    pub window: usize,
+    pub stride: usize,
+    pub out_hw: usize,
+}
+
+/// Geometry of one fully-connected layer (weights `[dout, din]`).
+#[derive(Clone, Copy, Debug)]
+pub struct FcShape {
+    pub batch: usize,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// Unfold one example `[cin, in_hw, in_hw]` into columns
+/// `[cin·k², out_hw²]`; out-of-image taps (padding) become zeros.
+pub fn im2col(x: &[f32], s: &Conv2dShape, col: &mut [f32]) {
+    let ohw = s.out_hw * s.out_hw;
+    debug_assert_eq!(x.len(), s.in_elems());
+    debug_assert_eq!(col.len(), s.cin * s.k * s.k * ohw);
+    for c in 0..s.cin {
+        let plane = &x[c * s.in_hw * s.in_hw..(c + 1) * s.in_hw * s.in_hw];
+        for ky in 0..s.k {
+            for kx in 0..s.k {
+                let row = ((c * s.k + ky) * s.k + kx) * ohw;
+                for oy in 0..s.out_hw {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    let dst = row + oy * s.out_hw;
+                    if iy < 0 || iy >= s.in_hw as isize {
+                        col[dst..dst + s.out_hw].fill(0.0);
+                        continue;
+                    }
+                    let src = iy as usize * s.in_hw;
+                    for ox in 0..s.out_hw {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        col[dst + ox] = if ix < 0 || ix >= s.in_hw as isize {
+                            0.0
+                        } else {
+                            plane[src + ix as usize]
+                        };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fold columns back onto an example's input planes, **accumulating**
+/// (the adjoint of [`im2col`]; padding taps are dropped).
+pub fn col2im(col: &[f32], s: &Conv2dShape, dx: &mut [f32]) {
+    let ohw = s.out_hw * s.out_hw;
+    debug_assert_eq!(dx.len(), s.in_elems());
+    for c in 0..s.cin {
+        let plane = &mut dx[c * s.in_hw * s.in_hw..(c + 1) * s.in_hw * s.in_hw];
+        for ky in 0..s.k {
+            for kx in 0..s.k {
+                let row = ((c * s.k + ky) * s.k + kx) * ohw;
+                for oy in 0..s.out_hw {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if iy < 0 || iy >= s.in_hw as isize {
+                        continue;
+                    }
+                    let src = row + oy * s.out_hw;
+                    let dst = iy as usize * s.in_hw;
+                    for ox in 0..s.out_hw {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        if ix >= 0 && ix < s.in_hw as isize {
+                            plane[dst + ix as usize] += col[src + ox];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Batched conv forward: `y = W · im2col(x) + b` per example.
+pub fn conv2d_forward(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    col: &mut [f32],
+    s: &Conv2dShape,
+) {
+    let (in_n, out_n, ohw) = (s.in_elems(), s.out_elems(), s.out_hw * s.out_hw);
+    let ck2 = s.cin * s.k * s.k;
+    debug_assert_eq!(w.len(), s.cout * ck2);
+    for bi in 0..s.batch {
+        let xe = &x[bi * in_n..(bi + 1) * in_n];
+        let ye = &mut y[bi * out_n..(bi + 1) * out_n];
+        im2col(xe, s, col);
+        ye.fill(0.0);
+        matmul_nn(s.cout, ck2, ohw, w, col, ye);
+        for (co, yrow) in ye.chunks_exact_mut(ohw).enumerate() {
+            let bias = b[co];
+            for v in yrow {
+                *v += bias;
+            }
+        }
+    }
+}
+
+/// Batched conv backward.  `dw`/`db` accumulate, `dx` is overwritten.
+/// The im2col columns are recomputed from `x` rather than cached from
+/// the forward pass — O(col) extra compute instead of O(batch·col)
+/// extra memory.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+    col: &mut [f32],
+    dcol: &mut [f32],
+    s: &Conv2dShape,
+) {
+    let (in_n, out_n, ohw) = (s.in_elems(), s.out_elems(), s.out_hw * s.out_hw);
+    let ck2 = s.cin * s.k * s.k;
+    for bi in 0..s.batch {
+        let xe = &x[bi * in_n..(bi + 1) * in_n];
+        let dye = &dy[bi * out_n..(bi + 1) * out_n];
+        let dxe = &mut dx[bi * in_n..(bi + 1) * in_n];
+        im2col(xe, s, col);
+        for (co, dyrow) in dye.chunks_exact(ohw).enumerate() {
+            db[co] += dyrow.iter().sum::<f32>();
+        }
+        // dW += dY · colᵀ
+        matmul_nt(s.cout, ohw, ck2, dye, col, dw);
+        // dcol = Wᵀ · dY, then fold back onto the input planes.
+        dcol.fill(0.0);
+        matmul_tn(ck2, s.cout, ohw, w, dye, dcol);
+        dxe.fill(0.0);
+        col2im(dcol, s, dxe);
+    }
+}
+
+/// In-place ReLU.
+pub fn relu_forward(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Gate a gradient through ReLU: `da *= (a > 0)`, where `a` is the
+/// *post*-activation value (equivalent to the pre-activation test).
+pub fn relu_backward(a: &[f32], da: &mut [f32]) {
+    for (g, &v) in da.iter_mut().zip(a) {
+        if v <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Batched max-pool forward; `argmax` records each output's winning
+/// in-plane index for the backward scatter.
+pub fn maxpool_forward(x: &[f32], y: &mut [f32], argmax: &mut [u32], s: &PoolShape) {
+    let in_plane = s.in_hw * s.in_hw;
+    let out_plane = s.out_hw * s.out_hw;
+    debug_assert_eq!(y.len(), s.batch * s.channels * out_plane);
+    debug_assert_eq!(argmax.len(), y.len());
+    for bc in 0..s.batch * s.channels {
+        let plane = &x[bc * in_plane..(bc + 1) * in_plane];
+        let yp = &mut y[bc * out_plane..(bc + 1) * out_plane];
+        let ap = &mut argmax[bc * out_plane..(bc + 1) * out_plane];
+        for oy in 0..s.out_hw {
+            for ox in 0..s.out_hw {
+                let (y0, x0) = (oy * s.stride, ox * s.stride);
+                let mut best = f32::NEG_INFINITY;
+                let mut best_idx = 0usize;
+                for wy in 0..s.window {
+                    for wx in 0..s.window {
+                        let idx = (y0 + wy) * s.in_hw + (x0 + wx);
+                        if plane[idx] > best {
+                            best = plane[idx];
+                            best_idx = idx;
+                        }
+                    }
+                }
+                yp[oy * s.out_hw + ox] = best;
+                ap[oy * s.out_hw + ox] = best_idx as u32;
+            }
+        }
+    }
+}
+
+/// Max-pool backward: route each output gradient to its argmax tap.
+/// `dx` is overwritten.
+pub fn maxpool_backward(dy: &[f32], argmax: &[u32], dx: &mut [f32], s: &PoolShape) {
+    let in_plane = s.in_hw * s.in_hw;
+    let out_plane = s.out_hw * s.out_hw;
+    dx.fill(0.0);
+    for bc in 0..s.batch * s.channels {
+        let dyp = &dy[bc * out_plane..(bc + 1) * out_plane];
+        let ap = &argmax[bc * out_plane..(bc + 1) * out_plane];
+        let dxp = &mut dx[bc * in_plane..(bc + 1) * in_plane];
+        for (&g, &idx) in dyp.iter().zip(ap) {
+            dxp[idx as usize] += g;
+        }
+    }
+}
+
+/// Fully-connected forward: `y[b] = W · x[b] + b` (weights `[dout, din]`).
+pub fn fc_forward(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], s: &FcShape) {
+    debug_assert_eq!(x.len(), s.batch * s.din);
+    debug_assert_eq!(y.len(), s.batch * s.dout);
+    y.fill(0.0);
+    matmul_nt(s.batch, s.din, s.dout, x, w, y);
+    for yrow in y.chunks_exact_mut(s.dout) {
+        for (v, bv) in yrow.iter_mut().zip(b) {
+            *v += bv;
+        }
+    }
+}
+
+/// Fully-connected backward.  `dw`/`db` accumulate, `dx` is overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn fc_backward(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+    s: &FcShape,
+) {
+    // dW += dYᵀ · X
+    matmul_tn(s.dout, s.batch, s.din, dy, x, dw);
+    for dyrow in dy.chunks_exact(s.dout) {
+        for (g, &v) in db.iter_mut().zip(dyrow) {
+            *g += v;
+        }
+    }
+    // dX = dY · W
+    dx.fill(0.0);
+    matmul_nn(s.batch, s.dout, s.din, dy, w, dx);
+}
+
+/// Inverted dropout: zero with probability `p`, scale survivors by
+/// `1/(1-p)` so eval needs no correction.  The per-element scale is
+/// recorded in `mask` for the backward pass.
+pub fn dropout_forward(a: &mut [f32], mask: &mut [f32], p: f32, rng: &mut Pcg32) {
+    debug_assert!((0.0..1.0).contains(&p));
+    if p <= 0.0 {
+        mask.fill(1.0);
+        return;
+    }
+    let keep_scale = 1.0 / (1.0 - p);
+    for (v, m) in a.iter_mut().zip(mask.iter_mut()) {
+        if rng.next_f32() < p {
+            *v = 0.0;
+            *m = 0.0;
+        } else {
+            *v *= keep_scale;
+            *m = keep_scale;
+        }
+    }
+}
+
+/// Dropout backward: replay the recorded scales.
+pub fn dropout_backward(da: &mut [f32], mask: &[f32]) {
+    for (g, &m) in da.iter_mut().zip(mask) {
+        *g *= m;
+    }
+}
+
+/// Softmax + mean cross-entropy over a batch of logits.
+///
+/// Writes the per-row softmax into `probs` and the loss gradient
+/// `(softmax - onehot)/batch` into `dlogits`; returns the mean loss and
+/// the top-1 correct count.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    probs: &mut [f32],
+    dlogits: &mut [f32],
+    s: &FcShape,
+) -> (f32, i32) {
+    let classes = s.dout;
+    debug_assert_eq!(logits.len(), s.batch * classes);
+    debug_assert_eq!(labels.len(), s.batch);
+    let inv_batch = 1.0 / s.batch as f32;
+    let mut loss = 0.0f64;
+    let mut correct1 = 0i32;
+    for (bi, &label) in labels.iter().enumerate() {
+        let row = &logits[bi * classes..(bi + 1) * classes];
+        let prow = &mut probs[bi * classes..(bi + 1) * classes];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0f32;
+        for (p, &v) in prow.iter_mut().zip(row) {
+            *p = (v - max).exp();
+            sum += *p;
+        }
+        let inv_sum = 1.0 / sum;
+        for p in prow.iter_mut() {
+            *p *= inv_sum;
+        }
+        let li = label as usize;
+        loss -= (prow[li].max(1e-12) as f64).ln();
+        if crate::util::math::argmax(row) == li {
+            correct1 += 1;
+        }
+        let drow = &mut dlogits[bi * classes..(bi + 1) * classes];
+        for (d, &p) in drow.iter_mut().zip(prow.iter()) {
+            *d = p * inv_batch;
+        }
+        drow[li] -= inv_batch;
+    }
+    ((loss as f32) * inv_batch, correct1)
+}
+
+/// Is `label` within the top-`k` entries of `row` (ties resolved
+/// generously, matching the usual top-k error convention)?
+pub fn topk_correct(row: &[f32], label: usize, k: usize) -> bool {
+    let v = row[label];
+    row.iter().filter(|&&x| x > v).count() < k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: columns are the input itself.
+        let s = Conv2dShape {
+            batch: 1,
+            cin: 2,
+            cout: 1,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            in_hw: 3,
+            out_hw: 3,
+        };
+        let x: Vec<f32> = (0..18).map(|v| v as f32).collect();
+        let mut col = vec![0.0; s.col_elems()];
+        im2col(&x, &s, &mut col);
+        assert_eq!(col, x);
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), c> == <x, col2im(c)> for random x, c — the
+        // defining property of an adjoint pair.
+        let s = Conv2dShape {
+            batch: 1,
+            cin: 2,
+            cout: 1,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            in_hw: 5,
+            out_hw: 3,
+        };
+        let mut rng = crate::util::Pcg32::seeded(4);
+        let mut x = vec![0.0; s.in_elems()];
+        let mut c = vec![0.0; s.col_elems()];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut c, 1.0);
+        let mut col = vec![0.0; s.col_elems()];
+        im2col(&x, &s, &mut col);
+        let lhs: f64 = col.iter().zip(&c).map(|(a, b)| (a * b) as f64).sum();
+        let mut folded = vec![0.0; s.in_elems()];
+        col2im(&c, &s, &mut folded);
+        let rhs: f64 = x.iter().zip(&folded).map(|(a, b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn relu_and_mask() {
+        let mut x = vec![-1.0, 0.0, 2.0];
+        relu_forward(&mut x);
+        assert_eq!(x, vec![0.0, 0.0, 2.0]);
+        let mut da = vec![5.0, 5.0, 5.0];
+        relu_backward(&x, &mut da);
+        assert_eq!(da, vec![0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn maxpool_tracks_argmax() {
+        let s = PoolShape { batch: 1, channels: 1, in_hw: 4, window: 2, stride: 2, out_hw: 2 };
+        #[rustfmt::skip]
+        let x = vec![
+            1.0, 2.0, 0.0, 0.0,
+            3.0, 4.0, 0.0, 9.0,
+            0.0, 0.0, 1.0, 1.0,
+            7.0, 0.0, 1.0, 1.0,
+        ];
+        let mut y = vec![0.0; 4];
+        let mut am = vec![0u32; 4];
+        maxpool_forward(&x, &mut y, &mut am, &s);
+        assert_eq!(y, vec![4.0, 9.0, 7.0, 1.0]);
+        let mut dx = vec![0.0; 16];
+        maxpool_backward(&[1.0, 1.0, 1.0, 1.0], &am, &mut dx, &s);
+        assert_eq!(dx[5], 1.0); // the 4.0
+        assert_eq!(dx[7], 1.0); // the 9.0
+        assert_eq!(dx[12], 1.0); // the 7.0
+        assert_eq!(dx.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn fc_forward_small() {
+        let s = FcShape { batch: 2, din: 3, dout: 2 };
+        let x = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // [2, 3]
+        let b = vec![0.5, -0.5];
+        let mut y = vec![0.0; 4];
+        fc_forward(&x, &w, &b, &mut y, &s);
+        assert_eq!(y, vec![1.5, 3.5, 2.5, 4.5]);
+    }
+
+    #[test]
+    fn dropout_expectation_and_mask_replay() {
+        let mut rng = crate::util::Pcg32::seeded(8);
+        let n = 20_000;
+        let mut a = vec![1.0f32; n];
+        let mut mask = vec![0.0f32; n];
+        dropout_forward(&mut a, &mut mask, 0.5, &mut rng);
+        let mean = a.iter().sum::<f32>() / n as f32;
+        // Inverted dropout preserves the expectation.
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+        let mut da = vec![1.0f32; n];
+        dropout_backward(&mut da, &mask);
+        assert_eq!(da, a);
+        // p = 0 is the identity and an all-ones mask.
+        let mut b = vec![2.0f32; 4];
+        let mut m2 = vec![0.0f32; 4];
+        dropout_forward(&mut b, &mut m2, 0.0, &mut rng);
+        assert_eq!(b, vec![2.0; 4]);
+        assert_eq!(m2, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn softmax_uniform_logits() {
+        let s = FcShape { batch: 2, din: 0, dout: 4 };
+        let logits = vec![0.0; 8];
+        let labels = vec![1, 3];
+        let mut probs = vec![0.0; 8];
+        let mut dl = vec![0.0; 8];
+        let (loss, c1) = softmax_xent(&logits, &labels, &mut probs, &mut dl, &s);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5);
+        assert!(probs.iter().all(|&p| (p - 0.25).abs() < 1e-6));
+        // argmax of a uniform row is index 0 => only a label-0 row counts.
+        assert_eq!(c1, 0);
+        // Gradient rows sum to zero.
+        assert!(dl[..4].iter().sum::<f32>().abs() < 1e-6);
+    }
+
+    #[test]
+    fn topk_membership() {
+        let row = vec![0.1, 0.9, 0.5, 0.3];
+        assert!(topk_correct(&row, 1, 1));
+        assert!(!topk_correct(&row, 3, 1));
+        assert!(topk_correct(&row, 3, 3));
+        assert!(topk_correct(&row, 0, 4));
+    }
+}

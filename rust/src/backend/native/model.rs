@@ -1,0 +1,286 @@
+//! From [`ArchDesc`] to an executable layer plan + parameter manifest.
+//!
+//! [`NetPlan::from_arch`] walks the architecture description with
+//! *exactly* the arithmetic of `ArchDesc::{forward_macs,
+//! param_elements}` (sim/flops.rs), so the analytic model, the native
+//! compute path and the [`ModelSpec`] parameter manifest can never
+//! drift apart — a cross-check test pins all three together for every
+//! arch in the family.
+//!
+//! Parameters are emitted in network order (`conv1.w, conv1.b, …,
+//! fc1.w, …, out.w, out.b`) with He-normal init recipes
+//! (`std = sqrt(2/fan_in)`), expressed through the same
+//! [`ParamManifestSpec`] records the AOT manifest uses, so
+//! [`ParamStore`](crate::params::ParamStore), checkpoints and the
+//! collective exchange all operate on native parameters unchanged.
+
+use crate::backend::native::layers::{Conv2dShape, FcShape, PoolShape};
+use crate::runtime::artifact::{ModelSpec, ParamManifestSpec};
+use crate::sim::flops::ArchDesc;
+use crate::tensor::Shape;
+
+/// One node-to-node operation of the compiled plan.  ReLU (and, for
+/// hidden FC layers, dropout) is fused into the producing op; `param`
+/// is the index of the op's weight tensor in the store (bias follows).
+#[derive(Clone, Copy, Debug)]
+pub enum PlanOp {
+    /// Convolution + ReLU.
+    ConvRelu { shape: Conv2dShape, param: usize },
+    /// Max-pool; `arg` indexes the workspace argmax buffer.
+    Pool { shape: PoolShape, arg: usize },
+    /// Hidden fully-connected + ReLU + dropout; `mask` indexes the
+    /// workspace dropout-mask buffer.
+    FcRelu { shape: FcShape, param: usize, mask: usize },
+    /// Final fully-connected layer producing logits.
+    FcOut { shape: FcShape, param: usize },
+}
+
+/// The executable form of an [`ArchDesc`].
+#[derive(Clone, Debug)]
+pub struct NetPlan {
+    pub name: String,
+    pub image_hw: usize,
+    pub in_channels: usize,
+    pub classes: usize,
+    /// Ops in execution order; op `i` maps activation node `i` to `i+1`.
+    pub ops: Vec<PlanOp>,
+    /// Per-example element count of each activation node (`ops.len()+1`
+    /// entries; node 0 is the input image).
+    pub node_elems: Vec<usize>,
+    pub n_pools: usize,
+    pub n_masks: usize,
+    /// Largest per-example im2col buffer any conv layer needs.
+    pub col_elems: usize,
+    pub params: Vec<ParamManifestSpec>,
+}
+
+fn weight(name: String, dims: &[usize], fan_in: usize) -> ParamManifestSpec {
+    ParamManifestSpec {
+        name,
+        shape: Shape::of(dims),
+        init: "normal".into(),
+        std: (2.0 / fan_in as f32).sqrt(),
+        bias_value: 0.0,
+    }
+}
+
+fn bias(name: String, dim: usize) -> ParamManifestSpec {
+    ParamManifestSpec {
+        name,
+        shape: Shape::of(&[dim]),
+        init: "zeros".into(),
+        std: 0.0,
+        bias_value: 0.0,
+    }
+}
+
+impl NetPlan {
+    /// Compile an architecture description into a layer plan.  Shapes
+    /// carry `batch: 1`; the workspace scales them at run time.
+    pub fn from_arch(arch: &ArchDesc) -> NetPlan {
+        let mut ops = Vec::new();
+        let mut params = Vec::new();
+        let mut node_elems = vec![arch.in_channels * arch.image_hw * arch.image_hw];
+        let mut cin = arch.in_channels;
+        let mut hw = arch.image_hw;
+        let mut n_pools = 0;
+        let mut col_elems = 0;
+        for (l, c) in arch.convs.iter().enumerate() {
+            let conv_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
+            let param = params.len();
+            params.push(weight(
+                format!("conv{}.w", l + 1),
+                &[c.cout, cin, c.kernel, c.kernel],
+                cin * c.kernel * c.kernel,
+            ));
+            params.push(bias(format!("conv{}.b", l + 1), c.cout));
+            let shape = Conv2dShape {
+                batch: 1,
+                cin,
+                cout: c.cout,
+                k: c.kernel,
+                stride: c.stride,
+                pad: c.pad,
+                in_hw: hw,
+                out_hw: conv_hw,
+            };
+            col_elems = col_elems.max(shape.col_elems());
+            ops.push(PlanOp::ConvRelu { shape, param });
+            node_elems.push(c.cout * conv_hw * conv_hw);
+            hw = conv_hw;
+            if c.pool {
+                let pooled = (hw - arch.pool_window) / arch.pool_stride + 1;
+                ops.push(PlanOp::Pool {
+                    shape: PoolShape {
+                        batch: 1,
+                        channels: c.cout,
+                        in_hw: hw,
+                        window: arch.pool_window,
+                        stride: arch.pool_stride,
+                        out_hw: pooled,
+                    },
+                    arg: n_pools,
+                });
+                node_elems.push(c.cout * pooled * pooled);
+                n_pools += 1;
+                hw = pooled;
+            }
+            cin = c.cout;
+        }
+        let mut feat = cin * hw * hw;
+        let mut n_masks = 0;
+        for (j, &d) in arch.fc_dims.iter().enumerate() {
+            let param = params.len();
+            params.push(weight(format!("fc{}.w", j + 1), &[d, feat], feat));
+            params.push(bias(format!("fc{}.b", j + 1), d));
+            ops.push(PlanOp::FcRelu {
+                shape: FcShape { batch: 1, din: feat, dout: d },
+                param,
+                mask: n_masks,
+            });
+            node_elems.push(d);
+            n_masks += 1;
+            feat = d;
+        }
+        let param = params.len();
+        params.push(weight("out.w".into(), &[arch.num_classes, feat], feat));
+        params.push(bias("out.b".into(), arch.num_classes));
+        ops.push(PlanOp::FcOut {
+            shape: FcShape { batch: 1, din: feat, dout: arch.num_classes },
+            param,
+        });
+        node_elems.push(arch.num_classes);
+
+        NetPlan {
+            name: arch.name.to_string(),
+            image_hw: arch.image_hw,
+            in_channels: arch.in_channels,
+            classes: arch.num_classes,
+            ops,
+            node_elems,
+            n_pools,
+            n_masks,
+            col_elems,
+            params,
+        }
+    }
+
+    /// The manifest-compatible model description of this plan.
+    pub fn model_spec(&self) -> ModelSpec {
+        ModelSpec {
+            name: self.name.clone(),
+            image_hw: self.image_hw,
+            in_channels: self.in_channels,
+            num_classes: self.classes,
+            params: self.params.clone(),
+        }
+    }
+}
+
+/// Derive the manifest-compatible [`ModelSpec`] of an architecture —
+/// what the XLA path reads from `manifest.json`, computed instead.
+pub fn model_spec_of(arch: &ArchDesc) -> ModelSpec {
+    NetPlan::from_arch(arch).model_spec()
+}
+
+/// Reusable per-step buffers: activations + gradients per node, pool
+/// argmaxes, dropout masks, im2col staging and parameter gradients.
+/// Sized once per batch size; zero allocations afterwards.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub batch: usize,
+    pub acts: Vec<Vec<f32>>,
+    pub dacts: Vec<Vec<f32>>,
+    pub pool_arg: Vec<Vec<u32>>,
+    pub masks: Vec<Vec<f32>>,
+    pub probs: Vec<f32>,
+    pub col: Vec<f32>,
+    pub dcol: Vec<f32>,
+    pub grads: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// (Re)allocate for `batch` examples of `plan`; no-op when already
+    /// sized.
+    pub fn ensure(&mut self, plan: &NetPlan, batch: usize) {
+        if self.batch == batch && self.acts.len() == plan.node_elems.len() {
+            return;
+        }
+        self.batch = batch;
+        self.acts = plan.node_elems.iter().map(|&n| vec![0.0; batch * n]).collect();
+        self.dacts = plan.node_elems.iter().map(|&n| vec![0.0; batch * n]).collect();
+        self.pool_arg = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::Pool { shape, .. } => {
+                    Some(vec![0u32; batch * shape.channels * shape.out_hw * shape.out_hw])
+                }
+                _ => None,
+            })
+            .collect();
+        self.masks = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::FcRelu { shape, .. } => Some(vec![0.0f32; batch * shape.dout]),
+                _ => None,
+            })
+            .collect();
+        self.probs = vec![0.0; batch * plan.classes];
+        self.col = vec![0.0; plan.col_elems];
+        self.dcol = vec![0.0; plan.col_elems];
+        self.grads = plan.params.iter().map(|p| vec![0.0; p.shape.numel()]).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::flops::{alexnet, alexnet_micro, alexnet_tiny};
+
+    #[test]
+    fn plan_mirrors_flops_param_count() {
+        for arch in [alexnet_micro(), alexnet_tiny(), alexnet()] {
+            let plan = NetPlan::from_arch(&arch);
+            let total: usize = plan.params.iter().map(|p| p.shape.numel()).sum();
+            assert_eq!(total as u64, arch.param_elements(), "{}", arch.name);
+            assert_eq!(plan.model_spec().total_param_elements(), total);
+        }
+    }
+
+    #[test]
+    fn micro_plan_geometry() {
+        let plan = NetPlan::from_arch(&alexnet_micro());
+        // conv1 -> pool -> conv2 -> fc1 -> out
+        assert_eq!(plan.ops.len(), 5);
+        assert_eq!(plan.node_elems[0], 3 * 32 * 32);
+        assert_eq!(plan.node_elems[1], 8 * 16 * 16); // conv1: (32+4-5)/2+1
+        assert_eq!(plan.node_elems[2], 8 * 7 * 7); // pool: (16-3)/2+1
+        assert_eq!(plan.node_elems[3], 16 * 7 * 7); // conv2, pad 1
+        assert_eq!(plan.node_elems[4], 64);
+        assert_eq!(plan.node_elems[5], 10);
+        assert_eq!(plan.n_pools, 1);
+        assert_eq!(plan.n_masks, 1);
+        assert_eq!(plan.params.len(), 8);
+        assert_eq!(plan.params[0].name, "conv1.w");
+        assert_eq!(plan.params[7].name, "out.b");
+    }
+
+    #[test]
+    fn workspace_sizes_follow_plan() {
+        let plan = NetPlan::from_arch(&alexnet_micro());
+        let mut ws = Workspace::default();
+        ws.ensure(&plan, 4);
+        assert_eq!(ws.acts.len(), plan.node_elems.len());
+        assert_eq!(ws.acts[0].len(), 4 * 3 * 32 * 32);
+        assert_eq!(ws.pool_arg.len(), 1);
+        assert_eq!(ws.masks.len(), 1);
+        assert_eq!(ws.grads.len(), 8);
+        let before = ws.acts[0].as_ptr();
+        ws.ensure(&plan, 4); // no-op: buffers are stable
+        assert_eq!(before, ws.acts[0].as_ptr());
+        ws.ensure(&plan, 2);
+        assert_eq!(ws.acts[0].len(), 2 * 3 * 32 * 32);
+    }
+}

@@ -1,0 +1,139 @@
+//! The AOT-artifact step backend: compiled HLO driven through PJRT.
+//!
+//! This wraps the original training path — `make artifacts` lowers the
+//! JAX model to HLO text once, and each worker compiles + executes it
+//! via [`RuntimeClient`] — behind the [`StepBackend`] trait, so the
+//! coordinator no longer knows which substrate computes a step.
+
+use crate::backend::{EvalBatchOut, StepBackend, TrainStepOut};
+use crate::config::TrainConfig;
+use crate::error::{Error, Result};
+use crate::params::ParamStore;
+use crate::runtime::literal_bridge::{
+    f32_scalar, i32_scalar, i32_to_literal, literal_f32, literal_i32, literal_to_tensor,
+    tensor_to_literal,
+};
+use crate::runtime::{Manifest, ModelSpec, RuntimeClient, StepExecutable};
+use crate::tensor::HostTensor;
+
+/// Compiled train and/or eval executables for one model.
+pub struct XlaBackend {
+    model: ModelSpec,
+    /// Absent when loaded eval-only (see [`XlaBackend::load_eval`]).
+    step: Option<StepExecutable>,
+    eval: Option<StepExecutable>,
+}
+
+impl XlaBackend {
+    /// Load + compile the manifest artifacts a training job needs
+    /// (train required, eval optional).  `tag` is the artifact backend
+    /// label (e.g. `refconv`, `cudnn_r2`).
+    pub fn load(cfg: &TrainConfig, tag: &str) -> Result<XlaBackend> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let model = manifest.model(&cfg.model)?.clone();
+        let name = format!("train_{}_{}_b{}", cfg.model, tag, cfg.batch_per_worker);
+        let client = RuntimeClient::cpu()?;
+        let step = Some(client.load_step(manifest.artifact(&name)?)?);
+        let eval = match manifest.eval_artifact_for(&cfg.model) {
+            Some(spec) => Some(client.load_step(spec)?),
+            None => None,
+        };
+        Ok(XlaBackend { model, step, eval })
+    }
+
+    /// Load + compile only the eval artifact — checkpoint evaluation
+    /// must not require (or pay for compiling) the train executable.
+    pub fn load_eval(cfg: &TrainConfig) -> Result<XlaBackend> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let model = manifest.model(&cfg.model)?.clone();
+        let spec = manifest.eval_artifact_for(&cfg.model).ok_or_else(|| {
+            Error::msg(format!("no eval artifact for model {:?}", cfg.model))
+        })?;
+        let client = RuntimeClient::cpu()?;
+        let eval = Some(client.load_step(spec)?);
+        Ok(XlaBackend { model, step: None, eval })
+    }
+}
+
+impl StepBackend for XlaBackend {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn model(&self) -> &ModelSpec {
+        &self.model
+    }
+
+    fn train_step(
+        &mut self,
+        images: &HostTensor,
+        labels: &[i32],
+        lr: f32,
+        step_seed: i32,
+        store: &mut ParamStore,
+    ) -> Result<TrainStepOut> {
+        let exe = self.step.as_ref().ok_or_else(|| {
+            Error::msg(format!(
+                "XLA backend for {:?} was loaded eval-only; no train executable",
+                self.model.name
+            ))
+        })?;
+        let n_params = store.n_tensors();
+        // The ABI input list: images, labels, lr, seed, params, momenta.
+        let mut inputs = Vec::with_capacity(4 + 2 * n_params);
+        inputs.push(tensor_to_literal(images)?);
+        inputs.push(i32_to_literal(labels)?);
+        inputs.push(f32_scalar(lr));
+        inputs.push(i32_scalar(step_seed));
+        for p in &store.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        for m in &store.momenta {
+            inputs.push(tensor_to_literal(m)?);
+        }
+        let outputs = exe.run(&inputs)?;
+        let loss = literal_f32(&outputs[0])?;
+        let correct1 = literal_i32(&outputs[1])?;
+        let mut new_params = Vec::with_capacity(n_params);
+        let mut new_momenta = Vec::with_capacity(n_params);
+        for (i, lit) in outputs[2..2 + n_params].iter().enumerate() {
+            new_params.push(literal_to_tensor(lit, store.specs[i].shape.clone())?);
+        }
+        for (i, lit) in outputs[2 + n_params..].iter().enumerate() {
+            new_momenta.push(literal_to_tensor(lit, store.specs[i].shape.clone())?);
+        }
+        store.update_from(new_params, new_momenta)?;
+        Ok(TrainStepOut { loss, correct1 })
+    }
+
+    fn supports_eval(&self) -> bool {
+        self.eval.is_some()
+    }
+
+    fn eval_batch_size(&self) -> Option<usize> {
+        self.eval.as_ref().map(|e| e.spec.batch_size)
+    }
+
+    fn eval_batch(
+        &mut self,
+        images: &HostTensor,
+        labels: &[i32],
+        store: &ParamStore,
+    ) -> Result<EvalBatchOut> {
+        let exe = self.eval.as_ref().ok_or_else(|| {
+            Error::msg(format!("no eval artifact for model {:?}", self.model.name))
+        })?;
+        let mut inputs = Vec::with_capacity(2 + store.n_tensors());
+        inputs.push(tensor_to_literal(images)?);
+        inputs.push(i32_to_literal(labels)?);
+        for p in &store.params {
+            inputs.push(tensor_to_literal(p)?);
+        }
+        let outs = exe.run(&inputs)?;
+        Ok(EvalBatchOut {
+            loss: literal_f32(&outs[0])?,
+            top1: literal_i32(&outs[1])?,
+            top5: literal_i32(&outs[2])?,
+        })
+    }
+}

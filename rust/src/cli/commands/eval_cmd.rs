@@ -1,4 +1,8 @@
 //! `tmg eval` — evaluate a checkpoint on the validation split.
+//!
+//! Runs through whichever step backend the config (or `--backend`)
+//! selects; with the native backend no config file is needed:
+//! `tmg eval --checkpoint c.ckpt --model alexnet-micro --data-dir d`.
 
 use std::path::Path;
 
@@ -7,26 +11,32 @@ use crate::config::TrainConfig;
 use crate::coordinator::eval::evaluate;
 use crate::error::{Error, Result};
 use crate::params::{load_checkpoint, ParamStore};
-use crate::runtime::{Manifest, RuntimeClient};
 
 pub fn run(argv: &[String]) -> Result<i32> {
     let a = ArgMap::parse(argv)?;
-    let cfg = TrainConfig::load(Path::new(a.required("config")?))?;
+    let mut cfg = match a.get("config") {
+        Some(p) => TrainConfig::load(Path::new(p))?,
+        None => TrainConfig::default(),
+    };
+    // One override surface shared with `tmg train` (train-only flags
+    // are simply absent here).
+    super::train_cmd::apply_overrides(&mut cfg, &a)?;
+    super::train_cmd::sync_dataset_meta(&mut cfg)?;
     let ckpt = Path::new(a.required("checkpoint")?);
 
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let model = manifest.model(&cfg.model)?;
-    let spec = manifest
-        .eval_artifact_for(&cfg.model)
-        .ok_or_else(|| Error::msg(format!("no eval artifact for model {:?}", cfg.model)))?;
-
+    let mut backend = crate::backend::build_eval_backend(&cfg)?;
+    if !backend.supports_eval() {
+        return Err(Error::msg(format!(
+            "backend {:?} has no eval path for model {:?} (no eval artifact?)",
+            backend.name(),
+            cfg.model
+        )));
+    }
+    let model = backend.model().clone();
     let mut store = ParamStore::init(&model.params, cfg.seed);
     let step = load_checkpoint(ckpt, &mut store)?;
 
-    let client = RuntimeClient::cpu()?;
-    let exe = client.load_step(spec)?;
-    let crop = model.image_hw;
-    let result = evaluate(&cfg, &exe, &store, crop, a.usize_or("max-batches", 0)?)?;
+    let result = evaluate(&cfg, backend.as_mut(), &store, a.usize_or("max-batches", 0)?)?;
     println!(
         "checkpoint @step {step}: top-1 error {:.2}%  top-5 error {:.2}%  loss {:.4}  ({} examples)",
         100.0 * result.top1_error(),

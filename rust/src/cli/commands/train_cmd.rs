@@ -1,4 +1,9 @@
 //! `tmg train` — run a training job.
+//!
+//! A TOML config is optional: with `--backend native` (the default)
+//! every knob has a workable default, so
+//! `tmg train --model alexnet-micro --steps 40` trains out of the box
+//! (the synthetic dataset is generated on first use).
 
 use std::path::{Path, PathBuf};
 
@@ -37,8 +42,26 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
         }
         cfg.cluster.switch_of_worker = switches;
     }
+    if let Some(v) = a.get("model") {
+        cfg.model = v.to_string();
+    }
     if let Some(v) = a.get("backend") {
         cfg.backend = v.to_string();
+    }
+    if let Some(v) = a.get("data-dir") {
+        cfg.data.dir = PathBuf::from(v);
+    }
+    if let Some(v) = a.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(PathBuf::from(v));
+    }
+    if let Some(v) = a.get("lr") {
+        cfg.schedule.base_lr = v.parse().map_err(|_| crate::Error::msg("--lr wants a float"))?;
+    }
+    if let Some(v) = a.get("dropout") {
+        cfg.dropout = v.parse().map_err(|_| crate::Error::msg("--dropout wants a float"))?;
+    }
+    if let Some(v) = a.get("seed") {
+        cfg.seed = v.parse().map_err(|_| crate::Error::msg("--seed wants int"))?;
     }
     if let Some(v) = a.get("loader") {
         cfg.loader_mode = LoaderMode::parse(v)?;
@@ -59,18 +82,33 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
     cfg.validate()
 }
 
+/// Reconcile the config's dataset sizes with what is actually on disk
+/// (meta.json is authoritative once the corpus exists).
+pub fn sync_dataset_meta(cfg: &mut TrainConfig) -> Result<()> {
+    let meta_path = cfg.data.dir.join("meta.json");
+    if let Ok(src) = std::fs::read_to_string(&meta_path) {
+        let meta = crate::data::synth::DatasetMeta::from_json(&src)?;
+        cfg.data.train_examples = meta.train_examples;
+        cfg.data.val_examples = meta.val_examples;
+        cfg.data.stored_hw = meta.hw;
+    }
+    Ok(())
+}
+
 pub fn run(argv: &[String]) -> Result<i32> {
     let a = ArgMap::parse(argv)?;
-    let mut cfg = TrainConfig::load(Path::new(a.required("config")?))?;
+    let mut cfg = match a.get("config") {
+        Some(p) => TrainConfig::load(Path::new(p))?,
+        None => TrainConfig::default(),
+    };
     apply_overrides(&mut cfg, &a)?;
 
     // Auto-generate the dataset if missing (classes follow the model).
     if !cfg.data.dir.join("meta.json").exists() {
         log::info!("dataset missing; generating into {:?}", cfg.data.dir);
-        let manifest = crate::runtime::Manifest::load(&cfg.artifacts_dir)?;
-        let classes = manifest.model(&cfg.model)?.num_classes;
+        let model = crate::backend::resolve_model(&cfg)?;
         let spec = crate::data::synth::SynthSpec {
-            classes,
+            classes: model.num_classes,
             channels: 3,
             hw: cfg.data.stored_hw,
             noise: 24.0,
@@ -84,6 +122,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
             cfg.data.shard_examples,
         )?;
     }
+    sync_dataset_meta(&mut cfg)?;
 
     let summary = train(&cfg)?;
     println!(
@@ -162,5 +201,26 @@ mod tests {
         assert!(err.is_err(), "length mismatch must fail validation");
         let mut cfg = TrainConfig::default();
         assert!(apply_overrides(&mut cfg, &args("--switches 0,zebra")).is_err());
+    }
+
+    #[test]
+    fn model_backend_and_path_overrides() {
+        let mut cfg = TrainConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &args(
+                "--model alexnet-micro --backend native --data-dir /tmp/d \
+                 --checkpoint-dir /tmp/c --lr 0.05 --dropout 0.0 --seed 9",
+            ),
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "alexnet-micro");
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.data.dir, PathBuf::from("/tmp/d"));
+        assert_eq!(cfg.checkpoint_dir, Some(PathBuf::from("/tmp/c")));
+        assert!((cfg.schedule.base_lr - 0.05).abs() < 1e-6);
+        assert_eq!(cfg.dropout, 0.0);
+        assert_eq!(cfg.seed, 9);
+        assert!(apply_overrides(&mut cfg, &args("--dropout 2.0")).is_err());
     }
 }

@@ -54,14 +54,23 @@ tmg — Theano-multi-GPU reproduction (rust + jax + pallas)
 USAGE:
   tmg gen-data  --dir DIR [--classes N] [--train N] [--val N]
                 [--shard N] [--hw N] [--seed N]
-  tmg train     --config FILE [--steps N] [--workers N] [--switches 0,0,1]
-                [--backend B] [--loader parallel|serial] [--transport K]
-                [--period N] [--csv FILE]
-  tmg eval      --config FILE --checkpoint FILE
+  tmg train     [--config FILE] [--model M] [--backend native|xla|TAG]
+                [--steps N] [--batch N] [--workers N] [--switches 0,0,1]
+                [--loader parallel|serial] [--transport K] [--period N]
+                [--lr F] [--dropout F] [--seed N] [--data-dir DIR]
+                [--checkpoint-dir DIR] [--csv FILE]
+  tmg eval      --checkpoint FILE [--config FILE] [--model M]
+                [--backend B] [--data-dir DIR] [--batch N]
+                [--max-batches N]
   tmg calibrate [--artifacts DIR] [--runs N]
   tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]
   tmg inspect   [--artifacts DIR]
   tmg help
+
+The default backend is `native`: a pure-Rust CPU implementation of the
+full AlexNet train/eval step — no AOT artifacts required.  Artifact
+backend tags (e.g. `refconv`) run through the XLA runtime instead and
+fall back to native when the artifacts are unavailable.
 ";
 
 /// Entry point used by main.rs; returns the process exit code.

@@ -148,7 +148,13 @@ pub struct TrainConfig {
     pub name: String,
     pub artifacts_dir: PathBuf,
     pub model: String,
+    /// Step substrate: `"native"` (pure-Rust CPU path, the default) or
+    /// an artifact backend tag (`refconv`, `cudnn_r2`, …) loaded
+    /// through the XLA runtime — see `backend::build_backend`.
     pub backend: String,
+    /// Dropout probability on hidden FC layers (native backend only;
+    /// the XLA artifacts bake their own rate in).
+    pub dropout: f32,
     pub batch_per_worker: usize,
     pub steps: usize,
     pub eval_every: usize,
@@ -169,7 +175,8 @@ impl Default for TrainConfig {
             name: "default".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             model: "alexnet-tiny".into(),
-            backend: "refconv".into(),
+            backend: "native".into(),
+            dropout: 0.5,
             batch_per_worker: 16,
             steps: 200,
             eval_every: 0,
@@ -231,6 +238,7 @@ impl TrainConfig {
             artifacts_dir: PathBuf::from(doc.str_or("", "artifacts_dir", "artifacts")),
             model: doc.str_or("model", "name", &d.model),
             backend: doc.str_or("model", "backend", &d.backend),
+            dropout: doc.f64_or("training", "dropout", d.dropout as f64) as f32,
             batch_per_worker: doc.i64_or("training", "batch_per_worker", 16) as usize,
             steps: doc.i64_or("training", "steps", d.steps as i64) as usize,
             eval_every: doc.i64_or("training", "eval_every", 0) as usize,
@@ -281,6 +289,9 @@ impl TrainConfig {
         }
         if self.exchange.period == 0 {
             return Err(Error::Config("exchange.period must be >= 1".into()));
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(Error::Config("training.dropout must be in [0, 1)".into()));
         }
         if self.data.shard_examples == 0 {
             return Err(Error::Config("data.shard_examples must be > 0".into()));
@@ -343,6 +354,16 @@ switch_of_worker = [0, 1]
         assert_eq!(cfg.exchange.period, 2);
         assert_eq!(cfg.cluster.switch_of_worker, vec![0, 1]);
         assert_eq!(cfg.train_artifact_name(), "train_alexnet-micro_cudnn_r2_b8");
+    }
+
+    #[test]
+    fn dropout_parsed_and_validated() {
+        let doc = TomlDoc::parse("[training]\ndropout = 0.25").unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert!((cfg.dropout - 0.25).abs() < 1e-6);
+        assert_eq!(TrainConfig::default().dropout, 0.5);
+        let doc = TomlDoc::parse("[training]\ndropout = 1.5").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
     }
 
     #[test]

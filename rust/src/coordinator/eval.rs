@@ -1,16 +1,14 @@
 //! Validation evaluation: center-crop, no flip, top-1/top-5 counts.
 //!
 //! Mirrors the paper's §3 measurement ("top-1 class validation error
-//! rate is 42.6%, top-5 is 19.9%") on the substituted corpus.
+//! rate is 42.6%, top-5 is 19.9%") on the substituted corpus, through
+//! whichever [`StepBackend`] the config selects.
 
+use crate::backend::StepBackend;
 use crate::config::TrainConfig;
 use crate::data::loader::{BatchSource, LoaderCfg, SerialLoader};
 use crate::error::Result;
 use crate::params::ParamStore;
-use crate::runtime::literal_bridge::{
-    i32_to_literal, literal_f32, literal_i32, tensor_to_literal,
-};
-use crate::runtime::StepExecutable;
 
 /// Aggregate eval result.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -31,18 +29,20 @@ impl EvalResult {
     }
 }
 
-/// Run the eval executable over (a prefix of) the validation split.
+/// Run the backend's eval forward over (a prefix of) the validation
+/// split.
 ///
 /// `max_batches = 0` means the full split (floor to whole batches —
-/// the fixed-batch compiled function cannot take a ragged tail).
+/// a fixed-batch compiled step cannot take a ragged tail, and the
+/// native path keeps the same convention).
 pub fn evaluate(
     cfg: &TrainConfig,
-    eval_exe: &StepExecutable,
+    backend: &mut dyn StepBackend,
     store: &ParamStore,
-    crop_hw: usize,
     max_batches: usize,
 ) -> Result<EvalResult> {
-    let batch = eval_exe.spec.batch_size;
+    let batch = backend.eval_batch_size().unwrap_or(cfg.batch_per_worker).max(1);
+    let crop_hw = backend.model().image_hw;
     let lcfg = LoaderCfg {
         data_dir: &cfg.data.dir,
         split: "val",
@@ -66,16 +66,10 @@ pub fn evaluate(
     let mut loss_sum = 0f64;
     for _ in 0..n_batches {
         let b = loader.next_batch()?;
-        let mut inputs = Vec::with_capacity(2 + store.n_tensors());
-        inputs.push(tensor_to_literal(&b.images)?);
-        inputs.push(i32_to_literal(&b.labels)?);
-        for p in &store.params {
-            inputs.push(tensor_to_literal(p)?);
-        }
-        let outs = eval_exe.run(&inputs)?;
-        loss_sum += literal_f32(&outs[0])? as f64;
-        out.top1_correct += literal_i32(&outs[1])? as usize;
-        out.top5_correct += literal_i32(&outs[2])? as usize;
+        let r = backend.eval_batch(&b.images, &b.labels, store)?;
+        loss_sum += r.loss as f64;
+        out.top1_correct += r.top1 as usize;
+        out.top5_correct += r.top5 as usize;
         out.examples += b.labels.len();
     }
     out.mean_loss = if n_batches > 0 { (loss_sum / n_batches as f64) as f32 } else { 0.0 };

@@ -18,7 +18,6 @@ use crate::data::loader::LoaderStats;
 use crate::error::{Error, Result};
 use crate::interconnect::topology::PcieTopology;
 use crate::metrics::{CsvWriter, ThroughputMeter};
-use crate::runtime::{Manifest, RuntimeClient};
 use crate::util::Timer;
 
 /// One closed 20-iteration window (Table 1's unit).
@@ -246,16 +245,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         log::info!("checkpoint written to {path:?}");
     }
 
-    // Final evaluation on the validation split, if an eval artifact exists.
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let eval = match manifest.eval_artifact_for(&cfg.model) {
-        Some(spec) if cfg.data.val_examples >= spec.batch_size => {
-            let client = RuntimeClient::cpu()?;
-            let exe = client.load_step(spec)?;
-            let model = manifest.model(&cfg.model)?;
-            Some(evaluate(cfg, &exe, &outcomes[0].store, model.image_hw, 0)?)
-        }
-        _ => None,
+    // Final evaluation on the validation split, if the backend can
+    // evaluate (native always can; XLA needs an eval artifact — only
+    // that artifact is loaded here, not the train executable).
+    let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
+    let eval_batch = eval_backend.eval_batch_size().unwrap_or(cfg.batch_per_worker).max(1);
+    let eval = if eval_backend.supports_eval() && cfg.data.val_examples >= eval_batch {
+        Some(evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?)
+    } else {
+        None
     };
 
     Ok(TrainSummary {

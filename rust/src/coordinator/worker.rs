@@ -1,5 +1,11 @@
 //! One replica ("virtual GPU") worker: local steps plus its handle on
 //! the group collective (any N, see `comm::collective`).
+//!
+//! The worker is backend-agnostic: every step goes through the
+//! [`StepBackend`](crate::backend::StepBackend) the config selects
+//! (native pure-Rust CPU math or AOT-XLA artifacts), and the collective
+//! exchange, checkpointing and divergence invariants all operate on the
+//! resulting `ParamStore` identically.
 
 use std::path::PathBuf;
 use std::sync::mpsc::Sender;
@@ -9,11 +15,6 @@ use crate::config::{LoaderMode, TrainConfig};
 use crate::data::loader::{BatchSource, LoaderCfg, LoaderStats, ParallelLoader, SerialLoader};
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
-use crate::runtime::literal_bridge::{
-    f32_scalar, i32_scalar, i32_to_literal, literal_f32, literal_i32, literal_to_tensor,
-    tensor_to_literal,
-};
-use crate::runtime::{Manifest, RuntimeClient};
 use crate::util::Timer;
 
 /// Per-step record streamed to the trainer for logging.
@@ -45,7 +46,7 @@ pub struct WorkerOutcome {
 }
 
 /// Everything a worker thread needs (built on the spawning side; all
-/// XLA state is created *inside* the thread).
+/// backend state is created *inside* the thread).
 pub struct WorkerSpec {
     /// This worker's handle on the group collective (no-op for N = 1,
     /// pairwise port for N = 2, ring node beyond — see `comm::collective`).
@@ -81,12 +82,10 @@ fn build_loader(cfg: &TrainConfig, worker: usize, crop_hw: usize) -> Result<Box<
 pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
     let WorkerSpec { mut fabric, worker, cfg, reports, restore } = spec;
 
-    // --- Setup (the paper's per-GPU Theano process initialization) ---
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let model = manifest.model(&cfg.model)?.clone_spec();
-    let artifact = manifest.artifact(&cfg.train_artifact_name())?;
-    let client = RuntimeClient::cpu()?;
-    let step_exe = client.load_step(artifact)?;
+    // --- Setup (the paper's per-GPU Theano process initialization):
+    // --- each replica owns its backend, parameters and loader. ---
+    let mut backend = crate::backend::build_backend(&cfg)?;
+    let model = backend.model().clone();
 
     let mut store = ParamStore::init(&model.params, cfg.seed);
     let mut start_step = 0usize;
@@ -95,7 +94,7 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
     }
 
     // Guard the label space: a corpus with more classes than the model
-    // produces out-of-range gathers (NaN losses) inside the compiled step.
+    // produces out-of-range gathers (NaN losses) inside the step.
     let meta_path = cfg.data.dir.join("meta.json");
     if let Ok(src) = std::fs::read_to_string(&meta_path) {
         let meta = crate::data::synth::DatasetMeta::from_json(&src)?;
@@ -109,7 +108,6 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
 
     let mut loader = build_loader(&cfg, worker, model.image_hw)?;
 
-    let n_params = store.n_tensors();
     let include_momentum = cfg.exchange.include_momentum;
     let mut compute_seconds = 0.0;
     let mut exchange_seconds = 0.0;
@@ -119,41 +117,18 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         let step_timer = Timer::start();
         let batch = loader.next_batch()?;
         let lr = cfg.schedule.lr_at(step);
-
-        // Assemble the ABI input list: images, labels, lr, seed, params, momenta.
-        let mut inputs = Vec::with_capacity(4 + 2 * n_params);
-        inputs.push(tensor_to_literal(&batch.images)?);
-        inputs.push(i32_to_literal(&batch.labels)?);
-        inputs.push(f32_scalar(lr));
-        inputs.push(i32_scalar((cfg.seed as i32) ^ (step as i32) ^ ((worker as i32) << 20)));
-        for p in &store.params {
-            inputs.push(tensor_to_literal(p)?);
-        }
-        for m in &store.momenta {
-            inputs.push(tensor_to_literal(m)?);
-        }
+        let step_seed = (cfg.seed as i32) ^ (step as i32) ^ ((worker as i32) << 20);
 
         let t_compute = Timer::start();
-        let outputs = step_exe.run(&inputs)?;
-        let dt_compute = t_compute.elapsed_secs();
-        compute_seconds += dt_compute;
+        let out = backend.train_step(&batch.images, &batch.labels, lr, step_seed, &mut store)?;
+        compute_seconds += t_compute.elapsed_secs();
 
-        let loss = literal_f32(&outputs[0])?;
-        if !loss.is_finite() {
+        if !out.loss.is_finite() {
             return Err(Error::msg(format!(
-                "worker {worker}: non-finite loss {loss} at step {step} (lr too high?)"
+                "worker {worker}: non-finite loss {} at step {step} (lr too high?)",
+                out.loss
             )));
         }
-        let correct1 = literal_i32(&outputs[1])?;
-        let mut new_params = Vec::with_capacity(n_params);
-        let mut new_momenta = Vec::with_capacity(n_params);
-        for (i, lit) in outputs[2..2 + n_params].iter().enumerate() {
-            new_params.push(literal_to_tensor(lit, store.specs[i].shape.clone())?);
-        }
-        for (i, lit) in outputs[2 + n_params..].iter().enumerate() {
-            new_momenta.push(literal_to_tensor(lit, store.specs[i].shape.clone())?);
-        }
-        store.update_from(new_params, new_momenta)?;
 
         // --- Collective exchange at the configured period (Fig 2 for
         // --- N = 2, ring all-reduce beyond) ---
@@ -168,8 +143,8 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         let _ = reports.send(StepRecord {
             worker,
             step,
-            loss,
-            correct1,
+            loss: out.loss,
+            correct1: out.correct1,
             batch: batch.labels.len(),
             lr,
             step_seconds: step_timer.elapsed_secs(),
@@ -186,22 +161,4 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         exchange_seconds,
         compute_seconds,
     })
-}
-
-// Small helper so worker doesn't hold a borrow of Manifest across the
-// client setup (ModelSpec is cheap to clone).
-trait CloneSpec {
-    fn clone_spec(&self) -> crate::runtime::ModelSpec;
-}
-
-impl CloneSpec for crate::runtime::ModelSpec {
-    fn clone_spec(&self) -> crate::runtime::ModelSpec {
-        crate::runtime::ModelSpec {
-            name: self.name.clone(),
-            image_hw: self.image_hw,
-            in_channels: self.in_channels,
-            num_classes: self.num_classes,
-            params: self.params.clone(),
-        }
-    }
 }

@@ -15,6 +15,9 @@
 //! - [`util`], [`tensor`], [`config`], [`metrics`] — substrates.
 //! - [`data`] — synthetic ImageNet-like corpus, shard files,
 //!   preprocessing and the double-buffered prefetch loader (Fig 1).
+//! - [`backend`] — the [`StepBackend`](backend::StepBackend) trait and
+//!   its two substrates: the pure-Rust native CPU path (im2col +
+//!   blocked SGEMM AlexNet, no artifacts needed) and the AOT-XLA path.
 //! - [`runtime`] — PJRT client/executable wrappers + artifact manifest.
 //! - [`params`] — parameter store, host init, averaging, checkpoints.
 //! - [`comm`] — transports (P2P / host-staged / serialized), the
@@ -27,6 +30,7 @@
 //! - [`cli`] — the `tmg` command line.
 //! - [`testing`] — in-repo property-testing mini-framework.
 
+pub mod backend;
 pub mod cli;
 pub mod comm;
 pub mod config;

@@ -31,7 +31,9 @@ impl RuntimeClient {
     pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
         if !path.exists() {
             return Err(Error::msg(format!(
-                "HLO artifact {path:?} missing — run `make artifacts` first"
+                "HLO artifact {path:?} missing — run `make artifacts`, \
+                 or train with `--backend native` (pure-Rust CPU step, \
+                 no artifacts needed)"
             )));
         }
         let proto = xla::HloModuleProto::from_text_file(
@@ -39,7 +41,12 @@ impl RuntimeClient {
                 .ok_or_else(|| Error::msg(format!("non-utf8 path {path:?}")))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
+        self.client.compile(&comp).map_err(|e| {
+            Error::Xla(format!(
+                "{e}; the XLA path needs linked PJRT bindings — \
+                 `--backend native` runs the pure-Rust CPU step instead"
+            ))
+        })
     }
 
     /// Load + compile one manifest artifact into a step executable.

@@ -84,8 +84,10 @@ pub fn alexnet_micro() -> ArchDesc {
     }
 }
 
+/// Look up an architecture by name.  Underscore and hyphen spellings
+/// are equivalent (`alexnet_micro` == `alexnet-micro`).
 pub fn arch_by_name(name: &str) -> Option<ArchDesc> {
-    match name {
+    match name.replace('_', "-").as_str() {
         "alexnet" => Some(alexnet()),
         "alexnet-tiny" => Some(alexnet_tiny()),
         "alexnet-micro" => Some(alexnet_micro()),
@@ -193,6 +195,7 @@ mod tests {
     #[test]
     fn lookup_by_name() {
         assert!(arch_by_name("alexnet").is_some());
+        assert!(arch_by_name("alexnet_micro").is_some());
         assert!(arch_by_name("resnet").is_none());
     }
 }

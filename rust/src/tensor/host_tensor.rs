@@ -23,6 +23,14 @@ impl HostTensor {
         HostTensor { shape, data: vec![v; n] }
     }
 
+    /// Tensor of N(0, std²) draws — synthetic batches for examples,
+    /// benches and backend tests.
+    pub fn rand_normal(shape: Shape, rng: &mut crate::util::Pcg32, std: f32) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(t.as_mut_slice(), std);
+        t
+    }
+
     /// Wrap an existing buffer (must match the shape's element count).
     pub fn from_vec(shape: Shape, data: Vec<f32>) -> Result<Self> {
         if shape.numel() != data.len() {
@@ -147,6 +155,16 @@ mod tests {
         let t = HostTensor::zeros(Shape::of(&[2, 3]));
         assert_eq!(t.numel(), 6);
         assert!(HostTensor::from_vec(Shape::of(&[2, 2]), vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn rand_normal_moments() {
+        let mut rng = crate::util::Pcg32::seeded(3);
+        let t = HostTensor::rand_normal(Shape::of(&[10_000]), &mut rng, 0.5);
+        let std = crate::util::math::stddev(
+            &t.as_slice().iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        );
+        assert!((std - 0.5).abs() < 0.05, "std {std}");
     }
 
     #[test]

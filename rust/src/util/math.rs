@@ -45,6 +45,23 @@ pub fn stddev(a: &[f64]) -> f64 {
     (a.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (a.len() - 1) as f64).sqrt()
 }
 
+/// Index of the maximum element (first wins ties; 0 on empty).
+pub fn argmax(a: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in a.iter().enumerate() {
+        if v > a[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Relative error between two scalars, floored so near-zero pairs
+/// compare absolutely (the gradient-check metric).
+pub fn rel_err(a: f32, b: f32) -> f32 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
 /// Allclose with both relative and absolute tolerance (numpy-style).
 pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
     a.len() == b.len()
@@ -75,6 +92,19 @@ mod tests {
     fn diff_and_norm() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
         assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_first_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn rel_err_floors_small_magnitudes() {
+        assert!((rel_err(2.0, 1.0) - 0.5).abs() < 1e-6);
+        // Near zero, the denominator floor makes this absolute.
+        assert!(rel_err(1e-6, 0.0) < 1e-5);
     }
 
     #[test]

@@ -1,25 +1,21 @@
-//! Integration: full training jobs through the coordinator.
+//! Integration: full training jobs through the coordinator, on the
+//! native CPU backend — no AOT artifacts required, so every test here
+//! runs real compute on every machine.
 //!
 //! These are the paper's claims at micro scale:
-//! - training converges (loss drops);
-//! - 2-replica exchange keeps the replicas bit-synchronized (Fig 2);
+//! - training converges (loss drops) on the synthetic corpus;
+//! - 2-replica exchange keeps the replicas bit-synchronized (Fig 2),
+//!   now over *real* gradients — including the full-state (params +
+//!   momenta) invariant that was untestable while the step was
+//!   artifact-gated;
 //! - loader modes do not change the result, only the schedule (Fig 1);
 //! - PCIe topology downgrades the transport, not the math (§4.4).
 
 use std::path::{Path, PathBuf};
 
 use theano_mgpu::config::{ClusterConfig, DataConfig, LoaderMode, TrainConfig, TransportKind};
-use theano_mgpu::coordinator::trainer::{effective_transport, train};
+use theano_mgpu::coordinator::trainer::{effective_transport, train, TrainSummary};
 use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
-
-fn artifacts_present() -> bool {
-    if Path::new("artifacts/manifest.json").exists() {
-        true
-    } else {
-        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
-        false
-    }
-}
 
 /// Shared micro dataset for all e2e tests (10 classes = micro model).
 fn dataset(tag: &str) -> PathBuf {
@@ -35,7 +31,10 @@ fn micro_cfg(tag: &str, steps: usize, workers: usize) -> TrainConfig {
     let mut cfg = TrainConfig::default();
     cfg.name = format!("e2e-{tag}");
     cfg.model = "alexnet-micro".into();
-    cfg.backend = "refconv".into();
+    cfg.backend = "native".into();
+    // Dropout off: micro-scale runs are short, and determinism-of-math
+    // assertions are easier to reason about without masking noise.
+    cfg.dropout = 0.0;
     cfg.batch_per_worker = 8;
     cfg.steps = steps;
     cfg.log_every = 0;
@@ -57,45 +56,45 @@ fn micro_cfg(tag: &str, steps: usize, workers: usize) -> TrainConfig {
     cfg
 }
 
+fn tail_mean(s: &TrainSummary, n: usize) -> f32 {
+    let t: Vec<f32> = s.losses.iter().rev().take(n).copied().collect();
+    t.iter().sum::<f32>() / t.len().max(1) as f32
+}
+
 #[test]
 fn single_worker_converges() {
-    if !artifacts_present() {
-        return;
-    }
-    let cfg = micro_cfg("single", 25, 1);
+    let cfg = micro_cfg("single", 60, 1);
     let s = train(&cfg).unwrap();
-    let first = s.losses[0];
-    let last = *s.losses.last().unwrap();
-    assert!(last < 0.7 * first, "loss {first} -> {last}");
     assert_eq!(s.workers, 1);
-    let eval = s.eval.expect("micro has an eval artifact");
+    assert!(s.losses.iter().all(|l| l.is_finite()));
+    let first = s.losses[0];
+    let late = tail_mean(&s, 10);
+    assert!(late < 0.75 * first, "loss {first} -> {late}");
+    let eval = s.eval.expect("native backend always evaluates");
     assert!(eval.examples > 0);
-    assert!(eval.top1_error() < 0.9);
+    assert!(eval.top1_error() < 0.9, "top-1 error {}", eval.top1_error());
+    assert!(eval.top5_error() <= eval.top1_error());
     // No peer to compare against: divergence is None, not 0-or-NaN.
     assert!(s.final_divergence.is_none());
 }
 
 #[test]
 fn two_workers_stay_synchronized_and_converge() {
-    if !artifacts_present() {
-        return;
-    }
-    let cfg = micro_cfg("pair", 20, 2);
+    let cfg = micro_cfg("pair", 30, 2);
     let s = train(&cfg).unwrap();
-    assert_eq!(s.exchange_rounds, 20);
-    // Fig-2 invariant: after symmetric averaging, replicas are identical.
+    assert_eq!(s.exchange_rounds, 30);
+    // Fig-2 invariant over real gradients: period 1 with momenta
+    // included means the summary reports *full-state* divergence
+    // (params + momenta), and symmetric averaging keeps it at zero.
     let divergence = s.final_divergence.expect("2 workers report divergence");
     assert!(divergence < 1e-6, "replicas diverged: {divergence}");
     let first = s.losses[0];
-    let last = *s.losses.last().unwrap();
-    assert!(last < 0.8 * first, "loss {first} -> {last}");
+    let late = tail_mean(&s, 10);
+    assert!(late < 0.9 * first, "loss {first} -> {late}");
 }
 
 #[test]
 fn loader_mode_does_not_change_the_math() {
-    if !artifacts_present() {
-        return;
-    }
     let mut a = micro_cfg("loadermath", 8, 1);
     a.loader_mode = LoaderMode::Parallel;
     let mut b = micro_cfg("loadermath", 8, 1);
@@ -107,9 +106,6 @@ fn loader_mode_does_not_change_the_math() {
 
 #[test]
 fn transports_are_numerically_equivalent() {
-    if !artifacts_present() {
-        return;
-    }
     let mut base = micro_cfg("transport", 6, 2);
     let mut reference: Option<Vec<f32>> = None;
     for kind in [TransportKind::P2p, TransportKind::HostStaged, TransportKind::Serialized] {
@@ -125,9 +121,6 @@ fn transports_are_numerically_equivalent() {
 
 #[test]
 fn cross_switch_pair_falls_back_to_host_staged() {
-    if !artifacts_present() {
-        return;
-    }
     let mut cfg = micro_cfg("switch", 4, 2);
     cfg.cluster = ClusterConfig::pair_cross_switch();
     cfg.exchange.transport = TransportKind::P2p;
@@ -139,9 +132,6 @@ fn cross_switch_pair_falls_back_to_host_staged() {
 
 #[test]
 fn exchange_period_controls_divergence() {
-    if !artifacts_present() {
-        return;
-    }
     // With period > 1 and an off-cycle end, replicas end un-averaged.
     let mut cfg = micro_cfg("period", 5, 2);
     cfg.exchange.period = 2;
@@ -157,10 +147,22 @@ fn exchange_period_controls_divergence() {
 }
 
 #[test]
+fn momentum_exclusion_reports_param_drift_only() {
+    // Momenta stay private when excluded from the exchange, so the
+    // strict full-state invariant does not apply; params still agree
+    // after every-step averaging.
+    let mut cfg = micro_cfg("momexcl", 6, 2);
+    cfg.exchange.include_momentum = false;
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.exchange_rounds, 6);
+    assert!(
+        s.final_divergence.unwrap() < 1e-6,
+        "params must agree after symmetric averaging"
+    );
+}
+
+#[test]
 fn three_worker_ring_trains() {
-    if !artifacts_present() {
-        return;
-    }
     // Odd N exercises the unequal-chunk path of the ring all-reduce.
     let cfg = micro_cfg("ring3", 4, 3);
     let s = train(&cfg).unwrap();
@@ -171,9 +173,6 @@ fn three_worker_ring_trains() {
 
 #[test]
 fn four_worker_ring_trains() {
-    if !artifacts_present() {
-        return;
-    }
     let cfg = micro_cfg("ring4", 6, 4);
     let s = train(&cfg).unwrap();
     assert_eq!(s.workers, 4);
@@ -188,9 +187,6 @@ fn four_worker_ring_trains() {
 
 #[test]
 fn csv_metrics_written() {
-    if !artifacts_present() {
-        return;
-    }
     let mut cfg = micro_cfg("csv", 4, 1);
     let csv = std::env::temp_dir().join(format!("tmg_e2e_metrics_{}.csv", std::process::id()));
     cfg.metrics_csv = Some(csv.clone());
@@ -202,9 +198,6 @@ fn csv_metrics_written() {
 
 #[test]
 fn checkpoint_written_and_evaluable() {
-    if !artifacts_present() {
-        return;
-    }
     let mut cfg = micro_cfg("ckpt", 4, 1);
     let dir = std::env::temp_dir().join(format!("tmg_e2e_ckpt_{}", std::process::id()));
     cfg.checkpoint_dir = Some(dir.clone());
@@ -212,17 +205,26 @@ fn checkpoint_written_and_evaluable() {
     let path = dir.join("e2e-ckpt_step4.ckpt");
     assert!(path.exists());
 
-    // Reload and evaluate through the public API.
-    let manifest = theano_mgpu::runtime::Manifest::load(Path::new("artifacts")).unwrap();
-    let model = manifest.model("alexnet-micro").unwrap();
+    // Reload and evaluate through the public backend API.
+    let mut backend = theano_mgpu::backend::build_backend(&cfg).unwrap();
+    let model = backend.model().clone();
     let mut store = theano_mgpu::params::ParamStore::init(&model.params, 0);
     let step = theano_mgpu::params::load_checkpoint(&path, &mut store).unwrap();
     assert_eq!(step, 4);
-    let client = theano_mgpu::runtime::RuntimeClient::cpu().unwrap();
-    let exe = client
-        .load_step(manifest.eval_artifact_for("alexnet-micro").unwrap())
-        .unwrap();
-    let r = theano_mgpu::coordinator::eval::evaluate(&cfg, &exe, &store, model.image_hw, 2)
-        .unwrap();
+    let r = theano_mgpu::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 2).unwrap();
     assert!(r.examples > 0);
+    assert!(r.mean_loss.is_finite());
+}
+
+#[test]
+fn xla_backend_without_artifacts_falls_back_and_trains() {
+    // The pre-refactor dead end: an artifact backend tag with no
+    // artifacts on disk.  The factory now falls back to native and the
+    // job completes.
+    let mut cfg = micro_cfg("fallback", 3, 1);
+    cfg.backend = "refconv".into();
+    cfg.artifacts_dir = Path::new("/nonexistent/artifacts").to_path_buf();
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.steps, 3);
+    assert!(s.losses.iter().all(|l| l.is_finite()));
 }

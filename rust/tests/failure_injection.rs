@@ -10,15 +10,6 @@ use theano_mgpu::data::shard::ShardedDataset;
 use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
 use theano_mgpu::error::Error;
 
-fn artifacts_present() -> bool {
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        true
-    } else {
-        eprintln!("SKIP: artifacts not built");
-        false
-    }
-}
-
 fn fresh_dataset(tag: &str, classes: usize) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("tmg_fail_{tag}_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
@@ -30,7 +21,7 @@ fn fresh_dataset(tag: &str, classes: usize) -> PathBuf {
 fn cfg_for(dir: PathBuf, steps: usize) -> TrainConfig {
     let mut cfg = TrainConfig::default();
     cfg.model = "alexnet-micro".into();
-    cfg.backend = "refconv".into();
+    cfg.backend = "native".into();
     cfg.batch_per_worker = 8;
     cfg.steps = steps;
     cfg.log_every = 0;
@@ -101,12 +92,9 @@ fn oversized_crop_rejected() {
 
 #[test]
 fn class_count_mismatch_rejected_before_training() {
-    if !artifacts_present() {
-        return;
-    }
     // 50-class corpus against the 10-class micro model: out-of-range
-    // labels would NaN the loss inside the compiled step; the guard
-    // must catch it first.
+    // labels would corrupt the loss inside the step (any backend); the
+    // guard must catch it first.
     let dir = fresh_dataset("classes", 50);
     let cfg = cfg_for(dir, 2);
     let err = train(&cfg).unwrap_err();
@@ -114,16 +102,26 @@ fn class_count_mismatch_rejected_before_training() {
 }
 
 #[test]
-fn missing_artifact_names_alternatives() {
-    if !artifacts_present() {
-        return;
-    }
+fn unavailable_artifact_backend_falls_back_to_native() {
+    // An artifact tag with no artifacts on disk must not dead-end: the
+    // backend factory warns and trains on the native CPU path instead.
     let dir = fresh_dataset("artifact", 10);
     let mut cfg = cfg_for(dir, 2);
     cfg.backend = "warp9000".into();
-    let err = train(&cfg).unwrap_err();
-    let msg = format!("{err}");
-    assert!(msg.contains("not found") && msg.contains("available"), "{msg}");
+    cfg.artifacts_dir = std::path::Path::new("/nonexistent/artifacts").to_path_buf();
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.steps, 2);
+}
+
+#[test]
+fn unknown_model_is_a_clean_error() {
+    // No architecture and no manifest: nothing can compute a step, and
+    // the error says so instead of hanging a worker.
+    let dir = fresh_dataset("nomodel", 10);
+    let mut cfg = cfg_for(dir, 2);
+    cfg.model = "resnet".into();
+    cfg.artifacts_dir = std::path::Path::new("/nonexistent/artifacts").to_path_buf();
+    assert!(train(&cfg).is_err());
 }
 
 #[test]

@@ -1,0 +1,172 @@
+//! Native-backend correctness: finite-difference gradient checks for
+//! the conv / FC / softmax layers, and the three-way parameter-shape
+//! cross-check (analytic `ArchDesc` counts vs the derived `ModelSpec`
+//! manifest vs a materialized `ParamStore`) for the whole AlexNet
+//! family.
+//!
+//! The gradient checks probe every element with central differences
+//! (`eps` scaled to the operand) and require rel-err < 1e-2, the
+//! acceptance bar for f32 kernels.
+
+use theano_mgpu::backend::native::layers::{
+    conv2d_backward, conv2d_forward, fc_backward, fc_forward, softmax_xent, Conv2dShape, FcShape,
+};
+use theano_mgpu::backend::native::model::model_spec_of;
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::sim::flops::{alexnet, alexnet_micro, alexnet_tiny};
+use theano_mgpu::util::math::rel_err;
+use theano_mgpu::util::Pcg32;
+
+const EPS: f32 = 1e-2;
+const TOL: f32 = 1e-2;
+
+fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+/// Check `analytic` against central differences of `loss` taken by
+/// perturbing each element of `x` in place.
+fn check_grad(tag: &str, x: &mut [f32], analytic: &[f32], mut loss: impl FnMut(&[f32]) -> f64) {
+    assert_eq!(x.len(), analytic.len());
+    for i in 0..x.len() {
+        let orig = x[i];
+        x[i] = orig + EPS;
+        let lp = loss(x);
+        x[i] = orig - EPS;
+        let lm = loss(x);
+        x[i] = orig;
+        let numeric = ((lp - lm) / (2.0 * EPS as f64)) as f32;
+        let e = rel_err(analytic[i], numeric);
+        assert!(
+            e < TOL,
+            "{tag}[{i}]: analytic {} vs numeric {numeric} (rel err {e})",
+            analytic[i]
+        );
+    }
+}
+
+#[test]
+fn conv_gradients_match_finite_differences() {
+    let s = Conv2dShape {
+        batch: 2,
+        cin: 2,
+        cout: 3,
+        k: 3,
+        stride: 2,
+        pad: 1,
+        in_hw: 5,
+        out_hw: 3,
+    };
+    let mut rng = Pcg32::seeded(11);
+    let mut x = randn(&mut rng, s.batch * s.in_elems());
+    let mut w = randn(&mut rng, s.cout * s.cin * s.k * s.k);
+    let mut b = randn(&mut rng, s.cout);
+    // Scalar objective L = <y, r> for fixed random r, so dL/dy = r.
+    let r = randn(&mut rng, s.batch * s.out_elems());
+
+    let loss_with = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+        let mut y = vec![0.0; s.batch * s.out_elems()];
+        let mut col = vec![0.0; s.col_elems()];
+        conv2d_forward(x, w, b, &mut y, &mut col, &s);
+        y.iter().zip(&r).map(|(a, c)| (a * c) as f64).sum()
+    };
+
+    let (mut dw, mut db) = (vec![0.0; w.len()], vec![0.0; b.len()]);
+    let mut dx = vec![0.0; x.len()];
+    let (mut col, mut dcol) = (vec![0.0; s.col_elems()], vec![0.0; s.col_elems()]);
+    conv2d_backward(&x, &w, &r, &mut dw, &mut db, &mut dx, &mut col, &mut dcol, &s);
+
+    let (xs, ws, bs) = (x.clone(), w.clone(), b.clone());
+    check_grad("conv dx", &mut x, &dx, |x| loss_with(x, &ws, &bs));
+    check_grad("conv dw", &mut w, &dw, |w| loss_with(&xs, w, &bs));
+    check_grad("conv db", &mut b, &db, |b| loss_with(&xs, &ws, b));
+}
+
+#[test]
+fn fc_gradients_match_finite_differences() {
+    let s = FcShape { batch: 3, din: 5, dout: 4 };
+    let mut rng = Pcg32::seeded(13);
+    let mut x = randn(&mut rng, s.batch * s.din);
+    let mut w = randn(&mut rng, s.dout * s.din);
+    let mut b = randn(&mut rng, s.dout);
+    let r = randn(&mut rng, s.batch * s.dout);
+
+    let loss_with = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+        let mut y = vec![0.0; s.batch * s.dout];
+        fc_forward(x, w, b, &mut y, &s);
+        y.iter().zip(&r).map(|(a, c)| (a * c) as f64).sum()
+    };
+
+    let (mut dw, mut db) = (vec![0.0; w.len()], vec![0.0; b.len()]);
+    let mut dx = vec![0.0; x.len()];
+    fc_backward(&x, &w, &r, &mut dw, &mut db, &mut dx, &s);
+
+    let (xs, ws, bs) = (x.clone(), w.clone(), b.clone());
+    check_grad("fc dx", &mut x, &dx, |x| loss_with(x, &ws, &bs));
+    check_grad("fc dw", &mut w, &dw, |w| loss_with(&xs, w, &bs));
+    check_grad("fc db", &mut b, &db, |b| loss_with(&xs, &ws, b));
+}
+
+#[test]
+fn softmax_xent_gradient_matches_finite_differences() {
+    let s = FcShape { batch: 4, din: 0, dout: 6 };
+    let mut rng = Pcg32::seeded(17);
+    let mut logits = randn(&mut rng, s.batch * s.dout);
+    let labels: Vec<i32> = (0..s.batch).map(|_| rng.below(s.dout as u32) as i32).collect();
+
+    let mut probs = vec![0.0; logits.len()];
+    let mut dlogits = vec![0.0; logits.len()];
+    softmax_xent(&logits, &labels, &mut probs, &mut dlogits, &s);
+
+    let labels2 = labels.clone();
+    check_grad("softmax dlogits", &mut logits, &dlogits, |l| {
+        let mut p = vec![0.0; l.len()];
+        let mut d = vec![0.0; l.len()];
+        softmax_xent(l, &labels2, &mut p, &mut d, &s).0 as f64
+    });
+}
+
+#[test]
+fn param_shapes_reconcile_across_all_three_layers_of_truth() {
+    // ArchDesc::param_elements (analytic) == ModelSpec manifest
+    // (derived) == ParamStore::total_elements (materialized), for every
+    // arch in the family.
+    for arch in [alexnet_micro(), alexnet_tiny(), alexnet()] {
+        let spec = model_spec_of(&arch);
+        assert_eq!(
+            spec.total_param_elements() as u64,
+            arch.param_elements(),
+            "{}: ModelSpec disagrees with ArchDesc",
+            arch.name
+        );
+        // Materializing full AlexNet means two 244 MB allocations of
+        // N(0, σ²) draws — keep the store check to the CPU-scale archs.
+        if arch.param_elements() < 1_000_000 {
+            let store = ParamStore::init(&spec.params, 1);
+            assert_eq!(
+                store.total_elements() as u64,
+                arch.param_elements(),
+                "{}: ParamStore disagrees with ArchDesc",
+                arch.name
+            );
+            assert_eq!(store.n_tensors(), spec.params.len());
+        }
+    }
+}
+
+#[test]
+fn derived_specs_have_sane_init_recipes() {
+    let spec = model_spec_of(&alexnet_micro());
+    for p in &spec.params {
+        if p.name.ends_with(".w") {
+            assert_eq!(p.init, "normal", "{}", p.name);
+            assert!(p.std > 0.0 && p.std < 1.0, "{}: std {}", p.name, p.std);
+        } else {
+            assert_eq!(p.init, "zeros", "{}", p.name);
+        }
+    }
+    // He init: conv1 fan-in is 3·5² = 75.
+    assert!((spec.params[0].std - (2.0f32 / 75.0).sqrt()).abs() < 1e-6);
+}
