@@ -1,10 +1,13 @@
-// Native-backend step cost — the start of the CPU perf trajectory.
+// Native-backend step cost — the CPU perf trajectory, now with the
+// intra-op thread sweep.
 //
 // Times the pure-Rust train step (im2col + blocked SGEMM forward /
-// backward + SGD momentum) on synthetic batches and emits
-// `target/bench_results/BENCH_native_step.json` with steps/sec and
-// images/sec for alexnet-micro (plus an alexnet-tiny reading in the
-// table/CSV), so future optimizations have a baseline to beat.
+// backward + SGD momentum) on synthetic batches for
+// `threads ∈ {1, 2, 4, 8}` and emits
+// `target/bench_results/BENCH_native_step.json` with per-thread-count
+// steps/sec plus speedup-vs-1-thread (the intra-op scaling curve CI
+// tracks), alongside the original 1-thread baseline fields so the
+// trajectory stays comparable across PRs.
 
 include!("harness.rs");
 
@@ -14,8 +17,15 @@ use theano_mgpu::sim::flops::{alexnet_micro, alexnet_tiny, ArchDesc};
 use theano_mgpu::tensor::{HostTensor, Shape};
 use theano_mgpu::util::Pcg32;
 
-fn step_median(b: &mut Bench, arch: &ArchDesc, batch: usize, warmup: usize, runs: usize) -> f64 {
-    let mut backend = NativeBackend::new(arch, 0.5);
+fn step_median(
+    b: &mut Bench,
+    arch: &ArchDesc,
+    batch: usize,
+    threads: usize,
+    warmup: usize,
+    runs: usize,
+) -> f64 {
+    let mut backend = NativeBackend::with_threads(arch, 0.5, threads);
     let model = backend.model().clone();
     let mut store = ParamStore::init(&model.params, 1);
     let mut rng = Pcg32::seeded(9);
@@ -25,7 +35,7 @@ fn step_median(b: &mut Bench, arch: &ArchDesc, batch: usize, warmup: usize, runs
     let labels: Vec<i32> =
         (0..batch).map(|_| rng.below(model.num_classes as u32) as i32).collect();
     let mut step = 0i32;
-    b.case(&format!("{} b{batch} train step", arch.name), warmup, runs, || {
+    b.case(&format!("{} b{batch} t{threads} train step", arch.name), warmup, runs, || {
         backend.train_step(&images, &labels, 0.01, step, &mut store).unwrap();
         step += 1;
     })
@@ -34,29 +44,61 @@ fn step_median(b: &mut Bench, arch: &ArchDesc, batch: usize, warmup: usize, runs
 fn main() {
     let mut b = Bench::new("native_step");
 
+    // Same model/batch as the PR 2 record so the top-level JSON fields
+    // and the label-keyed CSV rows stay comparable across PRs.
     let micro = alexnet_micro();
     let micro_batch = 8usize;
-    let med = step_median(&mut b, &micro, micro_batch, 3, 10);
-    let steps_per_sec = 1.0 / med;
-    let images_per_sec = micro_batch as f64 / med;
-    b.record("alexnet-micro b8 steps/sec", steps_per_sec, "steps/s");
-    b.record("alexnet-micro b8 images/sec", images_per_sec, "img/s");
+    let threads = [1usize, 2, 4, 8];
+
+    // Thread sweep on alexnet-micro: medians, steps/sec, speedup.
+    let mut medians = Vec::new();
+    for &t in &threads {
+        medians.push(step_median(&mut b, &micro, micro_batch, t, 3, 10));
+    }
+    let base = medians[0];
+    // Trajectory-continuity rows (identical labels to the PR 2 bench):
+    // the 1-thread baseline under the original names.
+    b.record("alexnet-micro b8 steps/sec", 1.0 / base, "steps/s");
+    b.record("alexnet-micro b8 images/sec", micro_batch as f64 / base, "img/s");
+    let mut sweep_rows = Vec::new();
+    for (&t, &med) in threads.iter().zip(&medians) {
+        let steps_per_sec = 1.0 / med;
+        let speedup = base / med;
+        b.record(
+            &format!("alexnet-micro b{micro_batch} t{t} steps/sec"),
+            steps_per_sec,
+            "steps/s",
+        );
+        b.record(&format!("alexnet-micro b{micro_batch} t{t} speedup vs t1"), speedup, "x");
+        sweep_rows.push(format!(
+            "{{\"threads\": {t}, \"median_step_seconds\": {med:.6}, \
+             \"steps_per_sec\": {steps_per_sec:.3}, \"images_per_sec\": {:.3}, \
+             \"speedup_vs_1\": {speedup:.3}}}",
+            micro_batch as f64 / med
+        ));
+    }
 
     let tiny = alexnet_tiny();
-    let tiny_med = step_median(&mut b, &tiny, 16, 1, 3);
+    let tiny_med = step_median(&mut b, &tiny, 16, 1, 1, 3);
     b.record("alexnet-tiny b16 images/sec", 16.0 / tiny_med, "img/s");
 
     b.write_csv();
 
     // Machine-readable perf record (consumed by CI / trend tracking).
+    // Top-level fields are the 1-thread baseline for trajectory
+    // continuity; `sweep` carries the intra-op scaling curve.
     let dir = std::path::PathBuf::from("target/bench_results");
     let _ = std::fs::create_dir_all(&dir);
     let path = dir.join("BENCH_native_step.json");
     let json = format!(
         "{{\"bench\": \"native_step\", \"model\": \"{}\", \"batch\": {micro_batch}, \
-         \"median_step_seconds\": {med:.6}, \"steps_per_sec\": {steps_per_sec:.3}, \
-         \"images_per_sec\": {images_per_sec:.3}}}\n",
-        micro.name
+         \"median_step_seconds\": {base:.6}, \"steps_per_sec\": {:.3}, \
+         \"images_per_sec\": {:.3}, \"available_cores\": {}, \"sweep\": [{}]}}\n",
+        micro.name,
+        1.0 / base,
+        micro_batch as f64 / base,
+        theano_mgpu::util::available_cores(),
+        sweep_rows.join(", ")
     );
     let _ = std::fs::write(&path, json);
     println!("  -> {}", path.display());

@@ -124,7 +124,11 @@ pub fn build_backend(cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
                         "XLA backend {tag:?} unavailable ({e}); \
                          falling back to the native CPU backend"
                     );
-                    Ok(Box::new(NativeBackend::new(&arch, cfg.dropout)))
+                    Ok(Box::new(NativeBackend::with_threads(
+                        &arch,
+                        cfg.dropout,
+                        cfg.threads_per_worker(),
+                    )))
                 }
                 None => Err(e),
             },
@@ -145,7 +149,11 @@ pub fn build_eval_backend(cfg: &TrainConfig) -> Result<Box<dyn StepBackend>> {
                     log::warn!(
                         "XLA eval unavailable ({e}); evaluating on the native CPU backend"
                     );
-                    Ok(Box::new(NativeBackend::new(&arch, cfg.dropout)))
+                    Ok(Box::new(NativeBackend::with_threads(
+                        &arch,
+                        cfg.dropout,
+                        cfg.threads_per_worker(),
+                    )))
                 }
                 None => Err(e),
             },

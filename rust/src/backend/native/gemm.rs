@@ -13,6 +13,16 @@
 //! zero multipliers — after ReLU the activation/gradient operands are
 //! substantially sparse, and the branch is a measurable win on the
 //! backward pass.
+//!
+//! The `par_matmul_*` wrappers split `C` into row blocks with
+//! shape-derived boundaries ([`shape_chunks`]) and run the serial
+//! kernel on each block through the [`ComputePool`].  Every `C` row is
+//! produced by exactly the instruction sequence the serial kernel would
+//! use, so the parallel results are **bit-identical** to the serial
+//! ones for any lane count — the property `tests/parallel_backend.rs`
+//! pins.
+
+use crate::backend::native::pool::{par_chunks_mut, shape_chunks, ComputePool};
 
 /// `C[m×n] += A[m×k] · B[k×n]` — cache-blocked over `k` and `n`.
 pub fn matmul_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
@@ -68,19 +78,108 @@ pub fn matmul_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f3
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
+    matmul_tn_rows(m, 0, m, k, n, a, b, c);
+}
+
+/// The `matmul_tn` inner loops restricted to output rows `[lo, hi)`
+/// (columns `lo..hi` of `A`), writing into the row-block slice
+/// `c_block` of length `(hi - lo) × n`.  Per-element accumulation runs
+/// over `kk` in the same order as the full kernel, so a row block is
+/// bitwise what the serial kernel computes for those rows.
+fn matmul_tn_rows(
+    m: usize,
+    lo: usize,
+    hi: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c_block: &mut [f32],
+) {
+    debug_assert_eq!(c_block.len(), (hi - lo) * n);
     for kk in 0..k {
         let arow = &a[kk * m..(kk + 1) * m];
         let brow = &b[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
+        for i in lo..hi {
+            let av = arow[i];
             if av == 0.0 {
                 continue;
             }
-            let crow = &mut c[i * n..(i + 1) * n];
+            let crow = &mut c_block[(i - lo) * n..(i - lo + 1) * n];
             for (cv, bv) in crow.iter_mut().zip(brow) {
                 *cv += av * bv;
             }
         }
     }
+}
+
+/// Row-block-parallel [`matmul_nn`]; bitwise equal to the serial kernel.
+pub fn par_matmul_nn(
+    pool: &ComputePool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    if n == 0 {
+        return;
+    }
+    let (_, rows) = shape_chunks(m);
+    par_chunks_mut(pool, c, rows * n, |ci, c_block| {
+        let lo = ci * rows;
+        let nrows = c_block.len() / n;
+        matmul_nn(nrows, k, n, &a[lo * k..(lo + nrows) * k], b, c_block);
+    });
+}
+
+/// Row-block-parallel [`matmul_nt`]; bitwise equal to the serial kernel.
+pub fn par_matmul_nt(
+    pool: &ComputePool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    if n == 0 {
+        return;
+    }
+    let (_, rows) = shape_chunks(m);
+    par_chunks_mut(pool, c, rows * n, |ci, c_block| {
+        let lo = ci * rows;
+        let nrows = c_block.len() / n;
+        matmul_nt(nrows, k, n, &a[lo * k..(lo + nrows) * k], b, c_block);
+    });
+}
+
+/// Row-block-parallel [`matmul_tn`]; bitwise equal to the serial kernel.
+pub fn par_matmul_tn(
+    pool: &ComputePool,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(c.len(), m * n);
+    if n == 0 {
+        return;
+    }
+    let (_, rows) = shape_chunks(m);
+    par_chunks_mut(pool, c, rows * n, |ci, c_block| {
+        let lo = ci * rows;
+        let nrows = c_block.len() / n;
+        matmul_tn_rows(m, lo, lo + nrows, k, n, a, b, c_block);
+    });
 }
 
 #[cfg(test)]
@@ -166,5 +265,37 @@ mod tests {
         let mut c = vec![10.0];
         matmul_nn(1, 2, 1, &a, &b, &mut c);
         assert_eq!(c, vec![10.0 + 11.0]);
+    }
+
+    #[test]
+    fn par_variants_match_serial_bitwise() {
+        // m spans 1 row, prime, exactly MAX_CHUNKS, and > MAX_CHUNKS;
+        // bit-equality (assert_eq, not tolerance) is the contract.
+        let pool = ComputePool::new(4);
+        let mut rng = Pcg32::seeded(3);
+        for (m, k, n) in [(1, 7, 5), (13, 11, 17), (16, 5, 9), (33, 66, 130)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let at = transpose(m, k, &a);
+            let bt = transpose(k, n, &b);
+
+            let mut serial = vec![0.5; m * n];
+            let mut par = vec![0.5; m * n];
+            matmul_nn(m, k, n, &a, &b, &mut serial);
+            par_matmul_nn(&pool, m, k, n, &a, &b, &mut par);
+            assert_eq!(serial, par, "nn {m}x{k}x{n}");
+
+            let mut serial = vec![0.25; m * n];
+            let mut par = vec![0.25; m * n];
+            matmul_nt(m, k, n, &a, &bt, &mut serial);
+            par_matmul_nt(&pool, m, k, n, &a, &bt, &mut par);
+            assert_eq!(serial, par, "nt {m}x{k}x{n}");
+
+            let mut serial = vec![-0.5; m * n];
+            let mut par = vec![-0.5; m * n];
+            matmul_tn(m, k, n, &at, &b, &mut serial);
+            par_matmul_tn(&pool, m, k, n, &at, &b, &mut par);
+            assert_eq!(serial, par, "tn {m}x{k}x{n}");
+        }
     }
 }

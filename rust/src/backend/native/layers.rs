@@ -10,13 +10,28 @@
 //!   reshape);
 //! - weight gradients **accumulate** (the caller zeroes once per step),
 //!   input gradients are overwritten;
-//! - the im2col staging buffer is caller-owned and reused across
+//! - the im2col staging buffers are caller-owned and reused across
 //!   examples and steps (zero steady-state allocations, same discipline
 //!   as the exchange path).
 //!
+//! Each kernel exists in a serial form (the reference the gradient
+//! checks probe) and, for the batch/plane/element-parallel hot path, a
+//! `*_pool` form driven by the [`ComputePool`].  The pool forms follow
+//! the pool's determinism contract: chunk boundaries come from the
+//! shape alone, chunks write disjoint outputs (or chunk-owned
+//! accumulators reduced in fixed order), so results are bit-identical
+//! for any lane count.  Forward kernels and the FC backward are even
+//! bitwise equal to their serial forms; the conv backward regroups the
+//! per-example gradient sum by chunk (same values to f32 rounding).
+//!
 //! [`HostTensor`]: crate::tensor::HostTensor
 
-use crate::backend::native::gemm::{matmul_nn, matmul_nt, matmul_tn};
+use crate::backend::native::gemm::{
+    matmul_nn, matmul_nt, matmul_tn, par_matmul_nn, par_matmul_nt, par_matmul_tn,
+};
+use crate::backend::native::pool::{
+    par_chunks_mut, shape_chunks, ComputePool, ELEMWISE_CHUNK, SendPtr,
+};
 use crate::util::Pcg32;
 
 /// Geometry of one conv layer (weights `[cout, cin, k, k]`).
@@ -46,6 +61,11 @@ impl Conv2dShape {
     /// Elements of the per-example im2col buffer `[cin·k², out_hw²]`.
     pub fn col_elems(&self) -> usize {
         self.cin * self.k * self.k * self.out_hw * self.out_hw
+    }
+
+    /// Elements of the weight tensor `[cout, cin, k, k]`.
+    pub fn w_elems(&self) -> usize {
+        self.cout * self.cin * self.k * self.k
     }
 }
 
@@ -130,7 +150,30 @@ pub fn col2im(col: &[f32], s: &Conv2dShape, dx: &mut [f32]) {
     }
 }
 
-/// Batched conv forward: `y = W · im2col(x) + b` per example.
+/// One example of the conv forward: `ye = W · im2col(xe) + b`.
+fn conv2d_forward_one(
+    xe: &[f32],
+    w: &[f32],
+    b: &[f32],
+    ye: &mut [f32],
+    col: &mut [f32],
+    s: &Conv2dShape,
+) {
+    let ohw = s.out_hw * s.out_hw;
+    let ck2 = s.cin * s.k * s.k;
+    im2col(xe, s, col);
+    ye.fill(0.0);
+    matmul_nn(s.cout, ck2, ohw, w, col, ye);
+    for (co, yrow) in ye.chunks_exact_mut(ohw).enumerate() {
+        let bias = b[co];
+        for v in yrow {
+            *v += bias;
+        }
+    }
+}
+
+/// Batched conv forward: `y = W · im2col(x) + b` per example (serial
+/// reference; the hot path is [`conv2d_forward_pool`]).
 pub fn conv2d_forward(
     x: &[f32],
     w: &[f32],
@@ -139,28 +182,81 @@ pub fn conv2d_forward(
     col: &mut [f32],
     s: &Conv2dShape,
 ) {
-    let (in_n, out_n, ohw) = (s.in_elems(), s.out_elems(), s.out_hw * s.out_hw);
-    let ck2 = s.cin * s.k * s.k;
-    debug_assert_eq!(w.len(), s.cout * ck2);
+    let (in_n, out_n) = (s.in_elems(), s.out_elems());
+    debug_assert_eq!(w.len(), s.w_elems());
     for bi in 0..s.batch {
         let xe = &x[bi * in_n..(bi + 1) * in_n];
         let ye = &mut y[bi * out_n..(bi + 1) * out_n];
-        im2col(xe, s, col);
-        ye.fill(0.0);
-        matmul_nn(s.cout, ck2, ohw, w, col, ye);
-        for (co, yrow) in ye.chunks_exact_mut(ohw).enumerate() {
-            let bias = b[co];
-            for v in yrow {
-                *v += bias;
-            }
-        }
+        conv2d_forward_one(xe, w, b, ye, col, s);
     }
 }
 
-/// Batched conv backward.  `dw`/`db` accumulate, `dx` is overwritten.
-/// The im2col columns are recomputed from `x` rather than cached from
-/// the forward pass — O(col) extra compute instead of O(batch·col)
-/// extra memory.
+/// Batch-parallel conv forward.  Examples are independent (disjoint
+/// output slices, lane-owned im2col staging), so this is bitwise equal
+/// to [`conv2d_forward`] for any lane count.
+pub fn conv2d_forward_pool(
+    pool: &ComputePool,
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    scratch: &mut ConvScratch,
+    s: &Conv2dShape,
+) {
+    let (in_n, out_n) = (s.in_elems(), s.out_elems());
+    debug_assert_eq!(w.len(), s.w_elems());
+    debug_assert!(scratch.cols.len() >= pool.lanes());
+    let (n_chunks, per) = shape_chunks(s.batch);
+    let y_ptr = SendPtr::new(y.as_mut_ptr());
+    let col_ptr = SendPtr::new(scratch.cols.as_mut_ptr());
+    pool.run_chunks(n_chunks, &|lane, ci| {
+        // SAFETY: cols[lane] is exclusive to this lane, and each
+        // example's output slice is touched by exactly one chunk.
+        let col = unsafe { &mut *col_ptr.get().add(lane) };
+        let col = &mut col[..s.col_elems()];
+        for bi in ci * per..((ci + 1) * per).min(s.batch) {
+            let xe = &x[bi * in_n..(bi + 1) * in_n];
+            let ye =
+                unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * out_n), out_n) };
+            conv2d_forward_one(xe, w, b, ye, col, s);
+        }
+    });
+}
+
+/// One example of the conv backward; `dw`/`db` accumulate into the
+/// caller's target (the global gradient serially, a chunk accumulator
+/// in the pool path), `dxe` is overwritten.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_backward_one(
+    xe: &[f32],
+    w: &[f32],
+    dye: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dxe: &mut [f32],
+    col: &mut [f32],
+    dcol: &mut [f32],
+    s: &Conv2dShape,
+) {
+    let ohw = s.out_hw * s.out_hw;
+    let ck2 = s.cin * s.k * s.k;
+    im2col(xe, s, col);
+    for (co, dyrow) in dye.chunks_exact(ohw).enumerate() {
+        db[co] += dyrow.iter().sum::<f32>();
+    }
+    // dW += dY · colᵀ
+    matmul_nt(s.cout, ohw, ck2, dye, col, dw);
+    // dcol = Wᵀ · dY, then fold back onto the input planes.
+    dcol.fill(0.0);
+    matmul_tn(ck2, s.cout, ohw, w, dye, dcol);
+    dxe.fill(0.0);
+    col2im(dcol, s, dxe);
+}
+
+/// Batched conv backward (serial reference).  `dw`/`db` accumulate,
+/// `dx` is overwritten.  The im2col columns are recomputed from `x`
+/// rather than cached from the forward pass — O(col) extra compute
+/// instead of O(batch·col) extra memory.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_backward(
     x: &[f32],
@@ -173,23 +269,122 @@ pub fn conv2d_backward(
     dcol: &mut [f32],
     s: &Conv2dShape,
 ) {
-    let (in_n, out_n, ohw) = (s.in_elems(), s.out_elems(), s.out_hw * s.out_hw);
-    let ck2 = s.cin * s.k * s.k;
+    let (in_n, out_n) = (s.in_elems(), s.out_elems());
     for bi in 0..s.batch {
         let xe = &x[bi * in_n..(bi + 1) * in_n];
         let dye = &dy[bi * out_n..(bi + 1) * out_n];
         let dxe = &mut dx[bi * in_n..(bi + 1) * in_n];
-        im2col(xe, s, col);
-        for (co, dyrow) in dye.chunks_exact(ohw).enumerate() {
-            db[co] += dyrow.iter().sum::<f32>();
+        conv2d_backward_one(xe, w, dye, dw, db, dxe, col, dcol, s);
+    }
+}
+
+/// Lane- and chunk-indexed scratch for the batch-parallel conv path:
+/// per-lane im2col staging (`cols`/`dcols`, shared across layers at the
+/// largest size) and per-chunk gradient accumulators (`gw`/`gb`).  The
+/// chunk accumulators are what make the parallel weight-gradient sum
+/// lane-count-invariant: chunk `ci` always holds exactly the same
+/// examples, and the final reduction walks chunks in index order.
+#[derive(Debug, Default)]
+pub struct ConvScratch {
+    pub cols: Vec<Vec<f32>>,
+    pub dcols: Vec<Vec<f32>>,
+    pub gw: Vec<Vec<f32>>,
+    pub gb: Vec<Vec<f32>>,
+}
+
+impl ConvScratch {
+    /// Size for `lanes` im2col buffers of `col_elems` and `n_chunks`
+    /// gradient accumulators of the largest conv layer's `max_w`/`max_b`.
+    pub fn ensure(
+        &mut self,
+        lanes: usize,
+        n_chunks: usize,
+        col_elems: usize,
+        max_w: usize,
+        max_b: usize,
+    ) {
+        resize_bufs(&mut self.cols, lanes, col_elems);
+        resize_bufs(&mut self.dcols, lanes, col_elems);
+        resize_bufs(&mut self.gw, n_chunks, max_w);
+        resize_bufs(&mut self.gb, n_chunks, max_b);
+    }
+}
+
+fn resize_bufs(bufs: &mut Vec<Vec<f32>>, n: usize, len: usize) {
+    bufs.resize_with(n, Vec::new);
+    for b in bufs.iter_mut() {
+        if b.len() != len {
+            *b = vec![0.0; len];
         }
-        // dW += dY · colᵀ
-        matmul_nt(s.cout, ohw, ck2, dye, col, dw);
-        // dcol = Wᵀ · dY, then fold back onto the input planes.
-        dcol.fill(0.0);
-        matmul_tn(ck2, s.cout, ohw, w, dye, dcol);
-        dxe.fill(0.0);
-        col2im(dcol, s, dxe);
+    }
+}
+
+/// Batch-parallel conv backward.  Phase 1 partitions the batch into
+/// shape-fixed chunks, each accumulating its examples (in batch order)
+/// into its own `gw`/`gb` buffer while writing disjoint `dx` slices;
+/// phase 2 reduces the chunk accumulators into `dw`/`db` in chunk
+/// order.  Bit-identical for any lane count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_backward_pool(
+    pool: &ComputePool,
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+    scratch: &mut ConvScratch,
+    s: &Conv2dShape,
+) {
+    let (in_n, out_n) = (s.in_elems(), s.out_elems());
+    let (n_chunks, per) = shape_chunks(s.batch);
+    let (w_len, b_len) = (w.len(), db.len());
+    debug_assert!(scratch.cols.len() >= pool.lanes());
+    debug_assert!(scratch.gw.len() >= n_chunks);
+    debug_assert!(scratch.gw.iter().all(|g| g.len() >= w_len));
+    {
+        let dx_ptr = SendPtr::new(dx.as_mut_ptr());
+        let col_ptr = SendPtr::new(scratch.cols.as_mut_ptr());
+        let dcol_ptr = SendPtr::new(scratch.dcols.as_mut_ptr());
+        let gw_ptr = SendPtr::new(scratch.gw.as_mut_ptr());
+        let gb_ptr = SendPtr::new(scratch.gb.as_mut_ptr());
+        pool.run_chunks(n_chunks, &|lane, ci| {
+            // SAFETY: cols/dcols are lane-owned, gw/gb chunk-owned, and
+            // dx example slices disjoint across the batch partition.
+            let col = unsafe { &mut *col_ptr.get().add(lane) };
+            let dcol = unsafe { &mut *dcol_ptr.get().add(lane) };
+            let gw = unsafe { &mut *gw_ptr.get().add(ci) };
+            let gb = unsafe { &mut *gb_ptr.get().add(ci) };
+            let col = &mut col[..s.col_elems()];
+            let dcol = &mut dcol[..s.col_elems()];
+            let gw = &mut gw[..w_len];
+            let gb = &mut gb[..b_len];
+            gw.fill(0.0);
+            gb.fill(0.0);
+            for bi in ci * per..((ci + 1) * per).min(s.batch) {
+                let xe = &x[bi * in_n..(bi + 1) * in_n];
+                let dye = &dy[bi * out_n..(bi + 1) * out_n];
+                let dxe = unsafe {
+                    std::slice::from_raw_parts_mut(dx_ptr.get().add(bi * in_n), in_n)
+                };
+                conv2d_backward_one(xe, w, dye, gw, gb, dxe, col, dcol, s);
+            }
+        });
+    }
+    let gw_chunks = &scratch.gw;
+    par_chunks_mut(pool, dw, ELEMWISE_CHUNK, |ci, dchunk| {
+        let lo = ci * ELEMWISE_CHUNK;
+        let len = dchunk.len();
+        for gw in &gw_chunks[..n_chunks] {
+            for (d, g) in dchunk.iter_mut().zip(&gw[lo..lo + len]) {
+                *d += g;
+            }
+        }
+    });
+    for gb in &scratch.gb[..n_chunks] {
+        for (d, g) in db.iter_mut().zip(gb) {
+            *d += g;
+        }
     }
 }
 
@@ -202,12 +397,49 @@ pub fn relu_forward(x: &mut [f32]) {
     }
 }
 
+/// Element-parallel [`relu_forward`] (bitwise equal: elementwise op,
+/// fixed chunk boundaries).
+pub fn relu_forward_pool(pool: &ComputePool, x: &mut [f32]) {
+    par_chunks_mut(pool, x, ELEMWISE_CHUNK, |_ci, chunk| relu_forward(chunk));
+}
+
 /// Gate a gradient through ReLU: `da *= (a > 0)`, where `a` is the
 /// *post*-activation value (equivalent to the pre-activation test).
 pub fn relu_backward(a: &[f32], da: &mut [f32]) {
     for (g, &v) in da.iter_mut().zip(a) {
         if v <= 0.0 {
             *g = 0.0;
+        }
+    }
+}
+
+/// Element-parallel [`relu_backward`].
+pub fn relu_backward_pool(pool: &ComputePool, a: &[f32], da: &mut [f32]) {
+    debug_assert_eq!(a.len(), da.len());
+    par_chunks_mut(pool, da, ELEMWISE_CHUNK, |ci, chunk| {
+        let lo = ci * ELEMWISE_CHUNK;
+        relu_backward(&a[lo..lo + chunk.len()], chunk);
+    });
+}
+
+/// One (batch, channel) plane of the max-pool forward.
+fn maxpool_plane_forward(plane: &[f32], yp: &mut [f32], ap: &mut [u32], s: &PoolShape) {
+    for oy in 0..s.out_hw {
+        for ox in 0..s.out_hw {
+            let (y0, x0) = (oy * s.stride, ox * s.stride);
+            let mut best = f32::NEG_INFINITY;
+            let mut best_idx = 0usize;
+            for wy in 0..s.window {
+                for wx in 0..s.window {
+                    let idx = (y0 + wy) * s.in_hw + (x0 + wx);
+                    if plane[idx] > best {
+                        best = plane[idx];
+                        best_idx = idx;
+                    }
+                }
+            }
+            yp[oy * s.out_hw + ox] = best;
+            ap[oy * s.out_hw + ox] = best_idx as u32;
         }
     }
 }
@@ -223,24 +455,49 @@ pub fn maxpool_forward(x: &[f32], y: &mut [f32], argmax: &mut [u32], s: &PoolSha
         let plane = &x[bc * in_plane..(bc + 1) * in_plane];
         let yp = &mut y[bc * out_plane..(bc + 1) * out_plane];
         let ap = &mut argmax[bc * out_plane..(bc + 1) * out_plane];
-        for oy in 0..s.out_hw {
-            for ox in 0..s.out_hw {
-                let (y0, x0) = (oy * s.stride, ox * s.stride);
-                let mut best = f32::NEG_INFINITY;
-                let mut best_idx = 0usize;
-                for wy in 0..s.window {
-                    for wx in 0..s.window {
-                        let idx = (y0 + wy) * s.in_hw + (x0 + wx);
-                        if plane[idx] > best {
-                            best = plane[idx];
-                            best_idx = idx;
-                        }
-                    }
-                }
-                yp[oy * s.out_hw + ox] = best;
-                ap[oy * s.out_hw + ox] = best_idx as u32;
-            }
+        maxpool_plane_forward(plane, yp, ap, s);
+    }
+}
+
+/// Plane-parallel [`maxpool_forward`] (planes are independent; bitwise
+/// equal for any lane count).
+pub fn maxpool_forward_pool(
+    pool: &ComputePool,
+    x: &[f32],
+    y: &mut [f32],
+    argmax: &mut [u32],
+    s: &PoolShape,
+) {
+    let in_plane = s.in_hw * s.in_hw;
+    let out_plane = s.out_hw * s.out_hw;
+    let planes = s.batch * s.channels;
+    debug_assert_eq!(y.len(), planes * out_plane);
+    debug_assert_eq!(argmax.len(), y.len());
+    let (n_chunks, per) = shape_chunks(planes);
+    let y_ptr = SendPtr::new(y.as_mut_ptr());
+    let a_ptr = SendPtr::new(argmax.as_mut_ptr());
+    pool.run_chunks(n_chunks, &|_lane, ci| {
+        for bc in ci * per..((ci + 1) * per).min(planes) {
+            let plane = &x[bc * in_plane..(bc + 1) * in_plane];
+            // SAFETY: plane bc's output/argmax slices belong to exactly
+            // one chunk.
+            let yp = unsafe {
+                std::slice::from_raw_parts_mut(y_ptr.get().add(bc * out_plane), out_plane)
+            };
+            let ap = unsafe {
+                std::slice::from_raw_parts_mut(a_ptr.get().add(bc * out_plane), out_plane)
+            };
+            maxpool_plane_forward(plane, yp, ap, s);
         }
+    });
+}
+
+/// One plane of the max-pool backward: zero, then route each output
+/// gradient to its argmax tap.
+fn maxpool_plane_backward(dyp: &[f32], ap: &[u32], dxp: &mut [f32]) {
+    dxp.fill(0.0);
+    for (&g, &idx) in dyp.iter().zip(ap) {
+        dxp[idx as usize] += g;
     }
 }
 
@@ -249,15 +506,39 @@ pub fn maxpool_forward(x: &[f32], y: &mut [f32], argmax: &mut [u32], s: &PoolSha
 pub fn maxpool_backward(dy: &[f32], argmax: &[u32], dx: &mut [f32], s: &PoolShape) {
     let in_plane = s.in_hw * s.in_hw;
     let out_plane = s.out_hw * s.out_hw;
-    dx.fill(0.0);
     for bc in 0..s.batch * s.channels {
         let dyp = &dy[bc * out_plane..(bc + 1) * out_plane];
         let ap = &argmax[bc * out_plane..(bc + 1) * out_plane];
         let dxp = &mut dx[bc * in_plane..(bc + 1) * in_plane];
-        for (&g, &idx) in dyp.iter().zip(ap) {
-            dxp[idx as usize] += g;
-        }
+        maxpool_plane_backward(dyp, ap, dxp);
     }
+}
+
+/// Plane-parallel [`maxpool_backward`] (disjoint `dx` planes; bitwise
+/// equal for any lane count).
+pub fn maxpool_backward_pool(
+    pool: &ComputePool,
+    dy: &[f32],
+    argmax: &[u32],
+    dx: &mut [f32],
+    s: &PoolShape,
+) {
+    let in_plane = s.in_hw * s.in_hw;
+    let out_plane = s.out_hw * s.out_hw;
+    let planes = s.batch * s.channels;
+    let (n_chunks, per) = shape_chunks(planes);
+    let dx_ptr = SendPtr::new(dx.as_mut_ptr());
+    pool.run_chunks(n_chunks, &|_lane, ci| {
+        for bc in ci * per..((ci + 1) * per).min(planes) {
+            let dyp = &dy[bc * out_plane..(bc + 1) * out_plane];
+            let ap = &argmax[bc * out_plane..(bc + 1) * out_plane];
+            // SAFETY: plane bc's dx slice belongs to exactly one chunk.
+            let dxp = unsafe {
+                std::slice::from_raw_parts_mut(dx_ptr.get().add(bc * in_plane), in_plane)
+            };
+            maxpool_plane_backward(dyp, ap, dxp);
+        }
+    });
 }
 
 /// Fully-connected forward: `y[b] = W · x[b] + b` (weights `[dout, din]`).
@@ -266,6 +547,27 @@ pub fn fc_forward(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], s: &FcShape) {
     debug_assert_eq!(y.len(), s.batch * s.dout);
     y.fill(0.0);
     matmul_nt(s.batch, s.din, s.dout, x, w, y);
+    for yrow in y.chunks_exact_mut(s.dout) {
+        for (v, bv) in yrow.iter_mut().zip(b) {
+            *v += bv;
+        }
+    }
+}
+
+/// Row-parallel [`fc_forward`] (bitwise equal: the GEMM row blocks are
+/// the serial kernel's own row loops).
+pub fn fc_forward_pool(
+    pool: &ComputePool,
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    y: &mut [f32],
+    s: &FcShape,
+) {
+    debug_assert_eq!(x.len(), s.batch * s.din);
+    debug_assert_eq!(y.len(), s.batch * s.dout);
+    y.fill(0.0);
+    par_matmul_nt(pool, s.batch, s.din, s.dout, x, w, y);
     for yrow in y.chunks_exact_mut(s.dout) {
         for (v, bv) in yrow.iter_mut().zip(b) {
             *v += bv;
@@ -296,32 +598,90 @@ pub fn fc_backward(
     matmul_nn(s.batch, s.dout, s.din, dy, w, dx);
 }
 
+/// Row-parallel [`fc_backward`] (bitwise equal to the serial form:
+/// both GEMMs parallelize over output rows whose per-element
+/// accumulation order is unchanged; `db` stays serial — it is `dout`
+/// elements).
+#[allow(clippy::too_many_arguments)]
+pub fn fc_backward_pool(
+    pool: &ComputePool,
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    dx: &mut [f32],
+    s: &FcShape,
+) {
+    // dW += dYᵀ · X
+    par_matmul_tn(pool, s.dout, s.batch, s.din, dy, x, dw);
+    for dyrow in dy.chunks_exact(s.dout) {
+        for (g, &v) in db.iter_mut().zip(dyrow) {
+            *g += v;
+        }
+    }
+    // dX = dY · W
+    dx.fill(0.0);
+    par_matmul_nn(pool, s.batch, s.dout, s.din, dy, w, dx);
+}
+
+/// Counter-style dropout RNG: one independent PCG stream per
+/// (layer salt, chunk), so an element's draw depends only on its
+/// position — never on how many lanes swept the array.
+fn dropout_chunk_rng(seed: u64, salt: u64, chunk: usize) -> Pcg32 {
+    Pcg32::new(seed ^ (salt + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15), chunk as u64)
+}
+
 /// Inverted dropout: zero with probability `p`, scale survivors by
 /// `1/(1-p)` so eval needs no correction.  The per-element scale is
-/// recorded in `mask` for the backward pass.
-pub fn dropout_forward(a: &mut [f32], mask: &mut [f32], p: f32, rng: &mut Pcg32) {
+/// recorded in `mask` for the backward pass.  Randomness is drawn from
+/// a per-chunk stream keyed by `(seed, salt, chunk)` — chunk
+/// boundaries are fixed ([`ELEMWISE_CHUNK`]), making the mask
+/// deterministic for any lane count.
+pub fn dropout_forward(
+    pool: &ComputePool,
+    a: &mut [f32],
+    mask: &mut [f32],
+    p: f32,
+    seed: u64,
+    salt: u64,
+) {
     debug_assert!((0.0..1.0).contains(&p));
+    debug_assert_eq!(a.len(), mask.len());
     if p <= 0.0 {
         mask.fill(1.0);
         return;
     }
     let keep_scale = 1.0 / (1.0 - p);
-    for (v, m) in a.iter_mut().zip(mask.iter_mut()) {
-        if rng.next_f32() < p {
-            *v = 0.0;
-            *m = 0.0;
-        } else {
-            *v *= keep_scale;
-            *m = keep_scale;
+    let mask_ptr = SendPtr::new(mask.as_mut_ptr());
+    par_chunks_mut(pool, a, ELEMWISE_CHUNK, |ci, achunk| {
+        let lo = ci * ELEMWISE_CHUNK;
+        // SAFETY: the mask chunk mirrors the disjoint activation chunk.
+        let mchunk =
+            unsafe { std::slice::from_raw_parts_mut(mask_ptr.get().add(lo), achunk.len()) };
+        let mut rng = dropout_chunk_rng(seed, salt, ci);
+        for (v, m) in achunk.iter_mut().zip(mchunk) {
+            if rng.next_f32() < p {
+                *v = 0.0;
+                *m = 0.0;
+            } else {
+                *v *= keep_scale;
+                *m = keep_scale;
+            }
         }
-    }
+    });
 }
 
 /// Dropout backward: replay the recorded scales.
-pub fn dropout_backward(da: &mut [f32], mask: &[f32]) {
-    for (g, &m) in da.iter_mut().zip(mask) {
-        *g *= m;
-    }
+pub fn dropout_backward(pool: &ComputePool, da: &mut [f32], mask: &[f32]) {
+    debug_assert_eq!(da.len(), mask.len());
+    par_chunks_mut(pool, da, ELEMWISE_CHUNK, |ci, chunk| {
+        let lo = ci * ELEMWISE_CHUNK;
+        let len = chunk.len();
+        for (g, &m) in chunk.iter_mut().zip(&mask[lo..lo + len]) {
+            *g *= m;
+        }
+    });
 }
 
 /// Softmax + mean cross-entropy over a batch of logits.
@@ -472,23 +832,45 @@ mod tests {
 
     #[test]
     fn dropout_expectation_and_mask_replay() {
-        let mut rng = crate::util::Pcg32::seeded(8);
+        let pool = ComputePool::serial();
         let n = 20_000;
         let mut a = vec![1.0f32; n];
         let mut mask = vec![0.0f32; n];
-        dropout_forward(&mut a, &mut mask, 0.5, &mut rng);
+        dropout_forward(&pool, &mut a, &mut mask, 0.5, 8, 0);
         let mean = a.iter().sum::<f32>() / n as f32;
         // Inverted dropout preserves the expectation.
         assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
         let mut da = vec![1.0f32; n];
-        dropout_backward(&mut da, &mask);
+        dropout_backward(&pool, &mut da, &mask);
         assert_eq!(da, a);
         // p = 0 is the identity and an all-ones mask.
         let mut b = vec![2.0f32; 4];
         let mut m2 = vec![0.0f32; 4];
-        dropout_forward(&mut b, &mut m2, 0.0, &mut rng);
+        dropout_forward(&pool, &mut b, &mut m2, 0.0, 8, 0);
         assert_eq!(b, vec![2.0; 4]);
         assert_eq!(m2, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn dropout_mask_is_lane_count_invariant() {
+        // Spans multiple ELEMWISE_CHUNK boundaries so several chunk
+        // streams are in play; layers (salts) must differ.
+        let n = 2 * ELEMWISE_CHUNK + 137;
+        let run = |threads: usize, salt: u64| {
+            let pool = ComputePool::new(threads);
+            let mut a = vec![1.0f32; n];
+            let mut mask = vec![0.0f32; n];
+            dropout_forward(&pool, &mut a, &mut mask, 0.5, 42, salt);
+            (a, mask)
+        };
+        let (a1, m1) = run(1, 0);
+        for threads in [2, 4] {
+            let (at, mt) = run(threads, 0);
+            assert_eq!(a1, at, "{threads} lanes changed activations");
+            assert_eq!(m1, mt, "{threads} lanes changed the mask");
+        }
+        let (_, other_layer) = run(1, 1);
+        assert_ne!(m1, other_layer, "layer salt must decorrelate masks");
     }
 
     #[test]

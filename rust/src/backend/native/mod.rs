@@ -11,10 +11,18 @@
 //! [`ParamStore`](crate::params::ParamStore), the collective exchange,
 //! checkpointing and divergence invariants all operate on *real*
 //! gradients with this backend.
+//!
+//! Every kernel of the step runs over the backend's intra-op
+//! [`ComputePool`] (GEMM row blocks, conv batch chunks, pooling
+//! planes, elementwise sweeps, the SGD update).  The pool's
+//! determinism contract ([`pool`]) keeps the math bit-identical for
+//! any `--threads` value, so intra-op parallelism composes with the
+//! inter-replica divergence invariants unchanged.
 
 pub mod gemm;
 pub mod layers;
 pub mod model;
+pub mod pool;
 
 use crate::backend::{EvalBatchOut, StepBackend, TrainStepOut};
 use crate::error::{Error, Result};
@@ -22,14 +30,14 @@ use crate::params::ParamStore;
 use crate::runtime::ModelSpec;
 use crate::sim::flops::{arch_by_name, ArchDesc};
 use crate::tensor::HostTensor;
-use crate::util::Pcg32;
 
 use self::layers::{
-    conv2d_backward, conv2d_forward, dropout_backward, dropout_forward, fc_backward, fc_forward,
-    maxpool_backward, maxpool_forward, relu_backward, relu_forward, softmax_xent, topk_correct,
-    Conv2dShape, FcShape, PoolShape,
+    conv2d_backward_pool, conv2d_forward_pool, dropout_backward, dropout_forward, fc_backward_pool,
+    fc_forward_pool, maxpool_backward_pool, maxpool_forward_pool, relu_backward_pool,
+    relu_forward_pool, softmax_xent, topk_correct, Conv2dShape, FcShape, PoolShape,
 };
 use self::model::{NetPlan, PlanOp, Workspace};
+use self::pool::{par_ranges, ComputePool, ELEMWISE_CHUNK, SendPtr};
 
 /// AlexNet's momentum coefficient (paper §2, Krizhevsky et al. 2012).
 pub const MOMENTUM: f32 = 0.9;
@@ -39,6 +47,11 @@ pub struct NativeBackend {
     plan: NetPlan,
     model: ModelSpec,
     ws: Workspace,
+    /// Intra-op worker pool shared by every kernel of this backend's
+    /// step (GEMM row blocks, conv batch chunks, elementwise sweeps,
+    /// the SGD update).  Deterministic: results are bit-identical for
+    /// any lane count (see [`pool`]).
+    pool: ComputePool,
     /// Dropout probability on hidden FC layers (paper: 0.5; 0 disables,
     /// which the gradient-check tests rely on).
     pub dropout: f32,
@@ -47,13 +60,34 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Single-threaded backend (an intra-op pool of one lane).
     pub fn new(arch: &ArchDesc, dropout: f32) -> NativeBackend {
-        let plan = NetPlan::from_arch(arch);
-        let model = plan.model_spec();
-        NativeBackend { plan, model, ws: Workspace::default(), dropout, momentum: MOMENTUM }
+        NativeBackend::with_threads(arch, dropout, 1)
     }
 
-    /// Resolve the model named by the config to an architecture.
+    /// Backend with an intra-op compute pool of `threads` lanes
+    /// (clamped to ≥ 1).  The thread count changes wall-clock only,
+    /// never the math.
+    pub fn with_threads(arch: &ArchDesc, dropout: f32, threads: usize) -> NativeBackend {
+        let plan = NetPlan::from_arch(arch);
+        let model = plan.model_spec();
+        NativeBackend {
+            plan,
+            model,
+            ws: Workspace::default(),
+            pool: ComputePool::new(threads),
+            dropout,
+            momentum: MOMENTUM,
+        }
+    }
+
+    /// Lanes of the intra-op pool (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.pool.lanes()
+    }
+
+    /// Resolve the model named by the config to an architecture, with
+    /// the config's per-worker intra-op thread budget.
     pub fn from_config(cfg: &crate::config::TrainConfig) -> Result<NativeBackend> {
         let arch = arch_by_name(&cfg.model).ok_or_else(|| {
             Error::msg(format!(
@@ -62,7 +96,7 @@ impl NativeBackend {
                 cfg.model
             ))
         })?;
-        Ok(NativeBackend::new(&arch, cfg.dropout))
+        Ok(NativeBackend::with_threads(&arch, cfg.dropout, cfg.threads_per_worker()))
     }
 
     /// Validate a batch against the plan and size the workspace.
@@ -93,56 +127,68 @@ impl NativeBackend {
                 )));
             }
         }
-        self.ws.ensure(&self.plan, batch);
+        let lanes = self.pool.lanes();
+        self.ws.ensure(&self.plan, batch, lanes);
         Ok(batch)
     }
 
-    /// Forward pass over all nodes.  `drop_rng = None` is eval mode
-    /// (dropout skipped); `Some` is train mode.
-    fn forward(&mut self, images: &HostTensor, store: &ParamStore, mut drop_rng: Option<Pcg32>) {
+    /// Forward pass over all nodes.  `drop_seed = None` is eval mode
+    /// (dropout skipped); `Some` is train mode — the seed keys the
+    /// per-chunk dropout streams (see `layers::dropout_forward`).
+    fn forward(&mut self, images: &HostTensor, store: &ParamStore, drop_seed: Option<u64>) {
         let batch = self.ws.batch;
-        self.ws.acts[0].copy_from_slice(images.as_slice());
+        let pool = &self.pool;
+        let dropout = self.dropout;
+        let ws = &mut self.ws;
+        ws.acts[0].copy_from_slice(images.as_slice());
         for (i, op) in self.plan.ops.iter().enumerate() {
-            let (lo, hi) = self.ws.acts.split_at_mut(i + 1);
+            let (lo, hi) = ws.acts.split_at_mut(i + 1);
             let x = lo[i].as_slice();
             let y = hi[0].as_mut_slice();
             match op {
                 PlanOp::ConvRelu { shape, param } => {
                     let s = Conv2dShape { batch, ..*shape };
-                    // The staging buffer is shared across layers at the
-                    // largest size; each layer uses its prefix.
-                    let col = &mut self.ws.col[..s.col_elems()];
-                    conv2d_forward(
+                    conv2d_forward_pool(
+                        pool,
                         x,
                         store.params[*param].as_slice(),
                         store.params[*param + 1].as_slice(),
                         y,
-                        col,
+                        &mut ws.conv,
                         &s,
                     );
-                    relu_forward(y);
+                    relu_forward_pool(pool, y);
                 }
                 PlanOp::Pool { shape, arg } => {
                     let s = PoolShape { batch, ..*shape };
-                    maxpool_forward(x, y, &mut self.ws.pool_arg[*arg], &s);
+                    maxpool_forward_pool(pool, x, y, &mut ws.pool_arg[*arg], &s);
                 }
                 PlanOp::FcRelu { shape, param, mask } => {
                     let s = FcShape { batch, ..*shape };
-                    fc_forward(
+                    fc_forward_pool(
+                        pool,
                         x,
                         store.params[*param].as_slice(),
                         store.params[*param + 1].as_slice(),
                         y,
                         &s,
                     );
-                    relu_forward(y);
-                    if let Some(rng) = drop_rng.as_mut() {
-                        dropout_forward(y, &mut self.ws.masks[*mask], self.dropout, rng);
+                    relu_forward_pool(pool, y);
+                    if let Some(seed) = drop_seed {
+                        dropout_forward(
+                            pool,
+                            y,
+                            &mut ws.masks[*mask],
+                            dropout,
+                            seed,
+                            *mask as u64,
+                        );
                     }
                 }
                 PlanOp::FcOut { shape, param } => {
                     let s = FcShape { batch, ..*shape };
-                    fc_forward(
+                    fc_forward_pool(
+                        pool,
                         x,
                         store.params[*param].as_slice(),
                         store.params[*param + 1].as_slice(),
@@ -159,67 +205,84 @@ impl NativeBackend {
     /// the last `dacts` node by `softmax_xent`.
     fn backward(&mut self, store: &ParamStore) {
         let batch = self.ws.batch;
-        for g in &mut self.ws.grads {
+        let pool = &self.pool;
+        let dropout = self.dropout;
+        let ws = &mut self.ws;
+        for g in &mut ws.grads {
             g.fill(0.0);
         }
         for (i, op) in self.plan.ops.iter().enumerate().rev() {
-            let (lo, hi) = self.ws.dacts.split_at_mut(i + 1);
+            let (lo, hi) = ws.dacts.split_at_mut(i + 1);
             let dx = lo[i].as_mut_slice();
             let dy = hi[0].as_mut_slice();
-            let x = self.ws.acts[i].as_slice();
-            let a = self.ws.acts[i + 1].as_slice();
+            let x = ws.acts[i].as_slice();
+            let a = ws.acts[i + 1].as_slice();
             match op {
                 PlanOp::ConvRelu { shape, param } => {
                     let s = Conv2dShape { batch, ..*shape };
-                    relu_backward(a, dy);
-                    let (gw, gb) = grads_pair(&mut self.ws.grads, *param);
-                    let col = &mut self.ws.col[..s.col_elems()];
-                    let dcol = &mut self.ws.dcol[..s.col_elems()];
-                    conv2d_backward(
+                    relu_backward_pool(pool, a, dy);
+                    let (gw, gb) = grads_pair(&mut ws.grads, *param);
+                    conv2d_backward_pool(
+                        pool,
                         x,
                         store.params[*param].as_slice(),
                         dy,
                         gw,
                         gb,
                         dx,
-                        col,
-                        dcol,
+                        &mut ws.conv,
                         &s,
                     );
                 }
                 PlanOp::Pool { shape, arg } => {
                     let s = PoolShape { batch, ..*shape };
-                    maxpool_backward(dy, &self.ws.pool_arg[*arg], dx, &s);
+                    maxpool_backward_pool(pool, dy, &ws.pool_arg[*arg], dx, &s);
                 }
                 PlanOp::FcRelu { shape, param, mask } => {
                     let s = FcShape { batch, ..*shape };
                     // Dropout only ran forward when active; a stale
                     // mask must not gate the gradient.
-                    if self.dropout > 0.0 {
-                        dropout_backward(dy, &self.ws.masks[*mask]);
+                    if dropout > 0.0 {
+                        dropout_backward(pool, dy, &ws.masks[*mask]);
                     }
-                    relu_backward(a, dy);
-                    let (gw, gb) = grads_pair(&mut self.ws.grads, *param);
-                    fc_backward(x, store.params[*param].as_slice(), dy, gw, gb, dx, &s);
+                    relu_backward_pool(pool, a, dy);
+                    let (gw, gb) = grads_pair(&mut ws.grads, *param);
+                    fc_backward_pool(pool, x, store.params[*param].as_slice(), dy, gw, gb, dx, &s);
                 }
                 PlanOp::FcOut { shape, param } => {
                     let s = FcShape { batch, ..*shape };
-                    let (gw, gb) = grads_pair(&mut self.ws.grads, *param);
-                    fc_backward(x, store.params[*param].as_slice(), dy, gw, gb, dx, &s);
+                    let (gw, gb) = grads_pair(&mut ws.grads, *param);
+                    fc_backward_pool(pool, x, store.params[*param].as_slice(), dy, gw, gb, dx, &s);
                 }
             }
         }
     }
 
-    /// SGD with momentum: `m ← μ·m − lr·g; p ← p + m`.
+    /// SGD with momentum: `m ← μ·m − lr·g; p ← p + m`, parallel over
+    /// fixed element ranges of each tensor (elementwise, so chunking
+    /// cannot change the result).
     fn apply_update(&self, store: &mut ParamStore, lr: f32) {
+        let momentum = self.momentum;
         for ((p, m), g) in
             store.params.iter_mut().zip(store.momenta.iter_mut()).zip(&self.ws.grads)
         {
-            for ((pv, mv), gv) in p.as_mut_slice().iter_mut().zip(m.as_mut_slice()).zip(g) {
-                *mv = self.momentum * *mv - lr * gv;
-                *pv += *mv;
-            }
+            let ps = p.as_mut_slice();
+            let ms = m.as_mut_slice();
+            let gs = g.as_slice();
+            debug_assert_eq!(ps.len(), gs.len());
+            let p_ptr = SendPtr::new(ps.as_mut_ptr());
+            let m_ptr = SendPtr::new(ms.as_mut_ptr());
+            par_ranges(&self.pool, gs.len(), ELEMWISE_CHUNK, |_ci, r| {
+                let (lo, len) = (r.start, r.len());
+                // SAFETY: ranges are disjoint; each touches only its own
+                // span of the param/momentum tensors.
+                let pr = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(lo), len) };
+                let mr = unsafe { std::slice::from_raw_parts_mut(m_ptr.get().add(lo), len) };
+                for ((pv, mv), gv) in pr.iter_mut().zip(mr).zip(&gs[lo..lo + len]) {
+                    *mv = momentum * *mv - lr * gv;
+                    *pv += *mv;
+                }
+            });
         }
     }
 }
@@ -248,8 +311,8 @@ impl StepBackend for NativeBackend {
         store: &mut ParamStore,
     ) -> Result<TrainStepOut> {
         let batch = self.admit_batch(images, labels)?;
-        let drop_rng = (self.dropout > 0.0).then(|| Pcg32::new(step_seed as u32 as u64, 0xD0D0));
-        self.forward(images, store, drop_rng);
+        let drop_seed = (self.dropout > 0.0).then_some(step_seed as u32 as u64);
+        self.forward(images, store, drop_seed);
         let n = self.plan.ops.len();
         let s = FcShape { batch, din: 0, dout: self.plan.classes };
         let (loss, correct1) = softmax_xent(
@@ -304,6 +367,7 @@ mod tests {
     use super::*;
     use crate::sim::flops::alexnet_micro;
     use crate::tensor::Shape;
+    use crate::util::Pcg32;
 
     fn random_batch(batch: usize, classes: usize, seed: u64) -> (HostTensor, Vec<i32>) {
         let mut rng = Pcg32::seeded(seed);

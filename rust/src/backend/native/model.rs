@@ -14,7 +14,8 @@
 //! [`ParamStore`](crate::params::ParamStore), checkpoints and the
 //! collective exchange all operate on native parameters unchanged.
 
-use crate::backend::native::layers::{Conv2dShape, FcShape, PoolShape};
+use crate::backend::native::layers::{Conv2dShape, ConvScratch, FcShape, PoolShape};
+use crate::backend::native::pool::shape_chunks;
 use crate::runtime::artifact::{ModelSpec, ParamManifestSpec};
 use crate::sim::flops::ArchDesc;
 use crate::tensor::Shape;
@@ -184,29 +185,32 @@ pub fn model_spec_of(arch: &ArchDesc) -> ModelSpec {
 }
 
 /// Reusable per-step buffers: activations + gradients per node, pool
-/// argmaxes, dropout masks, im2col staging and parameter gradients.
-/// Sized once per batch size; zero allocations afterwards.
+/// argmaxes, dropout masks, the conv pool-path scratch (per-lane
+/// im2col staging + per-chunk gradient accumulators) and parameter
+/// gradients.  Sized once per (batch, lanes); zero allocations
+/// afterwards.
 #[derive(Debug, Default)]
 pub struct Workspace {
     pub batch: usize,
+    pub lanes: usize,
     pub acts: Vec<Vec<f32>>,
     pub dacts: Vec<Vec<f32>>,
     pub pool_arg: Vec<Vec<u32>>,
     pub masks: Vec<Vec<f32>>,
     pub probs: Vec<f32>,
-    pub col: Vec<f32>,
-    pub dcol: Vec<f32>,
+    pub conv: ConvScratch,
     pub grads: Vec<Vec<f32>>,
 }
 
 impl Workspace {
-    /// (Re)allocate for `batch` examples of `plan`; no-op when already
-    /// sized.
-    pub fn ensure(&mut self, plan: &NetPlan, batch: usize) {
-        if self.batch == batch && self.acts.len() == plan.node_elems.len() {
+    /// (Re)allocate for `batch` examples of `plan` computed over
+    /// `lanes` pool lanes; no-op when already sized.
+    pub fn ensure(&mut self, plan: &NetPlan, batch: usize, lanes: usize) {
+        if self.batch == batch && self.lanes == lanes && self.acts.len() == plan.node_elems.len() {
             return;
         }
         self.batch = batch;
+        self.lanes = lanes;
         self.acts = plan.node_elems.iter().map(|&n| vec![0.0; batch * n]).collect();
         self.dacts = plan.node_elems.iter().map(|&n| vec![0.0; batch * n]).collect();
         self.pool_arg = plan
@@ -228,8 +232,28 @@ impl Workspace {
             })
             .collect();
         self.probs = vec![0.0; batch * plan.classes];
-        self.col = vec![0.0; plan.col_elems];
-        self.dcol = vec![0.0; plan.col_elems];
+        // Conv scratch: one im2col pair per lane, one gradient
+        // accumulator per batch chunk, all at the largest conv layer.
+        let (n_chunks, _) = shape_chunks(batch);
+        let max_w = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::ConvRelu { shape, .. } => Some(shape.w_elems()),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0);
+        let max_b = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::ConvRelu { shape, .. } => Some(shape.cout),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0);
+        self.conv.ensure(lanes.max(1), n_chunks, plan.col_elems, max_w, max_b);
         self.grads = plan.params.iter().map(|p| vec![0.0; p.shape.numel()]).collect();
     }
 }
@@ -271,16 +295,24 @@ mod tests {
     fn workspace_sizes_follow_plan() {
         let plan = NetPlan::from_arch(&alexnet_micro());
         let mut ws = Workspace::default();
-        ws.ensure(&plan, 4);
+        ws.ensure(&plan, 4, 2);
         assert_eq!(ws.acts.len(), plan.node_elems.len());
         assert_eq!(ws.acts[0].len(), 4 * 3 * 32 * 32);
         assert_eq!(ws.pool_arg.len(), 1);
         assert_eq!(ws.masks.len(), 1);
         assert_eq!(ws.grads.len(), 8);
+        // Conv scratch: one im2col pair per lane, one grad accumulator
+        // per batch chunk (batch 4 -> 4 chunks), at conv-max sizes.
+        assert_eq!(ws.conv.cols.len(), 2);
+        assert_eq!(ws.conv.dcols.len(), 2);
+        assert_eq!(ws.conv.cols[0].len(), plan.col_elems);
+        assert_eq!(ws.conv.gw.len(), 4);
+        assert_eq!(ws.conv.gw[0].len(), 16 * 8 * 3 * 3); // conv2 weights
+        assert_eq!(ws.conv.gb[0].len(), 16);
         let before = ws.acts[0].as_ptr();
-        ws.ensure(&plan, 4); // no-op: buffers are stable
+        ws.ensure(&plan, 4, 2); // no-op: buffers are stable
         assert_eq!(before, ws.acts[0].as_ptr());
-        ws.ensure(&plan, 2);
+        ws.ensure(&plan, 2, 2);
         assert_eq!(ws.acts[0].len(), 2 * 3 * 32 * 32);
     }
 }

@@ -1,0 +1,393 @@
+//! A scoped intra-op compute pool for the native backend.
+//!
+//! One [`ComputePool`] lives inside each [`NativeBackend`] and fans the
+//! hot kernels — GEMM row blocks, per-example conv/im2col work, pooling
+//! planes, elementwise ReLU/dropout sweeps and the SGD parameter
+//! update — across `threads` lanes: the calling thread (lane 0) plus
+//! `threads - 1` persistent worker threads parked on plain
+//! `std::sync::mpsc` channels.  No external crates, no spin loops: the
+//! hand-off is the channels' own park/unpark.
+//!
+//! ## Determinism contract
+//!
+//! Parallel results must be **bit-identical for every thread count**
+//! (the N-replica divergence invariants depend on it), so the pool
+//! never lets the lane count influence the math:
+//!
+//! - Work is split into chunks whose boundaries are derived from the
+//!   *shape only* (see [`shape_chunks`] / [`ELEMWISE_CHUNK`]), never
+//!   from `lanes()`.
+//! - Each chunk writes a disjoint slice of the output, or accumulates
+//!   into its own chunk-indexed scratch buffer; cross-chunk reductions
+//!   are then applied in fixed chunk order.
+//! - Lanes pick chunks dynamically (an atomic counter, for load
+//!   balance), which is safe precisely because chunk → output mapping
+//!   is fixed; *which lane* computes a chunk can never matter.
+//!
+//! A single-lane pool therefore runs the exact chunk loop the parallel
+//! one does, and `threads ∈ {1, 2, 4}` agree bitwise — the property
+//! `tests/parallel_backend.rs` pins.
+//!
+//! ## Scoped dispatch
+//!
+//! [`ComputePool::run`] hands workers a borrowed closure by erasing its
+//! lifetime, and blocks until every worker has reported completion
+//! before returning — the borrow can never outlive the call.  Workers
+//! report through a drop guard that also records whether the task was
+//! unwinding, so a panicking task still signals (no deadlock) and the
+//! *same* `run` call panics rather than returning partial results.
+//!
+//! [`NativeBackend`]: crate::backend::native::NativeBackend
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::util::math::ceil_div;
+
+/// Elementwise-sweep chunk: fixed so boundaries depend on data length
+/// only.  Big enough that dispatch cost vanishes, small enough that a
+/// conv activation map splits across lanes.
+pub const ELEMWISE_CHUNK: usize = 1 << 14;
+
+/// Maximum chunk count for item-parallel loops (GEMM row blocks, conv
+/// batch examples, pooling planes).  Shape-derived — deliberately *not*
+/// tied to the lane count — and sized so up to 8 lanes still get ≥ 2
+/// chunks each for dynamic balancing.
+pub const MAX_CHUNKS: usize = 16;
+
+/// Split `items` into at most [`MAX_CHUNKS`] contiguous chunks; returns
+/// `(n_chunks, chunk_len)` (the last chunk may be short).  Pure shape
+/// arithmetic: the same `items` always yields the same boundaries.
+pub fn shape_chunks(items: usize) -> (usize, usize) {
+    if items == 0 {
+        return (0, 1);
+    }
+    let chunk = ceil_div(items, items.min(MAX_CHUNKS));
+    (ceil_div(items, chunk), chunk)
+}
+
+/// A raw pointer that may cross thread boundaries.  Callers guarantee
+/// disjoint access (each chunk/lane touches its own region) — the
+/// wrapper exists only to let closures capture the base address.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+enum Msg {
+    Run { task: &'static (dyn Fn(usize) + Sync), lane: usize },
+    Exit,
+}
+
+/// Sends one completion token when dropped — `true` when the task is
+/// unwinding — so a panicking task still unblocks the dispatcher *and*
+/// fails the run that dispatched it (not just the next one).
+struct DoneGuard<'a>(&'a Sender<bool>);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let _ = self.0.send(std::thread::panicking());
+    }
+}
+
+/// Waits for `n` outstanding completions when dropped, so a panic on
+/// lane 0 cannot return (and free the borrowed task) while workers are
+/// still inside it.
+struct Drain<'a> {
+    rx: &'a Receiver<bool>,
+    n: usize,
+}
+
+impl Drop for Drain<'_> {
+    fn drop(&mut self) {
+        for _ in 0..self.n {
+            if self.rx.recv().is_err() {
+                // Every worker is gone; nothing holds the borrow.
+                break;
+            }
+        }
+    }
+}
+
+/// The intra-op worker pool.  See the module docs for the determinism
+/// contract; `threads = 1` is a zero-thread, zero-overhead serial pool
+/// that still runs the identical chunk loops.
+pub struct ComputePool {
+    lanes: usize,
+    senders: Vec<Sender<Msg>>,
+    done_rx: Receiver<bool>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl ComputePool {
+    /// Spawn a pool with `threads` lanes total (clamped to ≥ 1): the
+    /// caller plus `threads - 1` parked workers.
+    pub fn new(threads: usize) -> ComputePool {
+        let lanes = threads.max(1);
+        let (done_tx, done_rx) = channel::<bool>();
+        let mut senders = Vec::with_capacity(lanes - 1);
+        let mut joins = Vec::with_capacity(lanes - 1);
+        for i in 1..lanes {
+            let (tx, rx) = channel::<Msg>();
+            let done = done_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("tmg-compute-{i}"))
+                .spawn(move || {
+                    while let Ok(Msg::Run { task, lane }) = rx.recv() {
+                        let _done = DoneGuard(&done);
+                        task(lane);
+                    }
+                })
+                .expect("spawn compute-pool worker");
+            senders.push(tx);
+            joins.push(join);
+        }
+        ComputePool { lanes, senders, done_rx, joins }
+    }
+
+    /// A 1-lane pool: no threads, every helper runs inline.
+    pub fn serial() -> ComputePool {
+        ComputePool::new(1)
+    }
+
+    /// Total lanes (calling thread included).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `f(lane)` once on every lane concurrently; returns after all
+    /// lanes finish.  `f` only borrows for the duration of the call.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.senders.is_empty() {
+            f(0);
+            return;
+        }
+        // SAFETY: the erased borrow is only reachable by workers until
+        // their completion tokens arrive, and both the normal path and
+        // the Drain guard wait for every token before this frame ends.
+        let task: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let mut dead = false;
+        let mut sent = 0usize;
+        for (i, tx) in self.senders.iter().enumerate() {
+            if tx.send(Msg::Run { task, lane: i + 1 }).is_ok() {
+                sent += 1;
+            } else {
+                dead = true;
+            }
+        }
+        let mut drain = Drain { rx: &self.done_rx, n: sent };
+        f(0);
+        while drain.n > 0 {
+            drain.n -= 1;
+            match self.done_rx.recv() {
+                Ok(panicked) => dead |= panicked,
+                Err(_) => {
+                    drain.n = 0;
+                    dead = true;
+                }
+            }
+        }
+        drop(drain);
+        assert!(!dead, "compute-pool worker panicked or exited; results are incomplete");
+    }
+
+    /// Run `f(lane, chunk_idx)` for every `chunk_idx in 0..n_chunks`,
+    /// each exactly once, distributed over lanes by an atomic counter.
+    /// Single-lane pools (and single chunks) run inline.
+    pub fn run_chunks(&self, n_chunks: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.lanes == 1 || n_chunks == 1 {
+            for ci in 0..n_chunks {
+                f(0, ci);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        self.run(&|lane| loop {
+            let ci = next.fetch_add(1, Ordering::Relaxed);
+            if ci >= n_chunks {
+                break;
+            }
+            f(lane, ci);
+        });
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Msg::Exit);
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Split `data` into consecutive `chunk`-sized slices and run
+/// `f(chunk_idx, slice)` for each, in parallel.  Chunks are disjoint,
+/// so results are independent of lane count and scheduling.
+pub fn par_chunks_mut<T, F>(pool: &ComputePool, data: &mut [T], chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let base = SendPtr::new(data.as_mut_ptr());
+    pool.run_chunks(ceil_div(len, chunk), &|_lane, ci| {
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(len);
+        // SAFETY: [lo, hi) ranges are in-bounds and pairwise disjoint
+        // across chunk indices, and `data` is exclusively borrowed for
+        // the duration of this call.
+        let s = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+        f(ci, s);
+    });
+}
+
+/// Index-range variant of [`par_chunks_mut`] for kernels that stride
+/// several arrays at once: runs `f(chunk_idx, lo..hi)` over fixed
+/// `chunk`-sized ranges of `0..len`.
+pub fn par_ranges<F>(pool: &ComputePool, len: usize, chunk: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let chunk = chunk.max(1);
+    pool.run_chunks(ceil_div(len, chunk), &|_lane, ci| {
+        let lo = ci * chunk;
+        f(ci, lo..(lo + chunk).min(len));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn shape_chunks_boundaries() {
+        assert_eq!(shape_chunks(0), (0, 1));
+        assert_eq!(shape_chunks(1), (1, 1));
+        assert_eq!(shape_chunks(5), (5, 1));
+        assert_eq!(shape_chunks(16), (16, 1));
+        assert_eq!(shape_chunks(17), (9, 2)); // ceil(17/16)=2 per chunk
+        assert_eq!(shape_chunks(100), (15, 7)); // ceil(100/16)=7, ceil(100/7)=15
+        // The rule never consults a thread count: same input, same split.
+        assert_eq!(shape_chunks(100), shape_chunks(100));
+    }
+
+    #[test]
+    fn run_executes_every_lane_once() {
+        for threads in [1, 2, 4] {
+            let pool = ComputePool::new(threads);
+            let hits: Vec<AtomicU32> = (0..threads).map(|_| AtomicU32::new(0)).collect();
+            pool.run(&|lane| {
+                hits[lane].fetch_add(1, Ordering::Relaxed);
+            });
+            for (lane, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks_covers_each_chunk_exactly_once() {
+        for threads in [1, 3, 4] {
+            let pool = ComputePool::new(threads);
+            let n = 23;
+            let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+            pool.run_chunks(n, &|_lane, ci| {
+                hits[ci].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_is_lane_count_invariant() {
+        // A chunk-local stateful computation (prefix-sum within the
+        // chunk) must come out identical for any lane count, because
+        // the chunk boundaries are fixed.
+        let make = |threads: usize| {
+            let pool = ComputePool::new(threads);
+            let mut v: Vec<f32> = (0..1000).map(|i| (i % 17) as f32 * 0.25).collect();
+            par_chunks_mut(&pool, &mut v, 64, |ci, chunk| {
+                let mut acc = ci as f32;
+                for x in chunk.iter_mut() {
+                    acc += *x;
+                    *x = acc;
+                }
+            });
+            v
+        };
+        let serial = make(1);
+        assert_eq!(serial, make(2));
+        assert_eq!(serial, make(4));
+    }
+
+    #[test]
+    fn par_ranges_covers_everything() {
+        let pool = ComputePool::new(4);
+        let len = 100;
+        let hits: Vec<AtomicU32> = (0..len).map(|_| AtomicU32::new(0)).collect();
+        par_ranges(&pool, len, 7, |_ci, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_oversized_chunks() {
+        let pool = ComputePool::new(2);
+        let mut empty: Vec<f32> = vec![];
+        par_chunks_mut(&pool, &mut empty, 8, |_, _| panic!("no chunks for empty data"));
+        // chunk > len: a single chunk spanning everything.
+        let mut v = vec![1.0f32; 5];
+        par_chunks_mut(&pool, &mut v, 1000, |ci, chunk| {
+            assert_eq!(ci, 0);
+            assert_eq!(chunk.len(), 5);
+            for x in chunk {
+                *x += 1.0;
+            }
+        });
+        assert_eq!(v, vec![2.0; 5]);
+    }
+
+    #[test]
+    fn pool_drops_cleanly_and_is_reusable() {
+        let pool = ComputePool::new(3);
+        for _ in 0..50 {
+            let total = AtomicU32::new(0);
+            pool.run_chunks(8, &|_l, ci| {
+                total.fetch_add(ci as u32, Ordering::Relaxed);
+            });
+            assert_eq!(total.load(Ordering::Relaxed), 28);
+        }
+        drop(pool); // joins workers; a hang here fails the test run
+    }
+}

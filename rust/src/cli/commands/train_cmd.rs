@@ -42,6 +42,24 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
         }
         cfg.cluster.switch_of_worker = switches;
     }
+    if let Some(v) = a.get("threads") {
+        // Intra-op compute threads per worker; `auto` (the default)
+        // gives each worker a disjoint share of the machine's cores.
+        cfg.compute_threads = match v {
+            "auto" => 0,
+            _ => {
+                let t: usize = v.parse().map_err(|_| {
+                    crate::Error::msg("--threads wants a positive integer or `auto`")
+                })?;
+                if t == 0 {
+                    return Err(crate::Error::msg(
+                        "--threads must be >= 1 (use `auto` for the per-worker core share)",
+                    ));
+                }
+                t
+            }
+        };
+    }
     if let Some(v) = a.get("model") {
         cfg.model = v.to_string();
     }
@@ -124,6 +142,8 @@ pub fn run(argv: &[String]) -> Result<i32> {
     }
     sync_dataset_meta(&mut cfg)?;
 
+    // The worker x thread core-budget check (thread_budget_warning)
+    // runs inside train(), which every entry point shares.
     let summary = train(&cfg)?;
     println!(
         "trained {} steps on {} worker(s) in {:.1}s  ({:.2} s/20it)",
@@ -201,6 +221,26 @@ mod tests {
         assert!(err.is_err(), "length mismatch must fail validation");
         let mut cfg = TrainConfig::default();
         assert!(apply_overrides(&mut cfg, &args("--switches 0,zebra")).is_err());
+    }
+
+    #[test]
+    fn threads_override_validates() {
+        // Integers >= 1 and `auto` parse; 0 and junk are rejected.
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--threads 4")).unwrap();
+        assert_eq!(cfg.compute_threads, 4);
+        apply_overrides(&mut cfg, &args("--threads auto")).unwrap();
+        assert_eq!(cfg.compute_threads, 0);
+        let err = apply_overrides(&mut cfg, &args("--threads 0")).unwrap_err();
+        assert!(format!("{err}").contains(">= 1"), "{err}");
+        assert!(apply_overrides(&mut cfg, &args("--threads many")).is_err());
+        // Oversubscription is a warning (advisory), not an error: the
+        // budget check fires exactly when workers * threads > cores.
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--workers 2 --threads 3")).unwrap();
+        use crate::coordinator::trainer::thread_budget_warning_for;
+        assert!(thread_budget_warning_for(&cfg, 4).is_some());
+        assert!(thread_budget_warning_for(&cfg, 8).is_none());
     }
 
     #[test]

@@ -56,12 +56,13 @@ USAGE:
                 [--shard N] [--hw N] [--seed N]
   tmg train     [--config FILE] [--model M] [--backend native|xla|TAG]
                 [--steps N] [--batch N] [--workers N] [--switches 0,0,1]
-                [--loader parallel|serial] [--transport K] [--period N]
-                [--lr F] [--dropout F] [--seed N] [--data-dir DIR]
-                [--checkpoint-dir DIR] [--csv FILE]
+                [--threads N|auto] [--loader parallel|serial]
+                [--transport K] [--period N] [--lr F] [--dropout F]
+                [--seed N] [--data-dir DIR] [--checkpoint-dir DIR]
+                [--csv FILE]
   tmg eval      --checkpoint FILE [--config FILE] [--model M]
                 [--backend B] [--data-dir DIR] [--batch N]
-                [--max-batches N]
+                [--threads N|auto] [--max-batches N]
   tmg calibrate [--artifacts DIR] [--runs N]
   tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]
   tmg inspect   [--artifacts DIR]

@@ -155,6 +155,12 @@ pub struct TrainConfig {
     /// Dropout probability on hidden FC layers (native backend only;
     /// the XLA artifacts bake their own rate in).
     pub dropout: f32,
+    /// Intra-op compute threads per worker for the native backend.
+    /// `0` = auto: each of the N workers gets a disjoint share of the
+    /// machine, `floor(cores / workers)` (min 1), so N workers × T
+    /// threads never oversubscribes.  The thread count changes
+    /// wall-clock only — step results are bit-identical for any value.
+    pub compute_threads: usize,
     pub batch_per_worker: usize,
     pub steps: usize,
     pub eval_every: usize,
@@ -177,6 +183,7 @@ impl Default for TrainConfig {
             model: "alexnet-tiny".into(),
             backend: "native".into(),
             dropout: 0.5,
+            compute_threads: 0,
             batch_per_worker: 16,
             steps: 200,
             eval_every: 0,
@@ -239,6 +246,18 @@ impl TrainConfig {
             model: doc.str_or("model", "name", &d.model),
             backend: doc.str_or("model", "backend", &d.backend),
             dropout: doc.f64_or("training", "dropout", d.dropout as f64) as f32,
+            compute_threads: match doc.get("training", "threads") {
+                None => d.compute_threads,
+                Some(v) => match (v.as_str(), v.as_i64()) {
+                    (Some("auto"), _) => 0,
+                    (_, Some(i)) if i >= 0 => i as usize,
+                    _ => {
+                        return Err(Error::Config(
+                            "training.threads: want a non-negative integer or \"auto\"".into(),
+                        ))
+                    }
+                },
+            },
             batch_per_worker: doc.i64_or("training", "batch_per_worker", 16) as usize,
             steps: doc.i64_or("training", "steps", d.steps as i64) as usize,
             eval_every: doc.i64_or("training", "eval_every", 0) as usize,
@@ -296,7 +315,21 @@ impl TrainConfig {
         if self.data.shard_examples == 0 {
             return Err(Error::Config("data.shard_examples must be > 0".into()));
         }
+        if self.compute_threads > 256 {
+            return Err(Error::Config("training.threads must be <= 256".into()));
+        }
         Ok(())
+    }
+
+    /// Intra-op compute threads each worker's backend gets.  Explicit
+    /// when `compute_threads > 0`; auto (`0`) partitions the machine's
+    /// cores into disjoint per-worker shares: `floor(cores / workers)`,
+    /// min 1.
+    pub fn threads_per_worker(&self) -> usize {
+        if self.compute_threads > 0 {
+            return self.compute_threads;
+        }
+        (crate::util::available_cores() / self.cluster.workers.max(1)).max(1)
     }
 
     /// Artifact name this config resolves to (manifest lookup key).
@@ -354,6 +387,32 @@ switch_of_worker = [0, 1]
         assert_eq!(cfg.exchange.period, 2);
         assert_eq!(cfg.cluster.switch_of_worker, vec![0, 1]);
         assert_eq!(cfg.train_artifact_name(), "train_alexnet-micro_cudnn_r2_b8");
+    }
+
+    #[test]
+    fn compute_threads_parsed_and_validated() {
+        // Default is auto (0).
+        assert_eq!(TrainConfig::default().compute_threads, 0);
+        let doc = TomlDoc::parse("[training]\nthreads = 4").unwrap();
+        assert_eq!(TrainConfig::from_doc(&doc).unwrap().compute_threads, 4);
+        let doc = TomlDoc::parse("[training]\nthreads = \"auto\"").unwrap();
+        assert_eq!(TrainConfig::from_doc(&doc).unwrap().compute_threads, 0);
+        let doc = TomlDoc::parse("[training]\nthreads = \"lots\"").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse("[training]\nthreads = 10000").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        // Explicit counts pass through; auto divides cores by workers.
+        let mut cfg = TrainConfig::default();
+        cfg.compute_threads = 3;
+        assert_eq!(cfg.threads_per_worker(), 3);
+        cfg.compute_threads = 0;
+        assert!(cfg.threads_per_worker() >= 1);
+        // Auto shares are disjoint: workers * share <= cores.
+        let cores = crate::util::available_cores();
+        for workers in [1, 2, 4, 64] {
+            cfg.cluster = ClusterConfig { workers, switch_of_worker: vec![0; workers] };
+            assert!(workers * cfg.threads_per_worker() <= cores.max(workers));
+        }
     }
 
     #[test]

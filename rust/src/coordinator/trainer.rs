@@ -106,10 +106,47 @@ pub fn effective_transport(cfg: &TrainConfig) -> TransportKind {
     }
 }
 
+/// Core-budget check against an explicit core count: `Some(warning)`
+/// when an *explicit* `--threads` makes N workers × T threads exceed
+/// the machine.  Auto (`compute_threads == 0`) partitions cores into
+/// disjoint per-worker shares and can never oversubscribe.
+pub fn thread_budget_warning_for(cfg: &TrainConfig, cores: usize) -> Option<String> {
+    if cfg.compute_threads == 0 {
+        return None;
+    }
+    let workers = cfg.cluster.workers;
+    let want = workers * cfg.compute_threads;
+    (want > cores).then(|| {
+        format!(
+            "{workers} worker(s) x {} compute thread(s) = {want} > {cores} available \
+             core(s): replicas will contend instead of overlapping \
+             (--threads {} keeps the shares disjoint)",
+            cfg.compute_threads,
+            (cores / workers.max(1)).max(1)
+        )
+    })
+}
+
+/// [`thread_budget_warning_for`] against this machine's parallelism.
+pub fn thread_budget_warning(cfg: &TrainConfig) -> Option<String> {
+    thread_budget_warning_for(cfg, crate::util::available_cores())
+}
+
 /// Run a full training job per the config.
 pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     cfg.validate()?;
     let workers = cfg.cluster.workers;
+
+    // Core partitioning: each worker's backend gets a disjoint share of
+    // the machine (auto) or the explicit --threads count.  Intra-op
+    // threads change wall-clock only; results are thread-count-invariant.
+    if let Some(w) = thread_budget_warning(cfg) {
+        log::warn!("{w}");
+    }
+    log::info!(
+        "compute: {workers} worker(s) x {} intra-op thread(s) per step",
+        cfg.threads_per_worker()
+    );
 
     // Build the collective fabric (handles move into the threads).
     // N = 1 -> no-op, N = 2 -> the paper's pairwise fast path,
@@ -339,5 +376,22 @@ mod tests {
             assert_eq!(effective_hop_transports(&cfg), vec![kind; 3]);
             assert_eq!(effective_transport(&cfg), kind);
         }
+    }
+
+    #[test]
+    fn thread_budget_warns_only_on_explicit_oversubscription() {
+        let mut cfg = cfg_with(vec![0, 0], TransportKind::P2p);
+        // Auto partitions the machine: never a warning, whatever cores.
+        cfg.compute_threads = 0;
+        assert!(thread_budget_warning_for(&cfg, 1).is_none());
+        assert!(thread_budget_warning_for(&cfg, 64).is_none());
+        // 2 workers x 2 threads fits 4 cores exactly.
+        cfg.compute_threads = 2;
+        assert!(thread_budget_warning_for(&cfg, 4).is_none());
+        // ... but not 2 cores; the warning names a fitting value.
+        let w = thread_budget_warning_for(&cfg, 2).expect("oversubscribed");
+        assert!(w.contains("--threads 1"), "{w}");
+        cfg.compute_threads = 8;
+        assert!(thread_budget_warning_for(&cfg, 4).is_some());
     }
 }

@@ -11,10 +11,13 @@
 //! a depth-1 bounded channel — the exact double-buffer the paper built
 //! with two shared GPU variables.  A step then pays
 //! `max(load, compute)`; the `stall_seconds` stat measures the residue
-//! (E3's overlap-efficiency metric).
+//! (E3's overlap-efficiency metric).  The hand-off is fully park-based
+//! (the channel's own blocking `send`/`recv`): the producer never
+//! spins or sleeps, and shutdown (`Drop`) wakes a parked producer by
+//! draining the staged batch before joining the thread.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -202,19 +205,13 @@ impl ParallelLoader {
                 let failed = item.is_err();
                 // Block until the trainer takes the staged batch (the
                 // paper's "wait for the training process to swap").
-                let mut pending = item;
-                loop {
-                    match tx.try_send(pending) {
-                        Ok(()) => break,
-                        Err(TrySendError::Full(it)) => {
-                            if stop2.load(Ordering::Relaxed) {
-                                return;
-                            }
-                            pending = it;
-                            std::thread::sleep(std::time::Duration::from_micros(50));
-                        }
-                        Err(TrySendError::Disconnected(_)) => return,
-                    }
+                // `SyncSender::send` parks this thread — no polling —
+                // and returns `Err` when the receiver is gone, which is
+                // also how shutdown unblocks a parked producer: `Drop`
+                // drains the staged batch (completing this send) and
+                // the next loop iteration observes the stop flag.
+                if tx.send(item).is_err() {
+                    return;
                 }
                 if failed {
                     return;
@@ -256,7 +253,10 @@ impl BatchSource for ParallelLoader {
 impl Drop for ParallelLoader {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        // Drain anything staged so the producer unblocks, then join.
+        // Drain anything staged so a producer parked in `send` wakes
+        // up; it then either exits on the stop flag or completes one
+        // last send into the slot we just freed — never blocks again —
+        // so the join is bounded by one `produce()`.
         while self.rx.try_recv().is_ok() {}
         if let Some(h) = self.handle.take() {
             let _ = h.join();
@@ -358,5 +358,31 @@ mod tests {
         let dir = make_dataset("drop");
         let p = ParallelLoader::new(&cfg(&dir, 0, 1)).unwrap();
         drop(p); // must not hang
+    }
+
+    #[test]
+    fn drop_mid_epoch_unparks_and_joins_the_producer() {
+        // Regression for the old 50µs try_send poll loop: after a few
+        // batches the producer is parked in a blocking `send` with the
+        // next batch staged.  Drop must wake it (by draining the staged
+        // batch), let it observe the stop flag, and join the thread —
+        // all without a hang.  The join inside Drop *is* the
+        // thread-exited assertion; the bound just keeps a regression
+        // from masquerading as a slow disk.
+        let dir = make_dataset("midepoch");
+        let mut p = ParallelLoader::new(&cfg(&dir, 0, 1)).unwrap();
+        for _ in 0..3 {
+            p.next_batch().unwrap();
+        }
+        // Give the producer time to stage a batch and park on the full
+        // channel.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let t = std::time::Instant::now();
+        drop(p);
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "drop took {:?}; producer did not unpark",
+            t.elapsed()
+        );
     }
 }

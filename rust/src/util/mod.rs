@@ -16,3 +16,9 @@ pub use crc32::crc32;
 pub use json::Json;
 pub use prng::Pcg32;
 pub use timer::Timer;
+
+/// Cores available to this process (1 when the query fails) — the one
+/// place the `available_parallelism` fallback policy lives.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

@@ -94,6 +94,40 @@ fn two_workers_stay_synchronized_and_converge() {
 }
 
 #[test]
+fn two_workers_times_two_threads_stay_synchronized() {
+    // Intra-op parallelism must compose with the collective fabric:
+    // with 2 replicas each stepping on a 2-lane compute pool, the
+    // strict full-state invariant (period 1 + momenta) still holds,
+    // because the pool's chunked kernels are bit-identical for any
+    // lane count.  Regression guard for the intra-op parallel backend.
+    let mut cfg = micro_cfg("pair2x2", 20, 2);
+    cfg.compute_threads = 2;
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.exchange_rounds, 20);
+    let divergence = s.final_divergence.expect("2 workers report divergence");
+    assert!(
+        divergence < 1e-6,
+        "replicas diverged under intra-op parallelism: {divergence}"
+    );
+    let first = s.losses[0];
+    let late = tail_mean(&s, 10);
+    assert!(late < 0.9 * first, "loss {first} -> {late}");
+}
+
+#[test]
+fn thread_count_does_not_change_the_math() {
+    // The whole training job — loader, N=1 coordinator, backend —
+    // yields identical losses for 1 and 2 intra-op threads.
+    let mut a = micro_cfg("threadmath", 8, 1);
+    a.compute_threads = 1;
+    let mut b = micro_cfg("threadmath", 8, 1);
+    b.compute_threads = 2;
+    let sa = train(&a).unwrap();
+    let sb = train(&b).unwrap();
+    assert_eq!(sa.losses, sb.losses, "--threads must be semantically transparent");
+}
+
+#[test]
 fn loader_mode_does_not_change_the_math() {
     let mut a = micro_cfg("loadermath", 8, 1);
     a.loader_mode = LoaderMode::Parallel;

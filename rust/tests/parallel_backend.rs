@@ -1,0 +1,340 @@
+//! Determinism-first contract of the intra-op parallel native path:
+//! every pool kernel must be **bit-identical** across lane counts
+//! (fixed shape-derived chunk boundaries, disjoint writes, fixed-order
+//! chunk reductions), and the forward/FC kernels additionally bitwise
+//! match their serial reference forms.  The capstone pins the full
+//! `train_step` — loss and every parameter/momentum — across
+//! `threads ∈ {1, 2, 4}`, which is what keeps the N-replica divergence
+//! invariants valid under intra-op parallelism.
+//!
+//! Shapes are deliberately awkward: single rows/examples, primes,
+//! exactly `MAX_CHUNKS` items (chunk == 1), more items than chunks,
+//! and data shorter than one `ELEMWISE_CHUNK`.
+
+use theano_mgpu::backend::native::gemm::{
+    matmul_nn, matmul_nt, matmul_tn, par_matmul_nn, par_matmul_nt, par_matmul_tn,
+};
+use theano_mgpu::backend::native::layers::{
+    conv2d_backward, conv2d_backward_pool, conv2d_forward, conv2d_forward_pool, dropout_backward,
+    dropout_forward, fc_backward, fc_backward_pool, fc_forward, fc_forward_pool, maxpool_backward,
+    maxpool_backward_pool, maxpool_forward, maxpool_forward_pool, relu_backward,
+    relu_backward_pool, relu_forward, relu_forward_pool, Conv2dShape, ConvScratch, FcShape,
+    PoolShape,
+};
+use theano_mgpu::backend::native::pool::{shape_chunks, ComputePool, ELEMWISE_CHUNK, MAX_CHUNKS};
+use theano_mgpu::backend::{NativeBackend, StepBackend};
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::sim::flops::alexnet_micro;
+use theano_mgpu::tensor::{HostTensor, Shape};
+use theano_mgpu::util::Pcg32;
+
+const LANE_COUNTS: [usize; 3] = [1, 2, 4];
+
+fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 1.0);
+    // Sprinkle zeros so the GEMM sparsity skips stay on the path.
+    for (i, x) in v.iter_mut().enumerate() {
+        if i % 7 == 0 {
+            *x = 0.0;
+        }
+    }
+    v
+}
+
+fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| theano_mgpu::util::math::rel_err(*x, *y))
+        .fold(0.0, f32::max)
+}
+
+#[test]
+fn gemm_row_blocks_match_serial_bitwise() {
+    // 1 row, prime rows, rows == MAX_CHUNKS (chunk length 1) and
+    // rows > MAX_CHUNKS; n crosses the NC=512 blocking edge once.
+    let shapes = [(1, 7, 5), (13, 11, 17), (MAX_CHUNKS, 5, 9), (33, 66, 130), (3, 64, 520)];
+    let mut rng = Pcg32::seeded(21);
+    for threads in LANE_COUNTS {
+        let pool = ComputePool::new(threads);
+        for (m, k, n) in shapes {
+            let a = randn(&mut rng, m * k);
+            let at: Vec<f32> = {
+                let mut t = vec![0.0; m * k];
+                for r in 0..m {
+                    for c in 0..k {
+                        t[c * m + r] = a[r * k + c];
+                    }
+                }
+                t
+            };
+            let b = randn(&mut rng, k * n);
+            let bt: Vec<f32> = {
+                let mut t = vec![0.0; k * n];
+                for r in 0..k {
+                    for c in 0..n {
+                        t[c * k + r] = b[r * n + c];
+                    }
+                }
+                t
+            };
+
+            let mut want = vec![0.1; m * n];
+            matmul_nn(m, k, n, &a, &b, &mut want);
+            let mut got = vec![0.1; m * n];
+            par_matmul_nn(&pool, m, k, n, &a, &b, &mut got);
+            assert_eq!(want, got, "nn {m}x{k}x{n} t{threads}");
+
+            let mut want = vec![-0.2; m * n];
+            matmul_nt(m, k, n, &a, &bt, &mut want);
+            let mut got = vec![-0.2; m * n];
+            par_matmul_nt(&pool, m, k, n, &a, &bt, &mut got);
+            assert_eq!(want, got, "nt {m}x{k}x{n} t{threads}");
+
+            let mut want = vec![0.0; m * n];
+            matmul_tn(m, k, n, &at, &b, &mut want);
+            let mut got = vec![0.0; m * n];
+            par_matmul_tn(&pool, m, k, n, &at, &b, &mut got);
+            assert_eq!(want, got, "tn {m}x{k}x{n} t{threads}");
+        }
+    }
+}
+
+/// Conv geometry used by the batch-sweep tests.
+fn conv_shape(batch: usize) -> Conv2dShape {
+    Conv2dShape { batch, cin: 2, cout: 3, k: 3, stride: 2, pad: 1, in_hw: 7, out_hw: 4 }
+}
+
+fn conv_scratch(lanes: usize, batch: usize, s: &Conv2dShape) -> ConvScratch {
+    let mut scratch = ConvScratch::default();
+    scratch.ensure(lanes, shape_chunks(batch).0, s.col_elems(), s.w_elems(), s.cout);
+    scratch
+}
+
+#[test]
+fn conv_forward_matches_serial_bitwise_at_awkward_batches() {
+    let mut rng = Pcg32::seeded(31);
+    // 1 example, prime, exactly MAX_CHUNKS, and > MAX_CHUNKS (chunk 2).
+    for batch in [1, 5, MAX_CHUNKS, MAX_CHUNKS + 1] {
+        let s = conv_shape(batch);
+        let x = randn(&mut rng, batch * s.in_elems());
+        let w = randn(&mut rng, s.w_elems());
+        let b = randn(&mut rng, s.cout);
+        let mut want = vec![0.0; batch * s.out_elems()];
+        let mut col = vec![0.0; s.col_elems()];
+        conv2d_forward(&x, &w, &b, &mut want, &mut col, &s);
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::new(threads);
+            let mut scratch = conv_scratch(pool.lanes(), batch, &s);
+            let mut got = vec![0.0; want.len()];
+            conv2d_forward_pool(&pool, &x, &w, &b, &mut got, &mut scratch, &s);
+            assert_eq!(want, got, "conv fwd b{batch} t{threads}");
+        }
+    }
+}
+
+#[test]
+fn conv_backward_is_lane_count_invariant_and_close_to_serial() {
+    let mut rng = Pcg32::seeded(37);
+    for batch in [1, 5, MAX_CHUNKS, MAX_CHUNKS + 1] {
+        let s = conv_shape(batch);
+        let x = randn(&mut rng, batch * s.in_elems());
+        let w = randn(&mut rng, s.w_elems());
+        let dy = randn(&mut rng, batch * s.out_elems());
+
+        // Serial reference (example-order accumulation).
+        let mut dw_ref = vec![0.0; w.len()];
+        let mut db_ref = vec![0.0; s.cout];
+        let mut dx_ref = vec![0.0; x.len()];
+        let mut col = vec![0.0; s.col_elems()];
+        let mut dcol = vec![0.0; s.col_elems()];
+        conv2d_backward(
+            &x,
+            &w,
+            &dy,
+            &mut dw_ref,
+            &mut db_ref,
+            &mut dx_ref,
+            &mut col,
+            &mut dcol,
+            &s,
+        );
+
+        let mut first: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::new(threads);
+            let mut scratch = conv_scratch(pool.lanes(), batch, &s);
+            let mut dw = vec![0.0; w.len()];
+            let mut db = vec![0.0; s.cout];
+            let mut dx = vec![0.0; x.len()];
+            conv2d_backward_pool(
+                &pool,
+                &x,
+                &w,
+                &dy,
+                &mut dw,
+                &mut db,
+                &mut dx,
+                &mut scratch,
+                &s,
+            );
+            // dx is per-example: bitwise equal even to the serial path.
+            assert_eq!(dx_ref, dx, "conv dx b{batch} t{threads}");
+            // dw/db regroup the example sum by chunk: equal to f32
+            // rounding vs serial, *bitwise* across lane counts.
+            assert!(max_rel_err(&dw_ref, &dw) < 1e-4, "conv dw b{batch} t{threads}");
+            assert!(max_rel_err(&db_ref, &db) < 1e-4, "conv db b{batch} t{threads}");
+            match &first {
+                None => first = Some((dw, db, dx)),
+                Some((dw1, db1, dx1)) => {
+                    assert_eq!(dw1, &dw, "conv dw lanes b{batch} t{threads}");
+                    assert_eq!(db1, &db, "conv db lanes b{batch} t{threads}");
+                    assert_eq!(dx1, &dx, "conv dx lanes b{batch} t{threads}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn maxpool_matches_serial_bitwise() {
+    let mut rng = Pcg32::seeded(41);
+    // planes = batch*channels: 1, prime, > MAX_CHUNKS.
+    for (batch, channels) in [(1, 1), (1, 13), (3, 7)] {
+        let s = PoolShape { batch, channels, in_hw: 6, window: 2, stride: 2, out_hw: 3 };
+        let planes = batch * channels;
+        let x = randn(&mut rng, planes * s.in_hw * s.in_hw);
+        let out = planes * s.out_hw * s.out_hw;
+        let mut y_ref = vec![0.0; out];
+        let mut am_ref = vec![0u32; out];
+        maxpool_forward(&x, &mut y_ref, &mut am_ref, &s);
+        let dy = randn(&mut rng, out);
+        let mut dx_ref = vec![0.0; x.len()];
+        maxpool_backward(&dy, &am_ref, &mut dx_ref, &s);
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::new(threads);
+            let mut y = vec![0.0; out];
+            let mut am = vec![0u32; out];
+            maxpool_forward_pool(&pool, &x, &mut y, &mut am, &s);
+            assert_eq!(y_ref, y, "pool fwd {batch}x{channels} t{threads}");
+            assert_eq!(am_ref, am, "pool argmax {batch}x{channels} t{threads}");
+            let mut dx = vec![0.0; x.len()];
+            maxpool_backward_pool(&pool, &dy, &am, &mut dx, &s);
+            assert_eq!(dx_ref, dx, "pool bwd {batch}x{channels} t{threads}");
+        }
+    }
+}
+
+#[test]
+fn fc_and_relu_match_serial_bitwise() {
+    let mut rng = Pcg32::seeded(43);
+    // batch 1, prime dims, and dout == MAX_CHUNKS; lengths both under
+    // and over one ELEMWISE_CHUNK for the elementwise sweeps.
+    for (batch, din, dout) in [(1, 11, 3), (7, 29, MAX_CHUNKS), (5, ELEMWISE_CHUNK / 4, 9)] {
+        let s = FcShape { batch, din, dout };
+        let x = randn(&mut rng, batch * din);
+        let w = randn(&mut rng, dout * din);
+        let b = randn(&mut rng, dout);
+        let dy = randn(&mut rng, batch * dout);
+
+        let mut y_ref = vec![0.0; batch * dout];
+        fc_forward(&x, &w, &b, &mut y_ref, &s);
+        let mut dw_ref = vec![0.0; w.len()];
+        let mut db_ref = vec![0.0; dout];
+        let mut dx_ref = vec![0.0; x.len()];
+        fc_backward(&x, &w, &dy, &mut dw_ref, &mut db_ref, &mut dx_ref, &s);
+
+        let mut relu_ref = y_ref.clone();
+        relu_forward(&mut relu_ref);
+        let mut drelu_ref = dy.clone();
+        relu_backward(&relu_ref, &mut drelu_ref);
+
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::new(threads);
+            let mut y = vec![0.0; batch * dout];
+            fc_forward_pool(&pool, &x, &w, &b, &mut y, &s);
+            assert_eq!(y_ref, y, "fc fwd {batch}x{din}x{dout} t{threads}");
+            let mut dw = vec![0.0; w.len()];
+            let mut db = vec![0.0; dout];
+            let mut dx = vec![0.0; x.len()];
+            fc_backward_pool(&pool, &x, &w, &dy, &mut dw, &mut db, &mut dx, &s);
+            assert_eq!(dw_ref, dw, "fc dw t{threads}");
+            assert_eq!(db_ref, db, "fc db t{threads}");
+            assert_eq!(dx_ref, dx, "fc dx t{threads}");
+
+            let mut r = y_ref.clone();
+            relu_forward_pool(&pool, &mut r);
+            assert_eq!(relu_ref, r, "relu fwd t{threads}");
+            let mut dr = dy.clone();
+            relu_backward_pool(&pool, &relu_ref, &mut dr);
+            assert_eq!(drelu_ref, dr, "relu bwd t{threads}");
+        }
+    }
+}
+
+#[test]
+fn dropout_is_lane_count_invariant_across_chunk_boundaries() {
+    // Longer than 2 chunks so multiple per-chunk streams interleave;
+    // also one short (sub-chunk) sweep.
+    for n in [100, 2 * ELEMWISE_CHUNK + 33] {
+        let mut first: Option<(Vec<f32>, Vec<f32>)> = None;
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::new(threads);
+            let mut a = vec![1.0f32; n];
+            let mut mask = vec![0.0f32; n];
+            dropout_forward(&pool, &mut a, &mut mask, 0.5, 99, 1);
+            let mut da = vec![2.0f32; n];
+            dropout_backward(&pool, &mut da, &mask);
+            for (g, &av) in da.iter().zip(&a) {
+                assert_eq!(*g, 2.0 * if av == 0.0 { 0.0 } else { 2.0 }, "replay");
+            }
+            match &first {
+                None => first = Some((a, mask)),
+                Some((a1, m1)) => {
+                    assert_eq!(a1, &a, "dropout acts n{n} t{threads}");
+                    assert_eq!(m1, &mask, "dropout mask n{n} t{threads}");
+                }
+            }
+        }
+    }
+}
+
+/// The capstone: a multi-step training run — forward, backward,
+/// dropout, SGD-momentum update — is bit-identical for
+/// `threads ∈ {1, 2, 4}`: same losses, same parameters, same momenta.
+#[test]
+fn train_step_is_bitwise_identical_across_thread_counts() {
+    let arch = alexnet_micro();
+    let mut rng = Pcg32::seeded(7);
+    // Batch 6: not a divisor-friendly size, exercises short chunks.
+    let batch = 6;
+    let images = HostTensor::rand_normal(Shape::of(&[batch, 3, 32, 32]), &mut rng, 1.0);
+    let labels: Vec<i32> =
+        (0..batch).map(|_| rng.below(arch.num_classes as u32) as i32).collect();
+
+    let run = |threads: usize| {
+        let mut backend = NativeBackend::with_threads(&arch, 0.5, threads);
+        assert_eq!(backend.threads(), threads);
+        let mut store = ParamStore::init(&backend.model().params, 11);
+        let mut losses = Vec::new();
+        for step in 0..4 {
+            let out = backend.train_step(&images, &labels, 0.02, 100 + step, &mut store).unwrap();
+            losses.push(out.loss);
+        }
+        let eval = backend.eval_batch(&images, &labels, &store).unwrap();
+        (losses, eval.loss, store)
+    };
+
+    let (losses1, eval1, store1) = run(1);
+    assert!(losses1.iter().all(|l| l.is_finite()));
+    for threads in [2, 4] {
+        let (losses_t, eval_t, store_t) = run(threads);
+        assert_eq!(losses1, losses_t, "losses diverged at {threads} threads");
+        assert_eq!(eval1, eval_t, "eval loss diverged at {threads} threads");
+        assert_eq!(
+            store1.max_divergence(&store_t),
+            0.0,
+            "params/momenta diverged at {threads} threads"
+        );
+    }
+}
