@@ -72,6 +72,23 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
     if let Some(v) = a.get("checkpoint-dir") {
         cfg.checkpoint_dir = Some(PathBuf::from(v));
     }
+    if let Some(v) = a.get("checkpoint-every") {
+        cfg.checkpoint_every =
+            v.parse().map_err(|_| crate::Error::msg("--checkpoint-every wants int"))?;
+    }
+    if let Some(v) = a.get("checkpoint-keep") {
+        cfg.checkpoint_keep =
+            v.parse().map_err(|_| crate::Error::msg("--checkpoint-keep wants int"))?;
+    }
+    if let Some(v) = a.get("eval-every") {
+        cfg.eval_every = v.parse().map_err(|_| crate::Error::msg("--eval-every wants int"))?;
+    }
+    if let Some(v) = a.get("resume") {
+        cfg.resume = Some(crate::config::ResumeFrom::parse(v));
+    } else if a.has_flag("resume") {
+        // Bare `--resume` (no value) means `--resume auto`.
+        cfg.resume = Some(crate::config::ResumeFrom::Auto);
+    }
     if let Some(v) = a.get("lr") {
         cfg.schedule.base_lr = v.parse().map_err(|_| crate::Error::msg("--lr wants a float"))?;
     }
@@ -145,8 +162,15 @@ pub fn run(argv: &[String]) -> Result<i32> {
     // The worker x thread core-budget check (thread_budget_warning)
     // runs inside train(), which every entry point shares.
     let summary = train(&cfg)?;
+    if let Some(from) = summary.resumed_from {
+        println!("resumed from checkpoint at step {from}");
+    }
+    // Report the steps *this invocation* executed; wall time covers
+    // exactly those (a resumed run did not re-train the restored ones;
+    // saturating: an already-complete `--resume auto` executes none).
+    let executed = summary.steps.saturating_sub(summary.resumed_from.unwrap_or(0));
     println!(
-        "trained {} steps on {} worker(s) in {:.1}s  ({:.2} s/20it)",
+        "trained {executed} steps (through step {}) on {} worker(s) in {:.1}s  ({:.2} s/20it)",
         summary.steps, summary.workers, summary.wall_seconds, summary.secs_per_20_iters
     );
     if let Some(last) = summary.losses.last() {
@@ -169,6 +193,15 @@ pub fn run(argv: &[String]) -> Result<i32> {
         println!(
             "worker {w} loader: {} batches, load {:.2}s, stall {:.2}s",
             st.batches, st.load_seconds, st.stall_seconds
+        );
+    }
+    for r in &summary.evals {
+        println!(
+            "step {:>5} validation: top-1 error {:.1}%  top-5 error {:.1}%  ({} examples)",
+            r.step,
+            100.0 * r.result.top1_error(),
+            100.0 * r.result.top5_error(),
+            r.result.examples
         );
     }
     if let Some(e) = summary.eval {
@@ -241,6 +274,29 @@ mod tests {
         use crate::coordinator::trainer::thread_budget_warning_for;
         assert!(thread_budget_warning_for(&cfg, 4).is_some());
         assert!(thread_budget_warning_for(&cfg, 8).is_none());
+    }
+
+    #[test]
+    fn lifecycle_overrides_parse() {
+        use crate::config::ResumeFrom;
+        let mut cfg = TrainConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &args("--checkpoint-every 50 --checkpoint-keep 3 --eval-every 25 --resume auto"),
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_every, 50);
+        assert_eq!(cfg.checkpoint_keep, 3);
+        assert_eq!(cfg.eval_every, 25);
+        assert_eq!(cfg.resume, Some(ResumeFrom::Auto));
+        // An explicit path resumes from that file; bare --resume = auto.
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--resume ckpts/run_step8.w0.ckpt")).unwrap();
+        assert_eq!(cfg.resume, Some(ResumeFrom::Path(PathBuf::from("ckpts/run_step8.w0.ckpt"))));
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--steps 8 --resume")).unwrap();
+        assert_eq!(cfg.resume, Some(ResumeFrom::Auto));
+        assert!(apply_overrides(&mut cfg, &args("--checkpoint-every soon")).is_err());
     }
 
     #[test]

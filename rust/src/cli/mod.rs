@@ -59,7 +59,8 @@ USAGE:
                 [--threads N|auto] [--loader parallel|serial]
                 [--transport K] [--period N] [--lr F] [--dropout F]
                 [--seed N] [--data-dir DIR] [--checkpoint-dir DIR]
-                [--csv FILE]
+                [--checkpoint-every N] [--checkpoint-keep N]
+                [--eval-every N] [--resume auto|PATH] [--csv FILE]
   tmg eval      --checkpoint FILE [--config FILE] [--model M]
                 [--backend B] [--data-dir DIR] [--batch N]
                 [--threads N|auto] [--max-batches N]
@@ -72,6 +73,11 @@ The default backend is `native`: a pure-Rust CPU implementation of the
 full AlexNet train/eval step — no AOT artifacts required.  Artifact
 backend tags (e.g. `refconv`) run through the XLA runtime instead and
 fall back to native when the artifacts are unavailable.
+
+Lifecycle: `--checkpoint-every N` snapshots each replica every N steps
+(atomic v2 files carrying the resume state), `--eval-every N` runs
+mid-training validation, and `--resume auto` (or a checkpoint PATH)
+restarts a killed run bit-exactly from the newest valid snapshot.
 ";
 
 /// Entry point used by main.rs; returns the process exit code.

@@ -11,6 +11,6 @@ mod types;
 
 pub use toml::TomlDoc;
 pub use types::{
-    ClusterConfig, DataConfig, ExchangeCfg, LoaderMode, LrSchedule, TrainConfig,
+    ClusterConfig, DataConfig, ExchangeCfg, LoaderMode, LrSchedule, ResumeFrom, TrainConfig,
     TransportKind,
 };

@@ -120,6 +120,26 @@ impl Default for DataConfig {
     }
 }
 
+/// Where `tmg train --resume` picks up from.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ResumeFrom {
+    /// Newest valid checkpoint in the checkpoint dir.
+    Auto,
+    /// An explicit checkpoint file (worker siblings are derived from
+    /// it for multi-worker runs).
+    Path(PathBuf),
+}
+
+impl ResumeFrom {
+    pub fn parse(s: &str) -> ResumeFrom {
+        if s == "auto" {
+            ResumeFrom::Auto
+        } else {
+            ResumeFrom::Path(PathBuf::from(s))
+        }
+    }
+}
+
 /// Worker topology (which virtual GPU sits on which PCIe switch).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -163,7 +183,19 @@ pub struct TrainConfig {
     pub compute_threads: usize,
     pub batch_per_worker: usize,
     pub steps: usize,
+    /// Mid-training validation cadence: evaluate the held-out split
+    /// every N steps (0 = final eval only).
     pub eval_every: usize,
+    /// Periodic snapshot cadence: every N steps each worker writes its
+    /// replica state to `checkpoint_dir` (0 = final checkpoint only).
+    pub checkpoint_every: usize,
+    /// Retention: keep this many newest *completed* periodic
+    /// checkpoint steps in addition to the one currently being written
+    /// (plus the best-by-validation-error one), so a kill mid-save
+    /// always leaves a complete resumable set.  0 = keep all.
+    pub checkpoint_keep: usize,
+    /// Resume source for this run (CLI `--resume auto|PATH`).
+    pub resume: Option<ResumeFrom>,
     pub log_every: usize,
     pub seed: u64,
     pub loader_mode: LoaderMode,
@@ -187,6 +219,9 @@ impl Default for TrainConfig {
             batch_per_worker: 16,
             steps: 200,
             eval_every: 0,
+            checkpoint_every: 0,
+            checkpoint_keep: 0,
+            resume: None,
             log_every: 20,
             seed: 42,
             loader_mode: LoaderMode::Parallel,
@@ -261,6 +296,12 @@ impl TrainConfig {
             batch_per_worker: doc.i64_or("training", "batch_per_worker", 16) as usize,
             steps: doc.i64_or("training", "steps", d.steps as i64) as usize,
             eval_every: doc.i64_or("training", "eval_every", 0) as usize,
+            checkpoint_every: doc.i64_or("training", "checkpoint_every", 0) as usize,
+            checkpoint_keep: doc.i64_or("training", "checkpoint_keep", 0) as usize,
+            resume: doc
+                .get("training", "resume")
+                .and_then(|v| v.as_str())
+                .map(ResumeFrom::parse),
             log_every: doc.i64_or("training", "log_every", 20) as usize,
             seed: doc.i64_or("training", "seed", 42) as u64,
             loader_mode: LoaderMode::parse(&doc.str_or("training", "loader", "parallel"))?,
@@ -335,6 +376,32 @@ impl TrainConfig {
     /// Artifact name this config resolves to (manifest lookup key).
     pub fn train_artifact_name(&self) -> String {
         format!("train_{}_{}_b{}", self.model, self.backend, self.batch_per_worker)
+    }
+
+    /// FNV-1a fingerprint of everything that must match between the
+    /// saving and the resuming run for `--resume` to be bit-exact:
+    /// worker count, exchange period, momentum inclusion, per-worker
+    /// batch size, dropout rate and the experiment seed (the
+    /// data/augmentation/init streams all key off it).  Stored in v2
+    /// checkpoints and checked at restore.  Deliberately excludes knobs
+    /// that provably do not change the math: transport, loader mode,
+    /// thread count.
+    pub fn resume_fingerprint(&self) -> u64 {
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for v in [
+            self.cluster.workers as u64,
+            self.exchange.period as u64,
+            self.exchange.include_momentum as u64,
+            self.batch_per_worker as u64,
+            self.dropout.to_bits() as u64,
+            self.seed,
+        ] {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        }
+        h
     }
 }
 
@@ -423,6 +490,53 @@ switch_of_worker = [0, 1]
         assert_eq!(TrainConfig::default().dropout, 0.5);
         let doc = TomlDoc::parse("[training]\ndropout = 1.5").unwrap();
         assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn lifecycle_keys_parse() {
+        let doc = TomlDoc::parse(
+            "[training]\ncheckpoint_every = 50\ncheckpoint_keep = 3\n\
+             eval_every = 100\nresume = \"auto\"",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_every, 50);
+        assert_eq!(cfg.checkpoint_keep, 3);
+        assert_eq!(cfg.eval_every, 100);
+        assert_eq!(cfg.resume, Some(ResumeFrom::Auto));
+        let doc = TomlDoc::parse("[training]\nresume = \"ckpts/run_step8.ckpt\"").unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.resume, Some(ResumeFrom::Path(PathBuf::from("ckpts/run_step8.ckpt"))));
+        let d = TrainConfig::default();
+        assert_eq!((d.checkpoint_every, d.checkpoint_keep, d.resume), (0, 0, None));
+    }
+
+    #[test]
+    fn resume_fingerprint_tracks_bit_exactness_knobs() {
+        let base = TrainConfig::default();
+        let fp = base.resume_fingerprint();
+        assert_eq!(fp, TrainConfig::default().resume_fingerprint(), "deterministic");
+        let mut c = base.clone();
+        c.seed = 43;
+        assert_ne!(fp, c.resume_fingerprint());
+        let mut c = base.clone();
+        c.exchange.period = 2;
+        assert_ne!(fp, c.resume_fingerprint());
+        let mut c = base.clone();
+        c.exchange.include_momentum = false;
+        assert_ne!(fp, c.resume_fingerprint());
+        let mut c = base.clone();
+        c.batch_per_worker = 32;
+        assert_ne!(fp, c.resume_fingerprint());
+        let mut c = base.clone();
+        c.dropout = 0.25;
+        assert_ne!(fp, c.resume_fingerprint());
+        // Knobs that never change the math leave it untouched.
+        let mut c = base.clone();
+        c.exchange.transport = TransportKind::Serialized;
+        c.loader_mode = LoaderMode::Serial;
+        c.compute_threads = 7;
+        assert_eq!(fp, c.resume_fingerprint());
     }
 
     #[test]

@@ -3,12 +3,21 @@
 //! Mirrors the paper's §3 measurement ("top-1 class validation error
 //! rate is 42.6%, top-5 is 19.9%") on the substituted corpus, through
 //! whichever [`StepBackend`] the config selects.
+//!
+//! The split is walked **sequentially and completely**: evaluation
+//! needs no shuffle, and the final partial batch is evaluated too
+//! (backends with a variable batch, i.e. the native path), so the
+//! reported error rates cover the *true* example count.  Only a
+//! fixed-batch compiled backend has to drop the ragged tail — and says
+//! so in the log instead of silently shrinking the denominator.
 
 use crate::backend::StepBackend;
 use crate::config::TrainConfig;
-use crate::data::loader::{BatchSource, LoaderCfg, SerialLoader};
+use crate::data::loader::open_split;
+use crate::data::preprocess::{preprocess_into, Augment};
 use crate::error::Result;
 use crate::params::ParamStore;
+use crate::tensor::{HostTensor, Shape};
 
 /// Aggregate eval result.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -29,50 +38,77 @@ impl EvalResult {
     }
 }
 
-/// Run the backend's eval forward over (a prefix of) the validation
-/// split.
+/// Run the backend's eval forward over the validation split.
 ///
-/// `max_batches = 0` means the full split (floor to whole batches —
-/// a fixed-batch compiled step cannot take a ragged tail, and the
-/// native path keeps the same convention).
+/// `max_batches = 0` means the full split, including the ragged final
+/// batch when the backend accepts a variable batch size.  A nonzero
+/// `max_batches` caps the number of (full-size) batches — the quick
+/// spot-check mode of `tmg eval --max-batches N`.
+///
+/// `mean_loss` is example-weighted, so the partial batch contributes
+/// in proportion to its size.
 pub fn evaluate(
     cfg: &TrainConfig,
     backend: &mut dyn StepBackend,
     store: &ParamStore,
     max_batches: usize,
 ) -> Result<EvalResult> {
-    let batch = backend.eval_batch_size().unwrap_or(cfg.batch_per_worker).max(1);
+    let fixed = backend.eval_batch_size();
+    let batch = fixed.unwrap_or(cfg.batch_per_worker).max(1);
     let crop_hw = backend.model().image_hw;
-    let lcfg = LoaderCfg {
-        data_dir: &cfg.data.dir,
-        split: "val",
-        batch,
-        crop_hw,
-        worker: 0,
-        workers: 1,
-        seed: cfg.seed,
-        train_augment: false, // center crop, no flip
-        verify_shards: false,
-    };
-    let mut loader = SerialLoader::new(&lcfg)?;
-    let total_batches = cfg.data.val_examples / batch;
-    let n_batches = if max_batches == 0 {
-        total_batches
-    } else {
-        total_batches.min(max_batches)
-    };
+    let (mut dataset, mean) = open_split(&cfg.data.dir, "val", crop_hw, false)?;
+    let stored_hw = dataset.height;
+    let channels = dataset.channels;
+    let total = dataset.len();
 
     let mut out = EvalResult::default();
     let mut loss_sum = 0f64;
-    for _ in 0..n_batches {
-        let b = loader.next_batch()?;
-        let r = backend.eval_batch(&b.images, &b.labels, store)?;
-        loss_sum += r.loss as f64;
+    let mut pix_buf: Vec<u8> = Vec::new();
+    let stride = channels * crop_hw * crop_hw;
+    let mut start = 0usize;
+    let mut batches = 0usize;
+    while start < total {
+        if max_batches > 0 && batches >= max_batches {
+            break;
+        }
+        let n = (total - start).min(batch);
+        if n < batch && fixed.is_some() {
+            log::warn!(
+                "eval: backend {:?} has a fixed batch of {batch}; dropping the ragged \
+                 tail of {n} example(s) — reported rates cover {} of {total}",
+                backend.name(),
+                out.examples
+            );
+            break;
+        }
+        let mut images = HostTensor::zeros(Shape::of(&[n, channels, crop_hw, crop_hw]));
+        let mut labels = Vec::with_capacity(n);
+        let slice = images.as_mut_slice();
+        for bi in 0..n {
+            let label = dataset.read_into(start + bi, &mut pix_buf)?;
+            preprocess_into(
+                &pix_buf,
+                &mean,
+                stored_hw,
+                crop_hw,
+                Augment::center(stored_hw, crop_hw),
+                &mut slice[bi * stride..(bi + 1) * stride],
+            )?;
+            labels.push(label as i32);
+        }
+        let r = backend.eval_batch(&images, &labels, store)?;
+        loss_sum += r.loss as f64 * n as f64;
         out.top1_correct += r.top1 as usize;
         out.top5_correct += r.top5 as usize;
-        out.examples += b.labels.len();
+        out.examples += n;
+        start += n;
+        batches += 1;
     }
-    out.mean_loss = if n_batches > 0 { (loss_sum / n_batches as f64) as f32 } else { 0.0 };
+    out.mean_loss = if out.examples > 0 {
+        (loss_sum / out.examples as f64) as f32
+    } else {
+        0.0
+    };
     Ok(out)
 }
 

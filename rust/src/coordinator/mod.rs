@@ -12,5 +12,5 @@ pub mod eval;
 pub mod trainer;
 pub mod worker;
 
-pub use trainer::{train, TrainSummary, WindowRecord};
-pub use worker::{StepRecord, WorkerOutcome};
+pub use trainer::{train, EvalRecord, TrainSummary, WindowRecord};
+pub use worker::{step_seed, StepRecord, WorkerMsg, WorkerOutcome};

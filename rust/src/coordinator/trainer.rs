@@ -8,16 +8,21 @@
 //! switches — exactly what the hardware would force.  Same-switch hops
 //! keep the fast path even when other hops are downgraded.
 
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 
 use crate::comm::collective::{build_fabric, CollectiveStats};
-use crate::config::{TrainConfig, TransportKind};
+use crate::config::{ResumeFrom, TrainConfig, TransportKind};
 use crate::coordinator::eval::{evaluate, EvalResult};
-use crate::coordinator::worker::{run_worker, StepRecord, WorkerSpec};
+use crate::coordinator::worker::{run_worker, WorkerMsg, WorkerSpec};
 use crate::data::loader::LoaderStats;
+use crate::data::sampler::EpochSampler;
 use crate::error::{Error, Result};
 use crate::interconnect::topology::PcieTopology;
 use crate::metrics::{CsvWriter, ThroughputMeter};
+use crate::params::{
+    find_auto_resume, load_checkpoint, resume_set_from_path, ParamStore, ResumeSet, TrainState,
+};
 use crate::util::Timer;
 
 /// One closed 20-iteration window (Table 1's unit).
@@ -29,13 +34,24 @@ pub struct WindowRecord {
     pub mean_loss: f32,
 }
 
+/// One mid-training validation measurement (`eval_every` cadence).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub result: EvalResult,
+}
+
 /// Aggregate training outcome.
 #[derive(Debug)]
 pub struct TrainSummary {
     pub steps: usize,
     pub workers: usize,
+    /// Step this run resumed from (`--resume`), if any.
+    pub resumed_from: Option<usize>,
     pub wall_seconds: f64,
     pub windows: Vec<WindowRecord>,
+    /// Mid-training validation curve (empty unless `eval_every > 0`).
+    pub evals: Vec<EvalRecord>,
     pub losses: Vec<f32>,
     pub loader: Vec<LoaderStats>,
     pub exchange_rounds: u64,
@@ -132,10 +148,129 @@ pub fn thread_budget_warning(cfg: &TrainConfig) -> Option<String> {
     thread_budget_warning_for(cfg, crate::util::available_cores())
 }
 
+/// Resolve `cfg.resume` into a per-worker restore set.  `auto` scans
+/// the checkpoint dir for the newest valid, config-compatible set and
+/// silently starts fresh when none exists; an explicit path fails hard
+/// when it cannot be restored.
+fn resolve_resume(cfg: &TrainConfig) -> Result<Option<ResumeSet>> {
+    let workers = cfg.cluster.workers;
+    match &cfg.resume {
+        None => Ok(None),
+        Some(ResumeFrom::Auto) => {
+            let dir = cfg.checkpoint_dir.as_ref().ok_or_else(|| {
+                Error::Config("--resume auto needs --checkpoint-dir (nowhere to look)".into())
+            })?;
+            let found = find_auto_resume(dir, workers, cfg.resume_fingerprint())?;
+            if found.is_none() {
+                log::warn!("--resume auto: no valid checkpoint in {dir:?}; starting fresh");
+            }
+            Ok(found)
+        }
+        Some(ResumeFrom::Path(p)) => Ok(Some(resume_set_from_path(p, workers)?)),
+    }
+}
+
+/// The eval-curve CSV path derived from the step-metrics CSV path.
+fn eval_csv_path(metrics_csv: &Path) -> PathBuf {
+    metrics_csv.with_extension("eval.csv")
+}
+
+/// Drop CSV rows whose leading `step` column is >= `from` (rows the
+/// resumed run will re-emit).  A kill can land *after* the last
+/// checkpoint, leaving rows for steps the resume re-trains; without
+/// this, appending would duplicate those step rows.  Missing file or
+/// unparsable rows are left alone.  The rewrite is atomic (tmp +
+/// rename) like every other lifecycle write: a kill mid-trim must not
+/// be able to destroy the very history this exists to preserve.
+fn trim_csv_rows_from(path: &Path, from: usize) -> Result<()> {
+    let Ok(content) = std::fs::read_to_string(path) else {
+        return Ok(());
+    };
+    let mut kept = String::with_capacity(content.len());
+    for (i, line) in content.lines().enumerate() {
+        let step: Option<usize> = line.split(',').next().and_then(|t| t.parse().ok());
+        if i > 0 && matches!(step, Some(s) if s >= from) {
+            continue;
+        }
+        kept.push_str(line);
+        kept.push('\n');
+    }
+    if kept.len() != content.len() {
+        let tmp = path.with_extension("csv.tmp");
+        std::fs::write(&tmp, kept).map_err(|e| Error::io(&tmp, e))?;
+        std::fs::rename(&tmp, path).map_err(|e| Error::io(path, e))?;
+    }
+    Ok(())
+}
+
 /// Run a full training job per the config.
 pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     cfg.validate()?;
     let workers = cfg.cluster.workers;
+    if cfg.checkpoint_every > 0 && cfg.checkpoint_dir.is_none() {
+        return Err(Error::Config(
+            "checkpoint_every is set but there is no checkpoint_dir to write into".into(),
+        ));
+    }
+
+    // Resolve `--resume` before spawning anything: every worker must
+    // restore from the same step or the exchange would desynchronize.
+    let resume_set = resolve_resume(cfg)?;
+    if let Some(set) = &resume_set {
+        // `auto` on an already-complete run is a no-op, not an error:
+        // a supervisor re-running the same command after success must
+        // not crash-loop.  (An explicit `--resume PATH` whose step
+        // exceeds --steps still fails loudly in the worker — the user
+        // named a file that cannot be continued.)
+        if set.step as usize >= cfg.steps && matches!(cfg.resume, Some(ResumeFrom::Auto)) {
+            log::warn!(
+                "--resume auto: checkpoint at step {} already covers --steps {}; \
+                 nothing left to train (raise --steps to continue)",
+                set.step,
+                cfg.steps
+            );
+            let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
+            let eval = if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
+                let model = eval_backend.model().clone();
+                let mut store = ParamStore::init(&model.params, cfg.seed);
+                load_checkpoint(&set.paths[0], &mut store)?;
+                let r = evaluate(cfg, eval_backend.as_mut(), &store, 0)?;
+                (r.examples > 0).then_some(r)
+            } else {
+                None
+            };
+            return Ok(TrainSummary {
+                steps: cfg.steps,
+                workers,
+                resumed_from: Some(set.step as usize),
+                wall_seconds: 0.0,
+                secs_per_20_iters: 0.0,
+                windows: Vec::new(),
+                evals: Vec::new(),
+                losses: Vec::new(),
+                loader: Vec::new(),
+                exchange_rounds: 0,
+                exchange_seconds: 0.0,
+                collective: CollectiveStats::default(),
+                compute_seconds: 0.0,
+                final_divergence: None,
+                eval,
+            });
+        }
+        // Pre-flight the whole restore set against header-level state
+        // (same hard checks the workers re-run after loading): a
+        // resume that cannot succeed must fail *here*, before any side
+        // effect below (metrics-CSV trim) mutates existing history.
+        for (w, p) in set.paths.iter().enumerate() {
+            let info = crate::params::peek_checkpoint(p)?;
+            crate::coordinator::worker::validate_restore(cfg, w, p, &info)?;
+        }
+        log::info!(
+            "resuming from step {} ({})",
+            set.step,
+            if set.per_worker() { "per-worker snapshots" } else { "shared checkpoint" }
+        );
+    }
 
     // Core partitioning: each worker's backend gets a disjoint share of
     // the machine (auto) or the explicit --threads count.  Intra-op
@@ -154,7 +289,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     let hop_kinds = effective_hop_transports(cfg);
     let fabrics = build_fabric(workers, &hop_kinds);
 
-    let (tx, rx) = channel::<StepRecord>();
+    let (tx, rx) = channel::<WorkerMsg>();
     let wall = Timer::start();
 
     // Spawn the replicas.
@@ -165,7 +300,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             worker: w,
             cfg: cfg.clone(),
             reports: tx.clone(),
-            restore: None,
+            restore: resume_set.as_ref().map(|s| s.paths[w].clone()),
         };
         joins.push(
             std::thread::Builder::new()
@@ -176,19 +311,70 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     }
     drop(tx);
 
-    // Leader loop: aggregate per-step reports into windows + CSV.
+    // Leader loop: aggregate per-step reports into windows + CSVs
+    // (step metrics and, when mid-training validation is on, the eval
+    // curve in a sibling `<metrics>.eval.csv`).
     let mut meter = ThroughputMeter::new(20);
     let mut windows = Vec::new();
+    let mut evals: Vec<EvalRecord> = Vec::new();
     let mut losses = Vec::new();
     let mut window_losses: Vec<f32> = Vec::new();
+    // A resumed run appends to the existing CSVs (the pre-kill curve
+    // is history worth keeping), first dropping any rows for steps the
+    // resume re-trains — the kill may have landed after the last
+    // checkpoint.  A fresh run truncates as before.
+    if let (Some(set), Some(p)) = (&resume_set, &cfg.metrics_csv) {
+        let start = set.step as usize;
+        trim_csv_rows_from(p, start)?; // step rows log 0-based `rec.step`
+        trim_csv_rows_from(&eval_csv_path(p), start + 1)?; // eval rows log `done`
+    }
+    let open_csv = |path: &Path, header: &[&str]| -> Result<CsvWriter> {
+        if resume_set.is_some() {
+            CsvWriter::append(path, header)
+        } else {
+            CsvWriter::create(path, header)
+        }
+    };
     let mut csv = match &cfg.metrics_csv {
-        Some(p) => Some(CsvWriter::create(
+        Some(p) => Some(open_csv(
             p,
             &["step", "worker", "loss", "correct1", "lr", "step_secs", "exchange_secs"],
         )?),
         None => None,
     };
-    while let Ok(rec) = rx.recv() {
+    let mut eval_csv = match (&cfg.metrics_csv, cfg.eval_every > 0) {
+        (Some(p), true) => Some(open_csv(
+            &eval_csv_path(p),
+            &["step", "examples", "mean_loss", "top1_error", "top5_error"],
+        )?),
+        _ => None,
+    };
+    while let Ok(msg) = rx.recv() {
+        let rec = match msg {
+            WorkerMsg::Step(rec) => rec,
+            WorkerMsg::Eval { step, result } => {
+                if let Some(c) = eval_csv.as_mut() {
+                    c.row(&[
+                        step.to_string(),
+                        result.examples.to_string(),
+                        format!("{:.6}", result.mean_loss),
+                        format!("{:.6}", result.top1_error()),
+                        format!("{:.6}", result.top5_error()),
+                    ])?;
+                }
+                log::info!(
+                    "step {:>5}  validation: top-1 error {:.2}%  top-5 {:.2}%  \
+                     loss {:.4}  ({} examples)",
+                    step,
+                    100.0 * result.top1_error(),
+                    100.0 * result.top5_error(),
+                    result.mean_loss,
+                    result.examples
+                );
+                evals.push(EvalRecord { step, result });
+                continue;
+            }
+        };
         if let Some(c) = csv.as_mut() {
             c.row(&[
                 rec.step.to_string(),
@@ -275,20 +461,43 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         c
     };
 
-    // Checkpoint replica 0 (post-exchange replicas agree).
+    // Final checkpoint: replica 0's state as a single shared v2 file
+    // (post-exchange replicas agree at period 1; the per-worker
+    // periodic snapshots cover exact resume for every other config).
     if let Some(dir) = &cfg.checkpoint_dir {
         let path = dir.join(format!("{}_step{}.ckpt", cfg.name, cfg.steps));
-        crate::params::save_checkpoint(&path, &outcomes[0].store, cfg.steps as u64)?;
+        let (sampler_epoch, sampler_next_batch) = EpochSampler::position_after(
+            cfg.data.train_examples,
+            cfg.batch_per_worker,
+            0,
+            workers,
+            cfg.steps,
+        );
+        let state = TrainState {
+            step: cfg.steps as u64,
+            worker: 0,
+            workers: workers as u32,
+            exchange_fingerprint: cfg.resume_fingerprint(),
+            sampler_epoch,
+            sampler_next_batch,
+            lr: cfg.schedule.lr_at(cfg.steps),
+        };
+        crate::params::save_checkpoint_v2(&path, &outcomes[0].store, &state)?;
         log::info!("checkpoint written to {path:?}");
     }
 
     // Final evaluation on the validation split, if the backend can
     // evaluate (native always can; XLA needs an eval artifact — only
-    // that artifact is loaded here, not the train executable).
+    // that artifact is loaded here, not the train executable).  The
+    // evaluator covers the whole split including the ragged tail for
+    // variable-batch backends, so even `val_examples < batch` is
+    // measured rather than silently skipped.
     let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
-    let eval_batch = eval_backend.eval_batch_size().unwrap_or(cfg.batch_per_worker).max(1);
-    let eval = if eval_backend.supports_eval() && cfg.data.val_examples >= eval_batch {
-        Some(evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?)
+    let eval = if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
+        let r = evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?;
+        // A fixed-batch backend over a too-small split covers nothing;
+        // report that as "no eval" instead of a fake 100% error.
+        (r.examples > 0).then_some(r)
     } else {
         None
     };
@@ -296,9 +505,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     Ok(TrainSummary {
         steps: cfg.steps,
         workers,
+        resumed_from: resume_set.as_ref().map(|s| s.step as usize),
         wall_seconds: wall.elapsed_secs(),
         secs_per_20_iters: meter.mean_window_secs(),
         windows,
+        evals,
         losses,
         loader: outcomes.iter().map(|o| o.loader).collect(),
         exchange_rounds: collective.rounds,

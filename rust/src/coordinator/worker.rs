@@ -6,15 +6,31 @@
 //! (native pure-Rust CPU math or AOT-XLA artifacts), and the collective
 //! exchange, checkpointing and divergence invariants all operate on the
 //! resulting `ParamStore` identically.
+//!
+//! Lifecycle: with `checkpoint_every = N` each worker writes its own
+//! v2 snapshot every N steps (post-exchange, so at period 1 all
+//! replicas agree bit-for-bit); worker 0 additionally maintains the
+//! `LATEST`/`BEST` markers and the retention policy, and runs the
+//! mid-training validation (`eval_every`).  [`WorkerSpec::restore`]
+//! points a worker at its checkpoint: parameters, momenta and the step
+//! counter come from the file, the data loader is fast-forwarded to
+//! the exact stream position, and the LR schedule re-derives from the
+//! absolute step — so a killed-and-resumed run is bit-identical to an
+//! uninterrupted one.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::Sender;
 
 use crate::comm::collective::{Collective, CollectiveStats};
 use crate::config::{LoaderMode, TrainConfig};
+use crate::coordinator::eval::EvalResult;
 use crate::data::loader::{BatchSource, LoaderCfg, LoaderStats, ParallelLoader, SerialLoader};
+use crate::data::sampler::EpochSampler;
 use crate::error::{Error, Result};
-use crate::params::ParamStore;
+use crate::params::{
+    best_marker_error, load_checkpoint_full, periodic_checkpoint_name, prune_checkpoints,
+    save_checkpoint_v2, write_marker, ParamStore, TrainState, BEST_MARKER, LATEST_MARKER,
+};
 use crate::util::Timer;
 
 /// Per-step record streamed to the trainer for logging.
@@ -30,10 +46,20 @@ pub struct StepRecord {
     pub exchange_seconds: f64,
 }
 
+/// Everything a worker streams to the trainer while running.
+#[derive(Clone, Copy, Debug)]
+pub enum WorkerMsg {
+    /// One completed training step.
+    Step(StepRecord),
+    /// A mid-training validation result (worker 0, `eval_every` cadence).
+    Eval { step: usize, result: EvalResult },
+}
+
 /// Final report returned from a worker thread.
 #[derive(Debug)]
 pub struct WorkerOutcome {
     pub worker: usize,
+    /// Steps executed *by this run* (resume subtracts the restored ones).
     pub steps: usize,
     pub store: ParamStore,
     pub loader: LoaderStats,
@@ -53,13 +79,38 @@ pub struct WorkerSpec {
     pub fabric: Box<dyn Collective>,
     pub worker: usize,
     pub cfg: TrainConfig,
-    pub reports: Sender<StepRecord>,
+    pub reports: Sender<WorkerMsg>,
     /// Checkpoint path this worker should restore from, if any.
     pub restore: Option<PathBuf>,
 }
 
-/// Build this worker's batch source per the configured loader mode.
-fn build_loader(cfg: &TrainConfig, worker: usize, crop_hw: usize) -> Result<Box<dyn BatchSource>> {
+/// Per-step RNG seed for worker `worker` at `step`: a SplitMix64-style
+/// finalizer over the full-width `(seed, step, worker)` triple,
+/// truncated to the backend ABI's i32 only *after* mixing.
+///
+/// The seed's high bits and every step/worker bit reach all output
+/// bits, unlike the old `(seed as i32) ^ (step as i32) ^ (worker << 20)`
+/// scheme, which discarded the upper seed word and collided
+/// structurally once `step >= 2^20` (step bit 20 was indistinguishable
+/// from worker bit 0 — two different (step, worker) pairs shared the
+/// dropout stream).
+pub fn step_seed(seed: u64, step: u64, worker: u64) -> i32 {
+    let mut z = seed
+        .wrapping_add(step.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add(worker.wrapping_mul(0xD1B5_4A32_D192_ED03));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)) as i32
+}
+
+/// Build this worker's batch source per the configured loader mode,
+/// fast-forwarded past `skip_batches` already-trained steps.
+fn build_loader(
+    cfg: &TrainConfig,
+    worker: usize,
+    crop_hw: usize,
+    skip_batches: usize,
+) -> Result<Box<dyn BatchSource>> {
     let lcfg = LoaderCfg {
         data_dir: &cfg.data.dir,
         split: "train",
@@ -72,15 +123,117 @@ fn build_loader(cfg: &TrainConfig, worker: usize, crop_hw: usize) -> Result<Box<
         verify_shards: false,
     };
     Ok(match cfg.loader_mode {
-        LoaderMode::Parallel => Box::new(ParallelLoader::new(&lcfg)?),
-        LoaderMode::Serial => Box::new(SerialLoader::new(&lcfg)?),
+        LoaderMode::Parallel => Box::new(ParallelLoader::resumed(&lcfg, skip_batches)?),
+        LoaderMode::Serial => Box::new(SerialLoader::resumed(&lcfg, skip_batches)?),
     })
 }
 
-/// The worker thread body: runs `cfg.steps` local steps with a
+/// Hard compatibility checks for restoring `info` (parsed from `ckpt`)
+/// as worker `worker` under `cfg`.  Shared by the worker's restore and
+/// the trainer's pre-flight (which runs these against *peeked* headers
+/// before any side effect like the metrics-CSV trim — a resume that
+/// will fail must fail with nothing mutated).
+pub fn validate_restore(
+    cfg: &TrainConfig,
+    worker: usize,
+    ckpt: &Path,
+    info: &crate::params::CheckpointInfo,
+) -> Result<()> {
+    let start = info.step as usize;
+    if start >= cfg.steps {
+        return Err(Error::Checkpoint(format!(
+            "{ckpt:?} is at step {start}, but the run ends at --steps {}; \
+             raise --steps to continue training",
+            cfg.steps
+        )));
+    }
+    if let Some(st) = &info.state {
+        if st.workers as usize != cfg.cluster.workers {
+            return Err(Error::Checkpoint(format!(
+                "{ckpt:?} was saved by a {}-worker run; resuming with {} would \
+                 change the data partition (not bit-exact)",
+                st.workers, cfg.cluster.workers
+            )));
+        }
+        if st.exchange_fingerprint != cfg.resume_fingerprint() {
+            return Err(Error::Checkpoint(format!(
+                "{ckpt:?}: resume-critical config changed since the checkpoint \
+                 (workers/period/momentum/batch/dropout/seed must match for a \
+                 bit-exact resume)"
+            )));
+        }
+        if st.worker as usize == worker {
+            let (epoch, next_batch) = EpochSampler::position_after(
+                cfg.data.train_examples,
+                cfg.batch_per_worker,
+                worker,
+                cfg.cluster.workers,
+                start,
+            );
+            if (epoch, next_batch) != (st.sampler_epoch, st.sampler_next_batch) {
+                return Err(Error::Checkpoint(format!(
+                    "{ckpt:?}: sampler position (epoch {}, batch {}) does not match \
+                     this data configuration's (epoch {epoch}, batch {next_batch}) — \
+                     did the dataset size change?",
+                    st.sampler_epoch, st.sampler_next_batch
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load `ckpt` into `store` and validate it against this run's config;
+/// returns the step to resume at.
+fn restore_worker_state(
+    cfg: &TrainConfig,
+    worker: usize,
+    ckpt: &Path,
+    store: &mut ParamStore,
+) -> Result<usize> {
+    let info = load_checkpoint_full(ckpt, store)?;
+    validate_restore(cfg, worker, ckpt, &info)?;
+    let start = info.step as usize;
+    match info.state {
+        Some(st) => {
+            if st.worker as usize != worker
+                && !(cfg.exchange.period == 1 && cfg.exchange.include_momentum)
+            {
+                // Restoring another replica's state is only bit-exact
+                // when replicas are fully synchronized every step.
+                log::warn!(
+                    "worker {worker}: restoring replica-{} state with exchange period {} / \
+                     include_momentum {} — replicas were not bit-synchronized, so this \
+                     resume is approximate (use the per-worker .w{worker}.ckpt snapshots \
+                     for exactness)",
+                    st.worker,
+                    cfg.exchange.period,
+                    cfg.exchange.include_momentum
+                );
+            }
+            let lr_now = cfg.schedule.lr_at(start);
+            if lr_now.to_bits() != st.lr.to_bits() {
+                log::warn!(
+                    "worker {worker}: LR schedule changed since the checkpoint \
+                     (saved lr {} at step {start}, schedule now gives {lr_now})",
+                    st.lr
+                );
+            }
+        }
+        None => log::warn!(
+            "worker {worker}: {ckpt:?} is a v1 checkpoint without lifecycle state; \
+             resuming without config cross-checks"
+        ),
+    }
+    log::info!("worker {worker}: restored {ckpt:?}, resuming at step {start}");
+    Ok(start)
+}
+
+/// The worker thread body: runs steps `start..cfg.steps` with a
 /// collective exchange every `cfg.exchange.period` steps.
 pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
     let WorkerSpec { mut fabric, worker, cfg, reports, restore } = spec;
+    let workers = cfg.cluster.workers;
 
     // --- Setup (the paper's per-GPU Theano process initialization):
     // --- each replica owns its backend, parameters and loader. ---
@@ -89,8 +242,8 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
 
     let mut store = ParamStore::init(&model.params, cfg.seed);
     let mut start_step = 0usize;
-    if let Some(ckpt) = restore {
-        start_step = crate::params::load_checkpoint(&ckpt, &mut store)? as usize;
+    if let Some(ckpt) = &restore {
+        start_step = restore_worker_state(&cfg, worker, ckpt, &mut store)?;
     }
 
     // Guard the label space: a corpus with more classes than the model
@@ -106,21 +259,30 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         }
     }
 
-    let mut loader = build_loader(&cfg, worker, model.image_hw)?;
+    let mut loader = build_loader(&cfg, worker, model.image_hw, start_step)?;
 
+    let fingerprint = cfg.resume_fingerprint();
     let include_momentum = cfg.exchange.include_momentum;
     let mut compute_seconds = 0.0;
     let mut exchange_seconds = 0.0;
+    // Best validation top-1 error among *checkpointed* evals.  A
+    // resumed run seeds it from the BEST marker so a worse post-resume
+    // eval can neither displace the marker nor expose the historical
+    // best step to retention pruning.
+    let mut best_ckpt_top1 = match (&restore, &cfg.checkpoint_dir) {
+        (Some(_), Some(dir)) => best_marker_error(dir).unwrap_or(f32::INFINITY),
+        _ => f32::INFINITY,
+    };
 
     // --- The step loop (Fig 1 + Fig 2 composed) ---
     for step in start_step..cfg.steps {
         let step_timer = Timer::start();
         let batch = loader.next_batch()?;
         let lr = cfg.schedule.lr_at(step);
-        let step_seed = (cfg.seed as i32) ^ (step as i32) ^ ((worker as i32) << 20);
+        let seed = step_seed(cfg.seed, step as u64, worker as u64);
 
         let t_compute = Timer::start();
-        let out = backend.train_step(&batch.images, &batch.labels, lr, step_seed, &mut store)?;
+        let out = backend.train_step(&batch.images, &batch.labels, lr, seed, &mut store)?;
         compute_seconds += t_compute.elapsed_secs();
 
         if !out.loss.is_finite() {
@@ -140,7 +302,7 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
             exchange_seconds += dt_exchange;
         }
 
-        let _ = reports.send(StepRecord {
+        let _ = reports.send(WorkerMsg::Step(StepRecord {
             worker,
             step,
             loss: out.loss,
@@ -149,7 +311,79 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
             lr,
             step_seconds: step_timer.elapsed_secs(),
             exchange_seconds: dt_exchange,
-        });
+        }));
+
+        let done = step + 1;
+
+        // --- Periodic per-worker snapshot (post-exchange: at period 1
+        // --- all replicas agree here, so any file restores any run) ---
+        let on_checkpoint = cfg.checkpoint_every > 0 && done % cfg.checkpoint_every == 0;
+        if on_checkpoint {
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let (sampler_epoch, sampler_next_batch) = EpochSampler::position_after(
+                    cfg.data.train_examples,
+                    cfg.batch_per_worker,
+                    worker,
+                    workers,
+                    done,
+                );
+                let state = TrainState {
+                    step: done as u64,
+                    worker: worker as u32,
+                    workers: workers as u32,
+                    exchange_fingerprint: fingerprint,
+                    sampler_epoch,
+                    sampler_next_batch,
+                    lr: cfg.schedule.lr_at(done),
+                };
+                let fname = periodic_checkpoint_name(&cfg.name, done, worker);
+                save_checkpoint_v2(&dir.join(&fname), &store, &state)?;
+                if worker == 0 {
+                    write_marker(dir, LATEST_MARKER, &fname)?;
+                    let removed =
+                        prune_checkpoints(dir, &cfg.name, workers, cfg.checkpoint_keep, done)?;
+                    if removed > 0 {
+                        log::debug!("retention: pruned {removed} checkpoint file(s)");
+                    }
+                }
+            }
+        }
+
+        // --- Mid-training validation (worker 0 only; the final step's
+        // --- eval belongs to the trainer's summary) ---
+        // Gated on a non-empty val split like the trainer's final eval:
+        // a validation knob must never abort a training run that has no
+        // held-out data to validate on.
+        if worker == 0
+            && cfg.eval_every > 0
+            && done % cfg.eval_every == 0
+            && done < cfg.steps
+            && backend.supports_eval()
+            && cfg.data.val_examples > 0
+        {
+            let result = crate::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 0)?;
+            if result.examples > 0 {
+                // BEST tracks the best *checkpointed* model, so only an
+                // eval that lands on a checkpoint step competes — an
+                // off-cadence eval has no file to point the marker at
+                // and must not poison the comparison.
+                if on_checkpoint && result.top1_error() < best_ckpt_top1 {
+                    best_ckpt_top1 = result.top1_error();
+                    if let Some(dir) = &cfg.checkpoint_dir {
+                        write_marker(
+                            dir,
+                            BEST_MARKER,
+                            &format!(
+                                "{} top1_error={:.6}",
+                                periodic_checkpoint_name(&cfg.name, done, 0),
+                                best_ckpt_top1
+                            ),
+                        )?;
+                    }
+                }
+                let _ = reports.send(WorkerMsg::Eval { step: done, result });
+            }
+        }
     }
 
     Ok(WorkerOutcome {
@@ -161,4 +395,36 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         exchange_seconds,
         compute_seconds,
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    /// Regression for the truncating XOR scheme: `step ^ (worker << 20)`
+    /// made (step + 2^20, worker) collide with (step, worker + 1), and
+    /// `seed as i32` dropped the seed's upper 32 bits entirely.
+    #[test]
+    fn step_seed_has_no_structural_collisions() {
+        // The old scheme's exact collision pair.
+        assert_ne!(step_seed(42, 1 << 20, 0), step_seed(42, 0, 1));
+        // High seed bits must matter.
+        assert_ne!(step_seed(7, 3, 0), step_seed(7 | (1 << 40), 3, 0));
+        // Dense uniqueness sweep around the old 2^20 wraparound plus a
+        // low-step grid: all (step, worker) pairs get distinct seeds.
+        let mut seen = HashSet::new();
+        for &base in &[0u64, (1 << 20) - 2] {
+            for step in base..base + 64 {
+                for worker in 0..8u64 {
+                    assert!(
+                        seen.insert(step_seed(99, step, worker)),
+                        "collision at step {step}, worker {worker}"
+                    );
+                }
+            }
+        }
+        // Deterministic.
+        assert_eq!(step_seed(5, 6, 7), step_seed(5, 6, 7));
+    }
 }

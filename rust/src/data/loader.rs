@@ -102,6 +102,25 @@ impl BatchProducer {
         self.seq += 1;
         Ok(HostBatch { images, labels, seq })
     }
+
+    /// Fast-forward past `batches` already-consumed minibatches
+    /// (checkpoint resume): jump the sampler to the exact position and
+    /// replay the augmentation RNG draws those batches would have made
+    /// — one `Augment::random` per example, no disk reads — so the
+    /// continued stream is bit-identical to an uninterrupted run.
+    fn fast_forward(&mut self, batches: usize) {
+        if batches == 0 {
+            return;
+        }
+        self.sampler.fast_forward(batches);
+        if self.train_augment {
+            let stored_hw = self.dataset.height;
+            for _ in 0..batches * self.batch {
+                Augment::random(&mut self.rng, stored_hw, self.crop_hw);
+            }
+        }
+        self.seq = batches;
+    }
 }
 
 /// Configuration for constructing either loader.
@@ -117,19 +136,29 @@ pub struct LoaderCfg<'a> {
     pub verify_shards: bool,
 }
 
-fn build_producer(cfg: &LoaderCfg) -> Result<BatchProducer> {
-    let dataset = ShardedDataset::open(cfg.data_dir, cfg.split, cfg.verify_shards)?;
-    if cfg.crop_hw > dataset.height {
+/// Open one split's dataset + mean image, validating the crop bound —
+/// the shared entry point for the training loaders and the sequential
+/// evaluator, so the preprocessing inputs (mean file, crop check) have
+/// one source of truth.
+pub fn open_split(
+    data_dir: &std::path::Path,
+    split: &str,
+    crop_hw: usize,
+    verify_shards: bool,
+) -> Result<(ShardedDataset, MeanImage)> {
+    let dataset = ShardedDataset::open(data_dir, split, verify_shards)?;
+    if crop_hw > dataset.height {
         return Err(Error::Shape(format!(
             "crop {} larger than stored image {}",
-            cfg.crop_hw, dataset.height
+            crop_hw, dataset.height
         )));
     }
-    let mean = MeanImage::load(
-        &cfg.data_dir.join("mean.f32"),
-        dataset.channels,
-        dataset.height,
-    )?;
+    let mean = MeanImage::load(&data_dir.join("mean.f32"), dataset.channels, dataset.height)?;
+    Ok((dataset, mean))
+}
+
+fn build_producer(cfg: &LoaderCfg) -> Result<BatchProducer> {
+    let (dataset, mean) = open_split(cfg.data_dir, cfg.split, cfg.crop_hw, cfg.verify_shards)?;
     let sampler = EpochSampler::new(dataset.len(), cfg.batch, cfg.worker, cfg.workers, cfg.seed);
     Ok(BatchProducer {
         rng: Pcg32::new(cfg.seed ^ 0xAAB0_57E0, cfg.worker as u64 + 101),
@@ -153,7 +182,15 @@ pub struct SerialLoader {
 
 impl SerialLoader {
     pub fn new(cfg: &LoaderCfg) -> Result<Self> {
-        Ok(SerialLoader { producer: build_producer(cfg)?, stats: LoaderStats::default() })
+        Self::resumed(cfg, 0)
+    }
+
+    /// Loader whose stream starts after `skip_batches` already-consumed
+    /// minibatches (checkpoint resume).
+    pub fn resumed(cfg: &LoaderCfg, skip_batches: usize) -> Result<Self> {
+        let mut producer = build_producer(cfg)?;
+        producer.fast_forward(skip_batches);
+        Ok(SerialLoader { producer, stats: LoaderStats::default() })
     }
 }
 
@@ -186,7 +223,16 @@ pub struct ParallelLoader {
 
 impl ParallelLoader {
     pub fn new(cfg: &LoaderCfg) -> Result<Self> {
+        Self::resumed(cfg, 0)
+    }
+
+    /// Loader whose stream starts after `skip_batches` already-consumed
+    /// minibatches (checkpoint resume).  The fast-forward happens
+    /// before the prefetch thread spawns, so the first staged batch is
+    /// already the post-resume one.
+    pub fn resumed(cfg: &LoaderCfg, skip_batches: usize) -> Result<Self> {
         let mut producer = build_producer(cfg)?;
+        producer.fast_forward(skip_batches);
         // Depth-1 channel: exactly one staged batch, as in Fig 1.
         let (tx, rx): (SyncSender<Result<HostBatch>>, _) = std::sync::mpsc::sync_channel(1);
         let stop = Arc::new(AtomicBool::new(false));
@@ -351,6 +397,39 @@ mod tests {
             "stall {steady_stall} should be well under load {}",
             st.load_seconds
         );
+    }
+
+    #[test]
+    fn resumed_loader_continues_the_stream_bit_exactly() {
+        // A loader fast-forwarded past k batches must serve exactly the
+        // batches an uninterrupted loader serves from k on — same
+        // sampler indices AND same crop/flip augmentation draws.  This
+        // is the loader half of the bit-exact `--resume` contract.
+        let dir = make_dataset("resume");
+        for skip in [1usize, 3, 7] {
+            let mut straight = SerialLoader::new(&cfg(&dir, 0, 2)).unwrap();
+            for _ in 0..skip {
+                straight.next_batch().unwrap();
+            }
+            let mut resumed = SerialLoader::resumed(&cfg(&dir, 0, 2), skip).unwrap();
+            // Also exercise the parallel loader's pre-spawn fast-forward.
+            let mut resumed_par = ParallelLoader::resumed(&cfg(&dir, 0, 2), skip).unwrap();
+            for i in 0..4 {
+                let a = straight.next_batch().unwrap();
+                let b = resumed.next_batch().unwrap();
+                let c = resumed_par.next_batch().unwrap();
+                assert_eq!(a.seq, b.seq, "skip {skip}, batch {i}: seq");
+                assert_eq!(a.labels, b.labels, "skip {skip}, batch {i}: labels");
+                assert_eq!(
+                    a.images.as_slice(),
+                    b.images.as_slice(),
+                    "skip {skip}, batch {i}: pixels"
+                );
+                assert_eq!(a.seq, c.seq);
+                assert_eq!(a.labels, c.labels);
+                assert_eq!(a.images.as_slice(), c.images.as_slice());
+            }
+        }
     }
 
     #[test]

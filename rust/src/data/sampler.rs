@@ -3,8 +3,19 @@
 //! The paper trains the two replicas on *different* minibatches of the
 //! same epoch stream (§2.2).  `EpochSampler` reproduces that: one
 //! shared seed shuffles each epoch, then worker `w` of `n` takes every
-//! n-th minibatch — so the union of what all workers see per epoch is
-//! exactly the dataset, with no overlap.
+//! n-th minibatch.  Every worker is assigned exactly
+//! `batches_per_epoch / workers` minibatches per epoch — the ragged
+//! global tail (when `batches_per_epoch % workers != 0`) is dropped, so
+//! all workers roll epochs after the *same* number of calls and stay in
+//! the same epoch forever.  (Serving the tail to a subset of workers
+//! would desynchronize the epochs: replicas would shuffle with
+//! different epoch keys and train on overlapping data.)
+//!
+//! Sampler state is a pure function of the number of batches consumed,
+//! which is what makes checkpoint resume bit-exact: `fast_forward`
+//! jumps to the state after any batch count, and `position_after`
+//! computes that state without a sampler instance (the checkpoint
+//! cross-check).
 
 use crate::util::Pcg32;
 
@@ -53,20 +64,42 @@ impl EpochSampler {
         self.next_batch = self.worker;
     }
 
-    /// Number of whole batches per epoch (shared across workers).
+    /// Number of whole batches per epoch (shared across workers; the
+    /// per-image tail smaller than one batch is dropped).
     pub fn batches_per_epoch(&self) -> usize {
         self.dataset_len / self.batch
+    }
+
+    /// Batches *this worker* serves per epoch: the equal share
+    /// `batches_per_epoch / workers`.  The ragged global tail (the
+    /// `batches_per_epoch % workers` batches that cannot be divided
+    /// evenly) is dropped so every worker rolls epochs in lockstep.
+    pub fn batches_per_worker_epoch(&self) -> usize {
+        (self.batches_per_epoch() / self.workers).max(1)
     }
 
     pub fn epoch(&self) -> usize {
         self.epoch
     }
 
+    /// Raw (epoch, next global batch) state, pre-roll: immediately
+    /// after a worker's last batch of an epoch this still reports the
+    /// old epoch (the roll is lazy).  Use [`Self::position_after`] for
+    /// the normalized position.
+    pub fn position(&self) -> (usize, usize) {
+        (self.epoch, self.next_batch)
+    }
+
+    /// True once this worker has consumed its per-epoch share.
+    fn exhausted(&self) -> bool {
+        self.next_batch >= self.worker + self.batches_per_worker_epoch() * self.workers
+    }
+
     /// Indices of the next minibatch for this worker, advancing epochs
     /// as needed (partial trailing batches are dropped, as the paper's
     /// fixed-size Theano functions required).
     pub fn next_batch_indices(&mut self, out: &mut Vec<usize>) {
-        if self.next_batch >= self.batches_per_epoch() {
+        if self.exhausted() {
             self.epoch += 1;
             self.reshuffle();
         }
@@ -78,6 +111,34 @@ impl EpochSampler {
                 .map(|&i| i as usize),
         );
         self.next_batch += self.workers;
+    }
+
+    /// Jump to the exact state after `consumed` batches have been
+    /// served, without replaying them.  Each epoch shuffles with a
+    /// fresh `(seed, epoch)`-keyed stream, so skipping whole epochs
+    /// consumes nothing; only the current epoch's order is rebuilt.
+    /// A fresh sampler fast-forwarded by `k` then produces the same
+    /// stream as a sampler that served `k` batches.
+    pub fn fast_forward(&mut self, consumed: usize) {
+        let share = self.batches_per_worker_epoch();
+        self.epoch = consumed / share;
+        self.reshuffle();
+        self.next_batch = self.worker + (consumed % share) * self.workers;
+    }
+
+    /// The normalized `(epoch, next_batch)` position after `consumed`
+    /// batches, as a pure function of the epoch geometry — what a
+    /// checkpoint records and what resume cross-checks against the
+    /// current data configuration.
+    pub fn position_after(
+        dataset_len: usize,
+        batch: usize,
+        worker: usize,
+        workers: usize,
+        consumed: usize,
+    ) -> (u64, u64) {
+        let share = ((dataset_len / batch.max(1)) / workers.max(1)).max(1);
+        ((consumed / share) as u64, (worker + (consumed % share) * workers) as u64)
     }
 }
 
@@ -135,6 +196,85 @@ mod tests {
             a.next_batch_indices(&mut ba);
             b.next_batch_indices(&mut bb);
             assert_eq!(ba, bb);
+        }
+    }
+
+    /// Regression for the epoch-desync bug: with a ragged batch count
+    /// (`batches_per_epoch % workers != 0`) workers used to roll epochs
+    /// after *different* numbers of calls, landing replicas in
+    /// different epochs with overlapping data.  Every worker now serves
+    /// exactly `batches_per_epoch / workers` batches per epoch and all
+    /// workers roll together.
+    #[test]
+    fn ragged_batch_counts_keep_workers_in_epoch_lockstep() {
+        for workers in [2usize, 3] {
+            // 28 examples / batch 4 = 7 batches per epoch: ragged for
+            // both 2 (7 % 2 = 1) and 3 (7 % 3 = 1) workers.
+            let n = 28;
+            let batch = 4;
+            let mut samplers: Vec<_> = (0..workers)
+                .map(|w| EpochSampler::new(n, batch, w, workers, 13))
+                .collect();
+            let share = samplers[0].batches_per_worker_epoch();
+            assert_eq!(share, 7 / workers);
+            let mut buf = Vec::new();
+            for round in 0..3 * share {
+                let mut seen = HashSet::new();
+                for s in samplers.iter_mut() {
+                    s.next_batch_indices(&mut buf);
+                    for &i in &buf {
+                        assert!(
+                            seen.insert(i),
+                            "workers={workers} round={round}: index {i} served to \
+                             two workers in the same round"
+                        );
+                    }
+                }
+                // All workers sit in the same epoch after every round.
+                let epochs: HashSet<_> = samplers.iter().map(|s| s.epoch()).collect();
+                assert_eq!(
+                    epochs.len(),
+                    1,
+                    "workers={workers} round={round}: epochs desynced: {epochs:?}"
+                );
+                // Epoch rolls are lazy (they happen inside the call
+                // that serves the first batch of the new epoch), so
+                // after serving batch `round` the epoch is round/share.
+                assert_eq!(samplers[0].epoch(), round / share);
+            }
+        }
+    }
+
+    /// `fast_forward(k)` must land exactly where `k` served batches
+    /// land: the continued streams are identical, across epoch rolls.
+    #[test]
+    fn fast_forward_matches_replay() {
+        for (worker, workers, consumed) in
+            [(0usize, 1usize, 0usize), (0, 1, 7), (1, 2, 3), (1, 2, 9), (2, 3, 5)]
+        {
+            let n = 28;
+            let batch = 4;
+            let mut replayed = EpochSampler::new(n, batch, worker, workers, 99);
+            let mut buf = Vec::new();
+            for _ in 0..consumed {
+                replayed.next_batch_indices(&mut buf);
+            }
+            let mut jumped = EpochSampler::new(n, batch, worker, workers, 99);
+            jumped.fast_forward(consumed);
+            let (mut ba, mut bb) = (Vec::new(), Vec::new());
+            for i in 0..8 {
+                replayed.next_batch_indices(&mut ba);
+                jumped.next_batch_indices(&mut bb);
+                assert_eq!(ba, bb, "worker {worker}/{workers} skip {consumed}: batch {i} differs");
+            }
+            // And the jump matches the pure-arithmetic position.
+            let mut probe = EpochSampler::new(n, batch, worker, workers, 99);
+            probe.fast_forward(consumed);
+            let (e, nb) = probe.position();
+            assert_eq!(
+                (e as u64, nb as u64),
+                EpochSampler::position_after(n, batch, worker, workers, consumed)
+            );
         }
     }
 

@@ -25,6 +25,29 @@ impl CsvWriter {
         Ok(w)
     }
 
+    /// Open for appending (checkpoint resume): existing rows are kept
+    /// and the header is written only when the file is new or empty, so
+    /// a resumed run extends the pre-kill curve instead of truncating
+    /// it.
+    pub fn append(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|e| Error::io(parent, e))?;
+            }
+        }
+        let has_rows = std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false);
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| Error::io(path, e))?;
+        let mut w = CsvWriter { out: BufWriter::new(f), columns: header.len() };
+        if !has_rows {
+            w.write_row_str(header)?;
+        }
+        Ok(w)
+    }
+
     fn write_row_str(&mut self, cells: &[&str]) -> Result<()> {
         let mut line = String::new();
         for (i, c) in cells.iter().enumerate() {
@@ -77,5 +100,25 @@ mod tests {
         }
         let content = std::fs::read_to_string(&path).unwrap();
         assert_eq!(content, "step,loss\n1,2.5\n2,\"2,1\"\n");
+    }
+
+    #[test]
+    fn append_extends_without_rewriting_the_header() {
+        let path = std::env::temp_dir().join(format!("tmg_csv_app_{}.csv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            // First open on a fresh file still writes the header.
+            let mut w = CsvWriter::append(&path, &["step", "loss"]).unwrap();
+            w.row(&["1".into(), "2.5".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        {
+            // Reopening (the resume case) keeps prior rows, no 2nd header.
+            let mut w = CsvWriter::append(&path, &["step", "loss"]).unwrap();
+            w.row(&["2".into(), "2.0".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "step,loss\n1,2.5\n2,2.0\n");
     }
 }

@@ -8,6 +8,12 @@ pub mod init;
 pub mod store;
 
 pub use average::{average_pair, average_weighted};
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    best_marker_error, find_auto_resume, load_checkpoint, load_checkpoint_full,
+    peek_checkpoint, periodic_checkpoint_name, prune_checkpoints, read_marker,
+    resume_set_from_path, save_checkpoint, save_checkpoint_v2, verify_checkpoint,
+    worker_sibling, write_marker, CheckpointInfo, ResumeSet, TrainState, BEST_MARKER,
+    LATEST_MARKER,
+};
 pub use init::init_params;
 pub use store::ParamStore;

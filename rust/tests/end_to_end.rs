@@ -13,9 +13,12 @@
 
 use std::path::{Path, PathBuf};
 
-use theano_mgpu::config::{ClusterConfig, DataConfig, LoaderMode, TrainConfig, TransportKind};
+use theano_mgpu::config::{
+    ClusterConfig, DataConfig, LoaderMode, ResumeFrom, TrainConfig, TransportKind,
+};
 use theano_mgpu::coordinator::trainer::{effective_transport, train, TrainSummary};
 use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+use theano_mgpu::params::{load_checkpoint, ParamStore};
 
 /// Shared micro dataset for all e2e tests (10 classes = micro model).
 fn dataset(tag: &str) -> PathBuf {
@@ -248,6 +251,249 @@ fn checkpoint_written_and_evaluable() {
     let r = theano_mgpu::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 2).unwrap();
     assert!(r.examples > 0);
     assert!(r.mean_loss.is_finite());
+}
+
+/// Fresh checkpoint dir for one test phase.
+fn ckpt_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmg_e2e_ckd_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Load the final checkpoint a run wrote into `dir`.
+fn load_final(cfg: &TrainConfig, dir: &Path) -> ParamStore {
+    let model = theano_mgpu::backend::resolve_model(cfg).unwrap();
+    let mut store = ParamStore::init(&model.params, 12345); // clobbered by the load
+    let path = dir.join(format!("{}_step{}.ckpt", cfg.name, cfg.steps));
+    load_checkpoint(&path, &mut store).unwrap();
+    store
+}
+
+/// The acceptance criterion: `train 2N` and `train N -> kill -> resume N`
+/// must produce *identical* final state (divergence 0.0), single worker.
+#[test]
+fn resume_is_bit_exact_single_worker() {
+    let tag = "resume1";
+    let straight_dir = ckpt_dir("straight1");
+    let mut straight = micro_cfg(tag, 12, 1);
+    // Dropout on: the per-step seeded masks must also replay exactly
+    // (the resumed run re-derives step_seed from the absolute step).
+    straight.dropout = 0.5;
+    straight.checkpoint_dir = Some(straight_dir.clone());
+    let s = train(&straight).unwrap();
+    assert_eq!(s.resumed_from, None);
+    let straight_losses = s.losses;
+
+    // "Kill" after 6 steps (the run's final checkpoint doubles as the
+    // kill-point snapshot), then resume to 12 in a second process life.
+    let part_dir = ckpt_dir("part1");
+    let mut part = micro_cfg(tag, 6, 1);
+    part.dropout = 0.5;
+    part.checkpoint_dir = Some(part_dir.clone());
+    let part_losses = train(&part).unwrap().losses;
+
+    let mut resumed = micro_cfg(tag, 12, 1);
+    resumed.dropout = 0.5;
+    resumed.checkpoint_dir = Some(part_dir.clone());
+    resumed.resume = Some(ResumeFrom::Auto);
+    let s = train(&resumed).unwrap();
+    assert_eq!(s.resumed_from, Some(6));
+    assert_eq!(s.losses.len(), 6, "resumed run executes only the remaining steps");
+
+    // The two step-loss streams concatenate into the straight run's...
+    let full: Vec<f32> = part_losses.iter().chain(&s.losses).copied().collect();
+    assert_eq!(full, straight_losses, "loss stream must splice seamlessly");
+    // ...and the final parameters + momenta are bit-identical.
+    let a = load_final(&straight, &straight_dir);
+    let b = load_final(&resumed, &part_dir);
+    assert_eq!(a.max_divergence(&b), 0.0, "resume must be bit-exact");
+}
+
+/// Same criterion with 2 workers exchanging every step: resume goes
+/// through the per-worker periodic snapshots `--resume auto` discovers.
+#[test]
+fn resume_is_bit_exact_two_workers_with_exchange() {
+    let tag = "resume2";
+    let straight_dir = ckpt_dir("straight2");
+    let mut straight = micro_cfg(tag, 12, 2);
+    straight.checkpoint_dir = Some(straight_dir.clone());
+    let straight_losses = train(&straight).unwrap().losses;
+
+    let part_dir = ckpt_dir("part2");
+    let mut part = micro_cfg(tag, 6, 2);
+    part.checkpoint_dir = Some(part_dir.clone());
+    part.checkpoint_every = 3; // periodic per-worker sets at steps 3, 6
+    train(&part).unwrap();
+    assert!(part_dir.join(format!("{}_step3.w0.ckpt", part.name)).exists());
+    assert!(part_dir.join(format!("{}_step6.w1.ckpt", part.name)).exists());
+    assert!(part_dir.join("LATEST").exists());
+
+    let mut resumed = micro_cfg(tag, 12, 2);
+    resumed.checkpoint_dir = Some(part_dir.clone());
+    resumed.checkpoint_every = 3;
+    resumed.resume = Some(ResumeFrom::Auto);
+    let s = train(&resumed).unwrap();
+    assert_eq!(s.resumed_from, Some(6));
+    let divergence = s.final_divergence.expect("2 workers report divergence");
+    assert!(divergence < 1e-6, "replicas diverged after resume: {divergence}");
+    // Worker-0 losses over steps 6..12 match the straight run exactly.
+    assert_eq!(s.losses, &straight_losses[6..], "post-resume steps must replay bit-exactly");
+
+    let a = load_final(&straight, &straight_dir);
+    let b = load_final(&resumed, &part_dir);
+    assert_eq!(a.max_divergence(&b), 0.0, "2-worker resume must be bit-exact");
+}
+
+/// The strongest form: exchange period 2 and a kill at an *odd* step,
+/// where the replicas are legitimately desynchronized — only the
+/// per-worker snapshots can restore each replica's private state.
+#[test]
+fn resume_is_bit_exact_when_replicas_are_desynchronized() {
+    let tag = "resume3";
+    let straight_dir = ckpt_dir("straight3");
+    let mut straight = micro_cfg(tag, 10, 2);
+    straight.exchange.period = 2;
+    straight.checkpoint_dir = Some(straight_dir.clone());
+    let straight_losses = train(&straight).unwrap().losses;
+
+    let part_dir = ckpt_dir("part3");
+    let mut part = micro_cfg(tag, 5, 2);
+    part.exchange.period = 2;
+    part.checkpoint_dir = Some(part_dir.clone());
+    part.checkpoint_every = 5; // snapshot at step 5: no exchange ran there
+    train(&part).unwrap();
+
+    let mut resumed = micro_cfg(tag, 10, 2);
+    resumed.exchange.period = 2;
+    resumed.checkpoint_dir = Some(part_dir.clone());
+    resumed.resume = Some(ResumeFrom::Auto);
+    let s = train(&resumed).unwrap();
+    assert_eq!(s.resumed_from, Some(5));
+    assert_eq!(s.losses, &straight_losses[5..]);
+
+    let a = load_final(&straight, &straight_dir);
+    let b = load_final(&resumed, &part_dir);
+    assert_eq!(a.max_divergence(&b), 0.0, "per-worker resume must restore private state");
+}
+
+/// Resuming with a changed resume-critical config must fail loudly,
+/// not silently train something non-reproducible.
+#[test]
+fn resume_rejects_config_drift() {
+    let tag = "resumedrift";
+    let dir = ckpt_dir("drift");
+    let mut part = micro_cfg(tag, 4, 1);
+    part.checkpoint_dir = Some(dir.clone());
+    train(&part).unwrap();
+    let ckpt = dir.join(format!("{}_step4.ckpt", part.name));
+
+    // Different seed => different data/augmentation stream.
+    let mut resumed = micro_cfg(tag, 8, 1);
+    resumed.seed = 8888;
+    resumed.checkpoint_dir = Some(dir.clone());
+    resumed.resume = Some(ResumeFrom::Path(ckpt.clone()));
+    assert!(train(&resumed).is_err(), "seed drift must be rejected");
+
+    // Steps lower than the checkpoint: nothing left to train.
+    let mut resumed = micro_cfg(tag, 4, 1);
+    resumed.checkpoint_dir = Some(dir.clone());
+    resumed.resume = Some(ResumeFrom::Path(ckpt));
+    assert!(train(&resumed).is_err(), "steps <= checkpoint step must be rejected");
+
+    // Auto with an empty dir starts fresh instead of failing.
+    let empty = ckpt_dir("driftempty");
+    let mut fresh = micro_cfg(tag, 2, 1);
+    fresh.checkpoint_dir = Some(empty);
+    fresh.resume = Some(ResumeFrom::Auto);
+    let s = train(&fresh).unwrap();
+    assert_eq!(s.resumed_from, None);
+
+    // Auto on an already-complete run is a no-op (supervisors re-run
+    // the same command after success — that must not crash-loop): no
+    // steps execute, the checkpoint is evaluated instead.
+    let mut done_again = micro_cfg(tag, 4, 1);
+    done_again.checkpoint_dir = Some(dir.clone());
+    done_again.resume = Some(ResumeFrom::Auto);
+    let s = train(&done_again).unwrap();
+    assert_eq!(s.resumed_from, Some(4));
+    assert!(s.losses.is_empty(), "no steps should re-train");
+    assert_eq!(s.eval.expect("completed run still evaluates").examples, 64);
+}
+
+/// A resumed run splices its rows into the existing metrics CSV: the
+/// pre-kill curve is kept, rows past the checkpoint (steps the resume
+/// re-trains) are dropped, and nothing is duplicated.
+#[test]
+fn resumed_metrics_csv_has_no_duplicate_steps() {
+    let tag = "resumecsv";
+    let dir = ckpt_dir("resumecsv");
+    let csv = std::env::temp_dir().join(format!("tmg_e2e_resumecsv_{}.csv", std::process::id()));
+    let _ = std::fs::remove_file(&csv);
+    let mut part = micro_cfg(tag, 8, 1);
+    part.checkpoint_dir = Some(dir.clone());
+    part.checkpoint_every = 6;
+    part.metrics_csv = Some(csv.clone());
+    train(&part).unwrap();
+
+    // Resume from the step-6 snapshot: steps 6 and 7 ran past the
+    // checkpoint (rows already logged) and get re-trained.
+    let mut resumed = micro_cfg(tag, 12, 1);
+    resumed.checkpoint_dir = Some(dir.clone());
+    resumed.metrics_csv = Some(csv.clone());
+    resumed.resume = Some(ResumeFrom::Path(dir.join(format!("{}_step6.w0.ckpt", part.name))));
+    let s = train(&resumed).unwrap();
+    assert_eq!(s.resumed_from, Some(6));
+
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert!(content.starts_with("step,worker,loss"), "header intact");
+    let steps: Vec<&str> = content.lines().skip(1).map(|l| l.split(',').next().unwrap()).collect();
+    assert_eq!(steps.len(), 12, "6 pre-kill rows + 6 resumed rows");
+    let unique: std::collections::HashSet<_> = steps.iter().collect();
+    assert_eq!(unique.len(), 12, "no duplicate step rows after resume");
+}
+
+/// Mid-training validation: `eval_every` produces the eval curve in the
+/// summary and the sibling eval CSV, on top of the final eval.
+#[test]
+fn mid_training_validation_reports_and_csv() {
+    let mut cfg = micro_cfg("evalmid", 6, 1);
+    cfg.eval_every = 2;
+    let csv = std::env::temp_dir().join(format!("tmg_e2e_evalmid_{}.csv", std::process::id()));
+    cfg.metrics_csv = Some(csv.clone());
+    let s = train(&cfg).unwrap();
+    // Steps 2 and 4; the final step's eval is the summary's `eval`.
+    assert_eq!(s.evals.len(), 2);
+    assert_eq!((s.evals[0].step, s.evals[1].step), (2, 4));
+    for r in &s.evals {
+        assert_eq!(r.result.examples, 64, "mid-train eval must cover the full split");
+        assert!(r.result.mean_loss.is_finite());
+    }
+    assert_eq!(s.eval.unwrap().examples, 64);
+    let eval_csv = csv.with_extension("eval.csv");
+    let content = std::fs::read_to_string(&eval_csv).unwrap();
+    assert!(content.starts_with("step,examples,mean_loss,top1_error,top5_error"));
+    assert_eq!(content.lines().count(), 1 + 2);
+    // The step-metrics CSV is untouched by eval rows.
+    let steps_csv = std::fs::read_to_string(&csv).unwrap();
+    assert_eq!(steps_csv.lines().count(), 1 + 6);
+}
+
+/// Validation covers the whole split: a ragged tail (64 % 7 != 0) and
+/// even a split smaller than one batch are evaluated, not dropped.
+#[test]
+fn validation_counts_every_example() {
+    // Batch 7: 9 full batches + a tail of 1 example.
+    let mut cfg = micro_cfg("ragged", 4, 1);
+    cfg.batch_per_worker = 7;
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.eval.unwrap().examples, 64, "ragged tail must be evaluated");
+
+    // Batch larger than the split: the old trainer skipped eval
+    // entirely; now the one partial batch is the whole measurement.
+    let mut cfg = micro_cfg("ragged", 2, 1);
+    cfg.batch_per_worker = 128;
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.eval.expect("eval must run even when val < batch").examples, 64);
 }
 
 #[test]
