@@ -1,0 +1,247 @@
+// GEMM microkernel throughput on the real AlexNet shapes.
+//
+// Times the packed register-blocked kernels (serial and tile-parallel
+// at 1/2/4 threads) against the pre-packing scalar kernels on every
+// GEMM the full 227×227 AlexNet step actually runs — the conv1–conv5
+// im2col products (per example) and the FC1–FC3 products (per batch) —
+// plus two ReLU-sparse cases that keep the zero-skip-vs-vectorization
+// decision honest (the scalar kernels skip zero multipliers, the packed
+// kernels deliberately do not; see gemm.rs).
+//
+// Emits `target/bench_results/BENCH_gemm.json`: GFLOP/s per case per
+// configuration, with packed-vs-scalar ratios.  CI runs this alongside
+// the native-step bench and uploads both, so the before/after of the
+// packed rewrite (and the zero-skip measurement) is recorded on every
+// push.
+
+include!("harness.rs");
+
+use theano_mgpu::backend::native::gemm::{
+    matmul_nn_ws, matmul_nt_ws, matmul_tn_ws, par_matmul_nn, par_matmul_nt, par_matmul_tn, scalar,
+    PackBuf,
+};
+use theano_mgpu::backend::native::model::{NetPlan, PlanOp};
+use theano_mgpu::backend::native::pool::ComputePool;
+use theano_mgpu::sim::flops::alexnet;
+use theano_mgpu::util::Pcg32;
+
+/// Batch size the FC products are shaped for (conv products are
+/// per-example, exactly as the step runs them).
+const BATCH: usize = 16;
+
+#[derive(Clone, Copy)]
+enum Layout {
+    Nn,
+    Nt,
+    /// `A` is stored `[k, m]` (`Aᵀ·B`); the sparse dW case uses it.
+    Tn,
+}
+
+struct Case {
+    name: String,
+    layout: Layout,
+    m: usize,
+    k: usize,
+    n: usize,
+    /// Fraction of zeros injected into A (post-ReLU sparsity stand-in).
+    a_zeros: f32,
+}
+
+/// Every GEMM shape of the full AlexNet forward pass, taken from the
+/// same compiled plan the native backend executes.
+fn alexnet_cases() -> Vec<Case> {
+    let plan = NetPlan::from_arch(&alexnet());
+    let mut cases = Vec::new();
+    let (mut n_conv, mut n_fc) = (0, 0);
+    for op in &plan.ops {
+        match op {
+            PlanOp::ConvRelu { shape, .. } => {
+                n_conv += 1;
+                cases.push(Case {
+                    name: format!("conv{n_conv}"),
+                    layout: Layout::Nn,
+                    m: shape.cout,
+                    k: shape.cin * shape.k * shape.k,
+                    n: shape.out_hw * shape.out_hw,
+                    a_zeros: 0.0,
+                });
+            }
+            PlanOp::FcRelu { shape, .. } | PlanOp::FcOut { shape, .. } => {
+                n_fc += 1;
+                cases.push(Case {
+                    name: format!("fc{n_fc}"),
+                    layout: Layout::Nt,
+                    m: BATCH,
+                    k: shape.din,
+                    n: shape.dout,
+                    a_zeros: 0.0,
+                });
+            }
+            PlanOp::Pool { .. } => {}
+        }
+    }
+    cases
+}
+
+/// The shapes where the old zero-skip actually fired in the step: both
+/// scalar kernels skip on zeros of the A operand only, and the two step
+/// GEMMs whose A operand is ReLU-sparse are FC dX (`nn`, A = dY) and
+/// FC dW (`tn`, A = dY).  ~50% zeros stands in for post-ReLU sparsity.
+fn sparse_cases() -> Vec<Case> {
+    vec![
+        // FC1 dX-shaped: dX = dY (sparse) · W.
+        Case {
+            name: "fc1-dx-sparse50".into(),
+            layout: Layout::Nn,
+            m: BATCH,
+            k: 4096,
+            n: 9216,
+            a_zeros: 0.5,
+        },
+        // FC1 dW-shaped: dW += dYᵀ (sparse) · X.
+        Case {
+            name: "fc1-dw-sparse50".into(),
+            layout: Layout::Tn,
+            m: 4096,
+            k: BATCH,
+            n: 9216,
+            a_zeros: 0.5,
+        },
+    ]
+}
+
+fn rand_vec(rng: &mut Pcg32, n: usize, zeros: f32) -> Vec<f32> {
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v, 1.0);
+    if zeros > 0.0 {
+        for x in v.iter_mut() {
+            if rng.next_f32() < zeros {
+                *x = 0.0;
+            }
+        }
+    }
+    v
+}
+
+struct Measured {
+    scalar_t1: f64,
+    packed: Vec<(usize, f64)>, // (threads, gflops)
+    ratio: f64,
+}
+
+fn gflops(case: &Case, med: f64) -> f64 {
+    (2.0 * case.m as f64 * case.k as f64 * case.n as f64) / med / 1e9
+}
+
+fn run_case(b: &mut Bench, case: &Case, pools: &[(usize, ComputePool)]) -> Measured {
+    let mut rng = Pcg32::seeded(17);
+    let (m, k, n) = (case.m, case.k, case.n);
+    let a = rand_vec(&mut rng, m * k, case.a_zeros);
+    // nt's B is [n, k]; nn's is [k, n] — same element count.
+    let bmat = rand_vec(&mut rng, k * n, 0.0);
+    // C accumulates across iterations — the kernels' own contract.  It
+    // is never zeroed inside the timed region: for large-C cases (fc1-dw
+    // is a 151 MB C) a fill would add a full write pass to both sides
+    // and compress the packed-vs-scalar ratio the record exists for.
+    let mut c = vec![0.0f32; m * n];
+    let shape = format!("{m}x{k}x{n}");
+    let tag = if case.a_zeros > 0.0 { " (scalar skips zeros)" } else { "" };
+
+    let med = b.case(&format!("{} {shape} scalar t1{tag}", case.name), 1, 3, || {
+        match case.layout {
+            Layout::Nn => scalar::matmul_nn(m, k, n, &a, &bmat, &mut c),
+            Layout::Nt => scalar::matmul_nt(m, k, n, &a, &bmat, &mut c),
+            Layout::Tn => scalar::matmul_tn(m, k, n, &a, &bmat, &mut c),
+        }
+    });
+    let scalar_t1 = gflops(case, med);
+    b.record(&format!("{} {shape} scalar t1 GFLOP/s", case.name), scalar_t1, "GF/s");
+
+    let mut ws = PackBuf::default();
+    let mut packed = Vec::new();
+    let med = b.case(&format!("{} {shape} packed t1", case.name), 1, 3, || {
+        match case.layout {
+            Layout::Nn => matmul_nn_ws(m, k, n, &a, &bmat, &mut c, &mut ws),
+            Layout::Nt => matmul_nt_ws(m, k, n, &a, &bmat, &mut c, &mut ws),
+            Layout::Tn => matmul_tn_ws(m, k, n, &a, &bmat, &mut c, &mut ws),
+        }
+    });
+    packed.push((1, gflops(case, med)));
+    for (threads, pool) in pools {
+        let med = b.case(&format!("{} {shape} packed t{threads}", case.name), 1, 3, || {
+            match case.layout {
+                Layout::Nn => par_matmul_nn(pool, m, k, n, &a, &bmat, &mut c, &mut ws),
+                Layout::Nt => par_matmul_nt(pool, m, k, n, &a, &bmat, &mut c, &mut ws),
+                Layout::Tn => par_matmul_tn(pool, m, k, n, &a, &bmat, &mut c, &mut ws),
+            }
+        });
+        packed.push((*threads, gflops(case, med)));
+    }
+    for (t, gf) in &packed {
+        b.record(&format!("{} {shape} packed t{t} GFLOP/s", case.name), *gf, "GF/s");
+    }
+    let ratio = packed[0].1 / scalar_t1;
+    b.record(&format!("{} packed/scalar at t1", case.name), ratio, "x");
+    Measured { scalar_t1, packed, ratio }
+}
+
+fn case_json(case: &Case, r: &Measured) -> String {
+    let layout = match case.layout {
+        Layout::Nn => "nn",
+        Layout::Nt => "nt",
+        Layout::Tn => "tn",
+    };
+    let packed: Vec<String> =
+        r.packed.iter().map(|(t, gf)| format!("\"t{t}\": {gf:.3}")).collect();
+    format!(
+        "{{\"name\": \"{}\", \"layout\": \"{layout}\", \"m\": {}, \"k\": {}, \"n\": {}, \
+         \"a_zero_fraction\": {:.2}, \"gflops_scalar_t1\": {:.3}, \
+         \"gflops_packed\": {{{}}}, \"packed_vs_scalar_t1\": {:.3}}}",
+        case.name,
+        case.m,
+        case.k,
+        case.n,
+        case.a_zeros,
+        r.scalar_t1,
+        packed.join(", "),
+        r.ratio
+    )
+}
+
+fn main() {
+    let mut b = Bench::new("gemm_kernels");
+    let pools = vec![(2usize, ComputePool::new(2)), (4usize, ComputePool::new(4))];
+
+    let cases = alexnet_cases();
+    let mut rows = Vec::new();
+    let mut fc1_ratio = 0.0;
+    for case in &cases {
+        let r = run_case(&mut b, case, &pools);
+        if case.name == "fc1" {
+            fc1_ratio = r.ratio;
+        }
+        rows.push(case_json(case, &r));
+    }
+    let mut sparse_rows = Vec::new();
+    for case in &sparse_cases() {
+        let r = run_case(&mut b, case, &pools);
+        sparse_rows.push(case_json(case, &r));
+    }
+
+    b.write_csv();
+
+    let dir = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("BENCH_gemm.json");
+    let json = format!(
+        "{{\"bench\": \"gemm_kernels\", \"model\": \"alexnet\", \"fc_batch\": {BATCH}, \
+         \"threads\": [1, 2, 4], \"available_cores\": {}, \
+         \"fc1_packed_vs_scalar_t1\": {fc1_ratio:.3}, \
+         \"cases\": [{}], \"sparse_cases\": [{}]}}\n",
+        theano_mgpu::util::available_cores(),
+        rows.join(", "),
+        sparse_rows.join(", ")
+    );
+    let _ = std::fs::write(&path, json);
+    println!("  -> {}", path.display());
+}

@@ -1,119 +1,407 @@
-//! Blocked single-precision matrix multiply kernels.
+//! Packed, register-blocked single-precision GEMM.
 //!
-//! Three accumulating variants cover every product the AlexNet
+//! Three accumulating products cover everything the AlexNet
 //! forward/backward pass needs (conv-as-GEMM over im2col columns and
 //! the fully-connected layers):
 //!
-//! - [`matmul_nn`]: `C += A · B`            (conv forward, FC dX)
-//! - [`matmul_nt`]: `C += A · Bᵀ`           (FC forward, conv dW)
-//! - [`matmul_tn`]: `C += Aᵀ · B`           (FC dW, conv dCol)
+//! - `nn`: `C += A · B`            (conv forward, FC dX)
+//! - `nt`: `C += A · Bᵀ`           (FC forward, conv dW)
+//! - `tn`: `C += Aᵀ · B`           (FC dW, conv dCol)
 //!
-//! All three accumulate into `C` so callers control zeroing, and all
-//! iterate in row-major-friendly order.  `matmul_nn`/`matmul_tn` skip
-//! zero multipliers — after ReLU the activation/gradient operands are
-//! substantially sparse, and the branch is a measurable win on the
-//! backward pass.
+//! All three run through **one microkernel**: an `MR×NR` register tile
+//! with fully unrolled, independent accumulators (FMA/auto-vectorizer
+//! friendly — no loop-carried dependence per lane), fed by packed
+//! operand panels.  The `nn`/`nt`/`tn` variants differ *only* in the
+//! [`pack_a_strip`]/[`pack_b_strip`] routines, which stage A row-panels
+//! and B column-panels into the contiguous [`PackBuf`] workspace in
+//! k-major micro-panel order (transposition is free at packing time).
+//! Short panels are zero-padded to full `MR`/`NR` width, so the kernel
+//! has no edge branches; padded lanes accumulate exact zeros and are
+//! never written back.
 //!
-//! The `par_matmul_*` wrappers split `C` into row blocks with
-//! shape-derived boundaries ([`shape_chunks`]) and run the serial
-//! kernel on each block through the [`ComputePool`].  Every `C` row is
-//! produced by exactly the instruction sequence the serial kernel would
-//! use, so the parallel results are **bit-identical** to the serial
-//! ones for any lane count — the property `tests/parallel_backend.rs`
-//! pins.
+//! Cache blocking follows the classic GOTO/BLIS schedule: `KC`-deep
+//! slices keep a packed B panel of `NC` columns L2/L3-resident while
+//! `MC`-row A panels stream through it.  `C` accumulates across `KC`
+//! slices, so callers still control zeroing exactly as before.
+//!
+//! ## Determinism contract
+//!
+//! Every output element is produced by a fixed instruction sequence:
+//! `k` is consumed in increasing order within each `KC` slice, and the
+//! slices accumulate into `C` in increasing `pc` order.  Tile
+//! boundaries (row strips, column groups, `KC`/`MC`/`NC` blocks) derive
+//! from the problem shape and compile-time constants only — never from
+//! the lane count — and tiles write disjoint `C` regions.  The
+//! `par_matmul_*` forms therefore produce **bit-identical** results to
+//! the `matmul_*_ws` serial forms for any `--threads` value (the
+//! `assert_eq` contract `tests/parallel_backend.rs` pins), and every
+//! shape is reproducible run-to-run.  The summation order legitimately
+//! differs from the pre-packing scalar kernels (kept in [`scalar`] for
+//! benchmarking and reference), so cross-kernel comparisons are
+//! rounding-tolerant, never bitwise.
+//!
+//! The ReLU-sparsity zero-skip the scalar kernels carried is
+//! deliberately **dropped** here: a per-multiplier branch inside the
+//! microkernel defeats vectorization and register blocking, which is
+//! worth far more than the skipped multiplies (`benches/gemm_kernels.rs`
+//! measures both on a 50%-sparse operand to keep the decision honest).
 
-use crate::backend::native::pool::{par_chunks_mut, shape_chunks, ComputePool};
+use crate::backend::native::pool::{ComputePool, SendPtr};
+use crate::util::math::{ceil_div, ceil_to};
 
-/// `C[m×n] += A[m×k] · B[k×n]` — cache-blocked over `k` and `n`.
-pub fn matmul_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    // Block sizes chosen so a (KC × NC) panel of B stays L1/L2-resident
-    // across the `i` loop.
-    const KC: usize = 64;
-    const NC: usize = 512;
-    for k0 in (0..k).step_by(KC) {
-        let k1 = (k0 + KC).min(k);
-        for j0 in (0..n).step_by(NC) {
-            let j1 = (j0 + NC).min(n);
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n + j0..i * n + j1];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n + j0..kk * n + j1];
-                    for (cv, bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
+/// Microkernel rows: A micro-panel width.
+pub const MR: usize = 4;
+/// Microkernel columns: B micro-panel width.
+pub const NR: usize = 8;
+/// k-depth of one packed slice (A and B panels are `KC` deep).
+pub const KC: usize = 256;
+/// Rows of one packed A panel (multiple of `MR`).
+pub const MC: usize = 64;
+/// Columns of one packed B panel (multiple of `NR`).
+pub const NC: usize = 512;
+/// B column strips (`NR` wide) per scheduling unit: one macrokernel
+/// task covers `JGRP × NR = 64` output columns, coarse enough that
+/// dispatch cost vanishes, fine enough that small-`m` GEMMs (FC dX at
+/// small batch) still fan out across lanes.
+const JGRP: usize = 8;
+
+/// Which operands arrive transposed.  Handled entirely in the packers;
+/// the microkernel always sees k-major micro-panels.
+#[derive(Clone, Copy, Debug)]
+enum Layout {
+    /// `A[m×k] · B[k×n]`
+    Nn,
+    /// `A[m×k] · B[n×k]ᵀ`
+    Nt,
+    /// `A[k×m]ᵀ · B[k×n]`
+    Tn,
+}
+
+/// Workspace holding the packed A row-panel (`≤ MC×KC`) and B
+/// column-panel (`≤ NC×KC`, rounded up to whole `NR` strips).  Grown on
+/// first use, then reused forever — zero steady-state allocations.  The
+/// serial kernels need one per calling lane (conv keeps one per pool
+/// lane in `ConvScratch`); the `par_matmul_*` forms share one, packed
+/// cooperatively by the pool.
+#[derive(Debug, Default)]
+pub struct PackBuf {
+    apack: Vec<f32>,
+    bpack: Vec<f32>,
+}
+
+impl PackBuf {
+    fn ensure(&mut self, m: usize, k: usize, n: usize) {
+        let kc = k.min(KC);
+        let a_need = ceil_to(m.min(MC), MR) * kc;
+        let b_need = ceil_to(n.min(NC), NR) * kc;
+        if self.apack.len() < a_need {
+            self.apack.resize(a_need, 0.0);
+        }
+        if self.bpack.len() < b_need {
+            self.bpack.resize(b_need, 0.0);
+        }
+    }
+}
+
+/// Pack one `MR`-row strip of the A panel (`rows ≤ MR` valid rows
+/// starting at `r0`, k-slice `pc..pc+kc`) into `out[p*MR + r]`,
+/// zero-padding past `rows`.
+#[allow(clippy::too_many_arguments)]
+fn pack_a_strip(
+    layout: Layout,
+    a: &[f32],
+    m: usize,
+    k: usize,
+    r0: usize,
+    rows: usize,
+    pc: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(rows >= 1 && rows <= MR && out.len() >= kc * MR);
+    if rows < MR {
+        out[..kc * MR].fill(0.0);
+    }
+    match layout {
+        // op-A[r][p] = a[(r0+r)·k + pc+p]: contiguous reads per row.
+        Layout::Nn | Layout::Nt => {
+            for r in 0..rows {
+                let arow = &a[(r0 + r) * k + pc..(r0 + r) * k + pc + kc];
+                for (p, &v) in arow.iter().enumerate() {
+                    out[p * MR + r] = v;
+                }
+            }
+        }
+        // op-A[r][p] = a[(pc+p)·m + r0+r]: contiguous in r — the
+        // transpose is free here.
+        Layout::Tn => {
+            for p in 0..kc {
+                let arow = &a[(pc + p) * m + r0..(pc + p) * m + r0 + rows];
+                out[p * MR..p * MR + rows].copy_from_slice(arow);
+            }
+        }
+    }
+}
+
+/// Pack one `NR`-column strip of the B panel (`cols ≤ NR` valid columns
+/// starting at `j0`, k-slice `pc..pc+kc`) into `out[p*NR + j]`,
+/// zero-padding past `cols`.
+#[allow(clippy::too_many_arguments)]
+fn pack_b_strip(
+    layout: Layout,
+    b: &[f32],
+    k: usize,
+    n: usize,
+    j0: usize,
+    cols: usize,
+    pc: usize,
+    kc: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(cols >= 1 && cols <= NR && out.len() >= kc * NR);
+    if cols < NR {
+        out[..kc * NR].fill(0.0);
+    }
+    match layout {
+        // op-B[p][j] = b[(pc+p)·n + j0+j]: contiguous both sides.
+        Layout::Nn | Layout::Tn => {
+            for p in 0..kc {
+                let brow = &b[(pc + p) * n + j0..(pc + p) * n + j0 + cols];
+                out[p * NR..p * NR + cols].copy_from_slice(brow);
+            }
+        }
+        // op-B[p][j] = b[(j0+j)·k + pc+p]: contiguous reads per column.
+        Layout::Nt => {
+            for j in 0..cols {
+                let bcol = &b[(j0 + j) * k + pc..(j0 + j) * k + pc + kc];
+                for (p, &v) in bcol.iter().enumerate() {
+                    out[p * NR + j] = v;
                 }
             }
         }
     }
 }
 
-/// `C[m×n] += A[m×k] · B[n×k]ᵀ` — row-dot-row, no staging needed.
-pub fn matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
-            let mut acc = 0.0f32;
-            for (av, bv) in arow.iter().zip(brow) {
-                acc += av * bv;
+/// The one microkernel: `acc[MR][NR] = Σ_p ap[p]·bp[p]ᵀ` over a packed
+/// `kc`-deep micro-panel pair.  `MR×NR` independent accumulators, inner
+/// loops unrolled by the compiler (constant bounds), no branches.
+#[inline(always)]
+fn microkernel(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let av = &ap[p * MR..p * MR + MR];
+        let bv = &bp[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let a = av[r];
+            for j in 0..NR {
+                acc[r][j] += a * bv[j];
             }
-            *cv += acc;
+        }
+    }
+    acc
+}
+
+/// Serial-or-pool dispatch.  Both arms run the identical unit bodies —
+/// units are disjoint and independent, so the schedule can never change
+/// a bit of the output.
+enum Exec<'a> {
+    Serial,
+    Pool(&'a ComputePool),
+}
+
+impl Exec<'_> {
+    fn units(&self, n_units: usize, f: &(dyn Fn(usize, usize) + Sync)) {
+        match self {
+            Exec::Serial => {
+                for u in 0..n_units {
+                    f(0, u);
+                }
+            }
+            Exec::Pool(p) => p.run_chunks(n_units, f),
+        }
+    }
+
+    fn grid(&self, ni: usize, nj: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        match self {
+            Exec::Serial => {
+                for i in 0..ni {
+                    for j in 0..nj {
+                        f(0, i, j);
+                    }
+                }
+            }
+            Exec::Pool(p) => p.run_grid(ni, nj, f),
         }
     }
 }
 
-/// `C[m×n] += A[k×m]ᵀ · B[k×n]` — outer-product accumulation.
-pub fn matmul_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    matmul_tn_rows(m, 0, m, k, n, a, b, c);
-}
-
-/// The `matmul_tn` inner loops restricted to output rows `[lo, hi)`
-/// (columns `lo..hi` of `A`), writing into the row-block slice
-/// `c_block` of length `(hi - lo) × n`.  Per-element accumulation runs
-/// over `kk` in the same order as the full kernel, so a row block is
-/// bitwise what the serial kernel computes for those rows.
-fn matmul_tn_rows(
+/// The blocked driver shared by all six public entry points.
+///
+/// Per (`jc`, `pc`) block: phase 1 packs the B panel (one unit per
+/// `JGRP`-strip column group); per `ic` block, phase 2 packs the A
+/// panel inline (too little work to be worth a dispatch) and phase 3
+/// runs the macrokernel over the (row strip × column group) grid.
+/// Dispatched phases are separated by the pool's completion barrier,
+/// units within a phase write disjoint regions, and all boundaries are
+/// shape-derived — see the module docs for why this makes serial and
+/// parallel bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed(
+    layout: Layout,
+    exec: Exec,
     m: usize,
-    lo: usize,
-    hi: usize,
     k: usize,
     n: usize,
     a: &[f32],
     b: &[f32],
-    c_block: &mut [f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
 ) {
-    debug_assert_eq!(c_block.len(), (hi - lo) * n);
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for i in lo..hi {
-            let av = arow[i];
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c_block[(i - lo) * n..(i - lo + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    ws.ensure(m, k, n);
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    let ap_ptr = SendPtr::new(ws.apack.as_mut_ptr());
+    let bp_ptr = SendPtr::new(ws.bpack.as_mut_ptr());
+    for jc in (0..n).step_by(NC) {
+        let nc = NC.min(n - jc);
+        let n_jstrips = ceil_div(nc, NR);
+        let n_jgroups = ceil_div(n_jstrips, JGRP);
+        for pc in (0..k).step_by(KC) {
+            let kc = KC.min(k - pc);
+            // Phase 1: pack B — strips are disjoint bpack regions.
+            exec.units(n_jgroups, &|_lane, g| {
+                for s in g * JGRP..(g * JGRP + JGRP).min(n_jstrips) {
+                    // SAFETY: strip s owns bpack[s·NR·kc .. (s+1)·NR·kc];
+                    // the barrier below orders packing before reads.
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(bp_ptr.get().add(s * NR * kc), NR * kc)
+                    };
+                    pack_b_strip(layout, b, k, n, jc + s * NR, NR.min(nc - s * NR), pc, kc, out);
+                }
+            });
+            for ic in (0..m).step_by(MC) {
+                let mc = MC.min(m - ic);
+                let n_istrips = ceil_div(mc, MR);
+                // Phase 2: pack A, inline on the dispatching thread — an
+                // A panel is ≤ MC×KC elements, a fraction of a percent
+                // of the macrokernel work it feeds, so a pool dispatch
+                // here would cost more than the copies.  The phase-3
+                // dispatch below is the happens-before edge that
+                // publishes these writes to the lanes.
+                for s in 0..n_istrips {
+                    // SAFETY: strip s owns apack[s·MR·kc .. (s+1)·MR·kc].
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(ap_ptr.get().add(s * MR * kc), MR * kc)
+                    };
+                    pack_a_strip(layout, a, m, k, ic + s * MR, MR.min(mc - s * MR), pc, kc, out);
+                }
+                // Phase 3: macrokernel over the tile grid; each tile
+                // owns its C rows × columns outright.
+                exec.grid(n_istrips, n_jgroups, &|_lane, is, jg| {
+                    // SAFETY: packed panels are read-only in this phase
+                    // (the pool barrier between phases orders writes).
+                    let ap = unsafe {
+                        std::slice::from_raw_parts(ap_ptr.get().add(is * MR * kc), MR * kc)
+                    };
+                    let rows = MR.min(mc - is * MR);
+                    for s in jg * JGRP..(jg * JGRP + JGRP).min(n_jstrips) {
+                        let bp = unsafe {
+                            std::slice::from_raw_parts(bp_ptr.get().add(s * NR * kc), NR * kc)
+                        };
+                        let acc = microkernel(kc, ap, bp);
+                        let cols = NR.min(nc - s * NR);
+                        let (r0, c0) = (ic + is * MR, jc + s * NR);
+                        for r in 0..rows {
+                            // SAFETY: C rows r0..r0+rows, columns
+                            // c0..c0+cols belong to exactly this tile.
+                            let crow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    c_ptr.get().add((r0 + r) * n + c0),
+                                    cols,
+                                )
+                            };
+                            for (cv, &av) in crow.iter_mut().zip(&acc[r][..cols]) {
+                                *cv += av;
+                            }
+                        }
+                    }
+                });
             }
         }
     }
 }
 
-/// Row-block-parallel [`matmul_nn`]; bitwise equal to the serial kernel.
+/// `C[m×n] += A[m×k] · B[k×n]`, packed serial kernel with caller-owned
+/// pack workspace (the hot-path form; lane-local on the conv path).
+pub fn matmul_nn_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_packed(Layout::Nn, Exec::Serial, m, k, n, a, b, c, ws);
+}
+
+/// `C[m×n] += A[m×k] · B[n×k]ᵀ`, packed serial kernel with caller-owned
+/// pack workspace.
+pub fn matmul_nt_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm_packed(Layout::Nt, Exec::Serial, m, k, n, a, b, c, ws);
+}
+
+/// `C[m×n] += A[k×m]ᵀ · B[k×n]`, packed serial kernel with caller-owned
+/// pack workspace.
+pub fn matmul_tn_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
+) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    gemm_packed(Layout::Tn, Exec::Serial, m, k, n, a, b, c, ws);
+}
+
+/// [`matmul_nn_ws`] with a throwaway workspace — convenience for tests
+/// and reference paths; hot paths pass a reused [`PackBuf`].
+pub fn matmul_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    matmul_nn_ws(m, k, n, a, b, c, &mut PackBuf::default());
+}
+
+/// [`matmul_nt_ws`] with a throwaway workspace.
+pub fn matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    matmul_nt_ws(m, k, n, a, b, c, &mut PackBuf::default());
+}
+
+/// [`matmul_tn_ws`] with a throwaway workspace.
+pub fn matmul_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    matmul_tn_ws(m, k, n, a, b, c, &mut PackBuf::default());
+}
+
+/// Tile-parallel [`matmul_nn_ws`]; bit-identical to the serial kernel
+/// for any lane count.
+#[allow(clippy::too_many_arguments)]
 pub fn par_matmul_nn(
     pool: &ComputePool,
     m: usize,
@@ -122,21 +410,20 @@ pub fn par_matmul_nn(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
+    ws: &mut PackBuf,
 ) {
     debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(c.len(), m * n);
-    if n == 0 {
+    debug_assert_eq!(b.len(), k * n);
+    if m == 0 || n == 0 {
+        // Empty products (ragged eval tails) dispatch nothing.
         return;
     }
-    let (_, rows) = shape_chunks(m);
-    par_chunks_mut(pool, c, rows * n, |ci, c_block| {
-        let lo = ci * rows;
-        let nrows = c_block.len() / n;
-        matmul_nn(nrows, k, n, &a[lo * k..(lo + nrows) * k], b, c_block);
-    });
+    gemm_packed(Layout::Nn, Exec::Pool(pool), m, k, n, a, b, c, ws);
 }
 
-/// Row-block-parallel [`matmul_nt`]; bitwise equal to the serial kernel.
+/// Tile-parallel [`matmul_nt_ws`]; bit-identical to the serial kernel
+/// for any lane count.
+#[allow(clippy::too_many_arguments)]
 pub fn par_matmul_nt(
     pool: &ComputePool,
     m: usize,
@@ -145,21 +432,19 @@ pub fn par_matmul_nt(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
+    ws: &mut PackBuf,
 ) {
     debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(c.len(), m * n);
-    if n == 0 {
+    debug_assert_eq!(b.len(), n * k);
+    if m == 0 || n == 0 {
         return;
     }
-    let (_, rows) = shape_chunks(m);
-    par_chunks_mut(pool, c, rows * n, |ci, c_block| {
-        let lo = ci * rows;
-        let nrows = c_block.len() / n;
-        matmul_nt(nrows, k, n, &a[lo * k..(lo + nrows) * k], b, c_block);
-    });
+    gemm_packed(Layout::Nt, Exec::Pool(pool), m, k, n, a, b, c, ws);
 }
 
-/// Row-block-parallel [`matmul_tn`]; bitwise equal to the serial kernel.
+/// Tile-parallel [`matmul_tn_ws`]; bit-identical to the serial kernel
+/// for any lane count.
+#[allow(clippy::too_many_arguments)]
 pub fn par_matmul_tn(
     pool: &ComputePool,
     m: usize,
@@ -168,23 +453,96 @@ pub fn par_matmul_tn(
     a: &[f32],
     b: &[f32],
     c: &mut [f32],
+    ws: &mut PackBuf,
 ) {
     debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(c.len(), m * n);
-    if n == 0 {
+    debug_assert_eq!(b.len(), k * n);
+    if m == 0 || n == 0 {
         return;
     }
-    let (_, rows) = shape_chunks(m);
-    par_chunks_mut(pool, c, rows * n, |ci, c_block| {
-        let lo = ci * rows;
-        let nrows = c_block.len() / n;
-        matmul_tn_rows(m, lo, lo + nrows, k, n, a, b, c_block);
-    });
+    gemm_packed(Layout::Tn, Exec::Pool(pool), m, k, n, a, b, c, ws);
+}
+
+/// The pre-packing scalar kernels, preserved verbatim as the
+/// benchmarking baseline (`benches/gemm_kernels.rs` quantifies the
+/// packed kernels against them, including the ReLU-sparsity zero-skip
+/// these carry) and as an independent reference for tests.  Not on any
+/// hot path.
+pub mod scalar {
+    /// `C[m×n] += A[m×k] · B[k×n]` — KC/NC cache-blocked scalar loops,
+    /// skipping zero multipliers.
+    pub fn matmul_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        const KC: usize = 64;
+        const NC: usize = 512;
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for j0 in (0..n).step_by(NC) {
+                let j1 = (j0 + NC).min(n);
+                for i in 0..m {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let crow = &mut c[i * n + j0..i * n + j1];
+                    for kk in k0..k1 {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * n + j0..kk * n + j1];
+                        for (cv, bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// `C[m×n] += A[m×k] · B[n×k]ᵀ` — row-dot-row scalar loops.
+    pub fn matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, brow) in crow.iter_mut().zip(b.chunks_exact(k)) {
+                let mut acc = 0.0f32;
+                for (av, bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *cv += acc;
+            }
+        }
+    }
+
+    /// `C[m×n] += A[k×m]ᵀ · B[k×n]` — outer-product scalar loops,
+    /// skipping zero multipliers.
+    pub fn matmul_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        for kk in 0..k {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::math::{rel_err, transpose};
     use crate::util::Pcg32;
 
     fn naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
@@ -199,20 +557,11 @@ mod tests {
         c
     }
 
-    fn transpose(rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
-        let mut t = vec![0.0; x.len()];
-        for r in 0..rows {
-            for c in 0..cols {
-                t[c * rows + r] = x[r * cols + c];
-            }
-        }
-        t
-    }
-
     fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
         let mut v = vec![0.0; n];
         rng.fill_normal(&mut v, 1.0);
-        // Inject zeros to exercise the sparsity skips.
+        // Inject zeros so the padded tiles and (in `scalar`) the
+        // sparsity skips stay exercised.
         for (i, x) in v.iter_mut().enumerate() {
             if i % 5 == 0 {
                 *x = 0.0;
@@ -221,41 +570,75 @@ mod tests {
         v
     }
 
-    #[test]
-    fn nn_matches_naive_across_blocking_boundaries() {
-        let mut rng = Pcg32::seeded(1);
-        // Dims chosen to straddle the KC/NC block edges.
-        for (m, k, n) in [(3, 7, 5), (2, 64, 512), (5, 65, 513), (1, 130, 1000)] {
-            let a = rand_vec(&mut rng, m * k);
-            let b = rand_vec(&mut rng, k * n);
-            let mut c = vec![0.0; m * n];
-            matmul_nn(m, k, n, &a, &b, &mut c);
-            let want = naive(m, k, n, &a, &b);
-            for (x, y) in c.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
-            }
+    /// Rounding-tolerant comparison: the packed summation order is not
+    /// the naive order, so bitwise equality would be wrong to ask for.
+    /// `rel_err` floors the denominator at 1, so near-zero sums compare
+    /// absolutely — no fragile absolute epsilons on long accumulations.
+    fn assert_close(tag: &str, got: &[f32], want: &[f32]) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (x, y)) in got.iter().zip(want).enumerate() {
+            let e = rel_err(*x, *y);
+            assert!(e < 1e-3, "{tag}[{i}]: {x} vs {y} (rel err {e})");
         }
     }
 
     #[test]
-    fn nt_and_tn_match_naive() {
-        let mut rng = Pcg32::seeded(2);
-        let (m, k, n) = (4, 9, 6);
+    fn packed_matches_naive_across_blocking_boundaries() {
+        let mut rng = Pcg32::seeded(1);
+        // Dims straddle the MR/NR tile edges, exact KC/MC/NC blocks,
+        // and one-past each block edge.
+        for (m, k, n) in [
+            (1, 1, 1),
+            (3, 7, 5),
+            (MR, 1, NR),
+            (5, 130, 9),
+            (MC, KC, NC),
+            (MC + 1, KC + 1, NC + 1),
+        ] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let want = naive(m, k, n, &a, &b);
+
+            let mut c = vec![0.0; m * n];
+            matmul_nn(m, k, n, &a, &b, &mut c);
+            assert_close(&format!("nn {m}x{k}x{n}"), &c, &want);
+
+            let mut c = vec![0.0; m * n];
+            matmul_nt(m, k, n, &a, &transpose(k, n, &b), &mut c);
+            assert_close(&format!("nt {m}x{k}x{n}"), &c, &want);
+
+            let mut c = vec![0.0; m * n];
+            matmul_tn(m, k, n, &transpose(m, k, &a), &b, &mut c);
+            assert_close(&format!("tn {m}x{k}x{n}"), &c, &want);
+        }
+    }
+
+    #[test]
+    fn packed_and_scalar_kernels_agree_to_rounding() {
+        // The old scalar kernels are the independent reference; the
+        // packed kernels reorder the sum, so rounding-level agreement
+        // is the contract (and all the trajectory the bench compares).
+        let mut rng = Pcg32::seeded(5);
+        let (m, k, n) = (9, 70, 33);
         let a = rand_vec(&mut rng, m * k);
         let b = rand_vec(&mut rng, k * n);
-        let want = naive(m, k, n, &a, &b);
+        let at = transpose(m, k, &a);
+        let bt = transpose(k, n, &b);
 
-        let mut c = vec![0.0; m * n];
-        matmul_nt(m, k, n, &a, &transpose(k, n, &b), &mut c);
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
+        let (mut p, mut s) = (vec![0.0; m * n], vec![0.0; m * n]);
+        matmul_nn(m, k, n, &a, &b, &mut p);
+        scalar::matmul_nn(m, k, n, &a, &b, &mut s);
+        assert_close("nn vs scalar", &p, &s);
 
-        let mut c = vec![0.0; m * n];
-        matmul_tn(m, k, n, &transpose(m, k, &a), &b, &mut c);
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
+        let (mut p, mut s) = (vec![0.0; m * n], vec![0.0; m * n]);
+        matmul_nt(m, k, n, &a, &bt, &mut p);
+        scalar::matmul_nt(m, k, n, &a, &bt, &mut s);
+        assert_close("nt vs scalar", &p, &s);
+
+        let (mut p, mut s) = (vec![0.0; m * n], vec![0.0; m * n]);
+        matmul_tn(m, k, n, &at, &b, &mut p);
+        scalar::matmul_tn(m, k, n, &at, &b, &mut s);
+        assert_close("tn vs scalar", &p, &s);
     }
 
     #[test]
@@ -268,12 +651,47 @@ mod tests {
     }
 
     #[test]
+    fn workspace_reuse_is_bit_stable() {
+        // One PackBuf across differently-shaped calls (grown once,
+        // reused, stale contents from larger shapes left in place)
+        // changes nothing: packing overwrites every slot it reads.
+        let mut rng = Pcg32::seeded(6);
+        let mut ws = PackBuf::default();
+        for (m, k, n) in [(30, 300, 40), (3, 2, 5), (17, 130, 11)] {
+            let a = rand_vec(&mut rng, m * k);
+            let b = rand_vec(&mut rng, k * n);
+            let mut fresh = vec![0.0; m * n];
+            matmul_nn(m, k, n, &a, &b, &mut fresh);
+            let mut reused = vec![0.0; m * n];
+            matmul_nn_ws(m, k, n, &a, &b, &mut reused, &mut ws);
+            assert_eq!(fresh, reused, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_are_no_ops_or_identity() {
+        let mut ws = PackBuf::default();
+        // m == 0 / n == 0: nothing to write, C untouched (empty).
+        let mut c: Vec<f32> = vec![];
+        matmul_nn_ws(0, 3, 4, &[], &[0.0; 12], &mut c, &mut ws);
+        matmul_nn_ws(2, 3, 0, &[0.0; 6], &[], &mut c, &mut ws);
+        // k == 0: the product is the zero matrix; accumulation keeps C.
+        let mut c = vec![7.0; 6];
+        matmul_nn_ws(2, 0, 3, &[], &[], &mut c, &mut ws);
+        assert_eq!(c, vec![7.0; 6]);
+        matmul_nt_ws(2, 0, 3, &[], &[], &mut c, &mut ws);
+        matmul_tn_ws(2, 0, 3, &[], &[], &mut c, &mut ws);
+        assert_eq!(c, vec![7.0; 6]);
+    }
+
+    #[test]
     fn par_variants_match_serial_bitwise() {
-        // m spans 1 row, prime, exactly MAX_CHUNKS, and > MAX_CHUNKS;
-        // bit-equality (assert_eq, not tolerance) is the contract.
+        // m spans 1 row, primes, and > MC; bit-equality (assert_eq,
+        // not tolerance) is the contract.
         let pool = ComputePool::new(4);
         let mut rng = Pcg32::seeded(3);
-        for (m, k, n) in [(1, 7, 5), (13, 11, 17), (16, 5, 9), (33, 66, 130)] {
+        let mut ws = PackBuf::default();
+        for (m, k, n) in [(1, 7, 5), (13, 11, 17), (16, 5, 9), (MC + 2, 66, 130)] {
             let a = rand_vec(&mut rng, m * k);
             let b = rand_vec(&mut rng, k * n);
             let at = transpose(m, k, &a);
@@ -282,20 +700,21 @@ mod tests {
             let mut serial = vec![0.5; m * n];
             let mut par = vec![0.5; m * n];
             matmul_nn(m, k, n, &a, &b, &mut serial);
-            par_matmul_nn(&pool, m, k, n, &a, &b, &mut par);
+            par_matmul_nn(&pool, m, k, n, &a, &b, &mut par, &mut ws);
             assert_eq!(serial, par, "nn {m}x{k}x{n}");
 
             let mut serial = vec![0.25; m * n];
             let mut par = vec![0.25; m * n];
             matmul_nt(m, k, n, &a, &bt, &mut serial);
-            par_matmul_nt(&pool, m, k, n, &a, &bt, &mut par);
+            par_matmul_nt(&pool, m, k, n, &a, &bt, &mut par, &mut ws);
             assert_eq!(serial, par, "nt {m}x{k}x{n}");
 
             let mut serial = vec![-0.5; m * n];
             let mut par = vec![-0.5; m * n];
             matmul_tn(m, k, n, &at, &b, &mut serial);
-            par_matmul_tn(&pool, m, k, n, &at, &b, &mut par);
+            par_matmul_tn(&pool, m, k, n, &at, &b, &mut par, &mut ws);
             assert_eq!(serial, par, "tn {m}x{k}x{n}");
         }
     }
+
 }

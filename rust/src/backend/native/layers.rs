@@ -10,9 +10,9 @@
 //!   reshape);
 //! - weight gradients **accumulate** (the caller zeroes once per step),
 //!   input gradients are overwritten;
-//! - the im2col staging buffers are caller-owned and reused across
-//!   examples and steps (zero steady-state allocations, same discipline
-//!   as the exchange path).
+//! - all staging (im2col columns, packed-GEMM panels) lives in
+//!   caller-owned, reused buffers (zero steady-state allocations, same
+//!   discipline as the exchange path).
 //!
 //! Each kernel exists in a serial form (the reference the gradient
 //! checks probe) and, for the batch/plane/element-parallel hot path, a
@@ -24,10 +24,18 @@
 //! bitwise equal to their serial forms; the conv backward regroups the
 //! per-example gradient sum by chunk (same values to f32 rounding).
 //!
+//! The conv pool path stages each example's im2col columns in a
+//! caller-owned **batch-wide cache** on the forward pass and reuses
+//! them verbatim on the backward pass (dW needs exactly those columns),
+//! instead of re-unfolding every example a second time — the serial
+//! reference forms keep recomputing so the gradient checks stay
+//! self-contained.
+//!
 //! [`HostTensor`]: crate::tensor::HostTensor
 
 use crate::backend::native::gemm::{
-    matmul_nn, matmul_nt, matmul_tn, par_matmul_nn, par_matmul_nt, par_matmul_tn,
+    matmul_nn, matmul_nn_ws, matmul_nt, matmul_nt_ws, matmul_tn, matmul_tn_ws, par_matmul_nn,
+    par_matmul_nt, par_matmul_tn, PackBuf,
 };
 use crate::backend::native::pool::{
     par_chunks_mut, shape_chunks, ComputePool, ELEMWISE_CHUNK, SendPtr,
@@ -150,20 +158,23 @@ pub fn col2im(col: &[f32], s: &Conv2dShape, dx: &mut [f32]) {
     }
 }
 
-/// One example of the conv forward: `ye = W · im2col(xe) + b`.
+/// One example of the conv forward: `ye = W · im2col(xe) + b`.  `col`
+/// receives the example's columns (the backward pass reuses them when
+/// the caller keeps a batch-wide cache).
 fn conv2d_forward_one(
     xe: &[f32],
     w: &[f32],
     b: &[f32],
     ye: &mut [f32],
     col: &mut [f32],
+    pack: &mut PackBuf,
     s: &Conv2dShape,
 ) {
     let ohw = s.out_hw * s.out_hw;
     let ck2 = s.cin * s.k * s.k;
     im2col(xe, s, col);
     ye.fill(0.0);
-    matmul_nn(s.cout, ck2, ohw, w, col, ye);
+    matmul_nn_ws(s.cout, ck2, ohw, w, col, ye, pack);
     for (co, yrow) in ye.chunks_exact_mut(ohw).enumerate() {
         let bias = b[co];
         for v in yrow {
@@ -184,79 +195,107 @@ pub fn conv2d_forward(
 ) {
     let (in_n, out_n) = (s.in_elems(), s.out_elems());
     debug_assert_eq!(w.len(), s.w_elems());
+    let mut pack = PackBuf::default();
     for bi in 0..s.batch {
         let xe = &x[bi * in_n..(bi + 1) * in_n];
         let ye = &mut y[bi * out_n..(bi + 1) * out_n];
-        conv2d_forward_one(xe, w, b, ye, col, s);
+        conv2d_forward_one(xe, w, b, ye, col, &mut pack, s);
     }
 }
 
 /// Batch-parallel conv forward.  Examples are independent (disjoint
-/// output slices, lane-owned im2col staging), so this is bitwise equal
-/// to [`conv2d_forward`] for any lane count.
+/// output and column slices, lane-owned pack buffers), so this is
+/// bitwise equal to [`conv2d_forward`] for any lane count.
+///
+/// With `col_cache: Some` (the training path) each example's im2col
+/// columns land in its slice of the batch-wide cache
+/// (`batch × col_elems`), where [`conv2d_backward_pool`] reuses them.
+/// With `None` (eval-only forwards — no backward will follow) columns
+/// are staged in the per-lane `scratch.dcols` buffers instead, which
+/// are idle during the forward pass; the staging location cannot change
+/// a bit of the output.
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_forward_pool(
     pool: &ComputePool,
     x: &[f32],
     w: &[f32],
     b: &[f32],
     y: &mut [f32],
+    col_cache: Option<&mut [f32]>,
     scratch: &mut ConvScratch,
     s: &Conv2dShape,
 ) {
-    let (in_n, out_n) = (s.in_elems(), s.out_elems());
+    let (in_n, out_n, col_n) = (s.in_elems(), s.out_elems(), s.col_elems());
     debug_assert_eq!(w.len(), s.w_elems());
-    debug_assert!(scratch.cols.len() >= pool.lanes());
+    debug_assert!(scratch.packs.len() >= pool.lanes());
     let (n_chunks, per) = shape_chunks(s.batch);
     let y_ptr = SendPtr::new(y.as_mut_ptr());
-    let col_ptr = SendPtr::new(scratch.cols.as_mut_ptr());
+    let cache_ptr = col_cache.map(|cc| {
+        debug_assert_eq!(cc.len(), s.batch * col_n);
+        SendPtr::new(cc.as_mut_ptr())
+    });
+    debug_assert!(cache_ptr.is_some() || scratch.dcols.len() >= pool.lanes());
+    debug_assert!(cache_ptr.is_some() || scratch.dcols.iter().all(|d| d.len() >= col_n));
+    let pack_ptr = SendPtr::new(scratch.packs.as_mut_ptr());
+    let dcol_ptr = SendPtr::new(scratch.dcols.as_mut_ptr());
     pool.run_chunks(n_chunks, &|lane, ci| {
-        // SAFETY: cols[lane] is exclusive to this lane, and each
-        // example's output slice is touched by exactly one chunk.
-        let col = unsafe { &mut *col_ptr.get().add(lane) };
-        let col = &mut col[..s.col_elems()];
+        // SAFETY: packs[lane]/dcols[lane] are exclusive to this lane,
+        // and each example's output and cache slices are touched by
+        // exactly one chunk.
+        let pack = unsafe { &mut *pack_ptr.get().add(lane) };
         for bi in ci * per..((ci + 1) * per).min(s.batch) {
             let xe = &x[bi * in_n..(bi + 1) * in_n];
             let ye =
                 unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * out_n), out_n) };
-            conv2d_forward_one(xe, w, b, ye, col, s);
+            let col = match cache_ptr {
+                Some(p) => unsafe {
+                    std::slice::from_raw_parts_mut(p.get().add(bi * col_n), col_n)
+                },
+                None => unsafe {
+                    let d = &mut *dcol_ptr.get().add(lane);
+                    std::slice::from_raw_parts_mut(d.as_mut_ptr(), col_n)
+                },
+            };
+            conv2d_forward_one(xe, w, b, ye, col, pack, s);
         }
     });
 }
 
-/// One example of the conv backward; `dw`/`db` accumulate into the
-/// caller's target (the global gradient serially, a chunk accumulator
-/// in the pool path), `dxe` is overwritten.
+/// One example of the conv backward, driven by the example's im2col
+/// columns (`col` — cached from the forward pass on the pool path,
+/// freshly recomputed on the serial reference path).  `dw`/`db`
+/// accumulate into the caller's target (the global gradient serially, a
+/// chunk accumulator in the pool path), `dxe` is overwritten.
 #[allow(clippy::too_many_arguments)]
-fn conv2d_backward_one(
-    xe: &[f32],
+fn conv2d_backward_cols(
+    col: &[f32],
     w: &[f32],
     dye: &[f32],
     dw: &mut [f32],
     db: &mut [f32],
     dxe: &mut [f32],
-    col: &mut [f32],
     dcol: &mut [f32],
+    pack: &mut PackBuf,
     s: &Conv2dShape,
 ) {
     let ohw = s.out_hw * s.out_hw;
     let ck2 = s.cin * s.k * s.k;
-    im2col(xe, s, col);
     for (co, dyrow) in dye.chunks_exact(ohw).enumerate() {
         db[co] += dyrow.iter().sum::<f32>();
     }
     // dW += dY · colᵀ
-    matmul_nt(s.cout, ohw, ck2, dye, col, dw);
+    matmul_nt_ws(s.cout, ohw, ck2, dye, col, dw, pack);
     // dcol = Wᵀ · dY, then fold back onto the input planes.
     dcol.fill(0.0);
-    matmul_tn(ck2, s.cout, ohw, w, dye, dcol);
+    matmul_tn_ws(ck2, s.cout, ohw, w, dye, dcol, pack);
     dxe.fill(0.0);
     col2im(dcol, s, dxe);
 }
 
 /// Batched conv backward (serial reference).  `dw`/`db` accumulate,
-/// `dx` is overwritten.  The im2col columns are recomputed from `x`
-/// rather than cached from the forward pass — O(col) extra compute
-/// instead of O(batch·col) extra memory.
+/// `dx` is overwritten.  This form recomputes the im2col columns from
+/// `x` so the gradient checks stay self-contained; the pool form reuses
+/// the forward pass's cached columns instead.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_backward(
     x: &[f32],
@@ -270,31 +309,38 @@ pub fn conv2d_backward(
     s: &Conv2dShape,
 ) {
     let (in_n, out_n) = (s.in_elems(), s.out_elems());
+    let mut pack = PackBuf::default();
     for bi in 0..s.batch {
         let xe = &x[bi * in_n..(bi + 1) * in_n];
         let dye = &dy[bi * out_n..(bi + 1) * out_n];
         let dxe = &mut dx[bi * in_n..(bi + 1) * in_n];
-        conv2d_backward_one(xe, w, dye, dw, db, dxe, col, dcol, s);
+        im2col(xe, s, col);
+        conv2d_backward_cols(col, w, dye, dw, db, dxe, dcol, &mut pack, s);
     }
 }
 
 /// Lane- and chunk-indexed scratch for the batch-parallel conv path:
-/// per-lane im2col staging (`cols`/`dcols`, shared across layers at the
-/// largest size) and per-chunk gradient accumulators (`gw`/`gb`).  The
-/// chunk accumulators are what make the parallel weight-gradient sum
-/// lane-count-invariant: chunk `ci` always holds exactly the same
-/// examples, and the final reduction walks chunks in index order.
+/// per-lane column-gradient staging (`dcols`, shared across layers at
+/// the largest size), per-lane packed-GEMM panels (`packs`, grown on
+/// first use inside the kernels), and per-chunk gradient accumulators
+/// (`gw`/`gb`).  The chunk accumulators are what make the parallel
+/// weight-gradient sum lane-count-invariant: chunk `ci` always holds
+/// exactly the same examples, and the final reduction walks chunks in
+/// index order.  (Forward im2col columns are *not* staged here any
+/// more — they live in the caller's batch-wide cache so the backward
+/// pass can reuse them.)
 #[derive(Debug, Default)]
 pub struct ConvScratch {
-    pub cols: Vec<Vec<f32>>,
     pub dcols: Vec<Vec<f32>>,
+    pub packs: Vec<PackBuf>,
     pub gw: Vec<Vec<f32>>,
     pub gb: Vec<Vec<f32>>,
 }
 
 impl ConvScratch {
-    /// Size for `lanes` im2col buffers of `col_elems` and `n_chunks`
-    /// gradient accumulators of the largest conv layer's `max_w`/`max_b`.
+    /// Size for `lanes` column-gradient buffers of `col_elems`, `lanes`
+    /// pack workspaces and `n_chunks` gradient accumulators of the
+    /// largest conv layer's `max_w`/`max_b`.
     pub fn ensure(
         &mut self,
         lanes: usize,
@@ -303,8 +349,10 @@ impl ConvScratch {
         max_w: usize,
         max_b: usize,
     ) {
-        resize_bufs(&mut self.cols, lanes, col_elems);
         resize_bufs(&mut self.dcols, lanes, col_elems);
+        if self.packs.len() < lanes {
+            self.packs.resize_with(lanes, PackBuf::default);
+        }
         resize_bufs(&mut self.gw, n_chunks, max_w);
         resize_bufs(&mut self.gb, n_chunks, max_b);
     }
@@ -319,55 +367,58 @@ fn resize_bufs(bufs: &mut Vec<Vec<f32>>, n: usize, len: usize) {
     }
 }
 
-/// Batch-parallel conv backward.  Phase 1 partitions the batch into
-/// shape-fixed chunks, each accumulating its examples (in batch order)
-/// into its own `gw`/`gb` buffer while writing disjoint `dx` slices;
-/// phase 2 reduces the chunk accumulators into `dw`/`db` in chunk
-/// order.  Bit-identical for any lane count.
+/// Batch-parallel conv backward, fed by the forward pass's `col_cache`
+/// (each example's im2col columns, written by
+/// [`conv2d_forward_pool`] — never recomputed here).  Phase 1
+/// partitions the batch into shape-fixed chunks, each accumulating its
+/// examples (in batch order) into its own `gw`/`gb` buffer while
+/// writing disjoint `dx` slices; phase 2 reduces the chunk accumulators
+/// into `dw`/`db` in chunk order.  Bit-identical for any lane count.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_backward_pool(
     pool: &ComputePool,
-    x: &[f32],
     w: &[f32],
     dy: &[f32],
     dw: &mut [f32],
     db: &mut [f32],
     dx: &mut [f32],
+    col_cache: &[f32],
     scratch: &mut ConvScratch,
     s: &Conv2dShape,
 ) {
-    let (in_n, out_n) = (s.in_elems(), s.out_elems());
+    let (in_n, out_n, col_n) = (s.in_elems(), s.out_elems(), s.col_elems());
     let (n_chunks, per) = shape_chunks(s.batch);
     let (w_len, b_len) = (w.len(), db.len());
-    debug_assert!(scratch.cols.len() >= pool.lanes());
+    debug_assert_eq!(col_cache.len(), s.batch * col_n);
+    debug_assert!(scratch.dcols.len() >= pool.lanes());
+    debug_assert!(scratch.packs.len() >= pool.lanes());
     debug_assert!(scratch.gw.len() >= n_chunks);
     debug_assert!(scratch.gw.iter().all(|g| g.len() >= w_len));
     {
         let dx_ptr = SendPtr::new(dx.as_mut_ptr());
-        let col_ptr = SendPtr::new(scratch.cols.as_mut_ptr());
         let dcol_ptr = SendPtr::new(scratch.dcols.as_mut_ptr());
+        let pack_ptr = SendPtr::new(scratch.packs.as_mut_ptr());
         let gw_ptr = SendPtr::new(scratch.gw.as_mut_ptr());
         let gb_ptr = SendPtr::new(scratch.gb.as_mut_ptr());
         pool.run_chunks(n_chunks, &|lane, ci| {
-            // SAFETY: cols/dcols are lane-owned, gw/gb chunk-owned, and
+            // SAFETY: dcols/packs are lane-owned, gw/gb chunk-owned, and
             // dx example slices disjoint across the batch partition.
-            let col = unsafe { &mut *col_ptr.get().add(lane) };
             let dcol = unsafe { &mut *dcol_ptr.get().add(lane) };
+            let pack = unsafe { &mut *pack_ptr.get().add(lane) };
             let gw = unsafe { &mut *gw_ptr.get().add(ci) };
             let gb = unsafe { &mut *gb_ptr.get().add(ci) };
-            let col = &mut col[..s.col_elems()];
-            let dcol = &mut dcol[..s.col_elems()];
+            let dcol = &mut dcol[..col_n];
             let gw = &mut gw[..w_len];
             let gb = &mut gb[..b_len];
             gw.fill(0.0);
             gb.fill(0.0);
             for bi in ci * per..((ci + 1) * per).min(s.batch) {
-                let xe = &x[bi * in_n..(bi + 1) * in_n];
+                let col = &col_cache[bi * col_n..(bi + 1) * col_n];
                 let dye = &dy[bi * out_n..(bi + 1) * out_n];
                 let dxe = unsafe {
                     std::slice::from_raw_parts_mut(dx_ptr.get().add(bi * in_n), in_n)
                 };
-                conv2d_backward_one(xe, w, dye, gw, gb, dxe, col, dcol, s);
+                conv2d_backward_cols(col, w, dye, gw, gb, dxe, dcol, pack, s);
             }
         });
     }
@@ -554,20 +605,22 @@ pub fn fc_forward(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], s: &FcShape) {
     }
 }
 
-/// Row-parallel [`fc_forward`] (bitwise equal: the GEMM row blocks are
-/// the serial kernel's own row loops).
+/// Tile-parallel [`fc_forward`] (bitwise equal: the packed GEMM's tile
+/// grid is lane-count-invariant, and serial == parallel by the gemm
+/// module's contract).  `ws` holds the shared packed panels.
 pub fn fc_forward_pool(
     pool: &ComputePool,
     x: &[f32],
     w: &[f32],
     b: &[f32],
     y: &mut [f32],
+    ws: &mut PackBuf,
     s: &FcShape,
 ) {
     debug_assert_eq!(x.len(), s.batch * s.din);
     debug_assert_eq!(y.len(), s.batch * s.dout);
     y.fill(0.0);
-    par_matmul_nt(pool, s.batch, s.din, s.dout, x, w, y);
+    par_matmul_nt(pool, s.batch, s.din, s.dout, x, w, y, ws);
     for yrow in y.chunks_exact_mut(s.dout) {
         for (v, bv) in yrow.iter_mut().zip(b) {
             *v += bv;
@@ -598,10 +651,9 @@ pub fn fc_backward(
     matmul_nn(s.batch, s.dout, s.din, dy, w, dx);
 }
 
-/// Row-parallel [`fc_backward`] (bitwise equal to the serial form:
-/// both GEMMs parallelize over output rows whose per-element
-/// accumulation order is unchanged; `db` stays serial — it is `dout`
-/// elements).
+/// Tile-parallel [`fc_backward`] (bitwise equal to the serial form:
+/// both GEMMs run the identical packed tile loops; `db` stays serial —
+/// it is `dout` elements).  `ws` holds the shared packed panels.
 #[allow(clippy::too_many_arguments)]
 pub fn fc_backward_pool(
     pool: &ComputePool,
@@ -611,10 +663,11 @@ pub fn fc_backward_pool(
     dw: &mut [f32],
     db: &mut [f32],
     dx: &mut [f32],
+    ws: &mut PackBuf,
     s: &FcShape,
 ) {
     // dW += dYᵀ · X
-    par_matmul_tn(pool, s.dout, s.batch, s.din, dy, x, dw);
+    par_matmul_tn(pool, s.dout, s.batch, s.din, dy, x, dw, ws);
     for dyrow in dy.chunks_exact(s.dout) {
         for (g, &v) in db.iter_mut().zip(dyrow) {
             *g += v;
@@ -622,7 +675,7 @@ pub fn fc_backward_pool(
     }
     // dX = dY · W
     dx.fill(0.0);
-    par_matmul_nn(pool, s.batch, s.dout, s.din, dy, w, dx);
+    par_matmul_nn(pool, s.batch, s.dout, s.din, dy, w, dx, ws);
 }
 
 /// Counter-style dropout RNG: one independent PCG stream per

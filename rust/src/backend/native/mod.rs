@@ -2,10 +2,11 @@
 //! Rust, no artifacts, no PJRT.
 //!
 //! This is the reproduction's Caffe-style reference path (Jia et al.,
-//! 2014): im2col + blocked-SGEMM convolutions, ReLU, max-pool,
-//! fully-connected layers with inverted dropout, softmax cross-entropy
-//! and the SGD-momentum update — the same math the paper's Theano
-//! functions computed per GPU, driven by the same
+//! 2014): im2col + packed register-blocked SGEMM convolutions (the
+//! columns staged once per step and reused by the backward pass), ReLU,
+//! max-pool, fully-connected layers with inverted dropout, softmax
+//! cross-entropy and the SGD-momentum update — the same math the
+//! paper's Theano functions computed per GPU, driven by the same
 //! [`ArchDesc`](crate::sim::flops::ArchDesc) the analytic FLOP model
 //! uses.  Because parameters live in the ordinary
 //! [`ParamStore`](crate::params::ParamStore), the collective exchange,
@@ -13,7 +14,7 @@
 //! gradients with this backend.
 //!
 //! Every kernel of the step runs over the backend's intra-op
-//! [`ComputePool`] (GEMM row blocks, conv batch chunks, pooling
+//! [`ComputePool`] (packed-GEMM tiles, conv batch chunks, pooling
 //! planes, elementwise sweeps, the SGD update).  The pool's
 //! determinism contract ([`pool`]) keeps the math bit-identical for
 //! any `--threads` value, so intra-op parallelism composes with the
@@ -48,7 +49,7 @@ pub struct NativeBackend {
     model: ModelSpec,
     ws: Workspace,
     /// Intra-op worker pool shared by every kernel of this backend's
-    /// step (GEMM row blocks, conv batch chunks, elementwise sweeps,
+    /// step (packed-GEMM tiles, conv batch chunks, elementwise sweeps,
     /// the SGD update).  Deterministic: results are bit-identical for
     /// any lane count (see [`pool`]).
     pool: ComputePool,
@@ -99,8 +100,10 @@ impl NativeBackend {
         Ok(NativeBackend::with_threads(&arch, cfg.dropout, cfg.threads_per_worker()))
     }
 
-    /// Validate a batch against the plan and size the workspace.
-    fn admit_batch(&mut self, images: &HostTensor, labels: &[i32]) -> Result<usize> {
+    /// Validate a batch against the plan and size the workspace
+    /// (`train` additionally sizes the batch-wide conv column caches
+    /// the backward pass reuses; eval skips them).
+    fn admit_batch(&mut self, images: &HostTensor, labels: &[i32], train: bool) -> Result<usize> {
         let dims = images.shape().dims();
         let want = [self.plan.in_channels, self.plan.image_hw, self.plan.image_hw];
         if dims.len() != 4 || dims[1..] != want {
@@ -128,14 +131,23 @@ impl NativeBackend {
             }
         }
         let lanes = self.pool.lanes();
-        self.ws.ensure(&self.plan, batch, lanes);
+        self.ws.ensure(&self.plan, batch, lanes, train);
         Ok(batch)
     }
 
-    /// Forward pass over all nodes.  `drop_seed = None` is eval mode
-    /// (dropout skipped); `Some` is train mode — the seed keys the
-    /// per-chunk dropout streams (see `layers::dropout_forward`).
-    fn forward(&mut self, images: &HostTensor, store: &ParamStore, drop_seed: Option<u64>) {
+    /// Forward pass over all nodes.  `drop_seed = None` skips dropout;
+    /// `Some` keys the per-chunk dropout streams (see
+    /// `layers::dropout_forward`).  `train` steers each conv layer's
+    /// im2col columns into its batch-wide cache for the backward pass
+    /// to reuse; eval-only forwards (`false`) stage them in per-lane
+    /// scratch and never touch (or allocate) the caches.
+    fn forward(
+        &mut self,
+        images: &HostTensor,
+        store: &ParamStore,
+        drop_seed: Option<u64>,
+        train: bool,
+    ) {
         let batch = self.ws.batch;
         let pool = &self.pool;
         let dropout = self.dropout;
@@ -146,14 +158,22 @@ impl NativeBackend {
             let x = lo[i].as_slice();
             let y = hi[0].as_mut_slice();
             match op {
-                PlanOp::ConvRelu { shape, param } => {
+                PlanOp::ConvRelu { shape, param, cache } => {
                     let s = Conv2dShape { batch, ..*shape };
+                    // Training: the layer's im2col columns land in its
+                    // batch-wide cache for the backward pass to reuse.
+                    let cols = if train {
+                        Some(ws.col_cache[*cache].as_mut_slice())
+                    } else {
+                        None
+                    };
                     conv2d_forward_pool(
                         pool,
                         x,
                         store.params[*param].as_slice(),
                         store.params[*param + 1].as_slice(),
                         y,
+                        cols,
                         &mut ws.conv,
                         &s,
                     );
@@ -171,6 +191,7 @@ impl NativeBackend {
                         store.params[*param].as_slice(),
                         store.params[*param + 1].as_slice(),
                         y,
+                        &mut ws.gemm,
                         &s,
                     );
                     relu_forward_pool(pool, y);
@@ -193,6 +214,7 @@ impl NativeBackend {
                         store.params[*param].as_slice(),
                         store.params[*param + 1].as_slice(),
                         y,
+                        &mut ws.gemm,
                         &s,
                     );
                 }
@@ -218,18 +240,20 @@ impl NativeBackend {
             let x = ws.acts[i].as_slice();
             let a = ws.acts[i + 1].as_slice();
             match op {
-                PlanOp::ConvRelu { shape, param } => {
+                PlanOp::ConvRelu { shape, param, cache } => {
                     let s = Conv2dShape { batch, ..*shape };
                     relu_backward_pool(pool, a, dy);
                     let (gw, gb) = grads_pair(&mut ws.grads, *param);
+                    // Reuses the forward pass's cached im2col columns —
+                    // no second unfold of the batch.
                     conv2d_backward_pool(
                         pool,
-                        x,
                         store.params[*param].as_slice(),
                         dy,
                         gw,
                         gb,
                         dx,
+                        &ws.col_cache[*cache],
                         &mut ws.conv,
                         &s,
                     );
@@ -247,12 +271,32 @@ impl NativeBackend {
                     }
                     relu_backward_pool(pool, a, dy);
                     let (gw, gb) = grads_pair(&mut ws.grads, *param);
-                    fc_backward_pool(pool, x, store.params[*param].as_slice(), dy, gw, gb, dx, &s);
+                    fc_backward_pool(
+                        pool,
+                        x,
+                        store.params[*param].as_slice(),
+                        dy,
+                        gw,
+                        gb,
+                        dx,
+                        &mut ws.gemm,
+                        &s,
+                    );
                 }
                 PlanOp::FcOut { shape, param } => {
                     let s = FcShape { batch, ..*shape };
                     let (gw, gb) = grads_pair(&mut ws.grads, *param);
-                    fc_backward_pool(pool, x, store.params[*param].as_slice(), dy, gw, gb, dx, &s);
+                    fc_backward_pool(
+                        pool,
+                        x,
+                        store.params[*param].as_slice(),
+                        dy,
+                        gw,
+                        gb,
+                        dx,
+                        &mut ws.gemm,
+                        &s,
+                    );
                 }
             }
         }
@@ -310,9 +354,9 @@ impl StepBackend for NativeBackend {
         step_seed: i32,
         store: &mut ParamStore,
     ) -> Result<TrainStepOut> {
-        let batch = self.admit_batch(images, labels)?;
+        let batch = self.admit_batch(images, labels, true)?;
         let drop_seed = (self.dropout > 0.0).then_some(step_seed as u32 as u64);
-        self.forward(images, store, drop_seed);
+        self.forward(images, store, drop_seed, true);
         let n = self.plan.ops.len();
         let s = FcShape { batch, din: 0, dout: self.plan.classes };
         let (loss, correct1) = softmax_xent(
@@ -337,8 +381,8 @@ impl StepBackend for NativeBackend {
         labels: &[i32],
         store: &ParamStore,
     ) -> Result<EvalBatchOut> {
-        let batch = self.admit_batch(images, labels)?;
-        self.forward(images, store, None);
+        let batch = self.admit_batch(images, labels, false)?;
+        self.forward(images, store, None, false);
         let n = self.plan.ops.len();
         let s = FcShape { batch, din: 0, dout: self.plan.classes };
         // dlogits land in the (otherwise unused) last gradient node.

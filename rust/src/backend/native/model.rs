@@ -14,6 +14,7 @@
 //! [`ParamStore`](crate::params::ParamStore), checkpoints and the
 //! collective exchange all operate on native parameters unchanged.
 
+use crate::backend::native::gemm::PackBuf;
 use crate::backend::native::layers::{Conv2dShape, ConvScratch, FcShape, PoolShape};
 use crate::backend::native::pool::shape_chunks;
 use crate::runtime::artifact::{ModelSpec, ParamManifestSpec};
@@ -25,8 +26,10 @@ use crate::tensor::Shape;
 /// is the index of the op's weight tensor in the store (bias follows).
 #[derive(Clone, Copy, Debug)]
 pub enum PlanOp {
-    /// Convolution + ReLU.
-    ConvRelu { shape: Conv2dShape, param: usize },
+    /// Convolution + ReLU; `cache` indexes the workspace buffer holding
+    /// this layer's batch-wide im2col columns (written by the forward
+    /// pass, reused by the backward pass).
+    ConvRelu { shape: Conv2dShape, param: usize, cache: usize },
     /// Max-pool; `arg` indexes the workspace argmax buffer.
     Pool { shape: PoolShape, arg: usize },
     /// Hidden fully-connected + ReLU + dropout; `mask` indexes the
@@ -106,7 +109,7 @@ impl NetPlan {
                 out_hw: conv_hw,
             };
             col_elems = col_elems.max(shape.col_elems());
-            ops.push(PlanOp::ConvRelu { shape, param });
+            ops.push(PlanOp::ConvRelu { shape, param, cache: l });
             node_elems.push(c.cout * conv_hw * conv_hw);
             hw = conv_hw;
             if c.pool {
@@ -185,10 +188,12 @@ pub fn model_spec_of(arch: &ArchDesc) -> ModelSpec {
 }
 
 /// Reusable per-step buffers: activations + gradients per node, pool
-/// argmaxes, dropout masks, the conv pool-path scratch (per-lane
-/// im2col staging + per-chunk gradient accumulators) and parameter
-/// gradients.  Sized once per (batch, lanes); zero allocations
-/// afterwards.
+/// argmaxes, dropout masks, per-conv-layer batch-wide im2col caches
+/// (written forward, reused backward), the conv pool-path scratch
+/// (per-lane pack/column staging + per-chunk gradient accumulators),
+/// the shared FC packed-GEMM workspace and parameter gradients.  Sized
+/// once per (batch, lanes); zero allocations afterwards (the pack
+/// buffers grow to their fixed panel sizes on first use).
 #[derive(Debug, Default)]
 pub struct Workspace {
     pub batch: usize,
@@ -198,15 +203,42 @@ pub struct Workspace {
     pub pool_arg: Vec<Vec<u32>>,
     pub masks: Vec<Vec<f32>>,
     pub probs: Vec<f32>,
+    /// Batch-wide im2col columns, one buffer per conv layer
+    /// (`batch × col_elems(layer)`), indexed by `PlanOp::ConvRelu::cache`.
+    pub col_cache: Vec<Vec<f32>>,
     pub conv: ConvScratch,
+    /// Shared packed panels for the tile-parallel FC GEMMs.
+    pub gemm: PackBuf,
     pub grads: Vec<Vec<f32>>,
 }
 
 impl Workspace {
     /// (Re)allocate for `batch` examples of `plan` computed over
     /// `lanes` pool lanes; no-op when already sized.
-    pub fn ensure(&mut self, plan: &NetPlan, batch: usize, lanes: usize) {
-        if self.batch == batch && self.lanes == lanes && self.acts.len() == plan.node_elems.len() {
+    ///
+    /// Buffers are sized to the *exact* batch (every kernel takes whole
+    /// buffers whose length encodes the batch), so a batch change —
+    /// e.g. a ragged final eval batch between training steps —
+    /// reallocates the workspace, including the conv column caches.
+    /// That is a deliberate simplicity trade; interleaving eval batches
+    /// of a different size with training pays an allocation round-trip
+    /// per switch.
+    ///
+    /// `train` controls the batch-wide conv column caches: only a
+    /// training step's backward pass reuses them, so eval-only sizing
+    /// skips the `batch × Σ col_elems` allocation entirely (eval
+    /// forwards stage columns in the per-lane scratch instead).  A
+    /// matching-size call never downgrades: once the caches exist for
+    /// this batch, an eval-mode call leaves them in place.
+    pub fn ensure(&mut self, plan: &NetPlan, batch: usize, lanes: usize, train: bool) {
+        let n_convs =
+            plan.ops.iter().filter(|op| matches!(op, PlanOp::ConvRelu { .. })).count();
+        let cache_ok = !train || self.col_cache.len() == n_convs;
+        if self.batch == batch
+            && self.lanes == lanes
+            && self.acts.len() == plan.node_elems.len()
+            && cache_ok
+        {
             return;
         }
         self.batch = batch;
@@ -232,8 +264,25 @@ impl Workspace {
             })
             .collect();
         self.probs = vec![0.0; batch * plan.classes];
-        // Conv scratch: one im2col pair per lane, one gradient
-        // accumulator per batch chunk, all at the largest conv layer.
+        // Per-conv-layer batch-wide im2col caches, in cache-index order
+        // (from_arch assigns `cache` in op order).  Train-only: an
+        // eval-sized workspace never pays for them.
+        self.col_cache = if train {
+            plan.ops
+                .iter()
+                .filter_map(|op| match op {
+                    PlanOp::ConvRelu { shape, .. } => {
+                        Some(vec![0.0f32; batch * shape.col_elems()])
+                    }
+                    _ => None,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        // Conv scratch: a column-gradient buffer and pack workspace per
+        // lane, one gradient accumulator per batch chunk, all at the
+        // largest conv layer.
         let (n_chunks, _) = shape_chunks(batch);
         let max_w = plan
             .ops
@@ -295,24 +344,49 @@ mod tests {
     fn workspace_sizes_follow_plan() {
         let plan = NetPlan::from_arch(&alexnet_micro());
         let mut ws = Workspace::default();
-        ws.ensure(&plan, 4, 2);
+        ws.ensure(&plan, 4, 2, true);
         assert_eq!(ws.acts.len(), plan.node_elems.len());
         assert_eq!(ws.acts[0].len(), 4 * 3 * 32 * 32);
         assert_eq!(ws.pool_arg.len(), 1);
         assert_eq!(ws.masks.len(), 1);
         assert_eq!(ws.grads.len(), 8);
-        // Conv scratch: one im2col pair per lane, one grad accumulator
-        // per batch chunk (batch 4 -> 4 chunks), at conv-max sizes.
-        assert_eq!(ws.conv.cols.len(), 2);
+        // Per-conv-layer im2col caches: batch × that layer's columns.
+        assert_eq!(ws.col_cache.len(), 2);
+        assert_eq!(ws.col_cache[0].len(), 4 * 3 * 5 * 5 * 16 * 16); // conv1
+        assert_eq!(ws.col_cache[1].len(), 4 * 8 * 3 * 3 * 7 * 7); // conv2
+        // Conv scratch: a dcol buffer + pack workspace per lane, one
+        // grad accumulator per batch chunk (batch 4 -> 4 chunks), at
+        // conv-max sizes.
         assert_eq!(ws.conv.dcols.len(), 2);
-        assert_eq!(ws.conv.cols[0].len(), plan.col_elems);
+        assert_eq!(ws.conv.packs.len(), 2);
+        assert_eq!(ws.conv.dcols[0].len(), plan.col_elems);
         assert_eq!(ws.conv.gw.len(), 4);
         assert_eq!(ws.conv.gw[0].len(), 16 * 8 * 3 * 3); // conv2 weights
         assert_eq!(ws.conv.gb[0].len(), 16);
         let before = ws.acts[0].as_ptr();
-        ws.ensure(&plan, 4, 2); // no-op: buffers are stable
+        ws.ensure(&plan, 4, 2, true); // no-op: buffers are stable
         assert_eq!(before, ws.acts[0].as_ptr());
-        ws.ensure(&plan, 2, 2);
+        // An eval-mode call at the same size never downgrades: the
+        // caches stay in place for the next training step.
+        ws.ensure(&plan, 4, 2, false);
+        assert_eq!(before, ws.acts[0].as_ptr());
+        assert_eq!(ws.col_cache.len(), 2);
+        ws.ensure(&plan, 2, 2, true);
         assert_eq!(ws.acts[0].len(), 2 * 3 * 32 * 32);
+    }
+
+    #[test]
+    fn eval_only_workspace_skips_the_column_caches() {
+        let plan = NetPlan::from_arch(&alexnet_micro());
+        let mut ws = Workspace::default();
+        ws.ensure(&plan, 4, 2, false);
+        assert!(ws.col_cache.is_empty(), "eval sizing must not pay for caches");
+        // Per-lane staging for eval forwards is still there.
+        assert_eq!(ws.conv.dcols.len(), 2);
+        assert_eq!(ws.conv.dcols[0].len(), plan.col_elems);
+        // First training step at the same batch upgrades in place.
+        ws.ensure(&plan, 4, 2, true);
+        assert_eq!(ws.col_cache.len(), 2);
+        assert_eq!(ws.col_cache[0].len(), 4 * 3 * 5 * 5 * 16 * 16);
     }
 }

@@ -205,6 +205,20 @@ impl ComputePool {
         assert!(!dead, "compute-pool worker panicked or exited; results are incomplete");
     }
 
+    /// Run `f(lane, i, j)` for every cell of the `ni × nj` tile grid,
+    /// each exactly once, distributed over lanes row-major through
+    /// [`ComputePool::run_chunks`].  The grid shape must derive from
+    /// tensor shapes only (never `lanes()`), which makes this the
+    /// scheduling primitive for the packed-GEMM macrokernel: every
+    /// (row-panel, column-group) tile is computed by exactly the same
+    /// instruction sequence regardless of which lane picks it up.
+    pub fn run_grid(&self, ni: usize, nj: usize, f: &(dyn Fn(usize, usize, usize) + Sync)) {
+        if ni == 0 || nj == 0 {
+            return;
+        }
+        self.run_chunks(ni * nj, &|lane, cell| f(lane, cell / nj, cell % nj));
+    }
+
     /// Run `f(lane, chunk_idx)` for every `chunk_idx in 0..n_chunks`,
     /// each exactly once, distributed over lanes by an atomic counter.
     /// Single-lane pools (and single chunks) run inline.
@@ -310,6 +324,23 @@ mod tests {
             for (lane, h) in hits.iter().enumerate() {
                 assert_eq!(h.load(Ordering::Relaxed), 1, "lane {lane}");
             }
+        }
+    }
+
+    #[test]
+    fn run_grid_covers_every_cell_exactly_once() {
+        for threads in [1, 2, 4] {
+            let pool = ComputePool::new(threads);
+            let (ni, nj) = (5, 7);
+            let hits: Vec<AtomicU32> = (0..ni * nj).map(|_| AtomicU32::new(0)).collect();
+            pool.run_grid(ni, nj, &|_lane, i, j| {
+                assert!(i < ni && j < nj);
+                hits[i * nj + j].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "t{threads}");
+            // Degenerate grids dispatch nothing.
+            pool.run_grid(0, 3, &|_, _, _| panic!("empty grid"));
+            pool.run_grid(3, 0, &|_, _, _| panic!("empty grid"));
         }
     }
 

@@ -62,6 +62,19 @@ pub fn rel_err(a: f32, b: f32) -> f32 {
     (a - b).abs() / a.abs().max(b.abs()).max(1.0)
 }
 
+/// Row-major transpose: `x[rows×cols]` → `[cols×rows]`.  Shared by the
+/// GEMM test suites to build the nt/tn operand layouts.
+pub fn transpose(rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * cols);
+    let mut t = vec![0.0; x.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            t[c * rows + r] = x[r * cols + c];
+        }
+    }
+    t
+}
+
 /// Allclose with both relative and absolute tolerance (numpy-style).
 pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
     a.len() == b.len()
@@ -105,6 +118,14 @@ mod tests {
         assert!((rel_err(2.0, 1.0) - 0.5).abs() < 1e-6);
         // Near zero, the denominator floor makes this absolute.
         assert!(rel_err(1e-6, 0.0) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 2x3
+        let t = transpose(2, 3, &x);
+        assert_eq!(t, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+        assert_eq!(transpose(3, 2, &t), x);
     }
 
     #[test]

@@ -8,13 +8,14 @@
 //! (`eps` scaled to the operand) and require rel-err < 1e-2, the
 //! acceptance bar for f32 kernels.
 
+use theano_mgpu::backend::native::gemm::{matmul_nn, matmul_nt, matmul_tn, scalar};
 use theano_mgpu::backend::native::layers::{
     conv2d_backward, conv2d_forward, fc_backward, fc_forward, softmax_xent, Conv2dShape, FcShape,
 };
 use theano_mgpu::backend::native::model::model_spec_of;
 use theano_mgpu::params::ParamStore;
 use theano_mgpu::sim::flops::{alexnet, alexnet_micro, alexnet_tiny};
-use theano_mgpu::util::math::rel_err;
+use theano_mgpu::util::math::{rel_err, transpose};
 use theano_mgpu::util::Pcg32;
 
 const EPS: f32 = 1e-2;
@@ -126,6 +127,45 @@ fn softmax_xent_gradient_matches_finite_differences() {
         let mut d = vec![0.0; l.len()];
         softmax_xent(l, &labels2, &mut p, &mut d, &s).0 as f64
     });
+}
+
+/// The packed GEMM kernels against an f64-accumulated naive product
+/// *and* the pre-packing scalar kernels, at sizes shaped like the
+/// layers the gradchecks probe.  `rel_err` floors its denominator, so
+/// near-zero sums compare absolutely — no fragile absolute epsilons.
+#[test]
+fn packed_gemm_matches_f64_reference() {
+    let mut rng = Pcg32::seeded(23);
+    for (m, k, n) in [(3, 18, 9), (4, 130, 6), (7, 29, 31)] {
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for t in 0..k {
+                    acc += (a[i * k + t] as f64) * (b[t * n + j] as f64);
+                }
+                want[i * n + j] = acc as f32;
+            }
+        }
+        let at = transpose(m, k, &a);
+        let bt = transpose(k, n, &b);
+        let mut nn = vec![0.0; m * n];
+        matmul_nn(m, k, n, &a, &b, &mut nn);
+        let mut nt = vec![0.0; m * n];
+        matmul_nt(m, k, n, &a, &bt, &mut nt);
+        let mut tn = vec![0.0; m * n];
+        matmul_tn(m, k, n, &at, &b, &mut tn);
+        let mut old = vec![0.0; m * n];
+        scalar::matmul_nn(m, k, n, &a, &b, &mut old);
+        for (tag, got) in [("nn", &nn), ("nt", &nt), ("tn", &tn), ("scalar", &old)] {
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                let e = rel_err(*x, *y);
+                assert!(e < 1e-4, "{tag} {m}x{k}x{n} [{i}]: {x} vs {y} (rel err {e})");
+            }
+        }
+    }
 }
 
 #[test]

@@ -1,23 +1,25 @@
 //! Determinism-first contract of the intra-op parallel native path:
 //! every pool kernel must be **bit-identical** across lane counts
-//! (fixed shape-derived chunk boundaries, disjoint writes, fixed-order
-//! chunk reductions), and the forward/FC kernels additionally bitwise
-//! match their serial reference forms.  The capstone pins the full
-//! `train_step` — loss and every parameter/momentum — across
-//! `threads ∈ {1, 2, 4}`, which is what keeps the N-replica divergence
-//! invariants valid under intra-op parallelism.
+//! (fixed shape-derived tile/chunk boundaries, disjoint writes,
+//! fixed-order chunk reductions), and the packed-GEMM / forward / FC
+//! kernels additionally bitwise match their serial forms.  The capstone
+//! pins the full `train_step` — loss and every parameter/momentum —
+//! across `threads ∈ {1, 2, 4}`, which is what keeps the N-replica
+//! divergence invariants valid under intra-op parallelism.
 //!
-//! Shapes are deliberately awkward: single rows/examples, primes,
-//! exactly `MAX_CHUNKS` items (chunk == 1), more items than chunks,
+//! Shapes are deliberately awkward: single rows/examples, dims under
+//! one `MR`/`NR` register tile, `k = 1`, primes, dims exactly on and
+//! one past the `MC`/`KC`/`NC` cache-block (tile == chunk) boundaries,
 //! and data shorter than one `ELEMWISE_CHUNK`.
 
 use theano_mgpu::backend::native::gemm::{
-    matmul_nn, matmul_nt, matmul_tn, par_matmul_nn, par_matmul_nt, par_matmul_tn,
+    matmul_nn, matmul_nt, matmul_tn, par_matmul_nn, par_matmul_nt, par_matmul_tn, KC, MC, MR, NC,
+    NR, PackBuf,
 };
 use theano_mgpu::backend::native::layers::{
     conv2d_backward, conv2d_backward_pool, conv2d_forward, conv2d_forward_pool, dropout_backward,
-    dropout_forward, fc_backward, fc_backward_pool, fc_forward, fc_forward_pool, maxpool_backward,
-    maxpool_backward_pool, maxpool_forward, maxpool_forward_pool, relu_backward,
+    dropout_forward, fc_backward, fc_backward_pool, fc_forward, fc_forward_pool, im2col,
+    maxpool_backward, maxpool_backward_pool, maxpool_forward, maxpool_forward_pool, relu_backward,
     relu_backward_pool, relu_forward, relu_forward_pool, Conv2dShape, ConvScratch, FcShape,
     PoolShape,
 };
@@ -26,6 +28,7 @@ use theano_mgpu::backend::{NativeBackend, StepBackend};
 use theano_mgpu::params::ParamStore;
 use theano_mgpu::sim::flops::alexnet_micro;
 use theano_mgpu::tensor::{HostTensor, Shape};
+use theano_mgpu::util::math::transpose;
 use theano_mgpu::util::Pcg32;
 
 const LANE_COUNTS: [usize; 3] = [1, 2, 4];
@@ -33,7 +36,7 @@ const LANE_COUNTS: [usize; 3] = [1, 2, 4];
 fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
     let mut v = vec![0.0; n];
     rng.fill_normal(&mut v, 1.0);
-    // Sprinkle zeros so the GEMM sparsity skips stay on the path.
+    // Sprinkle zeros so zero-padding-adjacent values stay exercised.
     for (i, x) in v.iter_mut().enumerate() {
         if i % 7 == 0 {
             *x = 0.0;
@@ -49,54 +52,73 @@ fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
         .fold(0.0, f32::max)
 }
 
+/// Packing/tiling edge shapes: below one register tile (`m < MR`,
+/// `n < NR`), `k = 1`, primes, exactly one `MC×KC×NC` macro tile
+/// (tile == chunk boundaries), one past every block edge, and a
+/// `MAX_CHUNKS`-row shape from the batch-chunk world.  Serial and
+/// parallel must agree **bitwise** at every lane count.
 #[test]
-fn gemm_row_blocks_match_serial_bitwise() {
-    // 1 row, prime rows, rows == MAX_CHUNKS (chunk length 1) and
-    // rows > MAX_CHUNKS; n crosses the NC=512 blocking edge once.
-    let shapes = [(1, 7, 5), (13, 11, 17), (MAX_CHUNKS, 5, 9), (33, 66, 130), (3, 64, 520)];
+fn gemm_tiles_match_serial_bitwise_at_edge_shapes() {
+    let shapes = [
+        (1, 1, 1),
+        (MR - 1, 3, NR - 1),
+        (MR, 1, NR),
+        (5, 1, 2),
+        (13, 11, 17),
+        (MAX_CHUNKS, 5, 9),
+        (MC, KC, NC),
+        (MC + 1, KC + 1, NC + 1),
+        (3, 64, 520),
+    ];
     let mut rng = Pcg32::seeded(21);
     for threads in LANE_COUNTS {
         let pool = ComputePool::new(threads);
+        let mut ws = PackBuf::default();
         for (m, k, n) in shapes {
             let a = randn(&mut rng, m * k);
-            let at: Vec<f32> = {
-                let mut t = vec![0.0; m * k];
-                for r in 0..m {
-                    for c in 0..k {
-                        t[c * m + r] = a[r * k + c];
-                    }
-                }
-                t
-            };
+            let at = transpose(m, k, &a);
             let b = randn(&mut rng, k * n);
-            let bt: Vec<f32> = {
-                let mut t = vec![0.0; k * n];
-                for r in 0..k {
-                    for c in 0..n {
-                        t[c * k + r] = b[r * n + c];
-                    }
-                }
-                t
-            };
+            let bt = transpose(k, n, &b);
 
             let mut want = vec![0.1; m * n];
             matmul_nn(m, k, n, &a, &b, &mut want);
             let mut got = vec![0.1; m * n];
-            par_matmul_nn(&pool, m, k, n, &a, &b, &mut got);
+            par_matmul_nn(&pool, m, k, n, &a, &b, &mut got, &mut ws);
             assert_eq!(want, got, "nn {m}x{k}x{n} t{threads}");
 
             let mut want = vec![-0.2; m * n];
             matmul_nt(m, k, n, &a, &bt, &mut want);
             let mut got = vec![-0.2; m * n];
-            par_matmul_nt(&pool, m, k, n, &a, &bt, &mut got);
+            par_matmul_nt(&pool, m, k, n, &a, &bt, &mut got, &mut ws);
             assert_eq!(want, got, "nt {m}x{k}x{n} t{threads}");
 
             let mut want = vec![0.0; m * n];
             matmul_tn(m, k, n, &at, &b, &mut want);
             let mut got = vec![0.0; m * n];
-            par_matmul_tn(&pool, m, k, n, &at, &b, &mut got);
+            par_matmul_tn(&pool, m, k, n, &at, &b, &mut got, &mut ws);
             assert_eq!(want, got, "tn {m}x{k}x{n} t{threads}");
         }
+    }
+}
+
+/// Empty ragged eval batches (`m == 0`) and empty outputs (`n == 0`)
+/// must dispatch nothing at any lane count — the guard mirroring the
+/// long-standing `n == 0` early return.
+#[test]
+fn par_gemm_handles_empty_row_and_column_counts() {
+    for threads in LANE_COUNTS {
+        let pool = ComputePool::new(threads);
+        let mut ws = PackBuf::default();
+        let b = vec![1.0; 3 * 4];
+        let mut c: Vec<f32> = vec![];
+        par_matmul_nn(&pool, 0, 3, 4, &[], &b, &mut c, &mut ws);
+        par_matmul_nt(&pool, 0, 3, 4, &[], &b, &mut c, &mut ws);
+        par_matmul_tn(&pool, 0, 3, 4, &[], &b, &mut c, &mut ws);
+        let a = vec![1.0; 2 * 3];
+        par_matmul_nn(&pool, 2, 3, 0, &a, &[], &mut c, &mut ws);
+        par_matmul_nt(&pool, 2, 3, 0, &a, &[], &mut c, &mut ws);
+        par_matmul_tn(&pool, 2, 3, 0, &transpose(2, 3, &a), &[], &mut c, &mut ws);
+        assert!(c.is_empty(), "t{threads}");
     }
 }
 
@@ -126,9 +148,35 @@ fn conv_forward_matches_serial_bitwise_at_awkward_batches() {
         for threads in LANE_COUNTS {
             let pool = ComputePool::new(threads);
             let mut scratch = conv_scratch(pool.lanes(), batch, &s);
+            let mut cache = vec![0.0; batch * s.col_elems()];
             let mut got = vec![0.0; want.len()];
-            conv2d_forward_pool(&pool, &x, &w, &b, &mut got, &mut scratch, &s);
+            conv2d_forward_pool(
+                &pool,
+                &x,
+                &w,
+                &b,
+                &mut got,
+                Some(cache.as_mut_slice()),
+                &mut scratch,
+                &s,
+            );
             assert_eq!(want, got, "conv fwd b{batch} t{threads}");
+            // The eval path (no cache, per-lane staging) is bitwise
+            // identical too.
+            let mut got_eval = vec![0.0; want.len()];
+            conv2d_forward_pool(&pool, &x, &w, &b, &mut got_eval, None, &mut scratch, &s);
+            assert_eq!(want, got_eval, "conv fwd (no cache) b{batch} t{threads}");
+            // The cache holds exactly each example's im2col columns —
+            // the contract the backward pass's reuse depends on.
+            let mut want_col = vec![0.0; s.col_elems()];
+            for bi in 0..batch {
+                im2col(&x[bi * s.in_elems()..(bi + 1) * s.in_elems()], &s, &mut want_col);
+                assert_eq!(
+                    want_col,
+                    &cache[bi * s.col_elems()..(bi + 1) * s.col_elems()],
+                    "cache b{batch} t{threads} example {bi}"
+                );
+            }
         }
     }
 }
@@ -142,7 +190,8 @@ fn conv_backward_is_lane_count_invariant_and_close_to_serial() {
         let w = randn(&mut rng, s.w_elems());
         let dy = randn(&mut rng, batch * s.out_elems());
 
-        // Serial reference (example-order accumulation).
+        // Serial reference (example-order accumulation, columns
+        // recomputed from x).
         let mut dw_ref = vec![0.0; w.len()];
         let mut db_ref = vec![0.0; s.cout];
         let mut dx_ref = vec![0.0; x.len()];
@@ -160,6 +209,13 @@ fn conv_backward_is_lane_count_invariant_and_close_to_serial() {
             &s,
         );
 
+        // The pool path consumes the forward pass's cached columns.
+        let mut cache = vec![0.0; batch * s.col_elems()];
+        for bi in 0..batch {
+            let xe = &x[bi * s.in_elems()..(bi + 1) * s.in_elems()];
+            im2col(xe, &s, &mut cache[bi * s.col_elems()..(bi + 1) * s.col_elems()]);
+        }
+
         let mut first: Option<(Vec<f32>, Vec<f32>, Vec<f32>)> = None;
         for threads in LANE_COUNTS {
             let pool = ComputePool::new(threads);
@@ -169,12 +225,12 @@ fn conv_backward_is_lane_count_invariant_and_close_to_serial() {
             let mut dx = vec![0.0; x.len()];
             conv2d_backward_pool(
                 &pool,
-                &x,
                 &w,
                 &dy,
                 &mut dw,
                 &mut db,
                 &mut dx,
+                &cache,
                 &mut scratch,
                 &s,
             );
@@ -251,13 +307,14 @@ fn fc_and_relu_match_serial_bitwise() {
 
         for threads in LANE_COUNTS {
             let pool = ComputePool::new(threads);
+            let mut ws = PackBuf::default();
             let mut y = vec![0.0; batch * dout];
-            fc_forward_pool(&pool, &x, &w, &b, &mut y, &s);
+            fc_forward_pool(&pool, &x, &w, &b, &mut y, &mut ws, &s);
             assert_eq!(y_ref, y, "fc fwd {batch}x{din}x{dout} t{threads}");
             let mut dw = vec![0.0; w.len()];
             let mut db = vec![0.0; dout];
             let mut dx = vec![0.0; x.len()];
-            fc_backward_pool(&pool, &x, &w, &dy, &mut dw, &mut db, &mut dx, &s);
+            fc_backward_pool(&pool, &x, &w, &dy, &mut dw, &mut db, &mut dx, &mut ws, &s);
             assert_eq!(dw_ref, dw, "fc dw t{threads}");
             assert_eq!(db_ref, db, "fc db t{threads}");
             assert_eq!(dx_ref, dx, "fc dx t{threads}");
