@@ -1,27 +1,83 @@
-//! E3 — **Fig 1** behaviour: the parallel-loading pipeline.
+//! E3 — **Fig 1** behaviour: overlap of hideable work with compute.
 //!
-//! Two measurements:
-//! 1. *Real*: SerialLoader vs ParallelLoader over a generated shard set
-//!    with a synthetic compute phase, reporting per-batch wall time and
-//!    trainer stall — the actual double-buffer implementation.
-//! 2. *Simulated*: overlap-efficiency sweep across load/compute ratios
+//! Three measurements:
+//! 1. *Real loading*: SerialLoader vs ParallelLoader over a generated
+//!    shard set with a synthetic compute phase, reporting per-batch
+//!    wall time and trainer stall — the actual double-buffer
+//!    implementation.
+//! 2. *Real exchange*: streamed bucketed gradient exchange
+//!    (`--overlap`) vs the same bucketed exchange run
+//!    compute-then-exchange (`--overlap serial`) on real alexnet-micro
+//!    training at N in {2, 4}.  Emits `BENCH_overlap.json` with the
+//!    exposed-comm headline.
+//! 3. *Simulated*: overlap-efficiency sweep across load/compute ratios
 //!    (the regime map the paper's Fig-1 design targets).
 
 include!("harness.rs");
 
+use std::path::Path;
+
+use theano_mgpu::config::{ClusterConfig, DataConfig, OverlapMode, TrainConfig};
+use theano_mgpu::coordinator::trainer::{train, TrainSummary};
 use theano_mgpu::data::loader::{BatchSource, LoaderCfg, ParallelLoader, SerialLoader};
 use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
 use theano_mgpu::sim::pipeline::{simulate, PipelineParams};
+
+/// Dataset cache keyed by the full generation recipe.  The old scheme
+/// reused one fixed temp dir whenever `meta.json` existed, so editing
+/// the spec here silently benchmarked stale data; encoding the spec
+/// fingerprint in the directory name makes a spec change a cache miss.
+fn cached_dataset(base: &str, spec: &SynthSpec, train: usize, val: usize, shard: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "{base}_c{}ch{}hw{}n{}s{}_{train}x{val}x{shard}",
+        spec.classes, spec.channels, spec.hw, spec.noise, spec.seed
+    ));
+    if !dir.join("meta.json").exists() {
+        generate_dataset(&dir, spec, train, val, shard).unwrap();
+    }
+    dir
+}
+
+/// Real 2-/4-worker alexnet-micro training with bucketed gradient
+/// exchange, streamed or compute-then-exchange.
+fn overlap_cfg(data_dir: &Path, workers: usize, mode: OverlapMode, steps: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.name = format!("bench-overlap-{workers}");
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "native".into();
+    cfg.dropout = 0.0;
+    cfg.batch_per_worker = 8;
+    cfg.steps = steps;
+    cfg.log_every = 0;
+    cfg.seed = 11;
+    cfg.compute_threads = 1;
+    cfg.cluster = ClusterConfig { workers, switch_of_worker: vec![0; workers] };
+    cfg.exchange.period = 1;
+    cfg.exchange.overlap = mode;
+    // Smaller buckets than the training default: more buckets in
+    // flight means a finer-grained picture of what streaming hides.
+    cfg.exchange.bucket_elems = 8192;
+    cfg.data = DataConfig {
+        dir: data_dir.to_path_buf(),
+        train_examples: 640,
+        val_examples: 0,
+        shard_examples: 320,
+        seed: 42,
+        stored_hw: 36,
+    };
+    cfg
+}
+
+fn run_overlap(data_dir: &Path, workers: usize, mode: OverlapMode, steps: usize) -> TrainSummary {
+    train(&overlap_cfg(data_dir, workers, mode, steps)).unwrap()
+}
 
 fn main() {
     let mut b = Bench::new("fig1_overlap");
 
     // --- Real pipeline ---
-    let dir = std::env::temp_dir().join("tmg_bench_fig1");
-    if !dir.join("meta.json").exists() {
-        let spec = SynthSpec { classes: 16, hw: 72, seed: 4, ..Default::default() };
-        generate_dataset(&dir, &spec, 2048, 128, 512).unwrap();
-    }
+    let spec = SynthSpec { classes: 16, hw: 72, seed: 4, ..Default::default() };
+    let dir = cached_dataset("tmg_bench_fig1", &spec, 2048, 128, 512);
     let cfg = LoaderCfg {
         data_dir: &dir,
         split: "train",
@@ -50,6 +106,60 @@ fn main() {
     b.record("real parallel: producer load/batch", st.load_seconds / st.batches as f64, "s");
     b.record("real parallel: trainer stall/batch", st.stall_seconds / st.batches as f64, "s");
     b.record("real loading saving (paper ~19-25%)", 100.0 * (1.0 - t_par / t_serial), "%");
+
+    // --- Real exchange overlap: streamed vs compute-then-exchange ---
+    let train_spec = SynthSpec { classes: 10, hw: 36, seed: 42, ..Default::default() };
+    let train_dir = cached_dataset("tmg_bench_overlap", &train_spec, 640, 64, 320);
+    let steps = 10;
+    let mut json = String::from("{\n  \"bench\": \"fig1_overlap\",\n");
+    for workers in [2usize, 4] {
+        let ser = run_overlap(&train_dir, workers, OverlapMode::Serial, steps);
+        let stm = run_overlap(&train_dir, workers, OverlapMode::Stream, steps);
+        let ser_step = ser.wall_seconds / steps as f64;
+        let stm_step = stm.wall_seconds / steps as f64;
+        let total = stm.collective.overlapped_seconds + stm.collective.exposed_seconds;
+        let efficiency = if total > 0.0 { stm.collective.overlapped_seconds / total } else { 0.0 };
+        b.record(
+            &format!("N={workers} serial exchange exposed"),
+            ser.collective.exposed_seconds,
+            "s",
+        );
+        b.record(
+            &format!("N={workers} stream exchange exposed"),
+            stm.collective.exposed_seconds,
+            "s",
+        );
+        b.record(
+            &format!("N={workers} stream exchange overlapped"),
+            stm.collective.overlapped_seconds,
+            "s",
+        );
+        b.record(&format!("N={workers} overlap efficiency"), efficiency, "");
+        b.record(&format!("N={workers} serial step time"), ser_step, "s");
+        b.record(&format!("N={workers} stream step time"), stm_step, "s");
+        json.push_str(&format!(
+            "  \"world_{workers}\": {{\n    \"steps\": {steps},\n    \
+             \"serial_exposed_comm_s\": {:.6},\n    \
+             \"stream_exposed_comm_s\": {:.6},\n    \
+             \"stream_overlapped_comm_s\": {:.6},\n    \
+             \"overlap_efficiency\": {:.4},\n    \
+             \"serial_step_s\": {:.6},\n    \
+             \"stream_step_s\": {:.6}\n  }},\n",
+            ser.collective.exposed_seconds,
+            stm.collective.exposed_seconds,
+            stm.collective.overlapped_seconds,
+            efficiency,
+            ser_step,
+            stm_step,
+        ));
+    }
+    json.push_str("  \"headline\": \"stream_exposed_comm_s vs serial_exposed_comm_s: \
+                   comm seconds left on the critical path with and without overlap\"\n}\n");
+    let out = PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&out);
+    let json_path = out.join("BENCH_overlap.json");
+    std::fs::write(&json_path, json).unwrap();
+    println!("  -> {}", json_path.display());
 
     // --- Simulated regime sweep ---
     for ratio in [0.1, 0.25, 0.5, 0.75, 1.0, 1.5] {

@@ -48,6 +48,21 @@ pub struct EvalBatchOut {
     pub top5: i32,
 }
 
+/// Observer of per-parameter gradient readiness during backward.
+///
+/// The staged step protocol calls [`GradSink::grad_ready`] once per
+/// parameter tensor, as soon as that tensor's gradient is final —
+/// in strictly *descending* manifest order (backward emits the last
+/// layer first, and within a layer bias before weight), so the
+/// finished region of the flat gradient layout grows contiguously from
+/// the end.  That ordering is what lets the bucketed collective ship
+/// fixed layout-derived buckets while backward is still running.
+pub trait GradSink {
+    /// `param` indexes the model's parameter manifest; `grad` is that
+    /// tensor's finished gradient for this step.
+    fn grad_ready(&mut self, param: usize, grad: &[f32]) -> Result<()>;
+}
+
 /// One replica's compute substrate.
 ///
 /// Implementations own their scratch state (workspaces, compiled
@@ -72,6 +87,51 @@ pub trait StepBackend: Send {
         step_seed: i32,
         store: &mut ParamStore,
     ) -> Result<TrainStepOut>;
+
+    /// Whether this backend implements the staged step protocol
+    /// ([`StepBackend::forward_backward`] + [`StepBackend::apply_update`]).
+    /// Backends that keep the monolithic [`StepBackend::train_step`]
+    /// (the XLA path — its AOT executable fuses the whole step) answer
+    /// `false` and the coordinator falls back to compute-then-exchange.
+    fn supports_staged_step(&self) -> bool {
+        false
+    }
+
+    /// Staged step, part 1: forward + backward only.  Emits every
+    /// parameter gradient through `sink` the moment it is final
+    /// (descending manifest order — see [`GradSink`]); does **not**
+    /// touch params or momenta.  The default adapter refuses, keeping
+    /// monolithic backends valid without changes.
+    fn forward_backward(
+        &mut self,
+        _images: &HostTensor,
+        _labels: &[i32],
+        _step_seed: i32,
+        _store: &ParamStore,
+        _sink: &mut dyn GradSink,
+    ) -> Result<TrainStepOut> {
+        Err(crate::error::Error::msg(format!(
+            "backend {:?} does not implement the staged step protocol",
+            self.name()
+        )))
+    }
+
+    /// Staged step, part 2: the SGD-momentum update from a flat buffer
+    /// of (group-averaged) gradients in manifest layout order.  Must be
+    /// arithmetically identical to the update inside
+    /// [`StepBackend::train_step`], so the staged path at N = 1 is
+    /// bit-equal to the fused one.
+    fn apply_update(
+        &mut self,
+        _store: &mut ParamStore,
+        _lr: f32,
+        _flat_grads: &[f32],
+    ) -> Result<()> {
+        Err(crate::error::Error::msg(format!(
+            "backend {:?} does not implement the staged step protocol",
+            self.name()
+        )))
+    }
 
     /// Whether [`StepBackend::eval_batch`] is available (the XLA path
     /// needs a separate eval artifact).

@@ -25,7 +25,7 @@ pub mod layers;
 pub mod model;
 pub mod pool;
 
-use crate::backend::{EvalBatchOut, StepBackend, TrainStepOut};
+use crate::backend::{EvalBatchOut, GradSink, StepBackend, TrainStepOut};
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
 use crate::runtime::ModelSpec;
@@ -225,7 +225,12 @@ impl NativeBackend {
     /// Backward pass; parameter gradients accumulate into `ws.grads`
     /// (zeroed here), starting from the loss gradient already staged in
     /// the last `dacts` node by `softmax_xent`.
-    fn backward(&mut self, store: &ParamStore) {
+    ///
+    /// With a `sink`, each parameter gradient is announced the moment
+    /// its op's backward call finishes — bias then weight, last layer
+    /// first — which is exactly descending manifest order, the contract
+    /// [`GradSink`] documents.
+    fn backward(&mut self, store: &ParamStore, mut sink: Option<&mut dyn GradSink>) -> Result<()> {
         let batch = self.ws.batch;
         let pool = &self.pool;
         let dropout = self.dropout;
@@ -239,7 +244,7 @@ impl NativeBackend {
             let dy = hi[0].as_mut_slice();
             let x = ws.acts[i].as_slice();
             let a = ws.acts[i + 1].as_slice();
-            match op {
+            let finished = match op {
                 PlanOp::ConvRelu { shape, param, cache } => {
                     let s = Conv2dShape { batch, ..*shape };
                     relu_backward_pool(pool, a, dy);
@@ -257,10 +262,12 @@ impl NativeBackend {
                         &mut ws.conv,
                         &s,
                     );
+                    Some(*param)
                 }
                 PlanOp::Pool { shape, arg } => {
                     let s = PoolShape { batch, ..*shape };
                     maxpool_backward_pool(pool, dy, &ws.pool_arg[*arg], dx, &s);
+                    None
                 }
                 PlanOp::FcRelu { shape, param, mask } => {
                     let s = FcShape { batch, ..*shape };
@@ -282,6 +289,7 @@ impl NativeBackend {
                         &mut ws.gemm,
                         &s,
                     );
+                    Some(*param)
                 }
                 PlanOp::FcOut { shape, param } => {
                     let s = FcShape { batch, ..*shape };
@@ -297,38 +305,62 @@ impl NativeBackend {
                         &mut ws.gemm,
                         &s,
                     );
+                    Some(*param)
                 }
+            };
+            if let (Some(param), Some(s)) = (finished, sink.as_deref_mut()) {
+                s.grad_ready(param + 1, &ws.grads[param + 1])?;
+                s.grad_ready(param, &ws.grads[param])?;
             }
         }
+        Ok(())
     }
 
-    /// SGD with momentum: `m ← μ·m − lr·g; p ← p + m`, parallel over
-    /// fixed element ranges of each tensor (elementwise, so chunking
-    /// cannot change the result).
-    fn apply_update(&self, store: &mut ParamStore, lr: f32) {
-        let momentum = self.momentum;
+    /// SGD with momentum from the workspace gradients (the fused
+    /// `train_step` path).
+    fn apply_ws_update(&self, store: &mut ParamStore, lr: f32) {
         for ((p, m), g) in
             store.params.iter_mut().zip(store.momenta.iter_mut()).zip(&self.ws.grads)
         {
-            let ps = p.as_mut_slice();
-            let ms = m.as_mut_slice();
-            let gs = g.as_slice();
-            debug_assert_eq!(ps.len(), gs.len());
-            let p_ptr = SendPtr::new(ps.as_mut_ptr());
-            let m_ptr = SendPtr::new(ms.as_mut_ptr());
-            par_ranges(&self.pool, gs.len(), ELEMWISE_CHUNK, |_ci, r| {
-                let (lo, len) = (r.start, r.len());
-                // SAFETY: ranges are disjoint; each touches only its own
-                // span of the param/momentum tensors.
-                let pr = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(lo), len) };
-                let mr = unsafe { std::slice::from_raw_parts_mut(m_ptr.get().add(lo), len) };
-                for ((pv, mv), gv) in pr.iter_mut().zip(mr).zip(&gs[lo..lo + len]) {
-                    *mv = momentum * *mv - lr * gv;
-                    *pv += *mv;
-                }
-            });
+            sgd_update_tensor(
+                &self.pool,
+                self.momentum,
+                lr,
+                p.as_mut_slice(),
+                m.as_mut_slice(),
+                g.as_slice(),
+            );
         }
     }
+}
+
+/// One tensor's SGD-momentum update: `m ← μ·m − lr·g; p ← p + m`,
+/// parallel over fixed element ranges (elementwise, so chunking cannot
+/// change the result).  One function shared by the fused and staged
+/// step paths, so their arithmetic is identical bit for bit.
+fn sgd_update_tensor(
+    pool: &ComputePool,
+    momentum: f32,
+    lr: f32,
+    ps: &mut [f32],
+    ms: &mut [f32],
+    gs: &[f32],
+) {
+    debug_assert_eq!(ps.len(), gs.len());
+    debug_assert_eq!(ms.len(), gs.len());
+    let p_ptr = SendPtr::new(ps.as_mut_ptr());
+    let m_ptr = SendPtr::new(ms.as_mut_ptr());
+    par_ranges(pool, gs.len(), ELEMWISE_CHUNK, |_ci, r| {
+        let (lo, len) = (r.start, r.len());
+        // SAFETY: ranges are disjoint; each touches only its own
+        // span of the param/momentum tensors.
+        let pr = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(lo), len) };
+        let mr = unsafe { std::slice::from_raw_parts_mut(m_ptr.get().add(lo), len) };
+        for ((pv, mv), gv) in pr.iter_mut().zip(mr).zip(&gs[lo..lo + len]) {
+            *mv = momentum * *mv - lr * gv;
+            *pv += *mv;
+        }
+    });
 }
 
 /// Split the gradient list into the (weight, bias) pair at `param`.
@@ -366,9 +398,61 @@ impl StepBackend for NativeBackend {
             self.ws.dacts[n].as_mut_slice(),
             &s,
         );
-        self.backward(store);
-        self.apply_update(store, lr);
+        self.backward(store, None)?;
+        self.apply_ws_update(store, lr);
         Ok(TrainStepOut { loss, correct1 })
+    }
+
+    fn supports_staged_step(&self) -> bool {
+        true
+    }
+
+    fn forward_backward(
+        &mut self,
+        images: &HostTensor,
+        labels: &[i32],
+        step_seed: i32,
+        store: &ParamStore,
+        sink: &mut dyn GradSink,
+    ) -> Result<TrainStepOut> {
+        let batch = self.admit_batch(images, labels, true)?;
+        let drop_seed = (self.dropout > 0.0).then_some(step_seed as u32 as u64);
+        self.forward(images, store, drop_seed, true);
+        let n = self.plan.ops.len();
+        let s = FcShape { batch, din: 0, dout: self.plan.classes };
+        let (loss, correct1) = softmax_xent(
+            self.ws.acts[n].as_slice(),
+            labels,
+            &mut self.ws.probs,
+            self.ws.dacts[n].as_mut_slice(),
+            &s,
+        );
+        self.backward(store, Some(sink))?;
+        Ok(TrainStepOut { loss, correct1 })
+    }
+
+    fn apply_update(&mut self, store: &mut ParamStore, lr: f32, flat_grads: &[f32]) -> Result<()> {
+        let offsets = self.plan.param_offsets();
+        let total = *offsets.last().unwrap();
+        if flat_grads.len() != total || store.params.len() + 1 != offsets.len() {
+            return Err(Error::Shape(format!(
+                "apply_update: {} gradient values over {} tensors, plan wants {total} over {}",
+                flat_grads.len(),
+                store.params.len(),
+                offsets.len() - 1
+            )));
+        }
+        for (i, (p, m)) in store.params.iter_mut().zip(store.momenta.iter_mut()).enumerate() {
+            sgd_update_tensor(
+                &self.pool,
+                self.momentum,
+                lr,
+                p.as_mut_slice(),
+                m.as_mut_slice(),
+                &flat_grads[offsets[i]..offsets[i + 1]],
+            );
+        }
+        Ok(())
     }
 
     fn supports_eval(&self) -> bool {
@@ -439,6 +523,54 @@ mod tests {
         // And the update moved the parameters.
         let fresh = ParamStore::init(&sa.specs, 7);
         assert!(sa.param_divergence(&fresh) > 0.0);
+    }
+
+    /// Test sink: scatters emitted gradients into a flat layout buffer
+    /// and asserts the descending-contiguous emission contract.
+    struct CollectSink {
+        flat: Vec<f32>,
+        offsets: Vec<usize>,
+        next: usize,
+    }
+
+    impl GradSink for CollectSink {
+        fn grad_ready(&mut self, param: usize, grad: &[f32]) -> Result<()> {
+            let (lo, hi) = (self.offsets[param], self.offsets[param + 1]);
+            assert_eq!(hi - lo, grad.len(), "param {param} length");
+            assert_eq!(hi, self.next, "param {param} emitted out of order");
+            self.flat[lo..hi].copy_from_slice(grad);
+            self.next = lo;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn staged_step_matches_fused_bit_for_bit() {
+        // forward_backward + apply_update from the emitted gradients is
+        // the N = 1 degenerate case of the overlapped exchange; it must
+        // reproduce train_step exactly (params + momenta), dropout on.
+        let arch = alexnet_micro();
+        let (images, labels) = random_batch(4, arch.num_classes, 21);
+        let mut fused = NativeBackend::new(&arch, 0.5);
+        let mut store_f = ParamStore::init(&fused.model().params, 7);
+        let mut staged = NativeBackend::new(&arch, 0.5);
+        let mut store_s = ParamStore::init(&staged.model().params, 7);
+        assert!(staged.supports_staged_step());
+        for step in 0..3 {
+            let of = fused.train_step(&images, &labels, 0.01, step, &mut store_f).unwrap();
+            let offsets = staged.plan.param_offsets();
+            let total = *offsets.last().unwrap();
+            let mut sink = CollectSink { flat: vec![0.0; total], offsets, next: total };
+            let os =
+                staged.forward_backward(&images, &labels, step, &store_s, &mut sink).unwrap();
+            assert_eq!(sink.next, 0, "every gradient must be emitted");
+            staged.apply_update(&mut store_s, 0.01, &sink.flat).unwrap();
+            assert_eq!(of.loss, os.loss, "step {step}");
+            assert_eq!(of.correct1, os.correct1);
+        }
+        assert_eq!(store_f.max_divergence(&store_s), 0.0);
+        // A wrong-length gradient buffer is rejected.
+        assert!(staged.apply_update(&mut store_s, 0.01, &[0.0; 3]).is_err());
     }
 
     #[test]

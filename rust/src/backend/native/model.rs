@@ -169,6 +169,23 @@ impl NetPlan {
         }
     }
 
+    /// Prefix offsets of each parameter tensor in the flat gradient /
+    /// parameter layout: `params.len() + 1` entries, entry `i` is
+    /// where tensor `i` starts, the last entry is the total element
+    /// count.  The bucketed exchange and the staged update both
+    /// address the flat buffer through this table, so bucket
+    /// boundaries derive only from the layout.
+    pub fn param_offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.params.len() + 1);
+        out.push(0);
+        let mut off = 0;
+        for p in &self.params {
+            off += p.shape.numel();
+            out.push(off);
+        }
+        out
+    }
+
     /// The manifest-compatible model description of this plan.
     pub fn model_spec(&self) -> ModelSpec {
         ModelSpec {
@@ -338,6 +355,19 @@ mod tests {
         assert_eq!(plan.params.len(), 8);
         assert_eq!(plan.params[0].name, "conv1.w");
         assert_eq!(plan.params[7].name, "out.b");
+    }
+
+    #[test]
+    fn param_offsets_are_prefix_sums() {
+        let plan = NetPlan::from_arch(&alexnet_micro());
+        let offs = plan.param_offsets();
+        assert_eq!(offs.len(), plan.params.len() + 1);
+        assert_eq!(offs[0], 0);
+        let total: usize = plan.params.iter().map(|p| p.shape.numel()).sum();
+        assert_eq!(*offs.last().unwrap(), total);
+        for (i, p) in plan.params.iter().enumerate() {
+            assert_eq!(offs[i + 1] - offs[i], p.shape.numel(), "{}", p.name);
+        }
     }
 
     #[test]

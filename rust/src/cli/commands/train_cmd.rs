@@ -107,6 +107,16 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
     if let Some(v) = a.get("period") {
         cfg.exchange.period = v.parse().map_err(|_| crate::Error::msg("--period wants int"))?;
     }
+    if let Some(v) = a.get("overlap") {
+        cfg.exchange.overlap = crate::config::OverlapMode::parse(v)?;
+    } else if a.has_flag("overlap") {
+        // Bare `--overlap` (no value) means streamed overlap.
+        cfg.exchange.overlap = crate::config::OverlapMode::Stream;
+    }
+    if let Some(v) = a.get("bucket-elems") {
+        cfg.exchange.bucket_elems =
+            v.parse().map_err(|_| crate::Error::msg("--bucket-elems wants int"))?;
+    }
     if let Some(v) = a.get("batch") {
         cfg.batch_per_worker =
             v.parse().map_err(|_| crate::Error::msg("--batch wants int"))?;
@@ -187,6 +197,15 @@ pub fn run(argv: &[String]) -> Result<i32> {
             summary.collective.flatten_seconds,
             summary.collective.transfer_seconds,
             summary.collective.average_seconds
+        );
+    }
+    if summary.collective.bucket_rounds > 0 {
+        println!(
+            "exchange overlap: {:.3}s overlapped, {:.3}s exposed ({} buckets over {} rounds)",
+            summary.collective.overlapped_seconds,
+            summary.collective.exposed_seconds,
+            summary.collective.bucket_rounds,
+            summary.exchange_rounds
         );
     }
     for (w, st) in summary.loader.iter().enumerate() {
@@ -297,6 +316,28 @@ mod tests {
         apply_overrides(&mut cfg, &args("--steps 8 --resume")).unwrap();
         assert_eq!(cfg.resume, Some(ResumeFrom::Auto));
         assert!(apply_overrides(&mut cfg, &args("--checkpoint-every soon")).is_err());
+    }
+
+    #[test]
+    fn overlap_overrides_parse_and_validate() {
+        use crate::config::OverlapMode;
+        // Bare `--overlap` = streamed; valued forms pick the mode.
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--overlap")).unwrap();
+        assert_eq!(cfg.exchange.overlap, OverlapMode::Stream);
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--overlap serial --bucket-elems 4096")).unwrap();
+        assert_eq!(cfg.exchange.overlap, OverlapMode::Serial);
+        assert_eq!(cfg.exchange.bucket_elems, 4096);
+        let mut cfg = TrainConfig::default();
+        apply_overrides(&mut cfg, &args("--overlap off")).unwrap();
+        assert_eq!(cfg.exchange.overlap, OverlapMode::Off);
+        // Gradient exchange is only defined at period 1.
+        let mut cfg = TrainConfig::default();
+        let err = apply_overrides(&mut cfg, &args("--overlap --period 4")).unwrap_err();
+        assert!(format!("{err}").contains("period"), "{err}");
+        let mut cfg = TrainConfig::default();
+        assert!(apply_overrides(&mut cfg, &args("--overlap sideways")).is_err());
     }
 
     #[test]

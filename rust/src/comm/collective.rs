@@ -55,6 +55,15 @@ pub struct CollectiveStats {
     pub flatten_seconds: f64,
     pub transfer_seconds: f64,
     pub average_seconds: f64,
+    /// Bucketed-exchange messages completed (one per bucket per round;
+    /// zero on the monolithic path).
+    pub bucket_rounds: u64,
+    /// Of the bucketed-exchange comm time, the share that ran
+    /// concurrently with backward compute (hidden from the step).
+    pub overlapped_seconds: f64,
+    /// Comm time the step actually waited for at the pre-update
+    /// barrier — the exposed cost the overlap is meant to shrink.
+    pub exposed_seconds: f64,
 }
 
 impl CollectiveStats {
@@ -62,12 +71,15 @@ impl CollectiveStats {
         self.flatten_seconds + self.transfer_seconds + self.average_seconds
     }
 
-    fn absorb(&mut self, round: &CollectiveStats) {
+    pub(crate) fn absorb(&mut self, round: &CollectiveStats) {
         self.rounds += round.rounds;
         self.bytes_per_round = round.bytes_per_round;
         self.flatten_seconds += round.flatten_seconds;
         self.transfer_seconds += round.transfer_seconds;
         self.average_seconds += round.average_seconds;
+        self.bucket_rounds += round.bucket_rounds;
+        self.overlapped_seconds += round.overlapped_seconds;
+        self.exposed_seconds += round.exposed_seconds;
     }
 }
 
@@ -79,6 +91,7 @@ impl From<ExchangeStats> for CollectiveStats {
             flatten_seconds: e.flatten_seconds,
             transfer_seconds: e.transfer_seconds,
             average_seconds: e.average_seconds,
+            ..Default::default()
         }
     }
 }
@@ -96,6 +109,15 @@ pub trait Collective: Send {
         store: &mut ParamStore,
         include_momentum: bool,
     ) -> Result<CollectiveStats>;
+
+    /// All-reduce-average a raw flat buffer in place — one bucket of
+    /// the streamed gradient exchange.  Every rank must call this with
+    /// the same buffer length, in the same order relative to its other
+    /// collective calls; the per-message sequence check makes skew a
+    /// [`Error::Protocol`], never a silent mix-up.  After the call,
+    /// `data` holds the elementwise group mean, bit-identical on every
+    /// rank.
+    fn all_reduce_flat(&mut self, data: &mut [f32]) -> Result<CollectiveStats>;
 
     /// Cumulative stats across all rounds so far.
     fn stats(&self) -> CollectiveStats;
@@ -126,6 +148,10 @@ impl Collective for NoopCollective {
         _store: &mut ParamStore,
         _include_momentum: bool,
     ) -> Result<CollectiveStats> {
+        Ok(CollectiveStats::default())
+    }
+
+    fn all_reduce_flat(&mut self, _data: &mut [f32]) -> Result<CollectiveStats> {
         Ok(CollectiveStats::default())
     }
 
@@ -170,6 +196,21 @@ impl Collective for PairwiseCollective {
             flatten_seconds: after.flatten_seconds - before.flatten_seconds,
             transfer_seconds: after.transfer_seconds - before.transfer_seconds,
             average_seconds: after.average_seconds - before.average_seconds,
+            ..Default::default()
+        })
+    }
+
+    fn all_reduce_flat(&mut self, data: &mut [f32]) -> Result<CollectiveStats> {
+        let before = self.port.stats;
+        self.port.exchange_flat(data)?;
+        let after = self.port.stats;
+        Ok(CollectiveStats {
+            bytes_per_round: after.bytes_per_round,
+            flatten_seconds: after.flatten_seconds - before.flatten_seconds,
+            transfer_seconds: after.transfer_seconds - before.transfer_seconds,
+            average_seconds: after.average_seconds - before.average_seconds,
+            bucket_rounds: 1,
+            ..Default::default()
         })
     }
 
@@ -242,19 +283,14 @@ impl RingCollective {
         }
         Ok(())
     }
-}
 
-impl Collective for RingCollective {
-    fn all_reduce_average(
-        &mut self,
-        store: &mut ParamStore,
-        include_momentum: bool,
-    ) -> Result<CollectiveStats> {
+    /// Ring all-reduce-average of `self.flat_buf` in place: N-1
+    /// reduce-scatter steps, N-1 all-gather steps, then divide by N.
+    /// Shared by the monolithic store round and the per-bucket flat
+    /// round, so both run the *same* schedule, summation order and
+    /// sequence-number stream.  Returns (transfer, average) seconds.
+    fn reduce_flat_in_place(&mut self) -> Result<(f64, f64)> {
         let n = self.n;
-        let t = Timer::start();
-        store.flatten_into(&mut self.flat_buf, include_momentum);
-        let mut flatten_seconds = t.elapsed_secs();
-        let bytes = self.flat_buf.len() * 4;
         let bounds = chunk_bounds(self.flat_buf.len(), n);
         let mut transfer_seconds = 0.0;
         let mut average_seconds = 0.0;
@@ -293,6 +329,23 @@ impl Collective for RingCollective {
         let t = Timer::start();
         scale_in_place(&mut self.flat_buf, 1.0 / n as f32);
         average_seconds += t.elapsed_secs();
+        Ok((transfer_seconds, average_seconds))
+    }
+}
+
+impl Collective for RingCollective {
+    fn all_reduce_average(
+        &mut self,
+        store: &mut ParamStore,
+        include_momentum: bool,
+    ) -> Result<CollectiveStats> {
+        let t = Timer::start();
+        store.flatten_into(&mut self.flat_buf, include_momentum);
+        let mut flatten_seconds = t.elapsed_secs();
+        let bytes = self.flat_buf.len() * 4;
+
+        let (transfer_seconds, average_seconds) = self.reduce_flat_in_place()?;
+
         let t = Timer::start();
         store.unflatten_from(&self.flat_buf, include_momentum)?;
         flatten_seconds += t.elapsed_secs();
@@ -303,6 +356,32 @@ impl Collective for RingCollective {
             flatten_seconds,
             transfer_seconds,
             average_seconds,
+            ..Default::default()
+        };
+        self.stats.absorb(&round);
+        Ok(round)
+    }
+
+    fn all_reduce_flat(&mut self, data: &mut [f32]) -> Result<CollectiveStats> {
+        let t = Timer::start();
+        self.flat_buf.clear();
+        self.flat_buf.extend_from_slice(data);
+        let mut flatten_seconds = t.elapsed_secs();
+        let bytes = self.flat_buf.len() * 4;
+
+        let (transfer_seconds, average_seconds) = self.reduce_flat_in_place()?;
+
+        let t = Timer::start();
+        data.copy_from_slice(&self.flat_buf);
+        flatten_seconds += t.elapsed_secs();
+
+        let round = CollectiveStats {
+            bytes_per_round: bytes,
+            flatten_seconds,
+            transfer_seconds,
+            average_seconds,
+            bucket_rounds: 1,
+            ..Default::default()
         };
         self.stats.absorb(&round);
         Ok(round)
@@ -581,6 +660,80 @@ mod tests {
         assert_eq!(noop.rounds(), 0);
         assert_eq!(noop.world_size(), 1);
         assert_eq!(store.max_divergence(&before), 0.0);
+    }
+
+    #[test]
+    fn flat_all_reduce_matches_the_mean_for_all_world_sizes() {
+        for n in [2usize, 3, 4] {
+            let fabrics = build_fabric(n, &vec![TransportKind::P2p; n]);
+            let mut joins = Vec::new();
+            for (rank, mut fabric) in fabrics.into_iter().enumerate() {
+                joins.push(std::thread::spawn(move || {
+                    // An awkward length: not divisible by any n in play.
+                    let mut data = vec![(rank + 1) as f32; 103];
+                    let round = fabric.all_reduce_flat(&mut data).unwrap();
+                    assert_eq!(round.bucket_rounds, 1);
+                    assert_eq!(round.rounds, 0);
+                    data
+                }));
+            }
+            let results: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+            let want = (1..=n).sum::<usize>() as f32 / n as f32;
+            for (rank, data) in results.iter().enumerate() {
+                assert!(
+                    data.iter().all(|v| (v - want).abs() < 1e-6),
+                    "n={n} rank {rank}"
+                );
+            }
+            // Bitwise agreement across ranks.
+            for data in &results[1..] {
+                assert_eq!(&results[0], data);
+            }
+        }
+    }
+
+    #[test]
+    fn flat_buckets_share_the_sequence_stream_with_store_rounds() {
+        // A store round followed by two flat buckets must stay in
+        // lockstep; a rank that skips a bucket is caught by the
+        // sequence check on the next message, not silently averaged.
+        let mut nodes = ring_fabric(&[TransportKind::P2p; 2]);
+        let mut b = nodes.pop().unwrap();
+        let mut a = nodes.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut store = rank_store(1);
+            b.all_reduce_average(&mut store, true).unwrap();
+            let mut bucket = vec![1.0f32; 8];
+            b.all_reduce_flat(&mut bucket).unwrap();
+            b.all_reduce_flat(&mut bucket).unwrap();
+            b
+        });
+        let mut store = rank_store(0);
+        a.all_reduce_average(&mut store, true).unwrap();
+        let mut bucket = vec![2.0f32; 8];
+        a.all_reduce_flat(&mut bucket).unwrap();
+        a.all_reduce_flat(&mut bucket).unwrap();
+        let b = h.join().unwrap();
+        assert_eq!(a.stats().bucket_rounds, 2);
+        assert_eq!(b.stats().bucket_rounds, 2);
+        assert_eq!(a.stats().rounds, 1);
+    }
+
+    #[test]
+    fn stale_bucket_message_is_a_protocol_error_not_a_hang() {
+        let mut nodes = ring_fabric(&[TransportKind::P2p; 2]);
+        let mut b = nodes.pop().unwrap();
+        let mut a = nodes.pop().unwrap();
+        // Rank 0 replays an old round number into the ring; rank 1's
+        // bucket recv expects seq 0 and must reject it loudly.
+        a.to_next.send_vec(7, vec![0.5; 4]).unwrap();
+        let h = std::thread::spawn(move || {
+            let mut bucket = vec![1.0f32; 8];
+            b.all_reduce_flat(&mut bucket)
+        });
+        let err = h.join().unwrap().unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "{err}");
+        drop(a);
     }
 
     #[test]

@@ -93,6 +93,48 @@ impl ExchangePort {
         Ok(())
     }
 
+    /// Pairwise all-reduce-average of a raw flat buffer — the bucketed
+    /// gradient-exchange primitive.  Both sides send their slice, recv
+    /// the peer's, and overwrite `data` with the elementwise midpoint
+    /// `0.5 * (a + b)` (f32 addition is commutative, so both ranks
+    /// compute identical bits).  Shares the round counter with
+    /// [`Self::exchange`], so per-bucket skew is detected the same way.
+    pub fn exchange_flat(&mut self, data: &mut [f32]) -> Result<()> {
+        let t0 = Timer::start();
+        self.flat_buf.clear();
+        self.flat_buf.extend_from_slice(data);
+        let bytes = self.flat_buf.len() * 4;
+        let t_flat = t0.elapsed_secs();
+
+        let t1 = Timer::start();
+        let outgoing = std::mem::take(&mut self.flat_buf);
+        self.endpoint.send_vec(self.seq, outgoing)?;
+        self.endpoint.recv(self.seq, &mut self.recv_buf)?;
+        let t_xfer = t1.elapsed_secs();
+
+        if self.recv_buf.len() != data.len() {
+            return Err(crate::error::Error::Protocol(format!(
+                "pair bucket: received {} values, expected {}",
+                self.recv_buf.len(),
+                data.len()
+            )));
+        }
+        let t2 = Timer::start();
+        for (a, &b) in data.iter_mut().zip(&self.recv_buf) {
+            *a = 0.5 * (*a + b);
+        }
+        let t_avg = t2.elapsed_secs();
+        std::mem::swap(&mut self.flat_buf, &mut self.recv_buf);
+
+        self.stats.rounds += 1;
+        self.stats.bytes_per_round = bytes;
+        self.stats.flatten_seconds += t_flat;
+        self.stats.transfer_seconds += t_xfer;
+        self.stats.average_seconds += t_avg;
+        self.seq += 1;
+        Ok(())
+    }
+
     /// Link-layer counters.
     pub fn link_stats(&self) -> crate::comm::link::LinkStats {
         self.endpoint.stats

@@ -16,6 +16,10 @@
 //!   through for *any* N — no-op (N = 1), pairwise port (N = 2, byte-
 //!   for-byte the paper's path) and a chunked ring all-reduce over the
 //!   link transports (arbitrary N, per-hop §4.4 topology fallback).
+//! - [`overlap`]: bucketed gradient exchange streamed from backward —
+//!   fixed layout-derived buckets ring-reduced on a dedicated comm
+//!   thread concurrently with the remaining backward pass, joined at a
+//!   barrier before the update (Theano-MPI's comm/compute overlap).
 //! - [`barrier`]: timed step barrier.
 //! - [`cost`]: analytic transfer-time model, calibrated by `sim`.
 
@@ -24,12 +28,14 @@ pub mod collective;
 pub mod cost;
 pub mod exchange;
 pub mod link;
+pub mod overlap;
 
 pub use barrier::TimedBarrier;
 pub use collective::{
     build_fabric, pair_fabric, ring_fabric, Collective, CollectiveStats, NoopCollective,
     PairwiseCollective, RingCollective,
 };
+pub use overlap::{bucket_bounds, GradExchanger};
 pub use cost::{CommCostModel, LinkCost};
 pub use exchange::{ExchangePort, ExchangeStats};
 pub use link::{transport_pair, Endpoint, LinkStats};

@@ -1,0 +1,396 @@
+//! Bucketed gradient exchange, streamed concurrently with backward.
+//!
+//! Theano-MPI's framework-level lever on top of the paper's exchange:
+//! once the per-replica kernels are fast, the next win is hiding the
+//! collective behind the backward pass.  The flat parameter layout is
+//! cut into fixed-size *buckets* whose boundaries derive only from the
+//! layout (`total_elems`, `bucket_elems`) — never from timing or
+//! thread count — and each bucket is all-reduced as soon as backward
+//! has produced every gradient inside it.  Backward emits gradients in
+//! reverse layout order (out.b, out.w, …, conv1.b, conv1.w), so the
+//! ready region grows contiguously from the end of the layout and
+//! buckets complete in fixed descending index order.
+//!
+//! Determinism: every rank pushes the same buckets in the same
+//! descending order through the same collective schedule, so the
+//! sequence-number stream, the summation order and therefore the
+//! resulting bits are independent of comm timing.  [`StreamMode`]
+//! (dedicated comm thread, reductions concurrent with the remaining
+//! backward) and the serial mode (reduce everything at the join
+//! barrier) are bit-identical by construction — the serial mode *is*
+//! the non-overlapped baseline the benches compare against.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use crate::comm::collective::{Collective, CollectiveStats};
+use crate::error::{Error, Result};
+use crate::util::Timer;
+
+/// Bucket boundaries: fixed-size spans `[b*B, min((b+1)*B, total))`
+/// covering the flat gradient layout.  A pure function of the layout —
+/// every rank derives identical bounds from its own config.
+pub fn bucket_bounds(total_elems: usize, bucket_elems: usize) -> Vec<(usize, usize)> {
+    assert!(bucket_elems > 0, "bucket_elems must be positive");
+    if total_elems == 0 {
+        return Vec::new();
+    }
+    let n = total_elems.div_ceil(bucket_elems);
+    (0..n)
+        .map(|b| (b * bucket_elems, ((b + 1) * bucket_elems).min(total_elems)))
+        .collect()
+}
+
+/// One reduced bucket coming back from the comm thread.
+struct BucketDone {
+    bucket: usize,
+    data: Vec<f32>,
+    /// Wall time the comm thread spent reducing this bucket.
+    busy_seconds: f64,
+    round: CollectiveStats,
+}
+
+/// The dedicated comm thread's handle: buckets go out in fixed order,
+/// averaged buckets come back as they complete.
+struct StreamMode {
+    to_comm: Sender<(usize, Vec<f32>)>,
+    from_comm: Receiver<Result<BucketDone>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+enum Mode {
+    /// Reductions run on a dedicated comm thread, concurrent with the
+    /// rest of backward.
+    Stream(StreamMode),
+    /// Same buckets, same order, reduced inline at the join barrier —
+    /// the measured compute-then-exchange baseline.
+    Serial(Box<dyn Collective>),
+}
+
+/// One worker's handle on the bucketed gradient exchange.
+///
+/// Per step: backward drives [`GradExchanger::grad_ready`] with each
+/// finished gradient (reverse layout order, contiguous from the end);
+/// completed buckets are handed to the collective immediately.
+/// [`GradExchanger::join`] is the pre-update barrier: it blocks until
+/// every bucket of the round holds the group mean and returns the full
+/// averaged gradient buffer for `apply_update`.
+pub struct GradExchanger {
+    bounds: Vec<(usize, usize)>,
+    total_elems: usize,
+    /// Flat gradient staging in layout order; averaged in place by the
+    /// time `join` returns.
+    stage: Vec<f32>,
+    /// Readiness watermark: `stage[ready_from..]` holds final
+    /// gradients.  Descends from `total_elems` to 0 each round.
+    ready_from: usize,
+    /// Next bucket to hand to the collective (descending; the round is
+    /// fully pushed once it underflows to `None`).
+    next_push: Option<usize>,
+    /// Recycled bucket buffers (§Perf: steady state allocates nothing).
+    free: Vec<Vec<f32>>,
+    mode: Mode,
+    stats: CollectiveStats,
+}
+
+impl GradExchanger {
+    /// Wrap `collective` for a layout of `total_elems` gradients cut
+    /// into `bucket_elems`-sized buckets.  `stream: true` spawns the
+    /// dedicated comm thread which owns the collective for the run;
+    /// `false` keeps reductions inline at the join barrier.
+    pub fn new(
+        collective: Box<dyn Collective>,
+        total_elems: usize,
+        bucket_elems: usize,
+        stream: bool,
+    ) -> Self {
+        let bounds = bucket_bounds(total_elems, bucket_elems);
+        let next_push = bounds.len().checked_sub(1);
+        let mode = if stream {
+            let (to_comm, rx) = channel::<(usize, Vec<f32>)>();
+            let (tx_done, from_comm) = channel::<Result<BucketDone>>();
+            let mut collective = collective;
+            let handle = std::thread::Builder::new()
+                .name("tmg-comm".into())
+                .spawn(move || {
+                    while let Ok((bucket, mut data)) = rx.recv() {
+                        let t = Timer::start();
+                        let res = collective.all_reduce_flat(&mut data);
+                        let busy_seconds = t.elapsed_secs();
+                        let msg = res.map(|round| BucketDone {
+                            bucket,
+                            data,
+                            busy_seconds,
+                            round,
+                        });
+                        let failed = msg.is_err();
+                        if tx_done.send(msg).is_err() || failed {
+                            // Receiver gone or the fabric broke: stop
+                            // consuming; the worker sees the error (or
+                            // a disconnect) at the join barrier.
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn comm thread");
+            Mode::Stream(StreamMode { to_comm, from_comm, handle: Some(handle) })
+        } else {
+            Mode::Serial(collective)
+        };
+        GradExchanger {
+            bounds,
+            total_elems,
+            stage: vec![0.0; total_elems],
+            ready_from: total_elems,
+            next_push,
+            free: Vec::new(),
+            mode,
+            stats: CollectiveStats::default(),
+        }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Accept one finished gradient at `offset` in the flat layout.
+    /// Gradients must arrive contiguously from the end of the layout
+    /// (backward order); any gap or reorder is a protocol error, since
+    /// it would let a bucket ship with stale contents.
+    pub fn grad_ready(&mut self, offset: usize, grad: &[f32]) -> Result<()> {
+        if offset + grad.len() != self.ready_from {
+            return Err(Error::Protocol(format!(
+                "grad_ready out of order: got [{}, {}), ready watermark at {}",
+                offset,
+                offset + grad.len(),
+                self.ready_from
+            )));
+        }
+        self.stage[offset..self.ready_from].copy_from_slice(grad);
+        self.ready_from = offset;
+        self.push_ready_buckets()
+    }
+
+    /// Hand every fully-ready, not-yet-pushed bucket to the collective,
+    /// in fixed descending index order.
+    fn push_ready_buckets(&mut self) -> Result<()> {
+        while let Some(b) = self.next_push {
+            let (lo, hi) = self.bounds[b];
+            if lo < self.ready_from {
+                break;
+            }
+            match &mut self.mode {
+                Mode::Stream(s) => {
+                    let mut buf = self.free.pop().unwrap_or_default();
+                    buf.clear();
+                    buf.extend_from_slice(&self.stage[lo..hi]);
+                    s.to_comm.send((b, buf)).map_err(|_| {
+                        Error::Protocol("comm thread terminated before the round finished".into())
+                    })?;
+                }
+                // Serial: nothing to do yet — the data sits in `stage`
+                // until the join barrier reduces it in the same order.
+                Mode::Serial(_) => {}
+            }
+            self.next_push = b.checked_sub(1);
+        }
+        Ok(())
+    }
+
+    /// The pre-update barrier: block until every bucket of the round
+    /// holds the group mean, then return the averaged flat gradients.
+    /// Resets the readiness watermark for the next round.
+    pub fn join(&mut self) -> Result<&[f32]> {
+        if self.ready_from != 0 || self.next_push.is_some() {
+            return Err(Error::Protocol(format!(
+                "join before the round is complete: watermark at {}, {} buckets unpushed",
+                self.ready_from,
+                self.next_push.map_or(0, |b| b + 1)
+            )));
+        }
+        let n = self.bounds.len();
+        match &mut self.mode {
+            Mode::Stream(s) => {
+                let mut remaining = n;
+                // Buckets that finished while backward was still
+                // running are pure overlap: their comm time was hidden.
+                loop {
+                    match s.from_comm.try_recv() {
+                        Ok(done) => {
+                            let done = done?;
+                            let (lo, hi) = self.bounds[done.bucket];
+                            self.stage[lo..hi].copy_from_slice(&done.data);
+                            self.free.push(done.data);
+                            self.stats.overlapped_seconds += done.busy_seconds;
+                            self.stats.absorb(&done.round);
+                            remaining -= 1;
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            return Err(Error::Protocol("comm thread terminated".into()))
+                        }
+                    }
+                }
+                // Whatever is still in flight is exposed: the step
+                // waits for it here, wall-clock.
+                let t = Timer::start();
+                while remaining > 0 {
+                    let done = s
+                        .from_comm
+                        .recv()
+                        .map_err(|_| Error::Protocol("comm thread terminated".into()))??;
+                    let (lo, hi) = self.bounds[done.bucket];
+                    self.stage[lo..hi].copy_from_slice(&done.data);
+                    self.free.push(done.data);
+                    self.stats.absorb(&done.round);
+                    remaining -= 1;
+                }
+                self.stats.exposed_seconds += t.elapsed_secs();
+            }
+            Mode::Serial(collective) => {
+                let t = Timer::start();
+                for b in (0..n).rev() {
+                    let (lo, hi) = self.bounds[b];
+                    let round = collective.all_reduce_flat(&mut self.stage[lo..hi])?;
+                    self.stats.absorb(&round);
+                }
+                self.stats.exposed_seconds += t.elapsed_secs();
+            }
+        }
+        self.stats.rounds += 1;
+        self.ready_from = self.total_elems;
+        self.next_push = n.checked_sub(1);
+        Ok(&self.stage)
+    }
+
+    /// Cumulative stats across all rounds so far.
+    pub fn stats(&self) -> CollectiveStats {
+        self.stats
+    }
+
+    /// Shut down (joining the comm thread in stream mode) and return
+    /// the cumulative stats.
+    pub fn finish(self) -> Result<CollectiveStats> {
+        let GradExchanger { mode, stats, .. } = self;
+        if let Mode::Stream(StreamMode { to_comm, from_comm, handle }) = mode {
+            // Closing the bucket channel is the shutdown signal.
+            drop(to_comm);
+            drop(from_comm);
+            if let Some(h) = handle {
+                h.join()
+                    .map_err(|_| Error::Protocol("comm thread panicked".into()))?;
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective::{build_fabric, NoopCollective};
+    use crate::config::TransportKind;
+
+    #[test]
+    fn bounds_tile_the_layout_exactly() {
+        assert_eq!(bucket_bounds(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(bucket_bounds(8, 4), vec![(0, 4), (4, 8)]);
+        assert_eq!(bucket_bounds(3, 100), vec![(0, 3)]);
+        assert_eq!(bucket_bounds(0, 4), vec![]);
+        let b = bucket_bounds(52_666, 32_768);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.last().unwrap().1, 52_666);
+    }
+
+    /// Drive one full round on a single rank: push gradients back to
+    /// front, join, return the averaged buffer.
+    fn one_round(ex: &mut GradExchanger, grads: &[f32], cuts: &[usize]) -> Vec<f32> {
+        // `cuts` are layout offsets splitting `grads` into tensors;
+        // emit them in reverse order, as backward would.
+        let mut hi = grads.len();
+        for &lo in cuts.iter().rev() {
+            ex.grad_ready(lo, &grads[lo..hi]).unwrap();
+            hi = lo;
+        }
+        ex.join().unwrap().to_vec()
+    }
+
+    #[test]
+    fn noop_round_trips_the_gradients_unchanged() {
+        let grads: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        for stream in [false, true] {
+            let mut ex = GradExchanger::new(Box::new(NoopCollective::new()), 10, 4, stream);
+            assert_eq!(ex.n_buckets(), 3);
+            let out = one_round(&mut ex, &grads, &[0, 3, 7]);
+            assert_eq!(out, grads);
+            let stats = ex.finish().unwrap();
+            assert_eq!(stats.rounds, 1);
+        }
+    }
+
+    #[test]
+    fn out_of_order_and_early_join_are_protocol_errors() {
+        let mut ex = GradExchanger::new(Box::new(NoopCollective::new()), 10, 4, false);
+        // First emission must end at the watermark (10).
+        assert!(ex.grad_ready(0, &[0.0; 3]).is_err());
+        ex.grad_ready(7, &[0.0; 3]).unwrap();
+        // Join with 7 elements still missing must refuse.
+        assert!(ex.join().is_err());
+        // Skipping a span must refuse.
+        assert!(ex.grad_ready(0, &[0.0; 3]).is_err());
+    }
+
+    /// Stream and serial modes over a real 2-rank fabric must agree
+    /// bit-for-bit and produce the group mean.
+    #[test]
+    fn stream_and_serial_agree_bitwise_over_a_pair() {
+        let total = 37;
+        let run = |stream: bool| -> Vec<Vec<f32>> {
+            let fabrics = build_fabric(2, &[TransportKind::P2p]);
+            let mut joins = Vec::new();
+            for (rank, fabric) in fabrics.into_iter().enumerate() {
+                joins.push(std::thread::spawn(move || {
+                    let mut ex = GradExchanger::new(fabric, total, 8, stream);
+                    let grads: Vec<f32> =
+                        (0..total).map(|i| (i as f32 + 1.0) * (rank as f32 + 1.0)).collect();
+                    let out = one_round(&mut ex, &grads, &[0, 5, 20]);
+                    let stats = ex.finish().unwrap();
+                    assert_eq!(stats.bucket_rounds, 5);
+                    out
+                }));
+            }
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        };
+        let serial = run(false);
+        let stream = run(true);
+        // Mean of rank multipliers 1 and 2 is 1.5.
+        for rank in 0..2 {
+            for (i, &v) in serial[rank].iter().enumerate() {
+                assert_eq!(v, (i as f32 + 1.0) * 1.5, "serial rank {rank} elem {i}");
+            }
+            assert_eq!(serial[rank], stream[rank], "rank {rank}");
+        }
+        assert_eq!(serial[0], serial[1]);
+    }
+
+    #[test]
+    fn multiple_rounds_reuse_buffers_and_count_rounds() {
+        let fabrics = build_fabric(2, &[TransportKind::P2p]);
+        let mut joins = Vec::new();
+        for (rank, fabric) in fabrics.into_iter().enumerate() {
+            joins.push(std::thread::spawn(move || {
+                let mut ex = GradExchanger::new(fabric, 12, 5, true);
+                for round in 0..3 {
+                    let grads = vec![(rank + round) as f32; 12];
+                    let _ = one_round(&mut ex, &grads, &[0, 6]);
+                }
+                ex.finish().unwrap()
+            }));
+        }
+        for j in joins {
+            let stats = j.join().unwrap();
+            assert_eq!(stats.rounds, 3);
+            assert_eq!(stats.bucket_rounds, 9);
+        }
+    }
+}

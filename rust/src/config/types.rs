@@ -56,6 +56,47 @@ impl TransportKind {
     }
 }
 
+/// How the exchange relates to backward compute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Legacy compute-then-exchange of *parameters* (post-update
+    /// averaging, the Fig-2 scheme).  The only mode valid at
+    /// `period > 1`.
+    Off,
+    /// Bucketed *gradient* exchange, streamed on a dedicated comm
+    /// thread concurrently with backward (Theano-MPI overlap).
+    Stream,
+    /// The same bucketed gradient exchange, executed inline after
+    /// backward — the measured compute-then-exchange baseline,
+    /// bit-identical to `Stream` by construction.
+    Serial,
+}
+
+impl OverlapMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(OverlapMode::Off),
+            "stream" | "on" => Ok(OverlapMode::Stream),
+            "serial" => Ok(OverlapMode::Serial),
+            _ => Err(Error::Config(format!("overlap mode {s:?} (want off|stream|serial)"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Off => "off",
+            OverlapMode::Stream => "stream",
+            OverlapMode::Serial => "serial",
+        }
+    }
+
+    /// Whether the gradient-exchange step protocol is active at all
+    /// (both variants compute the same update rule).
+    pub fn is_gradient_exchange(&self) -> bool {
+        !matches!(self, OverlapMode::Off)
+    }
+}
+
 /// Exchange-and-average settings (Fig 2).
 #[derive(Clone, Debug)]
 pub struct ExchangeCfg {
@@ -65,11 +106,23 @@ pub struct ExchangeCfg {
     pub period: usize,
     /// Whether momenta are exchanged along with weights (paper: yes).
     pub include_momentum: bool,
+    /// Comm/compute overlap of the exchange (requires `period = 1`).
+    pub overlap: OverlapMode,
+    /// Bucket size (elements) of the overlapped gradient exchange;
+    /// bucket boundaries derive only from this and the parameter
+    /// layout, never from timing.
+    pub bucket_elems: usize,
 }
 
 impl Default for ExchangeCfg {
     fn default() -> Self {
-        ExchangeCfg { transport: TransportKind::P2p, period: 1, include_momentum: true }
+        ExchangeCfg {
+            transport: TransportKind::P2p,
+            period: 1,
+            include_momentum: true,
+            overlap: OverlapMode::Off,
+            bucket_elems: 32_768,
+        }
     }
 }
 
@@ -309,6 +362,8 @@ impl TrainConfig {
                 transport: TransportKind::parse(&doc.str_or("exchange", "transport", "p2p"))?,
                 period: doc.i64_or("exchange", "period", 1).max(1) as usize,
                 include_momentum: doc.bool_or("exchange", "include_momentum", true),
+                overlap: OverlapMode::parse(&doc.str_or("exchange", "overlap", "off"))?,
+                bucket_elems: doc.i64_or("exchange", "bucket_elems", 32_768) as usize,
             },
             schedule: LrSchedule {
                 base_lr: doc.f64_or("training", "lr", 0.01) as f32,
@@ -350,6 +405,17 @@ impl TrainConfig {
         if self.exchange.period == 0 {
             return Err(Error::Config("exchange.period must be >= 1".into()));
         }
+        if self.exchange.overlap.is_gradient_exchange() && self.exchange.period != 1 {
+            return Err(Error::Config(
+                "--overlap requires --period 1: the overlapped exchange averages \
+                 per-step gradients, which only equals the synchronized-replica \
+                 update when every step exchanges"
+                    .into(),
+            ));
+        }
+        if self.exchange.bucket_elems == 0 {
+            return Err(Error::Config("exchange.bucket_elems must be >= 1".into()));
+        }
         if !(0.0..1.0).contains(&self.dropout) {
             return Err(Error::Config("training.dropout must be in [0, 1)".into()));
         }
@@ -385,7 +451,9 @@ impl TrainConfig {
     /// data/augmentation/init streams all key off it).  Stored in v2
     /// checkpoints and checked at restore.  Deliberately excludes knobs
     /// that provably do not change the math: transport, loader mode,
-    /// thread count.
+    /// thread count, and stream-vs-serial overlap (bit-identical by
+    /// construction) — but *not* overlap on/off, which switches the
+    /// update rule between param and gradient averaging.
     pub fn resume_fingerprint(&self) -> u64 {
         let mut h = 0xCBF2_9CE4_8422_2325u64;
         for v in [
@@ -395,6 +463,14 @@ impl TrainConfig {
             self.batch_per_worker as u64,
             self.dropout.to_bits() as u64,
             self.seed,
+            self.exchange.overlap.is_gradient_exchange() as u64,
+            // Bucket boundaries shape the ring's summation grouping, so
+            // they are resume-critical — but only when buckets exist.
+            if self.exchange.overlap.is_gradient_exchange() {
+                self.exchange.bucket_elems as u64
+            } else {
+                0
+            },
         ] {
             for b in v.to_le_bytes() {
                 h ^= b as u64;
@@ -537,6 +613,46 @@ switch_of_worker = [0, 1]
         c.loader_mode = LoaderMode::Serial;
         c.compute_threads = 7;
         assert_eq!(fp, c.resume_fingerprint());
+        // Gradient exchange vs param averaging changes the update rule;
+        // stream vs serial does not (bit-identical by construction).
+        let mut c = base.clone();
+        c.exchange.overlap = OverlapMode::Stream;
+        let fp_stream = c.resume_fingerprint();
+        assert_ne!(fp, fp_stream);
+        c.exchange.overlap = OverlapMode::Serial;
+        assert_eq!(fp_stream, c.resume_fingerprint());
+        // Bucket size shapes the summation grouping: resume-critical in
+        // overlap mode, irrelevant when overlap is off.
+        c.exchange.bucket_elems = 1024;
+        assert_ne!(fp_stream, c.resume_fingerprint());
+        let mut c = base.clone();
+        c.exchange.bucket_elems = 1024;
+        assert_eq!(fp, c.resume_fingerprint());
+    }
+
+    #[test]
+    fn overlap_parsed_and_validated() {
+        let doc = TomlDoc::parse("[exchange]\noverlap = \"stream\"\nbucket_elems = 4096").unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.exchange.overlap, OverlapMode::Stream);
+        assert_eq!(cfg.exchange.bucket_elems, 4096);
+        assert_eq!(TrainConfig::default().exchange.overlap, OverlapMode::Off);
+        assert_eq!(TrainConfig::default().exchange.bucket_elems, 32_768);
+        for (s, m) in [
+            ("off", OverlapMode::Off),
+            ("stream", OverlapMode::Stream),
+            ("on", OverlapMode::Stream),
+            ("serial", OverlapMode::Serial),
+        ] {
+            assert_eq!(OverlapMode::parse(s).unwrap(), m);
+        }
+        assert!(OverlapMode::parse("sideways").is_err());
+        // Overlap at period > 1 is a config error: gradient averaging
+        // is only the synchronized update when every step exchanges.
+        let doc = TomlDoc::parse("[exchange]\noverlap = \"stream\"\nperiod = 2").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = TomlDoc::parse("[exchange]\nbucket_elems = 0").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
     }
 
     #[test]

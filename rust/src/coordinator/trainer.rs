@@ -338,7 +338,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     let mut csv = match &cfg.metrics_csv {
         Some(p) => Some(open_csv(
             p,
-            &["step", "worker", "loss", "correct1", "lr", "step_secs", "exchange_secs"],
+            &[
+                "step",
+                "worker",
+                "loss",
+                "correct1",
+                "lr",
+                "step_secs",
+                "exchange_secs",
+                "overlap_secs",
+                "exposed_secs",
+            ],
         )?),
         None => None,
     };
@@ -384,6 +394,8 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
                 format!("{:.6}", rec.lr),
                 format!("{:.6}", rec.step_seconds),
                 format!("{:.6}", rec.exchange_seconds),
+                format!("{:.6}", rec.overlap_seconds),
+                format!("{:.6}", rec.exposed_seconds),
             ])?;
         }
         if rec.worker == 0 {
@@ -448,18 +460,33 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         let mut c = CollectiveStats {
             rounds: outcomes[0].collective.rounds,
             bytes_per_round: outcomes[0].collective.bytes_per_round,
+            bucket_rounds: outcomes[0].collective.bucket_rounds,
             ..CollectiveStats::default()
         };
         for o in &outcomes {
             c.flatten_seconds += o.collective.flatten_seconds;
             c.transfer_seconds += o.collective.transfer_seconds;
             c.average_seconds += o.collective.average_seconds;
+            c.overlapped_seconds += o.collective.overlapped_seconds;
+            c.exposed_seconds += o.collective.exposed_seconds;
         }
         c.flatten_seconds /= workers as f64;
         c.transfer_seconds /= workers as f64;
         c.average_seconds /= workers as f64;
+        c.overlapped_seconds /= workers as f64;
+        c.exposed_seconds /= workers as f64;
         c
     };
+    if collective.bucket_rounds > 0 {
+        log::info!(
+            "exchange overlap: {:.3}s hidden behind backward, {:.3}s exposed \
+             ({} buckets over {} rounds)",
+            collective.overlapped_seconds,
+            collective.exposed_seconds,
+            collective.bucket_rounds,
+            collective.rounds
+        );
+    }
 
     // Final checkpoint: replica 0's state as a single shared v2 file
     // (post-exchange replicas agree at period 1; the per-worker

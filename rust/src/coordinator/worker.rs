@@ -21,8 +21,10 @@
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::Sender;
 
+use crate::backend::GradSink;
 use crate::comm::collective::{Collective, CollectiveStats};
-use crate::config::{LoaderMode, TrainConfig};
+use crate::comm::overlap::GradExchanger;
+use crate::config::{LoaderMode, OverlapMode, TrainConfig};
 use crate::coordinator::eval::EvalResult;
 use crate::data::loader::{BatchSource, LoaderCfg, LoaderStats, ParallelLoader, SerialLoader};
 use crate::data::sampler::EpochSampler;
@@ -44,6 +46,10 @@ pub struct StepRecord {
     pub lr: f32,
     pub step_seconds: f64,
     pub exchange_seconds: f64,
+    /// Comm seconds hidden behind backward this step (overlap mode).
+    pub overlap_seconds: f64,
+    /// Comm seconds the step waited for at the pre-update barrier.
+    pub exposed_seconds: f64,
 }
 
 /// Everything a worker streams to the trainer while running.
@@ -126,6 +132,32 @@ fn build_loader(
         LoaderMode::Parallel => Box::new(ParallelLoader::resumed(&lcfg, skip_batches)?),
         LoaderMode::Serial => Box::new(SerialLoader::resumed(&lcfg, skip_batches)?),
     })
+}
+
+/// Adapter from the backend's per-parameter gradient emissions to the
+/// exchanger's flat-layout watermark: `param` index → layout offset
+/// via the manifest prefix sums, completed buckets stream to the
+/// collective as backward runs.
+struct BucketSink<'a> {
+    exchanger: &'a mut GradExchanger,
+    /// `params.len() + 1` prefix offsets of the flat gradient layout.
+    offsets: &'a [usize],
+}
+
+impl GradSink for BucketSink<'_> {
+    fn grad_ready(&mut self, param: usize, grad: &[f32]) -> Result<()> {
+        let span = self
+            .offsets
+            .get(param + 1)
+            .map(|hi| hi - self.offsets[param]);
+        if span != Some(grad.len()) {
+            return Err(Error::Shape(format!(
+                "grad_ready: param {param} with {} values does not match the layout",
+                grad.len()
+            )));
+        }
+        self.exchanger.grad_ready(self.offsets[param], grad)
+    }
 }
 
 /// Hard compatibility checks for restoring `info` (parsed from `ckpt`)
@@ -232,7 +264,7 @@ fn restore_worker_state(
 /// The worker thread body: runs steps `start..cfg.steps` with a
 /// collective exchange every `cfg.exchange.period` steps.
 pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
-    let WorkerSpec { mut fabric, worker, cfg, reports, restore } = spec;
+    let WorkerSpec { fabric, worker, cfg, reports, restore } = spec;
     let workers = cfg.cluster.workers;
 
     // --- Setup (the paper's per-GPU Theano process initialization):
@@ -261,6 +293,41 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
 
     let mut loader = build_loader(&cfg, worker, model.image_hw, start_step)?;
 
+    // --- Exchange protocol selection.  Overlap (stream or serial)
+    // --- switches period-1 synchronization from post-step parameter
+    // --- averaging to bucketed *gradient* averaging before the update;
+    // --- backends without the staged step fall back with a warning
+    // --- (the XLA path's AOT executable fuses the whole step). ---
+    let world = fabric.world_size();
+    let mut use_staged = cfg.exchange.overlap.is_gradient_exchange() && world > 1;
+    if use_staged && !backend.supports_staged_step() {
+        log::warn!(
+            "worker {worker}: backend {:?} does not implement the staged step \
+             protocol; --overlap falls back to compute-then-exchange parameter \
+             averaging",
+            backend.name()
+        );
+        use_staged = false;
+    }
+    // Flat-layout prefix offsets of the parameter manifest — bucket
+    // boundaries and gradient scatter both address through this table.
+    let mut offsets = Vec::with_capacity(model.params.len() + 1);
+    offsets.push(0usize);
+    for p in &model.params {
+        offsets.push(offsets.last().unwrap() + p.shape.numel());
+    }
+    let (mut fabric, mut exchanger) = if use_staged {
+        let ex = GradExchanger::new(
+            fabric,
+            store.total_elements(),
+            cfg.exchange.bucket_elems,
+            cfg.exchange.overlap == OverlapMode::Stream,
+        );
+        (None, Some(ex))
+    } else {
+        (Some(fabric), None)
+    };
+
     let fingerprint = cfg.resume_fingerprint();
     let include_momentum = cfg.exchange.include_momentum;
     let mut compute_seconds = 0.0;
@@ -281,25 +348,64 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         let lr = cfg.schedule.lr_at(step);
         let seed = step_seed(cfg.seed, step as u64, worker as u64);
 
-        let t_compute = Timer::start();
-        let out = backend.train_step(&batch.images, &batch.labels, lr, seed, &mut store)?;
-        compute_seconds += t_compute.elapsed_secs();
+        let mut dt_exchange = 0.0;
+        let mut dt_overlap = 0.0;
+        let mut dt_exposed = 0.0;
+        let out = match exchanger.as_mut() {
+            // --- Staged protocol: backward streams gradient buckets
+            // --- into the collective; the join barrier then hands the
+            // --- group-averaged gradients to the SGD update, so every
+            // --- replica applies the identical synchronized step. ---
+            Some(ex) => {
+                let before = ex.stats();
+                let t_compute = Timer::start();
+                let out = {
+                    let mut sink = BucketSink { exchanger: ex, offsets: &offsets };
+                    backend.forward_backward(
+                        &batch.images,
+                        &batch.labels,
+                        seed,
+                        &store,
+                        &mut sink,
+                    )?
+                };
+                compute_seconds += t_compute.elapsed_secs();
+                let t_ex = Timer::start();
+                let flat = ex.join()?;
+                dt_exchange = t_ex.elapsed_secs();
+                exchange_seconds += dt_exchange;
+                let t_upd = Timer::start();
+                backend.apply_update(&mut store, lr, flat)?;
+                compute_seconds += t_upd.elapsed_secs();
+                let after = ex.stats();
+                dt_overlap = after.overlapped_seconds - before.overlapped_seconds;
+                dt_exposed = after.exposed_seconds - before.exposed_seconds;
+                out
+            }
+            None => {
+                let t_compute = Timer::start();
+                let out =
+                    backend.train_step(&batch.images, &batch.labels, lr, seed, &mut store)?;
+                compute_seconds += t_compute.elapsed_secs();
+
+                // --- Collective exchange at the configured period
+                // --- (Fig 2 for N = 2, ring all-reduce beyond) ---
+                let fabric = fabric.as_mut().expect("non-staged worker keeps its fabric");
+                if fabric.world_size() > 1 && (step + 1) % cfg.exchange.period == 0 {
+                    let t_ex = Timer::start();
+                    fabric.all_reduce_average(&mut store, include_momentum)?;
+                    dt_exchange = t_ex.elapsed_secs();
+                    exchange_seconds += dt_exchange;
+                }
+                out
+            }
+        };
 
         if !out.loss.is_finite() {
             return Err(Error::msg(format!(
                 "worker {worker}: non-finite loss {} at step {step} (lr too high?)",
                 out.loss
             )));
-        }
-
-        // --- Collective exchange at the configured period (Fig 2 for
-        // --- N = 2, ring all-reduce beyond) ---
-        let mut dt_exchange = 0.0;
-        if fabric.world_size() > 1 && (step + 1) % cfg.exchange.period == 0 {
-            let t_ex = Timer::start();
-            fabric.all_reduce_average(&mut store, include_momentum)?;
-            dt_exchange = t_ex.elapsed_secs();
-            exchange_seconds += dt_exchange;
         }
 
         let _ = reports.send(WorkerMsg::Step(StepRecord {
@@ -311,6 +417,8 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
             lr,
             step_seconds: step_timer.elapsed_secs(),
             exchange_seconds: dt_exchange,
+            overlap_seconds: dt_overlap,
+            exposed_seconds: dt_exposed,
         }));
 
         let done = step + 1;
@@ -386,12 +494,16 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
         }
     }
 
+    let collective = match exchanger {
+        Some(ex) => ex.finish()?,
+        None => fabric.as_ref().expect("non-staged worker keeps its fabric").stats(),
+    };
     Ok(WorkerOutcome {
         worker,
         steps: cfg.steps.saturating_sub(start_step),
         store,
         loader: loader.stats(),
-        collective: fabric.stats(),
+        collective,
         exchange_seconds,
         compute_seconds,
     })

@@ -496,6 +496,108 @@ fn validation_counts_every_example() {
     assert_eq!(s.eval.expect("eval must run even when val < batch").examples, 64);
 }
 
+/// Tentpole invariant: streaming the bucketed gradient exchange from
+/// inside backward must not change a single bit relative to the same
+/// exchange run compute-then-exchange (`--overlap serial`), for any
+/// worker count or intra-op thread count.  Gradient averaging at
+/// period 1 also keeps the replicas bit-synchronized, so the strict
+/// full-state divergence is exactly zero.
+#[test]
+fn overlap_stream_matches_serial_bitwise() {
+    use theano_mgpu::config::OverlapMode;
+    for workers in [2usize, 3] {
+        let tag = format!("ovl{workers}");
+        let mut reference: Option<(Vec<f32>, ParamStore)> = None;
+        for (mode, threads) in [
+            (OverlapMode::Serial, 1),
+            (OverlapMode::Serial, 2),
+            (OverlapMode::Stream, 1),
+            (OverlapMode::Stream, 2),
+        ] {
+            let dir = ckpt_dir(&format!("ovl{workers}_{}_{threads}", mode.name()));
+            let mut cfg = micro_cfg(&tag, 4, workers);
+            cfg.exchange.overlap = mode;
+            // Small buckets: several buckets per layer boundary, so the
+            // watermark/push machinery is actually exercised.
+            cfg.exchange.bucket_elems = 4096;
+            cfg.compute_threads = threads;
+            cfg.checkpoint_dir = Some(dir.clone());
+            let s = train(&cfg).unwrap();
+            assert_eq!(s.exchange_rounds, 4);
+            assert!(s.collective.bucket_rounds > 0, "bucketed path must be active");
+            assert_eq!(
+                s.final_divergence.expect("replicas report divergence"),
+                0.0,
+                "gradient averaging must keep replicas bit-identical"
+            );
+            let store = load_final(&cfg, &dir);
+            match &reference {
+                None => reference = Some((s.losses, store)),
+                Some((losses, want)) => {
+                    assert_eq!(&s.losses, losses, "{mode:?} x{threads}t changed the losses");
+                    assert_eq!(
+                        want.max_divergence(&store),
+                        0.0,
+                        "{mode:?} x{threads}t changed the final state"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Streamed overlap reports where the comm time went: the bucket
+/// counters and the overlapped/exposed split flow through the summary.
+#[test]
+fn overlap_stats_flow_into_the_summary() {
+    use theano_mgpu::config::OverlapMode;
+    let mut cfg = micro_cfg("ovlstats", 3, 2);
+    cfg.exchange.overlap = OverlapMode::Stream;
+    cfg.exchange.bucket_elems = 4096;
+    let model = theano_mgpu::backend::resolve_model(&cfg).unwrap();
+    let total: usize = model.params.iter().map(|p| p.shape.numel()).sum();
+    let buckets = total.div_ceil(4096) as u64;
+    assert!(buckets > 1, "test wants a multi-bucket layout, got {buckets}");
+    let s = train(&cfg).unwrap();
+    assert_eq!(s.collective.bucket_rounds, buckets * 3, "one bucket set per step");
+    let comm = s.collective.overlapped_seconds + s.collective.exposed_seconds;
+    assert!(comm > 0.0, "the bucket reductions must be timed");
+}
+
+/// `--resume auto` of an overlapped run must splice bit-exactly, like
+/// the non-overlapped lifecycle tests above (the resume fingerprint
+/// pins the exchange scheme and the bucket layout).
+#[test]
+fn overlap_resume_is_bit_exact() {
+    use theano_mgpu::config::OverlapMode;
+    let tag = "ovlresume";
+    let overlap_cfg = |steps: usize, dir: &PathBuf| {
+        let mut cfg = micro_cfg(tag, steps, 2);
+        cfg.exchange.overlap = OverlapMode::Stream;
+        cfg.exchange.bucket_elems = 4096;
+        cfg.checkpoint_dir = Some(dir.clone());
+        cfg
+    };
+    let straight_dir = ckpt_dir("ovlstraight");
+    let straight = overlap_cfg(8, &straight_dir);
+    let straight_losses = train(&straight).unwrap().losses;
+
+    let part_dir = ckpt_dir("ovlpart");
+    let mut part = overlap_cfg(4, &part_dir);
+    part.checkpoint_every = 2; // per-worker snapshot sets at steps 2, 4
+    train(&part).unwrap();
+
+    let mut resumed = overlap_cfg(8, &part_dir);
+    resumed.resume = Some(ResumeFrom::Auto);
+    let s = train(&resumed).unwrap();
+    assert_eq!(s.resumed_from, Some(4));
+    assert_eq!(s.losses, &straight_losses[4..], "post-resume steps must replay bit-exactly");
+
+    let a = load_final(&straight, &straight_dir);
+    let b = load_final(&resumed, &part_dir);
+    assert_eq!(a.max_divergence(&b), 0.0, "overlapped resume must be bit-exact");
+}
+
 #[test]
 fn xla_backend_without_artifacts_falls_back_and_trains() {
     // The pre-refactor dead end: an artifact backend tag with no

@@ -3,7 +3,9 @@
 
 use std::path::PathBuf;
 
-use theano_mgpu::config::{ClusterConfig, DataConfig, TrainConfig};
+use theano_mgpu::comm::collective::build_fabric;
+use theano_mgpu::comm::GradExchanger;
+use theano_mgpu::config::{ClusterConfig, DataConfig, TrainConfig, TransportKind};
 use theano_mgpu::coordinator::trainer::train;
 use theano_mgpu::data::loader::{BatchSource, LoaderCfg, ParallelLoader};
 use theano_mgpu::data::shard::ShardedDataset;
@@ -142,6 +144,51 @@ fn loader_drop_mid_stream_does_not_hang() {
     let _ = loader.next_batch().unwrap();
     // Drop while the producer is mid-prefetch; Drop impl must join.
     drop(loader);
+}
+
+#[test]
+fn mismatched_bucket_layout_is_a_protocol_error_not_a_hang() {
+    // Ranks disagreeing on bucket_elems (config drift) must surface as
+    // a per-bucket protocol error at the join barrier, never a
+    // deadlock.  Total 20: both layouts share the final bucket
+    // [16, 20), so the first reduction succeeds; the next round trips
+    // an 8-element bucket against a 16-element one and the exact
+    // shape/sequence check fires on both sides.
+    let fabrics = build_fabric(2, &[TransportKind::HostStaged]);
+    let joins: Vec<_> = fabrics
+        .into_iter()
+        .enumerate()
+        .map(|(rank, fabric)| {
+            std::thread::spawn(move || {
+                let bucket_elems = if rank == 0 { 8 } else { 16 };
+                let mut ex = GradExchanger::new(fabric, 20, bucket_elems, false);
+                ex.grad_ready(0, &[1.0; 20]).unwrap();
+                ex.join().map(|g| g.to_vec())
+            })
+        })
+        .collect();
+    for j in joins {
+        let res = j.join().unwrap();
+        assert!(matches!(res, Err(Error::Protocol(_))), "want protocol error, got {res:?}");
+    }
+}
+
+#[test]
+fn dead_peer_mid_bucket_round_is_an_error_not_a_hang() {
+    // One rank's fabric hangs up before exchanging anything; the
+    // survivor's join barrier must report the broken link instead of
+    // blocking forever on a bucket that will never arrive.
+    let mut fabrics = build_fabric(2, &[TransportKind::HostStaged]);
+    let survivor = fabrics.remove(0);
+    let dead = fabrics.remove(0);
+    let t = std::thread::spawn(move || {
+        let mut ex = GradExchanger::new(survivor, 12, 4, false);
+        ex.grad_ready(0, &[1.0; 12]).unwrap();
+        ex.join().map(|g| g.to_vec())
+    });
+    drop(dead); // the peer endpoint hangs up
+    let res = t.join().unwrap();
+    assert!(matches!(res, Err(Error::Protocol(_))), "want protocol error, got {res:?}");
 }
 
 #[test]

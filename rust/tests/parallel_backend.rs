@@ -24,7 +24,10 @@ use theano_mgpu::backend::native::layers::{
     PoolShape,
 };
 use theano_mgpu::backend::native::pool::{shape_chunks, ComputePool, ELEMWISE_CHUNK, MAX_CHUNKS};
-use theano_mgpu::backend::{NativeBackend, StepBackend};
+use theano_mgpu::backend::{GradSink, NativeBackend, StepBackend};
+use theano_mgpu::comm::collective::build_fabric;
+use theano_mgpu::comm::GradExchanger;
+use theano_mgpu::config::TransportKind;
 use theano_mgpu::params::ParamStore;
 use theano_mgpu::sim::flops::alexnet_micro;
 use theano_mgpu::tensor::{HostTensor, Shape};
@@ -393,5 +396,126 @@ fn train_step_is_bitwise_identical_across_thread_counts() {
             0.0,
             "params/momenta diverged at {threads} threads"
         );
+    }
+}
+
+/// Collects staged gradients into one flat buffer (the single-replica
+/// stand-in for the bucketed exchange).
+struct FlatSink {
+    flat: Vec<f32>,
+    offsets: Vec<usize>,
+}
+
+impl GradSink for FlatSink {
+    fn grad_ready(&mut self, param: usize, grad: &[f32]) -> theano_mgpu::error::Result<()> {
+        let lo = self.offsets[param];
+        self.flat[lo..lo + grad.len()].copy_from_slice(grad);
+        Ok(())
+    }
+}
+
+/// The staged protocol (`forward_backward` emitting gradients into a
+/// sink, then `apply_update` from the flat buffer) must be bit-identical
+/// to the fused `train_step` — at every lane count.  This is what makes
+/// the overlapped exchange's math auditable: streaming only changes
+/// *when* buckets ship, never what gets applied.
+#[test]
+fn staged_step_is_bitwise_identical_to_fused_across_thread_counts() {
+    let arch = alexnet_micro();
+    let mut rng = Pcg32::seeded(17);
+    let batch = 6;
+    let images = HostTensor::rand_normal(Shape::of(&[batch, 3, 32, 32]), &mut rng, 1.0);
+    let labels: Vec<i32> =
+        (0..batch).map(|_| rng.below(arch.num_classes as u32) as i32).collect();
+
+    let fused = |threads: usize| {
+        let mut backend = NativeBackend::with_threads(&arch, 0.5, threads);
+        let mut store = ParamStore::init(&backend.model().params, 11);
+        let mut losses = Vec::new();
+        for step in 0..3 {
+            let out = backend.train_step(&images, &labels, 0.02, 100 + step, &mut store).unwrap();
+            losses.push(out.loss);
+        }
+        (losses, store)
+    };
+    let staged = |threads: usize| {
+        let mut backend = NativeBackend::with_threads(&arch, 0.5, threads);
+        assert!(backend.supports_staged_step());
+        let mut offsets = vec![0usize];
+        for p in &backend.model().params {
+            offsets.push(offsets.last().unwrap() + p.shape.numel());
+        }
+        let total = *offsets.last().unwrap();
+        let mut store = ParamStore::init(&backend.model().params, 11);
+        let mut losses = Vec::new();
+        for step in 0..3 {
+            let mut sink = FlatSink { flat: vec![0.0; total], offsets: offsets.clone() };
+            let out = backend
+                .forward_backward(&images, &labels, 100 + step, &store, &mut sink)
+                .unwrap();
+            backend.apply_update(&mut store, 0.02, &sink.flat).unwrap();
+            losses.push(out.loss);
+        }
+        (losses, store)
+    };
+
+    let (want_losses, want_store) = fused(1);
+    for threads in LANE_COUNTS {
+        let (losses, store) = staged(threads);
+        assert_eq!(want_losses, losses, "staged losses diverged at {threads} threads");
+        assert_eq!(
+            want_store.max_divergence(&store),
+            0.0,
+            "staged params/momenta diverged at {threads} threads"
+        );
+    }
+}
+
+/// Bucket-boundary edge shapes over a real 2-rank fabric: a bucket
+/// exactly the layout size, one past it, one exactly a tensor, and one
+/// spanning a tensor boundary — streamed and serial — all reduce to the
+/// same exact mean in the same bit pattern.
+#[test]
+fn bucket_layout_edges_reduce_bitwise_identically() {
+    // Layout: three tensors of 12, 20, and 5 elements (37 total),
+    // emitted last-tensor-first like a real backward pass.
+    let cuts = [0usize, 12, 32, 37];
+    let total = 37;
+    for bucket_elems in [37usize, 38, 12, 16] {
+        for stream in [false, true] {
+            let fabrics = build_fabric(2, &[TransportKind::HostStaged; 2]);
+            let joins: Vec<_> = fabrics
+                .into_iter()
+                .enumerate()
+                .map(|(rank, fabric)| {
+                    std::thread::spawn(move || {
+                        let mut ex = GradExchanger::new(fabric, total, bucket_elems, stream);
+                        let scale = if rank == 0 { 1.0 } else { 3.0 };
+                        let grads: Vec<f32> =
+                            (0..total).map(|i| (i as f32 + 1.0) * scale).collect();
+                        for t in (0..3).rev() {
+                            ex.grad_ready(cuts[t], &grads[cuts[t]..cuts[t + 1]]).unwrap();
+                        }
+                        let out = ex.join().unwrap().to_vec();
+                        let stats = ex.finish().unwrap();
+                        assert_eq!(stats.rounds, 1);
+                        assert_eq!(stats.bucket_rounds, total.div_ceil(bucket_elems) as u64);
+                        out
+                    })
+                })
+                .collect();
+            let outs: Vec<Vec<f32>> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+            // (v + 3v) / 2 = 2v, exact in f32 for these integer values.
+            for out in &outs {
+                for (i, &v) in out.iter().enumerate() {
+                    assert_eq!(
+                        v,
+                        2.0 * (i as f32 + 1.0),
+                        "bucket {bucket_elems} stream {stream} elem {i}"
+                    );
+                }
+            }
+            assert_eq!(outs[0], outs[1], "ranks must agree bitwise");
+        }
     }
 }
