@@ -8,20 +8,27 @@
 // decision honest (the scalar kernels skip zero multipliers, the packed
 // kernels deliberately do not; see gemm.rs).
 //
+// The packed kernels run the dispatched SIMD microkernel (AVX2/NEON,
+// logged in the JSON header as "isa"); every case is additionally timed
+// through the portable fallback kernel in the same run, so the
+// `simd_vs_autovec` ratio isolates what the explicit intrinsics buy
+// over whatever the auto-vectorizer produced.
+//
 // Emits `target/bench_results/BENCH_gemm.json`: GFLOP/s per case per
-// configuration, with packed-vs-scalar ratios.  CI runs this alongside
-// the native-step bench and uploads both, so the before/after of the
-// packed rewrite (and the zero-skip measurement) is recorded on every
-// push.
+// configuration, with packed-vs-scalar and simd-vs-autovec ratios.  CI
+// runs this alongside the native-step bench and uploads both, so the
+// before/after of the packed rewrite (and the zero-skip measurement,
+// re-examined per-ISA) is recorded on every push.
 
 include!("harness.rs");
 
 use theano_mgpu::backend::native::gemm::{
-    matmul_nn_ws, matmul_nt_ws, matmul_tn_ws, par_matmul_nn, par_matmul_nt, par_matmul_tn, scalar,
-    PackBuf,
+    matmul_nn_ws, matmul_nn_ws_with, matmul_nt_ws, matmul_nt_ws_with, matmul_tn_ws,
+    matmul_tn_ws_with, par_matmul_nn, par_matmul_nt, par_matmul_tn, scalar, PackBuf,
 };
 use theano_mgpu::backend::native::model::{NetPlan, PlanOp};
 use theano_mgpu::backend::native::pool::ComputePool;
+use theano_mgpu::backend::native::simd::{active_isa, Isa, MicroKernel};
 use theano_mgpu::sim::flops::alexnet;
 use theano_mgpu::util::Pcg32;
 
@@ -125,8 +132,14 @@ fn rand_vec(rng: &mut Pcg32, n: usize, zeros: f32) -> Vec<f32> {
 
 struct Measured {
     scalar_t1: f64,
+    /// Portable-fallback-kernel throughput at 1 thread (the autovec
+    /// baseline the explicit SIMD kernel is measured against).
+    autovec_t1: f64,
     packed: Vec<(usize, f64)>, // (threads, gflops)
     ratio: f64,
+    /// `packed t1 / autovec t1` — what the intrinsics buy.  Exactly 1.0
+    /// when the dispatched ISA *is* the portable kernel.
+    simd_ratio: f64,
 }
 
 fn gflops(case: &Case, med: f64) -> f64 {
@@ -167,6 +180,24 @@ fn run_case(b: &mut Bench, case: &Case, pools: &[(usize, ComputePool)]) -> Measu
         }
     });
     packed.push((1, gflops(case, med)));
+
+    // Same packed pipeline through the portable fallback kernel — the
+    // autovec baseline.  When the dispatched ISA already *is* the
+    // portable kernel there is nothing to compare: reuse the packed t1
+    // time so the ratio is exactly 1.0 instead of timing noise.
+    let autovec_t1 = if active_isa() == Isa::Scalar {
+        packed[0].1
+    } else {
+        let fallback = MicroKernel::for_isa(Isa::Scalar);
+        let med = b.case(&format!("{} {shape} autovec t1", case.name), 1, 3, || {
+            match case.layout {
+                Layout::Nn => matmul_nn_ws_with(fallback, m, k, n, &a, &bmat, &mut c, &mut ws),
+                Layout::Nt => matmul_nt_ws_with(fallback, m, k, n, &a, &bmat, &mut c, &mut ws),
+                Layout::Tn => matmul_tn_ws_with(fallback, m, k, n, &a, &bmat, &mut c, &mut ws),
+            }
+        });
+        gflops(case, med)
+    };
     for (threads, pool) in pools {
         let med = b.case(&format!("{} {shape} packed t{threads}", case.name), 1, 3, || {
             match case.layout {
@@ -182,7 +213,9 @@ fn run_case(b: &mut Bench, case: &Case, pools: &[(usize, ComputePool)]) -> Measu
     }
     let ratio = packed[0].1 / scalar_t1;
     b.record(&format!("{} packed/scalar at t1", case.name), ratio, "x");
-    Measured { scalar_t1, packed, ratio }
+    let simd_ratio = packed[0].1 / autovec_t1;
+    b.record(&format!("{} simd/autovec at t1", case.name), simd_ratio, "x");
+    Measured { scalar_t1, autovec_t1, packed, ratio, simd_ratio }
 }
 
 fn case_json(case: &Case, r: &Measured) -> String {
@@ -196,15 +229,18 @@ fn case_json(case: &Case, r: &Measured) -> String {
     format!(
         "{{\"name\": \"{}\", \"layout\": \"{layout}\", \"m\": {}, \"k\": {}, \"n\": {}, \
          \"a_zero_fraction\": {:.2}, \"gflops_scalar_t1\": {:.3}, \
-         \"gflops_packed\": {{{}}}, \"packed_vs_scalar_t1\": {:.3}}}",
+         \"gflops_autovec_t1\": {:.3}, \"gflops_packed\": {{{}}}, \
+         \"packed_vs_scalar_t1\": {:.3}, \"simd_vs_autovec\": {:.3}}}",
         case.name,
         case.m,
         case.k,
         case.n,
         case.a_zeros,
         r.scalar_t1,
+        r.autovec_t1,
         packed.join(", "),
-        r.ratio
+        r.ratio,
+        r.simd_ratio
     )
 }
 
@@ -235,9 +271,10 @@ fn main() {
     let path = dir.join("BENCH_gemm.json");
     let json = format!(
         "{{\"bench\": \"gemm_kernels\", \"model\": \"alexnet\", \"fc_batch\": {BATCH}, \
-         \"threads\": [1, 2, 4], \"available_cores\": {}, \
+         \"isa\": \"{}\", \"threads\": [1, 2, 4], \"available_cores\": {}, \
          \"fc1_packed_vs_scalar_t1\": {fc1_ratio:.3}, \
          \"cases\": [{}], \"sparse_cases\": [{}]}}\n",
+        active_isa(),
         theano_mgpu::util::available_cores(),
         rows.join(", "),
         sparse_rows.join(", ")

@@ -92,9 +92,10 @@ fn main() {
     let path = dir.join("BENCH_native_step.json");
     let json = format!(
         "{{\"bench\": \"native_step\", \"model\": \"{}\", \"batch\": {micro_batch}, \
-         \"median_step_seconds\": {base:.6}, \"steps_per_sec\": {:.3}, \
+         \"gemm_isa\": \"{}\", \"median_step_seconds\": {base:.6}, \"steps_per_sec\": {:.3}, \
          \"images_per_sec\": {:.3}, \"available_cores\": {}, \"sweep\": [{}]}}\n",
         micro.name,
+        theano_mgpu::backend::native::simd::active_isa(),
         1.0 / base,
         micro_batch as f64 / base,
         theano_mgpu::util::available_cores(),

@@ -9,9 +9,12 @@
 //! - `tn`: `C += Aᵀ · B`           (FC dW, conv dCol)
 //!
 //! All three run through **one microkernel**: an `MR×NR` register tile
-//! with fully unrolled, independent accumulators (FMA/auto-vectorizer
-//! friendly — no loop-carried dependence per lane), fed by packed
-//! operand panels.  The `nn`/`nt`/`tn` variants differ *only* in the
+//! with fully unrolled, independent accumulators, fed by packed operand
+//! panels.  The kernel itself is an explicit SIMD routine picked once
+//! per process from the [`MicroKernel`] dispatch table (AVX2+FMA, NEON,
+//! or the portable safe-Rust loop — see
+//! [`active_isa`](crate::backend::native::simd::active_isa) and the
+//! `TMG_GEMM_ISA` override).  The `nn`/`nt`/`tn` variants differ *only* in the
 //! [`pack_a_strip`]/[`pack_b_strip`] routines, which stage A row-panels
 //! and B column-panels into the contiguous [`PackBuf`] workspace in
 //! k-major micro-panel order (transposition is free at packing time).
@@ -35,18 +38,24 @@
 //! `par_matmul_*` forms therefore produce **bit-identical** results to
 //! the `matmul_*_ws` serial forms for any `--threads` value (the
 //! `assert_eq` contract `tests/parallel_backend.rs` pins), and every
-//! shape is reproducible run-to-run.  The summation order legitimately
-//! differs from the pre-packing scalar kernels (kept in [`scalar`] for
-//! benchmarking and reference), so cross-kernel comparisons are
-//! rounding-tolerant, never bitwise.
+//! shape is reproducible run-to-run.  The contract is **per-ISA**: the
+//! kernel choice is uniform across lanes for a run, but FMA kernels
+//! legitimately round differently from the portable fallback, and the
+//! summation order differs from the pre-packing scalar kernels (kept in
+//! [`scalar`] for benchmarking and reference) — so cross-kernel and
+//! cross-ISA comparisons are rounding-tolerant, never bitwise.
 //!
 //! The ReLU-sparsity zero-skip the scalar kernels carried is
 //! deliberately **dropped** here: a per-multiplier branch inside the
 //! microkernel defeats vectorization and register blocking, which is
-//! worth far more than the skipped multiplies (`benches/gemm_kernels.rs`
-//! measures both on a 50%-sparse operand to keep the decision honest).
+//! worth far more than the skipped multiplies.  Re-examined for the
+//! explicit SIMD kernels: `benches/gemm_kernels.rs` still measures the
+//! skip-carrying scalar kernels against the dispatched kernel on two
+//! 50%-sparse operands (`fc1-dx-sparse50`, `fc1-dw-sparse50`) to keep
+//! the decision honest per-ISA.
 
 use crate::backend::native::pool::{ComputePool, SendPtr};
+use crate::backend::native::simd::MicroKernel;
 use crate::util::math::{ceil_div, ceil_to};
 
 /// Microkernel rows: A micro-panel width.
@@ -77,29 +86,56 @@ enum Layout {
     Tn,
 }
 
+/// One cache line of `f32`s — the allocation granule that gives
+/// [`PackBuf`] its 64-byte base alignment.
+#[derive(Clone, Copy, Debug)]
+#[repr(C, align(64))]
+struct CacheLine([f32; 16]);
+
+/// A 64-byte-aligned, grow-only `f32` arena.  Backing the storage with
+/// `Vec<CacheLine>` makes the allocator honor the alignment in safe
+/// code, which is what lets the AVX2 microkernel use *aligned* vector
+/// loads on the packed B panels: every `NR`-strip offset is a multiple
+/// of `NR·kc` floats and every panel row advances by `NR = 8` floats
+/// (32 bytes), so a 64-byte base keeps every row load-aligned.
+#[derive(Debug, Default)]
+struct AlignedBuf(Vec<CacheLine>);
+
+impl AlignedBuf {
+    const LINE: usize = 16;
+
+    /// Grow to hold at least `n` floats; never shrinks.
+    fn ensure(&mut self, n: usize) {
+        let lines = ceil_div(n, Self::LINE);
+        if self.0.len() < lines {
+            self.0.resize(lines, CacheLine([0.0; 16]));
+        }
+        debug_assert_eq!(self.0.as_ptr() as usize % 64, 0, "pack arena lost 64-byte alignment");
+    }
+
+    fn as_mut_ptr(&mut self) -> *mut f32 {
+        self.0.as_mut_ptr() as *mut f32
+    }
+}
+
 /// Workspace holding the packed A row-panel (`≤ MC×KC`) and B
-/// column-panel (`≤ NC×KC`, rounded up to whole `NR` strips).  Grown on
-/// first use, then reused forever — zero steady-state allocations.  The
-/// serial kernels need one per calling lane (conv keeps one per pool
-/// lane in `ConvScratch`); the `par_matmul_*` forms share one, packed
-/// cooperatively by the pool.
+/// column-panel (`≤ NC×KC`, rounded up to whole `NR` strips), both in
+/// 64-byte-aligned arenas (see [`AlignedBuf`]).  Grown on first use,
+/// then reused forever — zero steady-state allocations.  The serial
+/// kernels need one per calling lane (conv keeps one per pool lane in
+/// `ConvScratch`, which inherits the alignment for free); the
+/// `par_matmul_*` forms share one, packed cooperatively by the pool.
 #[derive(Debug, Default)]
 pub struct PackBuf {
-    apack: Vec<f32>,
-    bpack: Vec<f32>,
+    apack: AlignedBuf,
+    bpack: AlignedBuf,
 }
 
 impl PackBuf {
     fn ensure(&mut self, m: usize, k: usize, n: usize) {
         let kc = k.min(KC);
-        let a_need = ceil_to(m.min(MC), MR) * kc;
-        let b_need = ceil_to(n.min(NC), NR) * kc;
-        if self.apack.len() < a_need {
-            self.apack.resize(a_need, 0.0);
-        }
-        if self.bpack.len() < b_need {
-            self.bpack.resize(b_need, 0.0);
-        }
+        self.apack.ensure(ceil_to(m.min(MC), MR) * kc);
+        self.bpack.ensure(ceil_to(n.min(NC), NR) * kc);
     }
 }
 
@@ -182,26 +218,6 @@ fn pack_b_strip(
     }
 }
 
-/// The one microkernel: `acc[MR][NR] = Σ_p ap[p]·bp[p]ᵀ` over a packed
-/// `kc`-deep micro-panel pair.  `MR×NR` independent accumulators, inner
-/// loops unrolled by the compiler (constant bounds), no branches.
-#[inline(always)]
-fn microkernel(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
-    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
-    let mut acc = [[0.0f32; NR]; MR];
-    for p in 0..kc {
-        let av = &ap[p * MR..p * MR + MR];
-        let bv = &bp[p * NR..p * NR + NR];
-        for r in 0..MR {
-            let a = av[r];
-            for j in 0..NR {
-                acc[r][j] += a * bv[j];
-            }
-        }
-    }
-    acc
-}
-
 /// Serial-or-pool dispatch.  Both arms run the identical unit bodies —
 /// units are disjoint and independent, so the schedule can never change
 /// a bit of the output.
@@ -236,20 +252,21 @@ impl Exec<'_> {
     }
 }
 
-/// The blocked driver shared by all six public entry points.
+/// The blocked driver shared by all the public entry points.
 ///
 /// Per (`jc`, `pc`) block: phase 1 packs the B panel (one unit per
 /// `JGRP`-strip column group); per `ic` block, phase 2 packs the A
 /// panel inline (too little work to be worth a dispatch) and phase 3
-/// runs the macrokernel over the (row strip × column group) grid.
-/// Dispatched phases are separated by the pool's completion barrier,
-/// units within a phase write disjoint regions, and all boundaries are
-/// shape-derived — see the module docs for why this makes serial and
-/// parallel bit-identical.
+/// runs `kern` — the dispatched [`MicroKernel`] — over the (row strip ×
+/// column group) grid.  Dispatched phases are separated by the pool's
+/// completion barrier, units within a phase write disjoint regions, and
+/// all boundaries are shape-derived — see the module docs for why this
+/// makes serial and parallel bit-identical (per fixed ISA).
 #[allow(clippy::too_many_arguments)]
 fn gemm_packed(
     layout: Layout,
     exec: Exec,
+    kern: MicroKernel,
     m: usize,
     k: usize,
     n: usize,
@@ -312,7 +329,7 @@ fn gemm_packed(
                         let bp = unsafe {
                             std::slice::from_raw_parts(bp_ptr.get().add(s * NR * kc), NR * kc)
                         };
-                        let acc = microkernel(kc, ap, bp);
+                        let acc = kern.run(kc, ap, bp);
                         let cols = NR.min(nc - s * NR);
                         let (r0, c0) = (ic + is * MR, jc + s * NR);
                         for r in 0..rows {
@@ -337,7 +354,25 @@ fn gemm_packed(
 
 /// `C[m×n] += A[m×k] · B[k×n]`, packed serial kernel with caller-owned
 /// pack workspace (the hot-path form; lane-local on the conv path).
+/// Runs the process-wide dispatched [`MicroKernel`].
 pub fn matmul_nn_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
+) {
+    matmul_nn_ws_with(MicroKernel::active(), m, k, n, a, b, c, ws);
+}
+
+/// [`matmul_nn_ws`] with an explicit [`MicroKernel`] — how tests and
+/// benches pin a specific ISA without touching the process-wide
+/// dispatch.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nn_ws_with(
+    kern: MicroKernel,
     m: usize,
     k: usize,
     n: usize,
@@ -348,12 +383,27 @@ pub fn matmul_nn_ws(
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    gemm_packed(Layout::Nn, Exec::Serial, m, k, n, a, b, c, ws);
+    gemm_packed(Layout::Nn, Exec::Serial, kern, m, k, n, a, b, c, ws);
 }
 
 /// `C[m×n] += A[m×k] · B[n×k]ᵀ`, packed serial kernel with caller-owned
-/// pack workspace.
+/// pack workspace.  Runs the process-wide dispatched [`MicroKernel`].
 pub fn matmul_nt_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
+) {
+    matmul_nt_ws_with(MicroKernel::active(), m, k, n, a, b, c, ws);
+}
+
+/// [`matmul_nt_ws`] with an explicit [`MicroKernel`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt_ws_with(
+    kern: MicroKernel,
     m: usize,
     k: usize,
     n: usize,
@@ -364,12 +414,27 @@ pub fn matmul_nt_ws(
 ) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    gemm_packed(Layout::Nt, Exec::Serial, m, k, n, a, b, c, ws);
+    gemm_packed(Layout::Nt, Exec::Serial, kern, m, k, n, a, b, c, ws);
 }
 
 /// `C[m×n] += A[k×m]ᵀ · B[k×n]`, packed serial kernel with caller-owned
-/// pack workspace.
+/// pack workspace.  Runs the process-wide dispatched [`MicroKernel`].
 pub fn matmul_tn_ws(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    ws: &mut PackBuf,
+) {
+    matmul_tn_ws_with(MicroKernel::active(), m, k, n, a, b, c, ws);
+}
+
+/// [`matmul_tn_ws`] with an explicit [`MicroKernel`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn_ws_with(
+    kern: MicroKernel,
     m: usize,
     k: usize,
     n: usize,
@@ -380,27 +445,33 @@ pub fn matmul_tn_ws(
 ) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
-    gemm_packed(Layout::Tn, Exec::Serial, m, k, n, a, b, c, ws);
+    gemm_packed(Layout::Tn, Exec::Serial, kern, m, k, n, a, b, c, ws);
 }
 
 /// [`matmul_nn_ws`] with a throwaway workspace — convenience for tests
-/// and reference paths; hot paths pass a reused [`PackBuf`].
+/// and reference paths; hot paths pass a reused [`PackBuf`].  These
+/// no-workspace wrappers are retained public API surface: gradchecks,
+/// tests, and benches call them directly (through the [`MicroKernel`]
+/// dispatch table like everything else) — don't fold them into the
+/// `_ws` forms.
 pub fn matmul_nn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     matmul_nn_ws(m, k, n, a, b, c, &mut PackBuf::default());
 }
 
-/// [`matmul_nt_ws`] with a throwaway workspace.
+/// [`matmul_nt_ws`] with a throwaway workspace; see [`matmul_nn`] for
+/// why these wrappers stay.
 pub fn matmul_nt(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     matmul_nt_ws(m, k, n, a, b, c, &mut PackBuf::default());
 }
 
-/// [`matmul_tn_ws`] with a throwaway workspace.
+/// [`matmul_tn_ws`] with a throwaway workspace; see [`matmul_nn`] for
+/// why these wrappers stay.
 pub fn matmul_tn(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     matmul_tn_ws(m, k, n, a, b, c, &mut PackBuf::default());
 }
 
-/// Tile-parallel [`matmul_nn_ws`]; bit-identical to the serial kernel
-/// for any lane count.
+/// Tile-parallel [`matmul_nn_ws`], running the pool's [`MicroKernel`];
+/// bit-identical to the serial form (same kernel) for any lane count.
 #[allow(clippy::too_many_arguments)]
 pub fn par_matmul_nn(
     pool: &ComputePool,
@@ -418,11 +489,11 @@ pub fn par_matmul_nn(
         // Empty products (ragged eval tails) dispatch nothing.
         return;
     }
-    gemm_packed(Layout::Nn, Exec::Pool(pool), m, k, n, a, b, c, ws);
+    gemm_packed(Layout::Nn, Exec::Pool(pool), pool.kernel(), m, k, n, a, b, c, ws);
 }
 
-/// Tile-parallel [`matmul_nt_ws`]; bit-identical to the serial kernel
-/// for any lane count.
+/// Tile-parallel [`matmul_nt_ws`], running the pool's [`MicroKernel`];
+/// bit-identical to the serial form (same kernel) for any lane count.
 #[allow(clippy::too_many_arguments)]
 pub fn par_matmul_nt(
     pool: &ComputePool,
@@ -439,11 +510,11 @@ pub fn par_matmul_nt(
     if m == 0 || n == 0 {
         return;
     }
-    gemm_packed(Layout::Nt, Exec::Pool(pool), m, k, n, a, b, c, ws);
+    gemm_packed(Layout::Nt, Exec::Pool(pool), pool.kernel(), m, k, n, a, b, c, ws);
 }
 
-/// Tile-parallel [`matmul_tn_ws`]; bit-identical to the serial kernel
-/// for any lane count.
+/// Tile-parallel [`matmul_tn_ws`], running the pool's [`MicroKernel`];
+/// bit-identical to the serial form (same kernel) for any lane count.
 #[allow(clippy::too_many_arguments)]
 pub fn par_matmul_tn(
     pool: &ComputePool,
@@ -460,7 +531,7 @@ pub fn par_matmul_tn(
     if m == 0 || n == 0 {
         return;
     }
-    gemm_packed(Layout::Tn, Exec::Pool(pool), m, k, n, a, b, c, ws);
+    gemm_packed(Layout::Tn, Exec::Pool(pool), pool.kernel(), m, k, n, a, b, c, ws);
 }
 
 /// The pre-packing scalar kernels, preserved verbatim as the
@@ -468,6 +539,12 @@ pub fn par_matmul_tn(
 /// packed kernels against them, including the ReLU-sparsity zero-skip
 /// these carry) and as an independent reference for tests.  Not on any
 /// hot path.
+///
+/// NOTE: these are *not* the `scalar` entry of the
+/// [`MicroKernel`] dispatch table — that is the portable packed
+/// microkernel in `simd` — and they are not dead code: benches and
+/// gradchecks depend on them as an independently-ordered reference.
+/// Don't "clean them up".
 pub mod scalar {
     /// `C[m×n] += A[m×k] · B[k×n]` — KC/NC cache-blocked scalar loops,
     /// skipping zero multipliers.
@@ -542,6 +619,7 @@ pub mod scalar {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::native::simd::Isa;
     use crate::util::math::{rel_err, transpose};
     use crate::util::Pcg32;
 
@@ -642,6 +720,39 @@ mod tests {
     }
 
     #[test]
+    fn every_available_isa_matches_naive() {
+        // The whole packed pipeline (packers + blocking + accumulation)
+        // under each ISA kernel the host can run, against the naive
+        // triple loop.  On x86_64 CI this exercises the AVX2+FMA path;
+        // the scalar entry covers the portable fallback everywhere.
+        let mut rng = Pcg32::seeded(9);
+        for isa in [Isa::Avx2, Isa::Neon, Isa::Scalar] {
+            if !isa.available() {
+                continue;
+            }
+            let kern = MicroKernel::for_isa(isa);
+            let mut ws = PackBuf::default();
+            for (m, k, n) in [(3, 7, 5), (MR, 1, NR), (MC + 1, KC + 1, NC + 1)] {
+                let a = rand_vec(&mut rng, m * k);
+                let b = rand_vec(&mut rng, k * n);
+                let want = naive(m, k, n, &a, &b);
+
+                let mut c = vec![0.0; m * n];
+                matmul_nn_ws_with(kern, m, k, n, &a, &b, &mut c, &mut ws);
+                assert_close(&format!("nn {isa} {m}x{k}x{n}"), &c, &want);
+
+                let mut c = vec![0.0; m * n];
+                matmul_nt_ws_with(kern, m, k, n, &a, &transpose(k, n, &b), &mut c, &mut ws);
+                assert_close(&format!("nt {isa} {m}x{k}x{n}"), &c, &want);
+
+                let mut c = vec![0.0; m * n];
+                matmul_tn_ws_with(kern, m, k, n, &transpose(m, k, &a), &b, &mut c, &mut ws);
+                assert_close(&format!("tn {isa} {m}x{k}x{n}"), &c, &want);
+            }
+        }
+    }
+
+    #[test]
     fn accumulates_instead_of_overwriting() {
         let a = vec![1.0, 2.0];
         let b = vec![3.0, 4.0];
@@ -716,5 +827,4 @@ mod tests {
             assert_eq!(serial, par, "tn {m}x{k}x{n}");
         }
     }
-
 }

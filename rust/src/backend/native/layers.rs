@@ -332,6 +332,9 @@ pub fn conv2d_backward(
 #[derive(Debug, Default)]
 pub struct ConvScratch {
     pub dcols: Vec<Vec<f32>>,
+    /// Per-lane GEMM pack workspaces; [`PackBuf`]'s own 64-byte-aligned
+    /// arenas, so the SIMD microkernels get aligned panels on the conv
+    /// path too.
     pub packs: Vec<PackBuf>,
     pub gw: Vec<Vec<f32>>,
     pub gb: Vec<Vec<f32>>,

@@ -24,6 +24,7 @@ pub mod gemm;
 pub mod layers;
 pub mod model;
 pub mod pool;
+pub mod simd;
 
 use crate::backend::{EvalBatchOut, GradSink, StepBackend, TrainStepOut};
 use crate::error::{Error, Result};

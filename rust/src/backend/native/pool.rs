@@ -43,6 +43,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
+use crate::backend::native::simd::MicroKernel;
 use crate::util::math::ceil_div;
 
 /// Elementwise-sweep chunk: fixed so boundaries depend on data length
@@ -124,8 +125,14 @@ impl Drop for Drain<'_> {
 /// The intra-op worker pool.  See the module docs for the determinism
 /// contract; `threads = 1` is a zero-thread, zero-overhead serial pool
 /// that still runs the identical chunk loops.
+///
+/// The pool also carries the GEMM [`MicroKernel`] resolved **once** at
+/// construction (runtime ISA detection plus the `TMG_GEMM_ISA`
+/// override): lanes never re-detect, so the kernel — and therefore the
+/// bit pattern of every GEMM — is uniform for the pool's lifetime.
 pub struct ComputePool {
     lanes: usize,
+    kernel: MicroKernel,
     senders: Vec<Sender<Msg>>,
     done_rx: Receiver<bool>,
     joins: Vec<JoinHandle<()>>,
@@ -133,8 +140,16 @@ pub struct ComputePool {
 
 impl ComputePool {
     /// Spawn a pool with `threads` lanes total (clamped to ≥ 1): the
-    /// caller plus `threads - 1` parked workers.
+    /// caller plus `threads - 1` parked workers, carrying the
+    /// process-wide dispatched [`MicroKernel`].
     pub fn new(threads: usize) -> ComputePool {
+        ComputePool::with_kernel(threads, MicroKernel::active())
+    }
+
+    /// [`ComputePool::new`] with an explicit [`MicroKernel`] — how the
+    /// per-ISA tests and benches pin a kernel per pool instead of
+    /// relying on the process-wide dispatch.
+    pub fn with_kernel(threads: usize, kernel: MicroKernel) -> ComputePool {
         let lanes = threads.max(1);
         let (done_tx, done_rx) = channel::<bool>();
         let mut senders = Vec::with_capacity(lanes - 1);
@@ -154,7 +169,7 @@ impl ComputePool {
             senders.push(tx);
             joins.push(join);
         }
-        ComputePool { lanes, senders, done_rx, joins }
+        ComputePool { lanes, kernel, senders, done_rx, joins }
     }
 
     /// A 1-lane pool: no threads, every helper runs inline.
@@ -165,6 +180,12 @@ impl ComputePool {
     /// Total lanes (calling thread included).
     pub fn lanes(&self) -> usize {
         self.lanes
+    }
+
+    /// The GEMM microkernel this pool dispatches (fixed at
+    /// construction).
+    pub fn kernel(&self) -> MicroKernel {
+        self.kernel
     }
 
     /// Run `f(lane)` once on every lane concurrently; returns after all

@@ -1,0 +1,410 @@
+//! Runtime-dispatched SIMD microkernels for the packed GEMM.
+//!
+//! PR 5's 4×8 register-blocked microkernel was written to be
+//! auto-vectorizer friendly, but nothing *pinned* that: a compiler mood
+//! swing could silently drop the hot loop to scalar throughput.  This
+//! module makes the vector code explicit:
+//!
+//! - [`kernel_avx2`] — x86_64 AVX2+FMA: each of the `MR = 4` rows keeps
+//!   one `f32x8` accumulator (`NR = 8` columns), fed by broadcast-A ×
+//!   aligned-load-B `_mm256_fmadd_ps` down the packed panel depth.
+//! - [`kernel_neon`] — aarch64 NEON: two `f32x4` accumulators per row,
+//!   `vdupq`-broadcast A × `vfmaq_f32`.  NEON is baseline on aarch64,
+//!   so a `cfg` gate (no runtime probe) suffices.
+//! - [`kernel_portable`] — the original safe-Rust loop, retained as the
+//!   fallback for every other target and as the cross-check reference.
+//!
+//! ## Dispatch
+//!
+//! The ISA is resolved **once per process** ([`active_isa`], an
+//! `OnceLock`): `TMG_GEMM_ISA=avx2|neon|scalar` overrides detection
+//! (unknown or unavailable values warn and fall back to scalar — never
+//! a crash), otherwise `is_x86_feature_detected!` / `cfg(target_arch)`
+//! pick the best available kernel.  The result is logged at first use,
+//! stored in every [`ComputePool`](crate::backend::native::pool::ComputePool)
+//! at construction, and threaded into `TrainSummary` and the bench
+//! JSON, so every run records what it actually executed.
+//!
+//! ## Determinism
+//!
+//! For a **fixed ISA**, every output element is produced by a fixed
+//! instruction sequence, so the serial==parallel bitwise contract of
+//! [`gemm`](crate::backend::native::gemm) holds per-ISA (the kernel
+//! choice is uniform across lanes for a run).  *Across* ISAs results
+//! legitimately differ in the last bits: FMA fuses each multiply-add
+//! into a single rounding step, where the portable kernel rounds the
+//! product and the sum separately.  Cross-ISA comparisons are therefore
+//! rounding-tolerant (`rel_err`), never bitwise.
+
+use std::sync::OnceLock;
+
+use crate::backend::native::gemm::{MR, NR};
+
+/// Signature shared by every microkernel: accumulate the full `MR×NR`
+/// register tile over a `kc`-deep packed micro-panel pair.
+///
+/// The pointer is `unsafe fn` because the SIMD variants require their
+/// CPU features to be present and (for AVX2) `bp` to be 32-byte
+/// aligned; [`MicroKernel::run`] is the checked wrapper.
+pub type KernelFn = unsafe fn(usize, &[f32], &[f32]) -> [[f32; NR]; MR];
+
+/// The instruction sets a microkernel can be compiled for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// x86_64 AVX2 + FMA (f32x8).
+    Avx2,
+    /// aarch64 NEON (f32x4), baseline on that architecture.
+    Neon,
+    /// The portable safe-Rust kernel; always available.
+    Scalar,
+}
+
+impl Isa {
+    /// Best ISA the host supports, probed at runtime.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return Isa::Avx2;
+            }
+            Isa::Scalar
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            Isa::Neon
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            Isa::Scalar
+        }
+    }
+
+    /// Whether this ISA can actually run on the current host.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Avx2 => Isa::detect() == Isa::Avx2,
+            Isa::Neon => cfg!(target_arch = "aarch64"),
+            Isa::Scalar => true,
+        }
+    }
+
+    /// Parse a `TMG_GEMM_ISA` value; `None` for anything unknown.
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            "scalar" => Some(Isa::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (the `TMG_GEMM_ISA` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Resolve an override request against what the host supports.
+///
+/// `None`, `""`, and `"auto"` mean "use [`Isa::detect`]".  Unknown
+/// names and ISAs the host cannot run warn and fall back to
+/// [`Isa::Scalar`] — an override must never turn into a crash (CI
+/// forces `scalar` on hosts whose real ISA varies).
+pub fn resolve_isa(requested: Option<&str>) -> Isa {
+    let req = match requested {
+        None => return Isa::detect(),
+        Some(r) if r.is_empty() || r.eq_ignore_ascii_case("auto") => return Isa::detect(),
+        Some(r) => r,
+    };
+    match Isa::parse(req) {
+        Some(isa) if isa.available() => isa,
+        Some(isa) => {
+            log::warn!("TMG_GEMM_ISA={req}: {isa} is not available on this host; using scalar");
+            Isa::Scalar
+        }
+        None => {
+            log::warn!("TMG_GEMM_ISA={req}: unknown (expected avx2|neon|scalar); using scalar");
+            Isa::Scalar
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+/// The process-wide dispatched ISA: `TMG_GEMM_ISA` resolved through
+/// [`resolve_isa`] exactly once (first pool construction, typically)
+/// and logged, so the choice is stable and recorded for the whole run.
+pub fn active_isa() -> Isa {
+    *ACTIVE.get_or_init(|| {
+        let requested = std::env::var("TMG_GEMM_ISA").ok();
+        let isa = resolve_isa(requested.as_deref());
+        match requested {
+            Some(r) => log::info!(
+                "gemm microkernel: {isa} (TMG_GEMM_ISA={r}, detected {})",
+                Isa::detect()
+            ),
+            None => log::info!("gemm microkernel: {isa} (auto-detected)"),
+        }
+        isa
+    })
+}
+
+/// A resolved microkernel: the dispatch-table entry the packed GEMM
+/// driver calls.  `Copy` — pools and callers hold it by value, so the
+/// kernel choice can never change mid-run.
+#[derive(Clone, Copy, Debug)]
+pub struct MicroKernel {
+    isa: Isa,
+    func: KernelFn,
+}
+
+impl MicroKernel {
+    /// Kernel for `isa`, downgrading anything the host cannot run to
+    /// the portable kernel (callers that care route through
+    /// [`resolve_isa`] first, which warns on the downgrade).
+    pub fn for_isa(isa: Isa) -> MicroKernel {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 if isa.available() => MicroKernel { isa, func: kernel_avx2 },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => MicroKernel { isa, func: kernel_neon },
+            _ => MicroKernel { isa: Isa::Scalar, func: kernel_portable },
+        }
+    }
+
+    /// The process-wide kernel ([`active_isa`] resolution).
+    pub fn active() -> MicroKernel {
+        MicroKernel::for_isa(active_isa())
+    }
+
+    /// Which ISA this kernel actually executes.
+    pub fn isa(self) -> Isa {
+        self.isa
+    }
+
+    /// Run the microkernel over one packed micro-panel pair.
+    #[inline(always)]
+    pub fn run(self, kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+        debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+        // SAFETY: `for_isa` only hands out kernels whose CPU features
+        // were verified present, panels are packed to full MR/NR width,
+        // and `PackBuf`'s 64-byte allocation keeps every `bp` panel row
+        // 32-byte aligned for the AVX2 aligned loads.
+        unsafe { (self.func)(kc, ap, bp) }
+    }
+}
+
+/// The portable safe-Rust microkernel — PR 5's auto-vectorizer-friendly
+/// loop, kept verbatim as the [`Isa::Scalar`] dispatch target and the
+/// reference the SIMD kernels are cross-checked against.  `MR×NR`
+/// independent accumulators, constant inner bounds, no branches.
+#[inline(always)]
+fn kernel_portable(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let av = &ap[p * MR..p * MR + MR];
+        let bv = &bp[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let a = av[r];
+            for j in 0..NR {
+                acc[r][j] += a * bv[j];
+            }
+        }
+    }
+    acc
+}
+
+/// AVX2+FMA microkernel: four `_mm256` row accumulators fed by
+/// broadcast-A × aligned-load-B fused multiply-adds.
+///
+/// # Safety
+///
+/// AVX2 and FMA must be available (guaranteed by
+/// [`MicroKernel::for_isa`]); `ap.len() >= kc*MR`, `bp.len() >= kc*NR`;
+/// `bp` must be 32-byte aligned — guaranteed by the 64-byte-aligned
+/// `PackBuf` arena, since every `NR`-strip offset is a multiple of
+/// 32 floats and every panel row advances by `NR = 8` floats (32 B).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn kernel_avx2(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    use std::arch::x86_64::*;
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    debug_assert_eq!(bp.as_ptr() as usize % 32, 0, "bp panel must be 32-byte aligned");
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let bv = _mm256_load_ps(b);
+        c0 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a), bv, c0);
+        c1 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(1)), bv, c1);
+        c2 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(2)), bv, c2);
+        c3 = _mm256_fmadd_ps(_mm256_broadcast_ss(&*a.add(3)), bv, c3);
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    let mut acc = [[0.0f32; NR]; MR];
+    _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+    _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+    _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+    _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    acc
+}
+
+/// NEON microkernel: two `f32x4` accumulators per row (covering
+/// `NR = 8` columns), `vdupq`-broadcast A × `vfmaq_f32`.
+///
+/// # Safety
+///
+/// aarch64 with NEON (baseline — the `cfg` gate is the guarantee);
+/// `ap.len() >= kc*MR`, `bp.len() >= kc*NR`.  `vld1q_f32` needs only
+/// element alignment, which slices of `f32` always have.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn kernel_neon(kc: usize, ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    use std::arch::aarch64::*;
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    let mut c00 = vdupq_n_f32(0.0);
+    let mut c01 = vdupq_n_f32(0.0);
+    let mut c10 = vdupq_n_f32(0.0);
+    let mut c11 = vdupq_n_f32(0.0);
+    let mut c20 = vdupq_n_f32(0.0);
+    let mut c21 = vdupq_n_f32(0.0);
+    let mut c30 = vdupq_n_f32(0.0);
+    let mut c31 = vdupq_n_f32(0.0);
+    let mut a = ap.as_ptr();
+    let mut b = bp.as_ptr();
+    for _ in 0..kc {
+        let b0 = vld1q_f32(b);
+        let b1 = vld1q_f32(b.add(4));
+        let a0 = vdupq_n_f32(*a);
+        let a1 = vdupq_n_f32(*a.add(1));
+        let a2 = vdupq_n_f32(*a.add(2));
+        let a3 = vdupq_n_f32(*a.add(3));
+        c00 = vfmaq_f32(c00, a0, b0);
+        c01 = vfmaq_f32(c01, a0, b1);
+        c10 = vfmaq_f32(c10, a1, b0);
+        c11 = vfmaq_f32(c11, a1, b1);
+        c20 = vfmaq_f32(c20, a2, b0);
+        c21 = vfmaq_f32(c21, a2, b1);
+        c30 = vfmaq_f32(c30, a3, b0);
+        c31 = vfmaq_f32(c31, a3, b1);
+        a = a.add(MR);
+        b = b.add(NR);
+    }
+    let mut acc = [[0.0f32; NR]; MR];
+    vst1q_f32(acc[0].as_mut_ptr(), c00);
+    vst1q_f32(acc[0].as_mut_ptr().add(4), c01);
+    vst1q_f32(acc[1].as_mut_ptr(), c10);
+    vst1q_f32(acc[1].as_mut_ptr().add(4), c11);
+    vst1q_f32(acc[2].as_mut_ptr(), c20);
+    vst1q_f32(acc[2].as_mut_ptr().add(4), c21);
+    vst1q_f32(acc[3].as_mut_ptr(), c30);
+    vst1q_f32(acc[3].as_mut_ptr().add(4), c31);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::gemm::KC;
+    use crate::util::math::rel_err;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn parse_round_trips_canonical_names() {
+        for isa in [Isa::Avx2, Isa::Neon, Isa::Scalar] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("sse9"), None);
+    }
+
+    #[test]
+    fn unknown_or_unavailable_override_falls_back_to_scalar() {
+        // The satellite contract: a bad override warns and degrades, it
+        // never panics and never picks an ISA the host can't run.
+        assert_eq!(resolve_isa(Some("avx512")), Isa::Scalar);
+        assert_eq!(resolve_isa(Some("fastest-please")), Isa::Scalar);
+        assert_eq!(resolve_isa(Some("scalar")), Isa::Scalar);
+        assert_eq!(resolve_isa(None), Isa::detect());
+        assert_eq!(resolve_isa(Some("")), Isa::detect());
+        assert_eq!(resolve_isa(Some("auto")), Isa::detect());
+        // An ISA that parses but belongs to the other architecture.
+        let foreign = if cfg!(target_arch = "aarch64") { "avx2" } else { "neon" };
+        assert_eq!(resolve_isa(Some(foreign)), Isa::Scalar);
+    }
+
+    #[test]
+    fn for_isa_downgrades_unavailable_to_scalar() {
+        for isa in [Isa::Avx2, Isa::Neon, Isa::Scalar] {
+            let kern = MicroKernel::for_isa(isa);
+            if isa.available() {
+                assert_eq!(kern.isa(), isa, "available ISA must dispatch itself");
+            } else {
+                assert_eq!(kern.isa(), Isa::Scalar, "unavailable ISA must degrade");
+            }
+        }
+        assert!(Isa::detect().available());
+    }
+
+    /// A random f32 block whose returned range starts 32-byte aligned,
+    /// mimicking the `PackBuf` guarantee the AVX2 kernel relies on.
+    fn aligned_panel(rng: &mut Pcg32, len: usize) -> (Vec<f32>, usize) {
+        let mut v = vec![0.0f32; len + 8];
+        rng.fill_normal(&mut v, 1.0);
+        let off = v.as_ptr().align_offset(32);
+        assert!(off + len <= v.len());
+        (v, off)
+    }
+
+    #[test]
+    fn every_available_kernel_matches_portable_to_rounding() {
+        // FMA fuses each multiply-add into one rounding step, so SIMD
+        // accumulators drift from the portable kernel by a few ULPs per
+        // element.  `rel_err` (denominator floored at 1) stays below
+        // 1e-5 for kc ≤ KC panels of unit-normal data — orders of
+        // magnitude above the fused-vs-unfused gap, far below any real
+        // indexing defect (which shows up as O(1) error).
+        let mut rng = Pcg32::seeded(42);
+        for kc in [1, 3, KC] {
+            let (ap, aoff) = aligned_panel(&mut rng, kc * MR);
+            let (bp, boff) = aligned_panel(&mut rng, kc * NR);
+            let a = &ap[aoff..aoff + kc * MR];
+            let b = &bp[boff..boff + kc * NR];
+            let want = MicroKernel::for_isa(Isa::Scalar).run(kc, a, b);
+            for isa in [Isa::Avx2, Isa::Neon] {
+                if !isa.available() {
+                    continue;
+                }
+                let got = MicroKernel::for_isa(isa).run(kc, a, b);
+                for r in 0..MR {
+                    for j in 0..NR {
+                        let e = rel_err(got[r][j], want[r][j]);
+                        assert!(
+                            e < 1e-5,
+                            "{isa} kc={kc} [{r}][{j}]: {} vs {} (rel err {e})",
+                            got[r][j],
+                            want[r][j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -22,6 +22,11 @@ pub fn run(argv: &[String]) -> Result<i32> {
     // are simply absent here).
     super::train_cmd::apply_overrides(&mut cfg, &a)?;
     super::train_cmd::sync_dataset_meta(&mut cfg)?;
+    if let Some(v) = a.get("gemm-isa") {
+        // Same mechanism as `tmg train`: resolved once at the first
+        // kernel dispatch, inside the backend built below.
+        std::env::set_var("TMG_GEMM_ISA", v);
+    }
     let ckpt = Path::new(a.required("checkpoint")?);
 
     let mut backend = crate::backend::build_eval_backend(&cfg)?;

@@ -147,6 +147,12 @@ pub fn run(argv: &[String]) -> Result<i32> {
         None => TrainConfig::default(),
     };
     apply_overrides(&mut cfg, &a)?;
+    if let Some(v) = a.get("gemm-isa") {
+        // One mechanism with the TMG_GEMM_ISA env var: the override is
+        // resolved (and logged) once, at the first kernel dispatch —
+        // which happens after this point, inside the backends.
+        std::env::set_var("TMG_GEMM_ISA", v);
+    }
 
     // Auto-generate the dataset if missing (classes follow the model).
     if !cfg.data.dir.join("meta.json").exists() {
@@ -183,6 +189,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "trained {executed} steps (through step {}) on {} worker(s) in {:.1}s  ({:.2} s/20it)",
         summary.steps, summary.workers, summary.wall_seconds, summary.secs_per_20_iters
     );
+    println!("gemm microkernel: {}", summary.gemm_isa);
     if let Some(last) = summary.losses.last() {
         let first = summary.losses.first().copied().unwrap_or(*last);
         println!("loss: {first:.4} -> {last:.4}");

@@ -61,9 +61,11 @@ USAGE:
                 [--seed N] [--data-dir DIR] [--checkpoint-dir DIR]
                 [--checkpoint-every N] [--checkpoint-keep N]
                 [--eval-every N] [--resume auto|PATH] [--csv FILE]
+                [--gemm-isa avx2|neon|scalar|auto]
   tmg eval      --checkpoint FILE [--config FILE] [--model M]
                 [--backend B] [--data-dir DIR] [--batch N]
                 [--threads N|auto] [--max-batches N]
+                [--gemm-isa avx2|neon|scalar|auto]
   tmg calibrate [--artifacts DIR] [--runs N]
   tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]
   tmg inspect   [--artifacts DIR]
@@ -78,6 +80,12 @@ Lifecycle: `--checkpoint-every N` snapshots each replica every N steps
 (atomic v2 files carrying the resume state), `--eval-every N` runs
 mid-training validation, and `--resume auto` (or a checkpoint PATH)
 restarts a killed run bit-exactly from the newest valid snapshot.
+
+The native GEMM picks an explicit SIMD microkernel (avx2/neon/scalar)
+at startup via runtime detection; `--gemm-isa` (or the TMG_GEMM_ISA
+env var) overrides it, unknown/unavailable values fall back to scalar
+with a warning, and the dispatched ISA is logged and reported.
+TMG_LOG=error|warn|info|debug sets log verbosity (stderr).
 ";
 
 /// Entry point used by main.rs; returns the process exit code.

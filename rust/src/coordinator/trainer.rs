@@ -70,6 +70,10 @@ pub struct TrainSummary {
     pub eval: Option<EvalResult>,
     /// Mean seconds per 20 iterations (the paper's headline unit).
     pub secs_per_20_iters: f64,
+    /// GEMM microkernel ISA the native backend dispatched for this
+    /// process (`avx2`/`neon`/`scalar`) — recorded so every run says
+    /// what it actually executed.
+    pub gemm_isa: String,
 }
 
 fn cluster_topology(cfg: &TrainConfig) -> PcieTopology {
@@ -255,6 +259,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
                 compute_seconds: 0.0,
                 final_divergence: None,
                 eval,
+                gemm_isa: crate::backend::native::simd::active_isa().name().to_string(),
             });
         }
         // Pre-flight the whole restore set against header-level state
@@ -279,8 +284,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         log::warn!("{w}");
     }
     log::info!(
-        "compute: {workers} worker(s) x {} intra-op thread(s) per step",
-        cfg.threads_per_worker()
+        "compute: {workers} worker(s) x {} intra-op thread(s) per step, gemm isa {}",
+        cfg.threads_per_worker(),
+        crate::backend::native::simd::active_isa()
     );
 
     // Build the collective fabric (handles move into the threads).
@@ -547,6 +553,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             / workers as f64,
         final_divergence,
         eval,
+        gemm_isa: crate::backend::native::simd::active_isa().name().to_string(),
     })
 }
 

@@ -13,8 +13,8 @@
 //! and data shorter than one `ELEMWISE_CHUNK`.
 
 use theano_mgpu::backend::native::gemm::{
-    matmul_nn, matmul_nt, matmul_tn, par_matmul_nn, par_matmul_nt, par_matmul_tn, KC, MC, MR, NC,
-    NR, PackBuf,
+    matmul_nn, matmul_nn_ws_with, matmul_nt, matmul_nt_ws_with, matmul_tn, matmul_tn_ws_with,
+    par_matmul_nn, par_matmul_nt, par_matmul_tn, KC, MC, MR, NC, NR, PackBuf,
 };
 use theano_mgpu::backend::native::layers::{
     conv2d_backward, conv2d_backward_pool, conv2d_forward, conv2d_forward_pool, dropout_backward,
@@ -24,6 +24,7 @@ use theano_mgpu::backend::native::layers::{
     PoolShape,
 };
 use theano_mgpu::backend::native::pool::{shape_chunks, ComputePool, ELEMWISE_CHUNK, MAX_CHUNKS};
+use theano_mgpu::backend::native::simd::{Isa, MicroKernel};
 use theano_mgpu::backend::{GradSink, NativeBackend, StepBackend};
 use theano_mgpu::comm::collective::build_fabric;
 use theano_mgpu::comm::GradExchanger;
@@ -101,6 +102,80 @@ fn gemm_tiles_match_serial_bitwise_at_edge_shapes() {
             par_matmul_tn(&pool, m, k, n, &at, &b, &mut got, &mut ws);
             assert_eq!(want, got, "tn {m}x{k}x{n} t{threads}");
         }
+    }
+}
+
+/// The serial==parallel bitwise contract holds **per-ISA**: for every
+/// microkernel the host can run (explicitly pinned per pool, the same
+/// mechanism the `TMG_GEMM_ISA` override resolves to), serial and
+/// parallel agree bitwise at lanes {1, 2, 4}.  On x86_64 CI this sweeps
+/// both the AVX2+FMA kernel and the portable fallback; ISAs the host
+/// lacks are skipped (their dispatch-degradation behavior is covered by
+/// the `simd` unit tests).
+#[test]
+fn gemm_is_bitwise_serial_equal_for_every_available_isa() {
+    let shapes = [(MR - 1, 3, NR - 1), (13, 11, 17), (MC + 1, KC + 1, NC + 1)];
+    let mut rng = Pcg32::seeded(33);
+    for isa in [Isa::Avx2, Isa::Neon, Isa::Scalar] {
+        if !isa.available() {
+            continue;
+        }
+        let kern = MicroKernel::for_isa(isa);
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::with_kernel(threads, kern);
+            let mut ws = PackBuf::default();
+            let mut serial_ws = PackBuf::default();
+            for (m, k, n) in shapes {
+                let a = randn(&mut rng, m * k);
+                let at = transpose(m, k, &a);
+                let b = randn(&mut rng, k * n);
+                let bt = transpose(k, n, &b);
+
+                let mut want = vec![0.1; m * n];
+                matmul_nn_ws_with(kern, m, k, n, &a, &b, &mut want, &mut serial_ws);
+                let mut got = vec![0.1; m * n];
+                par_matmul_nn(&pool, m, k, n, &a, &b, &mut got, &mut ws);
+                assert_eq!(want, got, "nn {isa:?} {m}x{k}x{n} t{threads}");
+
+                let mut want = vec![-0.2; m * n];
+                matmul_nt_ws_with(kern, m, k, n, &a, &bt, &mut want, &mut serial_ws);
+                let mut got = vec![-0.2; m * n];
+                par_matmul_nt(&pool, m, k, n, &a, &bt, &mut got, &mut ws);
+                assert_eq!(want, got, "nt {isa:?} {m}x{k}x{n} t{threads}");
+
+                let mut want = vec![0.0; m * n];
+                matmul_tn_ws_with(kern, m, k, n, &at, &b, &mut want, &mut serial_ws);
+                let mut got = vec![0.0; m * n];
+                par_matmul_tn(&pool, m, k, n, &at, &b, &mut got, &mut ws);
+                assert_eq!(want, got, "tn {isa:?} {m}x{k}x{n} t{threads}");
+            }
+        }
+    }
+}
+
+/// Cross-ISA agreement is rounding-level, not bitwise: FMA kernels fuse
+/// each multiply-add into a single rounding step, so results drift from
+/// the portable kernel by ULPs.  1e-4 max `rel_err` (denominator
+/// floored at 1) is far above that drift and far below any real defect
+/// on these unit-normal operands.
+#[test]
+fn simd_and_portable_kernels_agree_to_rounding() {
+    let fallback = MicroKernel::for_isa(Isa::Scalar);
+    let mut rng = Pcg32::seeded(34);
+    let (m, k, n) = (MC + 2, KC + 3, NC + 5);
+    let a = randn(&mut rng, m * k);
+    let b = randn(&mut rng, k * n);
+    let mut want = vec![0.0; m * n];
+    let mut ws = PackBuf::default();
+    matmul_nn_ws_with(fallback, m, k, n, &a, &b, &mut want, &mut ws);
+    for isa in [Isa::Avx2, Isa::Neon] {
+        if !isa.available() {
+            continue;
+        }
+        let mut got = vec![0.0; m * n];
+        matmul_nn_ws_with(MicroKernel::for_isa(isa), m, k, n, &a, &b, &mut got, &mut ws);
+        let e = max_rel_err(&got, &want);
+        assert!(e < 1e-4, "{isa:?} vs portable: max rel err {e}");
     }
 }
 
