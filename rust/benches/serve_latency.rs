@@ -1,0 +1,128 @@
+// Serving latency + saturation — the `tmg serve` perf record.
+//
+// Boots an in-process dynamic-batching server (2 replicas, native
+// backend, 1 compute thread each) over a synthetic micro corpus, then:
+//
+//  1. closed loop: 8 connections firing as fast as answers come back —
+//     best-case p50/p99 latency and peak throughput;
+//  2. open loop: a fixed-arrival-rate sweep, doubling the offered rate
+//     until the server falls behind (achieved < 90% of offered) —
+//     `saturation_rps` is the last rate it kept up with.  Latency is
+//     measured from the *scheduled* send time, so backlog shows up in
+//     the percentiles (no coordinated omission).
+//
+// Emits target/bench_results/BENCH_serve.json with p50/p99,
+// throughput, the sweep table, and the saturation point.
+
+include!("harness.rs");
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use theano_mgpu::config::TrainConfig;
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::serve::loadgen::{run_closed_loop, run_open_loop};
+use theano_mgpu::serve::{ServeOpts, Server};
+
+const REPLICAS: usize = 2;
+const MAX_BATCH: usize = 8;
+const DEADLINE_MS: f64 = 2.0;
+const REQUESTS: u64 = 512;
+const CONCURRENCY: usize = 8;
+
+fn bench_corpus() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("target/bench_data/serve_micro");
+    if !dir.join("meta.json").exists() {
+        let spec = theano_mgpu::data::synth::SynthSpec {
+            classes: 10,
+            channels: 3,
+            hw: 36,
+            noise: 24.0,
+            seed: 7,
+        };
+        theano_mgpu::data::synth::generate_dataset(&dir, &spec, 64, 16, 64).unwrap();
+    }
+    dir
+}
+
+fn main() {
+    let mut b = Bench::new("serve_latency");
+
+    let mut cfg = TrainConfig::default();
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "native".into();
+    cfg.compute_threads = 1;
+    cfg.data.dir = bench_corpus();
+    cfg.data.stored_hw = 36;
+
+    // Latency doesn't care whether the weights are trained; a fresh
+    // init serves identically-shaped work.
+    let model = theano_mgpu::backend::resolve_model(&cfg).unwrap();
+    let store = Arc::new(ParamStore::init(&model.params, 1));
+    let opts = ServeOpts {
+        replicas: REPLICAS,
+        max_batch: MAX_BATCH,
+        deadline: Duration::from_secs_f64(DEADLINE_MS / 1e3),
+        topk: 5,
+        port: 0,
+    };
+    let server = Server::start(&cfg, store, opts).unwrap();
+    let addr = server.addr().to_string();
+
+    // --- closed loop ---
+    let report = run_closed_loop(&addr, REQUESTS, CONCURRENCY, 42).unwrap();
+    assert_eq!(report.errors, 0, "closed loop saw errors");
+    b.record("closed-loop p50 latency", report.p50_ms, "ms");
+    b.record("closed-loop p99 latency", report.p99_ms, "ms");
+    b.record("closed-loop throughput", report.throughput_rps, "req/s");
+
+    // --- open-loop saturation sweep ---
+    let mut sweep_rows = Vec::new();
+    let mut saturation_rps = 0.0f64;
+    for rate in [100.0f64, 200.0, 400.0, 800.0, 1600.0] {
+        let p = run_open_loop(&addr, rate, Duration::from_millis(1500), CONCURRENCY, 7).unwrap();
+        b.record(&format!("open-loop @{rate:.0}rps achieved"), p.achieved_rps, "req/s");
+        b.record(&format!("open-loop @{rate:.0}rps p99"), p.p99_ms, "ms");
+        sweep_rows.push(format!(
+            "{{\"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, \"ok\": {}, \
+             \"errors\": {}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}}}",
+            p.offered_rps, p.achieved_rps, p.ok, p.errors, p.p50_ms, p.p99_ms
+        ));
+        let kept_up = p.achieved_rps >= 0.9 * rate && p.errors == 0;
+        if kept_up {
+            saturation_rps = rate;
+        } else {
+            // Saturated: offering more only grows the backlog.
+            break;
+        }
+    }
+    b.record("saturation rate", saturation_rps, "req/s");
+
+    let snap = server.shutdown();
+    b.record("server-side mean batch fill", snap.mean_fill, "req");
+    b.record("server-side compute p50", snap.compute_p50_ms, "ms");
+    b.write_csv();
+
+    let dir = std::path::PathBuf::from("target/bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("BENCH_serve.json");
+    let json = format!(
+        "{{\"bench\": \"serve_latency\", \"model\": \"{}\", \"replicas\": {REPLICAS}, \
+         \"max_batch\": {MAX_BATCH}, \"deadline_ms\": {DEADLINE_MS}, \
+         \"requests\": {REQUESTS}, \"concurrency\": {CONCURRENCY}, \
+         \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"throughput_rps\": {:.1}, \
+         \"server_mean_fill\": {:.2}, \"server_queue_p99_ms\": {:.3}, \
+         \"server_compute_p99_ms\": {:.3}, \"saturation_rps\": {saturation_rps:.1}, \
+         \"sweep\": [{}]}}\n",
+        cfg.model,
+        report.p50_ms,
+        report.p99_ms,
+        report.throughput_rps,
+        snap.mean_fill,
+        snap.queue_p99_ms,
+        snap.compute_p99_ms,
+        sweep_rows.join(", ")
+    );
+    let _ = std::fs::write(&path, json);
+    println!("  -> {}", path.display());
+}

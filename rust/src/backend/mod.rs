@@ -48,6 +48,10 @@ pub struct EvalBatchOut {
     pub top5: i32,
 }
 
+/// One example's ranked predictions: `(class, softmax probability)`
+/// pairs, descending by score.
+pub type TopK = Vec<(usize, f32)>;
+
 /// Observer of per-parameter gradient readiness during backward.
 ///
 /// The staged step protocol calls [`GradSink::grad_ready`] once per
@@ -149,6 +153,31 @@ pub trait StepBackend: Send {
         labels: &[i32],
         store: &ParamStore,
     ) -> Result<EvalBatchOut>;
+
+    /// Whether [`StepBackend::predict_batch`] is available.  The AOT
+    /// XLA eval artifact only returns aggregate counts, so the serving
+    /// path needs a backend that can expose per-example scores.
+    fn supports_predict(&self) -> bool {
+        false
+    }
+
+    /// Eval-mode forward returning each example's top-`k` classes with
+    /// softmax probabilities.  Ranking happens on the logits with ties
+    /// broken toward the lower class index, so the first entry of every
+    /// row is exactly the `argmax` that [`StepBackend::eval_batch`]
+    /// counts as top-1 — the serve path and `tmg eval` agree bit for
+    /// bit on the same parameters.  Default: unsupported.
+    fn predict_batch(
+        &mut self,
+        _images: &HostTensor,
+        _store: &ParamStore,
+        _k: usize,
+    ) -> Result<Vec<TopK>> {
+        Err(crate::error::Error::msg(format!(
+            "backend {:?} does not support per-example prediction",
+            self.name()
+        )))
+    }
 }
 
 /// Which substrate a config's `backend` string selects.

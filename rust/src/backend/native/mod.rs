@@ -26,7 +26,7 @@ pub mod model;
 pub mod pool;
 pub mod simd;
 
-use crate::backend::{EvalBatchOut, GradSink, StepBackend, TrainStepOut};
+use crate::backend::{EvalBatchOut, GradSink, StepBackend, TopK, TrainStepOut};
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
 use crate::runtime::ModelSpec;
@@ -489,6 +489,56 @@ impl StepBackend for NativeBackend {
         }
         Ok(EvalBatchOut { loss, top1, top5 })
     }
+
+    fn supports_predict(&self) -> bool {
+        true
+    }
+
+    fn predict_batch(
+        &mut self,
+        images: &HostTensor,
+        store: &ParamStore,
+        k: usize,
+    ) -> Result<Vec<TopK>> {
+        let dims = images.shape().dims();
+        let n = if dims.len() == 4 { dims[0] } else { 0 };
+        // Prediction has no labels; zeros satisfy the admission check
+        // and the (discarded) loss arithmetic.
+        let labels = vec![0i32; n];
+        let batch = self.admit_batch(images, &labels, false)?;
+        self.forward(images, store, None, false);
+        let last = self.plan.ops.len();
+        let s = FcShape { batch, din: 0, dout: self.plan.classes };
+        softmax_xent(
+            self.ws.acts[last].as_slice(),
+            &labels,
+            &mut self.ws.probs,
+            self.ws.dacts[last].as_mut_slice(),
+            &s,
+        );
+        let classes = self.plan.classes;
+        let k = k.clamp(1, classes);
+        let logits = self.ws.acts[last].as_slice();
+        let mut out = Vec::with_capacity(batch);
+        let mut order: Vec<usize> = Vec::with_capacity(classes);
+        for bi in 0..batch {
+            let row = &logits[bi * classes..(bi + 1) * classes];
+            let prow = &self.ws.probs[bi * classes..(bi + 1) * classes];
+            // Rank on the logits (ties toward the lower index) so the
+            // head of the list is exactly eval_batch's argmax top-1;
+            // report the softmax probabilities of the ranked classes.
+            order.clear();
+            order.extend(0..classes);
+            order.sort_unstable_by(|&a, &b| {
+                row[b]
+                    .partial_cmp(&row[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            out.push(order[..k].iter().map(|&c| (c, prow[c])).collect());
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -624,6 +674,47 @@ mod tests {
         // Eval is dropout-free, hence repeatable bit-for-bit.
         let e2 = b.eval_batch(&images, &labels, &store).unwrap();
         assert_eq!(e.loss, e2.loss);
+    }
+
+    #[test]
+    fn predict_matches_eval_counts() {
+        // predict_batch ranks on the logits with eval_batch's tie-break
+        // (first max wins), so row heads must reproduce the top-1 count
+        // and label membership in the top-5 must reproduce top-5.
+        let arch = alexnet_micro();
+        let mut b = NativeBackend::new(&arch, 0.5);
+        let store = ParamStore::init(&b.model().params, 2);
+        let (images, labels) = random_batch(8, arch.num_classes, 9);
+        let e = b.eval_batch(&images, &labels, &store).unwrap();
+        let p = b.predict_batch(&images, &store, 5).unwrap();
+        assert_eq!(p.len(), 8);
+        let mut top1 = 0i32;
+        let mut top5 = 0i32;
+        for (row, &label) in p.iter().zip(&labels) {
+            assert_eq!(row.len(), 5);
+            // Descending scores, probabilities in (0, 1].
+            for w in row.windows(2) {
+                assert!(w[0].1 >= w[1].1, "scores not descending: {row:?}");
+            }
+            assert!(row.iter().all(|&(_, s)| s > 0.0 && s <= 1.0));
+            if row[0].0 == label as usize {
+                top1 += 1;
+            }
+            if row.iter().any(|&(c, _)| c == label as usize) {
+                top5 += 1;
+            }
+        }
+        assert_eq!(top1, e.top1);
+        assert_eq!(top5, e.top5);
+        // Eval-mode forward: repeatable bit-for-bit, k clamped to the
+        // class count.
+        let p2 = b.predict_batch(&images, &store, 5).unwrap();
+        assert_eq!(p, p2);
+        let pk = b.predict_batch(&images, &store, 10_000).unwrap();
+        assert_eq!(pk[0].len(), arch.num_classes);
+        let p1 = b.predict_batch(&images, &store, 0).unwrap();
+        assert_eq!(p1[0].len(), 1);
+        assert_eq!(p1[0][0].0, p[0][0].0);
     }
 
     #[test]

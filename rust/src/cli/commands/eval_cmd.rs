@@ -41,7 +41,16 @@ pub fn run(argv: &[String]) -> Result<i32> {
     let mut store = ParamStore::init(&model.params, cfg.seed);
     let step = load_checkpoint(ckpt, &mut store)?;
 
-    let result = evaluate(&cfg, backend.as_mut(), &store, a.usize_or("max-batches", 0)?)?;
+    let Some(result) = evaluate(&cfg, backend.as_mut(), &store, a.usize_or("max-batches", 0)?)?
+    else {
+        // Pre-fix this printed "top-1 error 100.00% (0 examples)" —
+        // a fake rate.  No data is a usage error, not a measurement.
+        return Err(Error::msg(format!(
+            "nothing to evaluate: no val examples under {:?} (generate the corpus \
+             with --val > 0, or point --data-dir at one that has a val split)",
+            cfg.data.dir
+        )));
+    };
     println!(
         "checkpoint @step {step}: top-1 error {:.2}%  top-5 error {:.2}%  loss {:.4}  ({} examples)",
         100.0 * result.top1_error(),

@@ -4,5 +4,6 @@ pub mod calibrate_cmd;
 pub mod eval_cmd;
 pub mod gen_data;
 pub mod inspect_cmd;
+pub mod serve_cmd;
 pub mod simulate_cmd;
 pub mod train_cmd;

@@ -1,0 +1,118 @@
+//! `tmg serve` — the dynamic-batching inference server (and its
+//! scripted client).
+//!
+//! Server mode loads a checkpoint once into an immutable shared
+//! `ParamStore` and answers `classify` requests over the line protocol
+//! (see the [`crate::serve`] module docs):
+//!
+//! ```text
+//! tmg serve --checkpoint ckpt/default_step8.ckpt --data-dir data \
+//!           --model alexnet-micro --replicas 2 --max-batch 8 \
+//!           --deadline-ms 5 --port 7070
+//! ```
+//!
+//! Client mode (`--client HOST:PORT`) drives a running server with the
+//! closed-loop generator and prints latency percentiles — the scripted
+//! side of the CI smoke job:
+//!
+//! ```text
+//! tmg serve --client 127.0.0.1:7070 --requests 64 --concurrency 8
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::cli::args::ArgMap;
+use crate::config::TrainConfig;
+use crate::error::{Error, Result};
+use crate::params::{load_checkpoint, ParamStore};
+use crate::serve::loadgen::run_closed_loop;
+use crate::serve::{ServeOpts, Server};
+
+pub fn run(argv: &[String]) -> Result<i32> {
+    let a = ArgMap::parse(argv)?;
+    if let Some(addr) = a.get("client") {
+        return run_client(addr, &a);
+    }
+    run_server(&a)
+}
+
+fn run_client(addr: &str, a: &ArgMap) -> Result<i32> {
+    let requests = a.u64_or("requests", 64)?;
+    let concurrency = a.usize_or("concurrency", 4)?;
+    let seed = a.u64_or("seed", 1)?;
+    let report = run_closed_loop(addr, requests, concurrency, seed)?;
+    println!(
+        "client: sent={} ok={} errors={} wall_s={:.3} throughput_rps={:.1} \
+         p50_ms={:.3} p99_ms={:.3}",
+        report.sent,
+        report.ok,
+        report.errors,
+        report.wall_secs,
+        report.throughput_rps,
+        report.p50_ms,
+        report.p99_ms
+    );
+    Ok(if report.errors > 0 { 1 } else { 0 })
+}
+
+fn run_server(a: &ArgMap) -> Result<i32> {
+    let mut cfg = match a.get("config") {
+        Some(p) => TrainConfig::load(Path::new(p))?,
+        None => TrainConfig::default(),
+    };
+    // Same override surface as train/eval (model, backend, data-dir,
+    // threads, ... — serve-only flags handled below).
+    super::train_cmd::apply_overrides(&mut cfg, a)?;
+    super::train_cmd::sync_dataset_meta(&mut cfg)?;
+    if let Some(v) = a.get("gemm-isa") {
+        std::env::set_var("TMG_GEMM_ISA", v);
+    }
+    let opts = ServeOpts {
+        replicas: a.usize_or("replicas", 1)?.max(1),
+        max_batch: a.usize_or("max-batch", 8)?.max(1),
+        deadline: Duration::from_secs_f64(
+            a.str_or("deadline-ms", "5")
+                .parse::<f64>()
+                .map_err(|_| Error::msg("--deadline-ms wants a number"))?
+                .max(0.0)
+                / 1e3,
+        ),
+        topk: a.usize_or("topk", 5)?.max(1),
+        port: a
+            .str_or("port", "7070")
+            .parse::<u16>()
+            .map_err(|_| Error::msg("--port wants a u16"))?,
+    };
+    // `--threads auto` divides the machine's cores across replicas the
+    // same way training divides them across workers.
+    cfg.cluster.workers = opts.replicas;
+    if cfg.cluster.switch_of_worker.len() != opts.replicas {
+        cfg.cluster.switch_of_worker = vec![0; opts.replicas];
+    }
+
+    let ckpt = Path::new(a.required("checkpoint")?);
+    let model = crate::backend::resolve_model(&cfg)?;
+    let mut store = ParamStore::init(&model.params, cfg.seed);
+    let step = load_checkpoint(ckpt, &mut store)?;
+    log::info!("serve: checkpoint {ckpt:?} @step {step} loaded ({} params)", store.params.len());
+    let store = Arc::new(store);
+
+    // 0 = run until killed; N = answer N requests, drain, exit — the
+    // self-terminating mode CI and scripts use.
+    let max_requests = a.u64_or("max-requests", 0)?;
+    let server = Server::start(&cfg, store, opts)?;
+    println!("serving on {}", server.addr());
+    if max_requests == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    while server.served() < max_requests {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let snap = server.shutdown();
+    println!("serve drained: {}", snap.line(0));
+    Ok(if snap.errors > 0 { 1 } else { 0 })
+}

@@ -5,6 +5,7 @@
 //! - `gen-data`  — generate the synthetic corpus shards
 //! - `train`     — run a training job from a TOML config (+ overrides)
 //! - `eval`      — evaluate a checkpoint on the validation split
+//! - `serve`     — dynamic-batching inference server over a checkpoint
 //! - `calibrate` — measure step/loader/memcpy costs on this machine
 //! - `simulate`  — regenerate Table 1 / the scaling study
 //! - `inspect`   — list artifacts, models and their ABI
@@ -66,6 +67,13 @@ USAGE:
                 [--backend B] [--data-dir DIR] [--batch N]
                 [--threads N|auto] [--max-batches N]
                 [--gemm-isa avx2|neon|scalar|auto]
+  tmg serve     --checkpoint FILE [--config FILE] [--model M]
+                [--backend B] [--data-dir DIR] [--threads N|auto]
+                [--replicas N] [--max-batch N] [--deadline-ms F]
+                [--port P] [--topk K] [--max-requests N]
+                [--gemm-isa avx2|neon|scalar|auto]
+  tmg serve     --client HOST:PORT [--requests N] [--concurrency C]
+                [--seed N]
   tmg calibrate [--artifacts DIR] [--runs N]
   tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]
   tmg inspect   [--artifacts DIR]
@@ -75,6 +83,14 @@ The default backend is `native`: a pure-Rust CPU implementation of the
 full AlexNet train/eval step — no AOT artifacts required.  Artifact
 backend tags (e.g. `refconv`) run through the XLA runtime instead and
 fall back to native when the artifacts are unavailable.
+
+`tmg serve` loads a checkpoint once into an immutable shared store and
+answers `classify` requests over a TCP line protocol with dynamically
+formed batches: a request queue flushes to one of `--replicas` eval
+replicas when `--max-batch` requests wait or the oldest has waited
+`--deadline-ms`.  `--max-requests N` answers N requests, drains, and
+exits (the CI smoke mode); the client mode fires concurrent requests
+and prints p50/p99 latency.
 
 Lifecycle: `--checkpoint-every N` snapshots each replica every N steps
 (atomic v2 files carrying the resume state), `--eval-every N` runs
@@ -100,6 +116,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "gen-data" => commands::gen_data::run(rest),
         "train" => commands::train_cmd::run(rest),
         "eval" => commands::eval_cmd::run(rest),
+        "serve" => commands::serve_cmd::run(rest),
         "calibrate" => commands::calibrate_cmd::run(rest),
         "simulate" => commands::simulate_cmd::run(rest),
         "inspect" => commands::inspect_cmd::run(rest),

@@ -4,18 +4,30 @@
 //! rate is 42.6%, top-5 is 19.9%") on the substituted corpus, through
 //! whichever [`StepBackend`] the config selects.
 //!
-//! The split is walked **sequentially and completely**: evaluation
-//! needs no shuffle, and the final partial batch is evaluated too
-//! (backends with a variable batch, i.e. the native path), so the
-//! reported error rates cover the *true* example count.  Only a
-//! fixed-batch compiled backend has to drop the ragged tail — and says
-//! so in the log instead of silently shrinking the denominator.
+//! The module is split in two:
+//!
+//! - [`Engine`] — the reusable core: stage raw `u8` pixels through
+//!   center-crop preprocessing into one long-lived f32 batch buffer,
+//!   then run the backend's eval forward (counts) or per-example
+//!   prediction (top-k scores) on the staged batch.  The buffer is
+//!   hoisted across batches — steady state allocates nothing — and the
+//!   serve hot path drives the exact same code, so `tmg serve` answers
+//!   are bit-identical to `tmg eval` on the same parameters.
+//! - [`evaluate`] — the split-walking wrapper: sequentially and
+//!   completely walks the validation split, including the ragged final
+//!   batch when the backend takes a variable batch size.  Only a
+//!   fixed-batch compiled backend drops the tail — and says so in the
+//!   log instead of silently shrinking the denominator.
+//!
+//! An empty or absent validation split is `Ok(None)`, **not** a zeroed
+//! result: `EvalResult::default()` reads as 100% error, and callers
+//! used to log that fiction.
 
-use crate::backend::StepBackend;
+use crate::backend::{EvalBatchOut, StepBackend, TopK};
 use crate::config::TrainConfig;
-use crate::data::loader::open_split;
-use crate::data::preprocess::{preprocess_into, Augment};
-use crate::error::Result;
+use crate::data::loader::open_split_optional;
+use crate::data::preprocess::{preprocess_into, Augment, MeanImage};
+use crate::error::{Error, Result};
 use crate::params::ParamStore;
 use crate::tensor::{HostTensor, Shape};
 
@@ -38,6 +50,136 @@ impl EvalResult {
     }
 }
 
+/// Preprocess-and-evaluate core shared by `tmg eval` and the serve
+/// replicas.
+///
+/// Borrows the backend (callers own it — the trainer reuses its
+/// training backend for mid-run validation; a serve replica keeps its
+/// own on the thread stack) and owns the preprocessing state: the mean
+/// image, the geometry, and one reusable staging buffer that grows to
+/// the largest batch seen and is then recycled forever.
+pub struct Engine<'b> {
+    backend: &'b mut dyn StepBackend,
+    mean: MeanImage,
+    stored_hw: usize,
+    crop_hw: usize,
+    /// Staged NCHW f32 batch; lives across batches (the buffer-churn
+    /// fix — the old loop allocated a fresh tensor every batch).
+    buf: Vec<f32>,
+    staged: usize,
+}
+
+impl<'b> Engine<'b> {
+    /// Wrap a backend with preprocessing state.  The crop size comes
+    /// from the backend's model; `stored_hw`/`mean` describe the corpus.
+    pub fn new(
+        backend: &'b mut dyn StepBackend,
+        mean: MeanImage,
+        stored_hw: usize,
+    ) -> Result<Engine<'b>> {
+        let crop_hw = backend.model().image_hw;
+        if crop_hw > stored_hw {
+            return Err(Error::Shape(format!(
+                "crop {crop_hw} larger than stored image {stored_hw}"
+            )));
+        }
+        if mean.channels == 0 || mean.hw != stored_hw {
+            return Err(Error::Shape(format!(
+                "mean image {}x{} does not match stored images ({stored_hw})",
+                mean.channels, mean.hw
+            )));
+        }
+        Ok(Engine { backend, mean, stored_hw, crop_hw, buf: Vec::new(), staged: 0 })
+    }
+
+    pub fn backend_name(&self) -> String {
+        self.backend.name().to_string()
+    }
+
+    pub fn channels(&self) -> usize {
+        self.mean.channels
+    }
+
+    pub fn stored_hw(&self) -> usize {
+        self.stored_hw
+    }
+
+    pub fn crop_hw(&self) -> usize {
+        self.crop_hw
+    }
+
+    /// Raw request payload size: one stored image, `u8` per pixel.
+    pub fn input_bytes(&self) -> usize {
+        self.mean.channels * self.stored_hw * self.stored_hw
+    }
+
+    /// Elements one preprocessed example occupies in the staged batch.
+    fn row_elems(&self) -> usize {
+        self.mean.channels * self.crop_hw * self.crop_hw
+    }
+
+    /// Open a batch of `n` examples to stage into.  Grows the buffer if
+    /// this is the largest batch yet; otherwise reuses it in place.
+    pub fn begin(&mut self, n: usize) {
+        self.staged = n;
+        self.buf.resize(n * self.row_elems(), 0.0);
+    }
+
+    /// Center-crop + mean-subtract one example's raw pixels into slot
+    /// `bi` of the open batch.
+    pub fn stage(&mut self, bi: usize, pixels: &[u8]) -> Result<()> {
+        if bi >= self.staged {
+            return Err(Error::msg(format!(
+                "stage slot {bi} outside open batch of {}",
+                self.staged
+            )));
+        }
+        let stride = self.row_elems();
+        let (lo, hi) = (bi * stride, (bi + 1) * stride);
+        preprocess_into(
+            pixels,
+            &self.mean,
+            self.stored_hw,
+            self.crop_hw,
+            Augment::center(self.stored_hw, self.crop_hw),
+            &mut self.buf[lo..hi],
+        )
+    }
+
+    /// Shape the staged buffer as a tensor without copying, run `f`,
+    /// and reclaim the buffer afterwards — even when `f` fails.
+    fn with_staged<T>(
+        &mut self,
+        f: impl FnOnce(&mut dyn StepBackend, &HostTensor) -> Result<T>,
+    ) -> Result<T> {
+        let shape =
+            Shape::of(&[self.staged, self.mean.channels, self.crop_hw, self.crop_hw]);
+        let images = HostTensor::from_vec(shape, std::mem::take(&mut self.buf))?;
+        let r = f(self.backend, &images);
+        self.buf = images.into_vec();
+        r
+    }
+
+    /// Eval forward over the staged batch: mean loss + top-1/top-5
+    /// correct counts against `labels`.
+    pub fn eval_staged(&mut self, labels: &[i32], store: &ParamStore) -> Result<EvalBatchOut> {
+        if labels.len() != self.staged {
+            return Err(Error::msg(format!(
+                "{} labels for a staged batch of {}",
+                labels.len(),
+                self.staged
+            )));
+        }
+        self.with_staged(|backend, images| backend.eval_batch(images, labels, store))
+    }
+
+    /// Per-example top-`k` classes + softmax scores for the staged
+    /// batch (the serve path; needs `supports_predict`).
+    pub fn classify_staged(&mut self, store: &ParamStore, k: usize) -> Result<Vec<TopK>> {
+        self.with_staged(|backend, images| backend.predict_batch(images, store, k))
+    }
+}
+
 /// Run the backend's eval forward over the validation split.
 ///
 /// `max_batches = 0` means the full split, including the ragged final
@@ -47,24 +189,31 @@ impl EvalResult {
 ///
 /// `mean_loss` is example-weighted, so the partial batch contributes
 /// in proportion to its size.
+///
+/// Returns `Ok(None)` when there is nothing to evaluate: the val split
+/// is absent (corpus generated with `--val 0`) or empty, or a
+/// fixed-batch backend dropped every example as a ragged tail.
 pub fn evaluate(
     cfg: &TrainConfig,
     backend: &mut dyn StepBackend,
     store: &ParamStore,
     max_batches: usize,
-) -> Result<EvalResult> {
+) -> Result<Option<EvalResult>> {
     let fixed = backend.eval_batch_size();
     let batch = fixed.unwrap_or(cfg.batch_per_worker).max(1);
     let crop_hw = backend.model().image_hw;
-    let (mut dataset, mean) = open_split(&cfg.data.dir, "val", crop_hw, false)?;
+    let Some((mut dataset, mean)) = open_split_optional(&cfg.data.dir, "val", crop_hw, false)?
+    else {
+        return Ok(None);
+    };
     let stored_hw = dataset.height;
-    let channels = dataset.channels;
     let total = dataset.len();
+    let backend_label = backend.name().to_string();
+    let mut engine = Engine::new(backend, mean, stored_hw)?;
 
     let mut out = EvalResult::default();
     let mut loss_sum = 0f64;
     let mut pix_buf: Vec<u8> = Vec::new();
-    let stride = channels * crop_hw * crop_hw;
     let mut start = 0usize;
     let mut batches = 0usize;
     while start < total {
@@ -74,29 +223,20 @@ pub fn evaluate(
         let n = (total - start).min(batch);
         if n < batch && fixed.is_some() {
             log::warn!(
-                "eval: backend {:?} has a fixed batch of {batch}; dropping the ragged \
-                 tail of {n} example(s) — reported rates cover {} of {total}",
-                backend.name(),
+                "eval: backend {backend_label:?} has a fixed batch of {batch}; dropping \
+                 the ragged tail of {n} example(s) — reported rates cover {} of {total}",
                 out.examples
             );
             break;
         }
-        let mut images = HostTensor::zeros(Shape::of(&[n, channels, crop_hw, crop_hw]));
+        engine.begin(n);
         let mut labels = Vec::with_capacity(n);
-        let slice = images.as_mut_slice();
         for bi in 0..n {
             let label = dataset.read_into(start + bi, &mut pix_buf)?;
-            preprocess_into(
-                &pix_buf,
-                &mean,
-                stored_hw,
-                crop_hw,
-                Augment::center(stored_hw, crop_hw),
-                &mut slice[bi * stride..(bi + 1) * stride],
-            )?;
+            engine.stage(bi, &pix_buf)?;
             labels.push(label as i32);
         }
-        let r = backend.eval_batch(&images, &labels, store)?;
+        let r = engine.eval_staged(&labels, store)?;
         loss_sum += r.loss as f64 * n as f64;
         out.top1_correct += r.top1 as usize;
         out.top5_correct += r.top5 as usize;
@@ -104,12 +244,11 @@ pub fn evaluate(
         start += n;
         batches += 1;
     }
-    out.mean_loss = if out.examples > 0 {
-        (loss_sum / out.examples as f64) as f32
-    } else {
-        0.0
-    };
-    Ok(out)
+    if out.examples == 0 {
+        return Ok(None);
+    }
+    out.mean_loss = (loss_sum / out.examples as f64) as f32;
+    Ok(Some(out))
 }
 
 #[cfg(test)]
@@ -121,7 +260,5 @@ mod tests {
         let r = EvalResult { examples: 200, mean_loss: 1.0, top1_correct: 80, top5_correct: 150 };
         assert!((r.top1_error() - 0.6).abs() < 1e-6);
         assert!((r.top5_error() - 0.25).abs() < 1e-6);
-        let empty = EvalResult::default();
-        assert_eq!(empty.top1_error(), 1.0);
     }
 }

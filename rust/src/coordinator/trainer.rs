@@ -238,8 +238,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
                 let model = eval_backend.model().clone();
                 let mut store = ParamStore::init(&model.params, cfg.seed);
                 load_checkpoint(&set.paths[0], &mut store)?;
-                let r = evaluate(cfg, eval_backend.as_mut(), &store, 0)?;
-                (r.examples > 0).then_some(r)
+                evaluate(cfg, eval_backend.as_mut(), &store, 0)?
             } else {
                 None
             };
@@ -527,10 +526,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     // measured rather than silently skipped.
     let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
     let eval = if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
-        let r = evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?;
-        // A fixed-batch backend over a too-small split covers nothing;
-        // report that as "no eval" instead of a fake 100% error.
-        (r.examples > 0).then_some(r)
+        // `evaluate` answers None when nothing was measured — absent
+        // split, or a fixed-batch backend over a too-small split —
+        // which reports as "no eval" instead of a fake 100% error.
+        evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?
     } else {
         None
     };

@@ -469,8 +469,9 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
             && backend.supports_eval()
             && cfg.data.val_examples > 0
         {
-            let result = crate::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 0)?;
-            if result.examples > 0 {
+            if let Some(result) =
+                crate::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 0)?
+            {
                 // BEST tracks the best *checkpointed* model, so only an
                 // eval that lands on a checkpoint step competes — an
                 // off-cadence eval has no file to point the marker at

@@ -157,6 +157,22 @@ pub fn open_split(
     Ok((dataset, mean))
 }
 
+/// Like [`open_split`], but an *absent* split (no shard files at all —
+/// e.g. a corpus generated with `--val 0`) is `Ok(None)` rather than an
+/// error.  Real failures — unreadable directory, corrupt shards,
+/// missing mean file, bad crop — still error.
+pub fn open_split_optional(
+    data_dir: &std::path::Path,
+    split: &str,
+    crop_hw: usize,
+    verify_shards: bool,
+) -> Result<Option<(ShardedDataset, MeanImage)>> {
+    if ShardedDataset::scan_split(data_dir, split)?.is_empty() {
+        return Ok(None);
+    }
+    open_split(data_dir, split, crop_hw, verify_shards).map(Some)
+}
+
 fn build_producer(cfg: &LoaderCfg) -> Result<BatchProducer> {
     let (dataset, mean) = open_split(cfg.data_dir, cfg.split, cfg.crop_hw, cfg.verify_shards)?;
     let sampler = EpochSampler::new(dataset.len(), cfg.batch, cfg.worker, cfg.workers, cfg.seed);

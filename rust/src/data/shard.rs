@@ -231,9 +231,10 @@ pub struct ShardedDataset {
 }
 
 impl ShardedDataset {
-    /// Open all `{split}_NNNN.shard` files in `dir` (sorted), verifying
-    /// CRCs once.
-    pub fn open(dir: &Path, split: &str, verify: bool) -> Result<Self> {
+    /// The sorted `{split}_NNNN.shard` files present in `dir` — the
+    /// existence probe behind [`ShardedDataset::open`], exposed so
+    /// callers can distinguish "split absent" from real open errors.
+    pub fn scan_split(dir: &Path, split: &str) -> Result<Vec<PathBuf>> {
         let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
             .map_err(|e| Error::io(dir, e))?
             .filter_map(|e| e.ok().map(|e| e.path()))
@@ -245,6 +246,13 @@ impl ShardedDataset {
             })
             .collect();
         paths.sort();
+        Ok(paths)
+    }
+
+    /// Open all `{split}_NNNN.shard` files in `dir` (sorted), verifying
+    /// CRCs once.
+    pub fn open(dir: &Path, split: &str, verify: bool) -> Result<Self> {
+        let paths = Self::scan_split(dir, split)?;
         if paths.is_empty() {
             return Err(Error::Shard {
                 path: dir.into(),

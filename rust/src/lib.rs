@@ -25,6 +25,8 @@
 //!   Fig-2 / chunked ring all-reduce) and barriers.
 //! - [`interconnect`] — PCIe topology model (same-switch P2P rule).
 //! - [`coordinator`] — worker threads + the training/eval loops.
+//! - [`serve`] — the dynamic-batching inference server behind
+//!   `tmg serve` (request queue, replica pool, TCP line protocol).
 //! - [`sim`] — calibrated discrete-event simulator regenerating the
 //!   paper's Table 1 and the N-GPU scaling study.
 //! - [`cli`] — the `tmg` command line.
@@ -41,6 +43,7 @@ pub mod interconnect;
 pub mod metrics;
 pub mod params;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod tensor;
 pub mod testing;

@@ -16,6 +16,9 @@ pub struct ThroughputMeter {
     pub last_images_per_sec: f64,
     total_steps: usize,
     total_images: usize,
+    /// Images inside *closed* windows — the numerator that matches
+    /// `total_secs` (which only accumulates at window close).
+    closed_images: usize,
     total_secs: f64,
 }
 
@@ -31,6 +34,7 @@ impl ThroughputMeter {
             last_images_per_sec: 0.0,
             total_steps: 0,
             total_images: 0,
+            closed_images: 0,
             total_secs: 0.0,
         }
     }
@@ -48,6 +52,7 @@ impl ThroughputMeter {
             self.last_images_per_sec =
                 if secs > 0.0 { self.images_in_window as f64 / secs } else { 0.0 };
             self.total_secs += secs;
+            self.closed_images += self.images_in_window;
             self.steps_in_window = 0;
             self.images_in_window = 0;
             Some(secs)
@@ -70,16 +75,25 @@ impl ThroughputMeter {
         }
     }
 
+    /// Images actually recorded inside closed windows.  This is a
+    /// count, not the old `closed_steps × mean images/step` estimate —
+    /// that estimate was wrong whenever batch sizes vary (ragged eval
+    /// tails, serve-mode dynamic batches) and the open window's steps
+    /// skew the mean.
+    pub fn closed_window_images(&self) -> usize {
+        self.closed_images
+    }
+
+    /// Wall seconds accumulated by closed windows.
+    pub fn closed_seconds(&self) -> f64 {
+        self.total_secs
+    }
+
     pub fn overall_images_per_sec(&self) -> f64 {
         if self.total_secs > 0.0 {
-            // Count only images inside closed windows.
-            let closed = (self.total_steps / self.window_steps) * self.window_steps;
-            let per_step = if self.total_steps > 0 {
-                self.total_images as f64 / self.total_steps as f64
-            } else {
-                0.0
-            };
-            closed as f64 * per_step / self.total_secs
+            // Only images inside closed windows: the open window has
+            // contributed no time yet, so its images must not count.
+            self.closed_images as f64 / self.total_secs
         } else {
             0.0
         }
@@ -101,6 +115,27 @@ mod tests {
         }
         assert_eq!(closes, 2);
         assert_eq!(m.total_steps(), 12);
+    }
+
+    #[test]
+    fn ragged_batches_count_actual_images() {
+        // Regression: with varying batch sizes the meter used to
+        // estimate closed-window images as closed_steps × the mean
+        // images/step over ALL steps — the open window's ragged steps
+        // leaked into the closed-window numerator.  Count, don't model.
+        let mut m = ThroughputMeter::new(2);
+        m.step(8);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.step(8); // window closes: 16 images inside
+        m.step(1); // ragged tail, window still open
+        assert_eq!(m.closed_window_images(), 16);
+        assert!(m.closed_seconds() > 0.0);
+        let expected = 16.0 / m.closed_seconds();
+        assert!((m.overall_images_per_sec() - expected).abs() < 1e-9);
+        // Old estimate would have claimed 2 × (17/3) ≈ 11.33 images.
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.step(1); // second window closes: 2 more images
+        assert_eq!(m.closed_window_images(), 18);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Load generation against a running serve instance.
+//!
+//! Two shapes, matching the two questions a latency bench asks:
+//!
+//! - **Closed loop** ([`run_closed_loop`]): C connections, each with
+//!   one request in flight, firing as fast as the server answers —
+//!   measures best-case latency and peak per-concurrency throughput.
+//! - **Open loop** ([`run_open_loop`]): requests *scheduled* at a fixed
+//!   arrival rate regardless of completions, latency measured from the
+//!   scheduled send time — the honest (coordinated-omission-free) view
+//!   of what happens as the offered rate approaches saturation: once
+//!   the server falls behind, schedule slip counts against latency.
+//!
+//! Percentiles here are exact (sorted samples), not histogram buckets:
+//! the generator holds every latency in memory anyway.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::serve::hex_encode;
+use crate::util::Pcg32;
+
+/// One protocol connection: line out, line in.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// What the server's `hello` reply announces.
+#[derive(Clone, Debug)]
+pub struct HelloInfo {
+    pub model: String,
+    pub hw: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub topk: usize,
+}
+
+impl HelloInfo {
+    /// Bytes one `classify` payload must carry.
+    pub fn input_bytes(&self) -> usize {
+        self.channels * self.hw * self.hw
+    }
+}
+
+impl ServeClient {
+    /// Connect, retrying until `retry_for` elapses — covers the races
+    /// where the client starts before the server finished binding.
+    pub fn connect(addr: &str, retry_for: Duration) -> Result<ServeClient> {
+        let start = Instant::now();
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).map_err(Error::RawIo)?;
+                    let writer = stream.try_clone().map_err(Error::RawIo)?;
+                    return Ok(ServeClient { reader: BufReader::new(stream), writer });
+                }
+                Err(e) => {
+                    if start.elapsed() >= retry_for {
+                        return Err(Error::msg(format!("connect {addr}: {e}")));
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    }
+
+    /// Send one request line, read one reply line (trailing newline
+    /// stripped).
+    pub fn request(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes()).map_err(Error::RawIo)?;
+        self.writer.write_all(b"\n").map_err(Error::RawIo)?;
+        self.writer.flush().map_err(Error::RawIo)?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).map_err(Error::RawIo)?;
+        if n == 0 {
+            return Err(Error::msg("server closed the connection"));
+        }
+        Ok(reply.trim_end().to_string())
+    }
+
+    /// `hello` handshake, parsed.
+    pub fn hello(&mut self) -> Result<HelloInfo> {
+        let reply = self.request("hello")?;
+        let mut info = HelloInfo {
+            model: String::new(),
+            hw: 0,
+            channels: 0,
+            classes: 0,
+            topk: 0,
+        };
+        if !reply.starts_with("ok") {
+            return Err(Error::msg(format!("hello failed: {reply}")));
+        }
+        for kv in reply.split_whitespace().skip(1) {
+            let Some((k, v)) = kv.split_once('=') else { continue };
+            match k {
+                "model" => info.model = v.to_string(),
+                "hw" => info.hw = v.parse().unwrap_or(0),
+                "channels" => info.channels = v.parse().unwrap_or(0),
+                "classes" => info.classes = v.parse().unwrap_or(0),
+                "topk" => info.topk = v.parse().unwrap_or(0),
+                _ => {}
+            }
+        }
+        if info.input_bytes() == 0 {
+            return Err(Error::msg(format!("malformed hello: {reply}")));
+        }
+        Ok(info)
+    }
+}
+
+/// Deterministic random image for request `i` (hex-encoded).
+pub fn synth_payload(input_bytes: usize, seed: u64, i: u64) -> String {
+    let mut rng = Pcg32::seeded(seed ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    let pixels: Vec<u8> = (0..input_bytes).map(|_| rng.below(256) as u8).collect();
+    hex_encode(&pixels)
+}
+
+/// Closed-loop run outcome.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub wall_secs: f64,
+    pub throughput_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Exact quantile over a sorted sample set.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Fire `requests` classifications from `concurrency` connections,
+/// each keeping one request in flight.
+pub fn run_closed_loop(
+    addr: &str,
+    requests: u64,
+    concurrency: usize,
+    seed: u64,
+) -> Result<LoadReport> {
+    let concurrency = concurrency.max(1);
+    // One probe connection learns the payload geometry.
+    let input_bytes = ServeClient::connect(addr, Duration::from_secs(10))?
+        .hello()?
+        .input_bytes();
+    let next = Arc::new(AtomicUsize::new(0));
+    let wall = Instant::now();
+    let mut handles = Vec::with_capacity(concurrency);
+    for _ in 0..concurrency {
+        let addr = addr.to_string();
+        let next = next.clone();
+        handles.push(std::thread::spawn(move || -> Result<(u64, u64, Vec<f64>)> {
+            let mut client = ServeClient::connect(&addr, Duration::from_secs(10))?;
+            let (mut ok, mut errors) = (0u64, 0u64);
+            let mut lat = Vec::new();
+            loop {
+                let i = next.fetch_add(1, Ordering::SeqCst) as u64;
+                if i >= requests {
+                    return Ok((ok, errors, lat));
+                }
+                let payload = synth_payload(input_bytes, seed, i);
+                let t = Instant::now();
+                let reply = client.request(&format!("classify {payload}"))?;
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+                if reply.starts_with("ok") {
+                    ok += 1;
+                } else {
+                    errors += 1;
+                }
+            }
+        }));
+    }
+    let (mut ok, mut errors) = (0u64, 0u64);
+    let mut lat = Vec::new();
+    for h in handles {
+        let (o, e, l) = h.join().map_err(|_| Error::msg("load thread panicked"))??;
+        ok += o;
+        errors += e;
+        lat.extend(l);
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    Ok(LoadReport {
+        sent: ok + errors,
+        ok,
+        errors,
+        wall_secs,
+        throughput_rps: if wall_secs > 0.0 { (ok + errors) as f64 / wall_secs } else { 0.0 },
+        p50_ms: percentile(&lat, 0.50),
+        p99_ms: percentile(&lat, 0.99),
+    })
+}
+
+/// One point of the open-loop saturation sweep.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepPoint {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub ok: u64,
+    pub errors: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Offer `rate` requests/second for `duration`, spread over `conns`
+/// persistent connections.  Each connection sends on a fixed schedule;
+/// latency is measured from the *scheduled* time, so a server that
+/// falls behind shows the backlog in its percentiles instead of
+/// silently shedding offered load (no coordinated omission).
+pub fn run_open_loop(
+    addr: &str,
+    rate: f64,
+    duration: Duration,
+    conns: usize,
+    seed: u64,
+) -> Result<SweepPoint> {
+    let conns = conns.max(1);
+    if rate <= 0.0 {
+        return Err(Error::msg("open-loop rate must be positive"));
+    }
+    let input_bytes = ServeClient::connect(addr, Duration::from_secs(10))?
+        .hello()?
+        .input_bytes();
+    let start = Instant::now() + Duration::from_millis(20);
+    let mut handles = Vec::with_capacity(conns);
+    for j in 0..conns {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<(u64, u64, Vec<f64>)> {
+            let mut client = ServeClient::connect(&addr, Duration::from_secs(10))?;
+            let (mut ok, mut errors) = (0u64, 0u64);
+            let mut lat = Vec::new();
+            // Connection j owns arrivals j, j+conns, j+2*conns, ...
+            let mut k = 0u64;
+            loop {
+                let arrival = j as u64 + k * conns as u64;
+                let offset = Duration::from_secs_f64(arrival as f64 / rate);
+                if offset >= duration {
+                    return Ok((ok, errors, lat));
+                }
+                let scheduled = start + offset;
+                let now = Instant::now();
+                if scheduled > now {
+                    std::thread::sleep(scheduled - now);
+                }
+                // Behind schedule: send immediately; the slip stays in
+                // the latency measurement below.
+                let payload = synth_payload(input_bytes, seed, arrival);
+                let reply = client.request(&format!("classify {payload}"))?;
+                lat.push(scheduled.elapsed().as_secs_f64() * 1e3);
+                if reply.starts_with("ok") {
+                    ok += 1;
+                } else {
+                    errors += 1;
+                }
+                k += 1;
+            }
+        }));
+    }
+    let (mut ok, mut errors) = (0u64, 0u64);
+    let mut lat = Vec::new();
+    for h in handles {
+        let (o, e, l) = h.join().map_err(|_| Error::msg("load thread panicked"))??;
+        ok += o;
+        errors += e;
+        lat.extend(l);
+    }
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(SweepPoint {
+        offered_rps: rate,
+        achieved_rps: (ok + errors) as f64 / wall,
+        ok,
+        errors,
+        p50_ms: percentile(&lat, 0.50),
+        p99_ms: percentile(&lat, 0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_exact() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 50.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+    }
+
+    #[test]
+    fn payload_is_deterministic_per_index() {
+        let a = synth_payload(16, 42, 3);
+        let b = synth_payload(16, 42, 3);
+        let c = synth_payload(16, 42, 4);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 32);
+    }
+}

@@ -1,0 +1,102 @@
+//! `tmg serve` — a dynamic-batching inference server.
+//!
+//! The paper hides *loading* latency behind compute with a
+//! double-buffer (Fig 1); serving turns the same idea around for
+//! request latency: a queue in front of M eval replicas forms batches
+//! dynamically — flush when `max_batch` requests are waiting **or**
+//! when the oldest has waited `deadline` — so throughput comes from
+//! batching without unbounded tail latency.
+//!
+//! Structure (std only, no new crates):
+//!
+//! - [`queue`] — the [`queue::Batcher`]: a mutex/condvar request queue
+//!   with the two flush conditions and drain-on-close semantics.
+//! - [`server`] — the [`server::Server`]: one immutable shared
+//!   [`ParamStore`](crate::params::ParamStore), M replica threads (each
+//!   its own `build_eval_backend` + [`Engine`](crate::coordinator::eval::Engine)),
+//!   and a TCP line-protocol front end.
+//! - [`loadgen`] — closed-loop and open-loop (arrival-rate) load
+//!   generators for the client mode, the bench, and CI.
+//!
+//! ## Protocol
+//!
+//! Newline-delimited requests over TCP, one in flight per connection
+//! (drive concurrency with connections):
+//!
+//! ```text
+//! hello                 -> ok model=M hw=H channels=C classes=K topk=T
+//! classify <hex pixels> -> ok <class>:<prob> <class>:<prob> ...
+//! stats                 -> ok served=N batches=N ... (key=value pairs)
+//! quit                  -> connection closes
+//! anything else         -> err <message>
+//! ```
+//!
+//! `classify` takes one stored-size image as lowercase hex of
+//! `channels*hw*hw` raw `u8` pixels; the reply ranks classes exactly
+//! like `tmg eval` counts them (logits order, ties to the lower class
+//! index), and probabilities print with `f32`'s shortest-roundtrip
+//! `Display`, so parsing a reply reproduces the server's floats bit for
+//! bit.
+
+pub mod loadgen;
+pub mod queue;
+pub mod server;
+
+pub use self::queue::{Batcher, Reply, Request};
+pub use self::server::{ServeOpts, Server, StatsSnapshot};
+
+use crate::error::{Error, Result};
+
+/// Lowercase hex of raw bytes (the `classify` request payload).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        s.push(HEX[(b >> 4) as usize] as char);
+        s.push(HEX[(b & 0xf) as usize] as char);
+    }
+    s
+}
+
+/// Decode the `classify` payload; accepts upper- or lowercase hex.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>> {
+    let s = s.as_bytes();
+    if s.len() % 2 != 0 {
+        return Err(Error::msg("hex payload has odd length"));
+    }
+    fn nibble(c: u8) -> Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(Error::msg(format!("invalid hex byte {:?}", c as char))),
+        }
+    }
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in s.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let data: Vec<u8> = (0u16..=255).map(|b| b as u8).collect();
+        let enc = hex_encode(&data);
+        assert_eq!(enc.len(), 512);
+        assert_eq!(hex_decode(&enc).unwrap(), data);
+        assert_eq!(hex_decode(&enc.to_uppercase()).unwrap(), data);
+        assert_eq!(hex_encode(&[0x00, 0xff, 0x1a]), "00ff1a");
+    }
+
+    #[test]
+    fn hex_rejects_garbage() {
+        assert!(hex_decode("abc").is_err());
+        assert!(hex_decode("zz").is_err());
+        assert!(hex_decode("").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! The dynamic-batching request queue.
+//!
+//! One mutex/condvar queue feeds every replica.  A replica's
+//! [`Batcher::next_batch`] blocks until a batch is *ready*:
+//!
+//! - `max_batch` requests are waiting (size flush — throughput), or
+//! - the oldest waiting request has aged past `deadline` (deadline
+//!   flush — bounded tail latency), or
+//! - the queue has been closed (shutdown drains whatever is left).
+//!
+//! That is the paper's Fig-1 inversion: training overlap *hides* load
+//! time behind compute; serving instead *spends* a bounded deadline to
+//! buy batch size.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One in-flight classification request.
+pub struct Request {
+    /// Raw stored-size image: `channels * hw * hw` bytes.
+    pub pixels: Vec<u8>,
+    /// When the request entered the queue (queue-wait timing origin).
+    pub enqueued: Instant,
+    /// Where the replica sends the answer.
+    pub resp: mpsc::Sender<Reply>,
+}
+
+/// A replica's answer to one request.
+pub struct Reply {
+    /// Ranked `(class, softmax prob)` — or an error message (the crate
+    /// error type is not `Clone`, and one failure answers a whole
+    /// batch).
+    pub topk: std::result::Result<Vec<(usize, f32)>, String>,
+    /// Seconds spent queued before a replica took the batch.
+    pub queue_secs: f64,
+    /// Seconds of preprocess + forward for the whole batch.
+    pub compute_secs: f64,
+    /// How full the dynamically formed batch was.
+    pub batch_size: usize,
+}
+
+struct State {
+    q: VecDeque<Request>,
+    open: bool,
+}
+
+/// Shared request queue with size/deadline flush (see module docs).
+pub struct Batcher {
+    state: Mutex<State>,
+    cv: Condvar,
+    max_batch: usize,
+    deadline: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Batcher {
+        Batcher {
+            state: Mutex::new(State { q: VecDeque::new(), open: true }),
+            cv: Condvar::new(),
+            max_batch: max_batch.max(1),
+            deadline,
+        }
+    }
+
+    /// Enqueue a request; hands it back when the queue is closed so the
+    /// caller can answer "shutting down" instead of dropping it.
+    pub fn submit(&self, r: Request) -> std::result::Result<(), Request> {
+        let mut s = self.state.lock().unwrap();
+        if !s.open {
+            return Err(r);
+        }
+        s.q.push_back(r);
+        // Wake every waiter: a size flush may free a full batch for one
+        // replica while another should go back to a deadline wait.
+        self.cv.notify_all();
+        Ok(())
+    }
+
+    /// Requests currently waiting (the ops-surface `depth` gauge).
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    /// Stop accepting new requests.  Blocked replicas wake up, drain
+    /// what is queued, then get `None`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().open = false;
+        self.cv.notify_all();
+    }
+
+    /// Block until a batch is ready; `None` means closed *and* drained
+    /// — the replica's signal to exit.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.q.is_empty() {
+                // Compute the age once: between a timed-out wait and
+                // this check the clock has advanced, and
+                // `deadline - waited` must never underflow.
+                let waited = s.q.front().expect("nonempty").enqueued.elapsed();
+                if !s.open || s.q.len() >= self.max_batch || waited >= self.deadline {
+                    let n = s.q.len().min(self.max_batch);
+                    return Some(s.q.drain(..n).collect());
+                }
+                let (guard, _) = self.cv.wait_timeout(s, self.deadline - waited).unwrap();
+                s = guard;
+            } else if !s.open {
+                return None;
+            } else {
+                s = self.cv.wait(s).unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    fn req(tag: u8) -> (Request, mpsc::Receiver<Reply>) {
+        let (tx, rx) = channel();
+        (Request { pixels: vec![tag], enqueued: Instant::now(), resp: tx }, rx)
+    }
+
+    #[test]
+    fn size_flush_caps_and_preserves_fifo() {
+        let b = Batcher::new(3, Duration::from_secs(60));
+        for tag in 0..5u8 {
+            let (r, _rx) = req(tag);
+            b.submit(r).ok().unwrap();
+        }
+        assert_eq!(b.depth(), 5);
+        // 5 waiting, max 3: first batch is [0,1,2] — immediately, the
+        // deadline is an hour away.
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t.elapsed() < Duration::from_secs(5));
+        assert_eq!(batch.iter().map(|r| r.pixels[0]).collect::<Vec<_>>(), [0, 1, 2]);
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn deadline_flush_releases_partial_batch() {
+        let b = Batcher::new(64, Duration::from_millis(20));
+        let (r, _rx) = req(7);
+        b.submit(r).ok().unwrap();
+        let t = Instant::now();
+        let batch = b.next_batch().unwrap();
+        // One lone request: released by the deadline, not the size.
+        assert_eq!(batch.len(), 1);
+        assert!(t.elapsed() >= Duration::from_millis(15), "flushed early: {:?}", t.elapsed());
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let b = Batcher::new(64, Duration::from_secs(60));
+        let (r, _rx) = req(1);
+        b.submit(r).ok().unwrap();
+        b.close();
+        // Pending work is still served (drain), despite the far
+        // deadline and the unreached max batch...
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        // ...then the queue reports end-of-stream,
+        assert!(b.next_batch().is_none());
+        // and new submissions bounce back to the caller.
+        let (r, _rx) = req(2);
+        assert!(b.submit(r).is_err());
+    }
+
+    #[test]
+    fn close_wakes_a_parked_replica() {
+        let b = Arc::new(Batcher::new(64, Duration::from_secs(60)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch().is_none());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap(), "parked replica must see None after close");
+    }
+}

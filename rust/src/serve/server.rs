@@ -1,0 +1,517 @@
+//! The serving core: one shared checkpoint, M eval replicas, a TCP
+//! line-protocol front end.
+//!
+//! The checkpoint's parameters load **once** into an immutable
+//! `Arc<ParamStore>` — replicas share them read-only, exactly the way
+//! eval treats the store everywhere else.  Each replica thread owns its
+//! own `build_eval_backend` instance (workspaces, compute pool) wrapped
+//! in the shared [`Engine`], pulls dynamically formed batches off the
+//! [`Batcher`], and answers every request in the batch.
+//!
+//! Ops surface: per-stage timings (queue wait, batch fill, compute) in
+//! log-spaced histograms with p50/p99, queue depth, batch fill sizes —
+//! exposed over the `stats` protocol verb, a periodic log line, and
+//! [`Server::shutdown`]'s final snapshot.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::backend::StepBackend;
+use crate::config::TrainConfig;
+use crate::coordinator::eval::Engine;
+use crate::data::preprocess::MeanImage;
+use crate::data::synth::DatasetMeta;
+use crate::error::{Error, Result};
+use crate::metrics::Histogram;
+use crate::params::ParamStore;
+use crate::serve::queue::{Batcher, Reply, Request};
+use crate::util::Timer;
+
+/// Emit the per-stage timing log line every this many served requests.
+const LOG_EVERY: u64 = 256;
+
+/// Serving knobs (CLI flags map 1:1).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Eval replicas — independent backends sharing one `ParamStore`.
+    pub replicas: usize,
+    /// Flush a batch at this size even before the deadline.
+    pub max_batch: usize,
+    /// Flush a batch when its oldest request has waited this long.
+    pub deadline: Duration,
+    /// Classes per reply.
+    pub topk: usize,
+    /// TCP port on 127.0.0.1; 0 picks an ephemeral port.
+    pub port: u16,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            replicas: 1,
+            max_batch: 8,
+            deadline: Duration::from_millis(5),
+            topk: 5,
+            port: 0,
+        }
+    }
+}
+
+/// Shared counters + per-stage latency histograms.
+pub struct ServeStats {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    hists: Mutex<Hists>,
+}
+
+struct Hists {
+    /// Per request: enqueue → taken by a replica.
+    queue: Histogram,
+    /// Per batch: oldest request's enqueue → batch taken (how long the
+    /// batch took to form).
+    fill: Histogram,
+    /// Per batch: preprocess + forward.
+    compute: Histogram,
+    /// Exact batch-size counts, index = size (0..=max_batch).
+    sizes: Vec<u64>,
+}
+
+/// Point-in-time stats reading (all latencies in milliseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StatsSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_fill: f64,
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    pub fill_p50_ms: f64,
+    pub fill_p99_ms: f64,
+    pub compute_p50_ms: f64,
+    pub compute_p99_ms: f64,
+}
+
+impl StatsSnapshot {
+    /// The per-stage timing line: one `key=value` vocabulary shared by
+    /// the periodic log, the `stats` verb, and the shutdown summary.
+    pub fn line(&self, depth: usize) -> String {
+        format!(
+            "served={} batches={} errors={} depth={depth} mean_fill={:.2} \
+             queue_p50_ms={:.3} queue_p99_ms={:.3} fill_p50_ms={:.3} fill_p99_ms={:.3} \
+             compute_p50_ms={:.3} compute_p99_ms={:.3}",
+            self.served,
+            self.batches,
+            self.errors,
+            self.mean_fill,
+            self.queue_p50_ms,
+            self.queue_p99_ms,
+            self.fill_p50_ms,
+            self.fill_p99_ms,
+            self.compute_p50_ms,
+            self.compute_p99_ms
+        )
+    }
+}
+
+impl ServeStats {
+    fn new(max_batch: usize) -> ServeStats {
+        ServeStats {
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            hists: Mutex::new(Hists {
+                queue: Histogram::new_latency(),
+                fill: Histogram::new_latency(),
+                compute: Histogram::new_latency(),
+                sizes: vec![0; max_batch + 1],
+            }),
+        }
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let h = self.hists.lock().unwrap();
+        let served = self.served.load(Ordering::SeqCst);
+        let batches = self.batches.load(Ordering::SeqCst);
+        StatsSnapshot {
+            served,
+            batches,
+            errors: self.errors.load(Ordering::SeqCst),
+            mean_fill: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+            queue_p50_ms: h.queue.quantile(0.5) * 1e3,
+            queue_p99_ms: h.queue.quantile(0.99) * 1e3,
+            fill_p50_ms: h.fill.quantile(0.5) * 1e3,
+            fill_p99_ms: h.fill.quantile(0.99) * 1e3,
+            compute_p50_ms: h.compute.quantile(0.5) * 1e3,
+            compute_p99_ms: h.compute.quantile(0.99) * 1e3,
+        }
+    }
+
+    /// Exact count of batches that flushed at each size.
+    pub fn size_counts(&self) -> Vec<u64> {
+        self.hists.lock().unwrap().sizes.clone()
+    }
+}
+
+/// What one replica thread needs (cloned per replica; the store is the
+/// one shared, immutable piece).
+struct ReplicaCtx {
+    store: Arc<ParamStore>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    mean: MeanImage,
+    stored_hw: usize,
+    topk: usize,
+}
+
+impl Clone for ReplicaCtx {
+    fn clone(&self) -> Self {
+        ReplicaCtx {
+            store: self.store.clone(),
+            batcher: self.batcher.clone(),
+            stats: self.stats.clone(),
+            mean: self.mean.clone(),
+            stored_hw: self.stored_hw,
+            topk: self.topk,
+        }
+    }
+}
+
+fn replica_main(mut backend: Box<dyn StepBackend>, ctx: ReplicaCtx) {
+    let mut engine = match Engine::new(backend.as_mut(), ctx.mean, ctx.stored_hw) {
+        Ok(e) => e,
+        Err(e) => {
+            // A replica that can't preprocess can't serve; close the
+            // queue so requests bounce instead of waiting forever.
+            log::error!("serve replica failed to start: {e}");
+            ctx.batcher.close();
+            return;
+        }
+    };
+    while let Some(batch) = ctx.batcher.next_batch() {
+        let taken = Instant::now();
+        let n = batch.len();
+        engine.begin(n);
+        let t = Timer::start();
+        let mut failure: Option<String> = None;
+        for (bi, r) in batch.iter().enumerate() {
+            if let Err(e) = engine.stage(bi, &r.pixels) {
+                failure = Some(e.to_string());
+                break;
+            }
+        }
+        let ranked = match failure {
+            Some(msg) => Err(msg),
+            None => engine
+                .classify_staged(&ctx.store, ctx.topk)
+                .map_err(|e| e.to_string())
+                .and_then(|rows| {
+                    if rows.len() == n {
+                        Ok(rows)
+                    } else {
+                        Err(format!("backend returned {} rows for {n} requests", rows.len()))
+                    }
+                }),
+        };
+        let compute_secs = t.elapsed_secs();
+        {
+            let mut h = ctx.stats.hists.lock().unwrap();
+            for r in &batch {
+                h.queue.record(taken.duration_since(r.enqueued).as_secs_f64());
+            }
+            h.fill.record(taken.duration_since(batch[0].enqueued).as_secs_f64());
+            h.compute.record(compute_secs);
+            let slot = n.min(h.sizes.len() - 1);
+            h.sizes[slot] += 1;
+        }
+        ctx.stats.batches.fetch_add(1, Ordering::SeqCst);
+        if ranked.is_err() {
+            ctx.stats.errors.fetch_add(n as u64, Ordering::SeqCst);
+        }
+        let before = ctx.stats.served.fetch_add(n as u64, Ordering::SeqCst);
+        for (bi, r) in batch.into_iter().enumerate() {
+            let topk = match &ranked {
+                Ok(rows) => Ok(rows[bi].clone()),
+                Err(m) => Err(m.clone()),
+            };
+            // A receiver gone (client hung up mid-wait) is fine.
+            let _ = r.resp.send(Reply {
+                topk,
+                queue_secs: taken.duration_since(r.enqueued).as_secs_f64(),
+                compute_secs,
+                batch_size: n,
+            });
+        }
+        if before / LOG_EVERY != (before + n as u64) / LOG_EVERY {
+            log::info!("serve: {}", ctx.stats.snapshot().line(ctx.batcher.depth()));
+        }
+    }
+}
+
+/// What every connection handler needs.
+struct FrontCtx {
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    /// Expected `classify` payload: channels * hw * hw raw bytes.
+    input_bytes: usize,
+    /// Canned `hello` reply (model geometry for clients).
+    hello: String,
+}
+
+fn answer(line: &str, ctx: &FrontCtx) -> Option<String> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Some("err empty request".into());
+    }
+    let (verb, rest) = match line.split_once(' ') {
+        Some((v, r)) => (v, r.trim()),
+        None => (line, ""),
+    };
+    match verb {
+        "hello" => Some(ctx.hello.clone()),
+        "stats" => Some(format!("ok {}", ctx.stats.snapshot().line(ctx.batcher.depth()))),
+        "quit" => None,
+        "classify" => {
+            let pixels = match crate::serve::hex_decode(rest) {
+                Ok(p) => p,
+                Err(e) => return Some(format!("err {e}")),
+            };
+            if pixels.len() != ctx.input_bytes {
+                return Some(format!(
+                    "err payload is {} bytes, model wants {}",
+                    pixels.len(),
+                    ctx.input_bytes
+                ));
+            }
+            let (tx, rx) = mpsc::channel();
+            let req = Request { pixels, enqueued: Instant::now(), resp: tx };
+            if ctx.batcher.submit(req).is_err() {
+                return Some("err server shutting down".into());
+            }
+            match rx.recv() {
+                Ok(reply) => match reply.topk {
+                    Ok(rows) => {
+                        let mut s = String::from("ok");
+                        for (class, prob) in rows {
+                            // `{}` on f32 prints the shortest string
+                            // that round-trips: clients parsing this
+                            // recover the server's floats bit-exactly.
+                            s.push_str(&format!(" {class}:{prob}"));
+                        }
+                        Some(s)
+                    }
+                    Err(m) => Some(format!("err {m}")),
+                },
+                Err(_) => Some("err server shutting down".into()),
+            }
+        }
+        other => Some(format!("err unknown command {other:?}")),
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: Arc<FrontCtx>) {
+    let _ = stream.set_nodelay(true);
+    // Finite read timeout so a handler never wedges on a silent peer;
+    // on timeout the partial line stays buffered and reading resumes.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => return, // EOF
+            Ok(_) => {
+                let reply = answer(&line, &ctx);
+                line.clear();
+                match reply {
+                    Some(mut s) => {
+                        s.push('\n');
+                        if writer.write_all(s.as_bytes()).and_then(|_| writer.flush()).is_err() {
+                            return;
+                        }
+                    }
+                    None => {
+                        let _ = writer.write_all(b"ok bye\n");
+                        return;
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Keep whatever partial line accumulated; keep reading.
+                continue;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// A running serve instance.
+pub struct Server {
+    addr: SocketAddr,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    shutdown: Arc<AtomicBool>,
+    replicas: Vec<JoinHandle<()>>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spin up replicas + front end.  `store` already holds the
+    /// checkpoint; the corpus dir supplies the preprocessing constants
+    /// (`meta.json` geometry + `mean.f32`), same as eval.
+    pub fn start(cfg: &TrainConfig, store: Arc<ParamStore>, opts: ServeOpts) -> Result<Server> {
+        let meta_path = cfg.data.dir.join("meta.json");
+        let meta_src =
+            std::fs::read_to_string(&meta_path).map_err(|e| Error::io(&meta_path, e))?;
+        let meta = DatasetMeta::from_json(&meta_src)?;
+        let mean =
+            MeanImage::load(&cfg.data.dir.join("mean.f32"), meta.channels, meta.hw)?;
+
+        // Build every replica backend up front: a bad config fails
+        // loudly here, not inside a detached thread.
+        let replicas = opts.replicas.max(1);
+        let mut backends = Vec::with_capacity(replicas);
+        for _ in 0..replicas {
+            backends.push(crate::backend::build_eval_backend(cfg)?);
+        }
+        let first = &backends[0];
+        if !first.supports_eval() || !first.supports_predict() {
+            return Err(Error::msg(format!(
+                "backend {:?} cannot serve per-example predictions for model {:?}; \
+                 run with --backend native",
+                first.name(),
+                cfg.model
+            )));
+        }
+        let model = first.model();
+        if model.image_hw > meta.hw {
+            return Err(Error::Shape(format!(
+                "model crop {} larger than stored image {}",
+                model.image_hw, meta.hw
+            )));
+        }
+        let hello = format!(
+            "ok model={} hw={} channels={} classes={} topk={}",
+            cfg.model,
+            meta.hw,
+            meta.channels,
+            model.num_classes,
+            opts.topk.clamp(1, model.num_classes)
+        );
+
+        let batcher = Arc::new(Batcher::new(opts.max_batch, opts.deadline));
+        let stats = Arc::new(ServeStats::new(opts.max_batch.max(1)));
+        let ctx = ReplicaCtx {
+            store,
+            batcher: batcher.clone(),
+            stats: stats.clone(),
+            mean,
+            stored_hw: meta.hw,
+            topk: opts.topk,
+        };
+        let mut replica_handles = Vec::with_capacity(replicas);
+        for (i, backend) in backends.into_iter().enumerate() {
+            let ctx = ctx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("tmg-serve-r{i}"))
+                .spawn(move || replica_main(backend, ctx))
+                .map_err(Error::RawIo)?;
+            replica_handles.push(h);
+        }
+
+        let listener = TcpListener::bind(("127.0.0.1", opts.port)).map_err(Error::RawIo)?;
+        let addr = listener.local_addr().map_err(Error::RawIo)?;
+        listener.set_nonblocking(true).map_err(Error::RawIo)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let front = Arc::new(FrontCtx {
+            batcher: batcher.clone(),
+            stats: stats.clone(),
+            input_bytes: meta.channels * meta.hw * meta.hw,
+            hello,
+        });
+        let stop = shutdown.clone();
+        let accept = std::thread::Builder::new()
+            .name("tmg-serve-accept".into())
+            .spawn(move || loop {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let ctx = front.clone();
+                        // Handlers are detached: they exit on EOF, a
+                        // write failure, or a post-shutdown submit.
+                        let _ = std::thread::Builder::new()
+                            .name("tmg-serve-conn".into())
+                            .spawn(move || handle_conn(stream, ctx));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                }
+            })
+            .map_err(Error::RawIo)?;
+
+        log::info!(
+            "serve: listening on {addr} ({replicas} replica(s), max_batch {}, deadline {:?})",
+            opts.max_batch,
+            opts.deadline
+        );
+        Ok(Server {
+            addr,
+            batcher,
+            stats,
+            shutdown,
+            replicas: replica_handles,
+            accept: Some(accept),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Requests answered so far.
+    pub fn served(&self) -> u64 {
+        self.stats.served.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently waiting in the queue.
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+
+    /// Graceful stop: close the queue (pending requests drain — every
+    /// accepted `classify` still gets its answer), join the replicas,
+    /// then stop accepting.  Returns the final stats snapshot.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.batcher.close();
+        for h in self.replicas.drain(..) {
+            let _ = h.join();
+        }
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let snap = self.stats.snapshot();
+        log::info!("serve: drained; final {}", snap.line(0));
+        snap
+    }
+}

@@ -248,7 +248,9 @@ fn checkpoint_written_and_evaluable() {
     let mut store = theano_mgpu::params::ParamStore::init(&model.params, 0);
     let step = theano_mgpu::params::load_checkpoint(&path, &mut store).unwrap();
     assert_eq!(step, 4);
-    let r = theano_mgpu::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 2).unwrap();
+    let r = theano_mgpu::coordinator::eval::evaluate(&cfg, backend.as_mut(), &store, 2)
+        .unwrap()
+        .expect("val split present");
     assert!(r.examples > 0);
     assert!(r.mean_loss.is_finite());
 }

@@ -1,0 +1,130 @@
+//! Eval-path regression tests for the PR-8 bugfixes:
+//!
+//! - an empty/absent val split is a distinguishable "no data" outcome
+//!   (`Ok(None)`), not an `EvalResult::default()` masquerading as 100%
+//!   error;
+//! - the hoisted staging buffer in `Engine` produces *exactly* the
+//!   numbers the old fresh-`HostTensor::zeros`-per-batch loop produced,
+//!   including on the ragged final batch.
+
+use std::path::PathBuf;
+
+use theano_mgpu::backend::build_eval_backend;
+use theano_mgpu::config::{DataConfig, TrainConfig};
+use theano_mgpu::coordinator::eval::{evaluate, EvalResult};
+use theano_mgpu::data::loader::{open_split, open_split_optional};
+use theano_mgpu::data::preprocess::{preprocess_into, Augment};
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::tensor::{HostTensor, Shape};
+
+/// Generate a corpus with `val` validation examples (0 = no val split
+/// at all — `gen-data --val 0` writes no val shard files).
+fn corpus(tag: &str, val: usize) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmg_evalpath_{tag}_{}", std::process::id()));
+    if !dir.join("meta.json").exists() {
+        let spec = SynthSpec { classes: 10, hw: 36, seed: 5, ..Default::default() };
+        generate_dataset(&dir, &spec, 64, val, 64).unwrap();
+    }
+    dir
+}
+
+fn eval_cfg(tag: &str, val: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "native".into();
+    cfg.compute_threads = 1;
+    cfg.batch_per_worker = 8;
+    cfg.data = DataConfig {
+        dir: corpus(tag, val),
+        train_examples: 64,
+        val_examples: val,
+        shard_examples: 64,
+        seed: 5,
+        stored_hw: 36,
+    };
+    cfg
+}
+
+#[test]
+fn absent_val_split_is_none_not_full_error() {
+    let cfg = eval_cfg("noval", 0);
+    // The split truly is absent on disk...
+    assert!(open_split_optional(&cfg.data.dir, "val", 32, false).unwrap().is_none());
+    // ...while the train split opens fine through the same probe.
+    assert!(open_split_optional(&cfg.data.dir, "train", 32, false).unwrap().is_some());
+    // And evaluate() reports "nothing to measure" instead of the old
+    // EvalResult::default() (whose top1_error() read as 100%).
+    let mut backend = build_eval_backend(&cfg).unwrap();
+    let store = ParamStore::init(&backend.model().params, 1);
+    let r = evaluate(&cfg, backend.as_mut(), &store, 0).unwrap();
+    assert!(r.is_none());
+    // Real errors still surface as errors, not None: a corpus dir that
+    // does not exist is not "no data".
+    let mut bad = cfg.clone();
+    bad.data.dir = PathBuf::from("/nonexistent/tmg_corpus");
+    assert!(evaluate(&bad, backend.as_mut(), &store, 0).is_err());
+}
+
+/// The old eval loop, verbatim: a fresh zeroed tensor every batch.
+/// Kept here as the reference the hoisted-buffer path must match.
+fn evaluate_fresh_alloc(cfg: &TrainConfig, store: &ParamStore) -> EvalResult {
+    let mut backend = build_eval_backend(cfg).unwrap();
+    let batch = cfg.batch_per_worker.max(1);
+    let crop_hw = backend.model().image_hw;
+    let (mut dataset, mean) = open_split(&cfg.data.dir, "val", crop_hw, false).unwrap();
+    let stored_hw = dataset.height;
+    let channels = dataset.channels;
+    let total = dataset.len();
+    let mut out = EvalResult::default();
+    let mut loss_sum = 0f64;
+    let mut pix_buf: Vec<u8> = Vec::new();
+    let stride = channels * crop_hw * crop_hw;
+    let mut start = 0usize;
+    while start < total {
+        let n = (total - start).min(batch);
+        let mut images = HostTensor::zeros(Shape::of(&[n, channels, crop_hw, crop_hw]));
+        let mut labels = Vec::with_capacity(n);
+        let slice = images.as_mut_slice();
+        for bi in 0..n {
+            let label = dataset.read_into(start + bi, &mut pix_buf).unwrap();
+            preprocess_into(
+                &pix_buf,
+                &mean,
+                stored_hw,
+                crop_hw,
+                Augment::center(stored_hw, crop_hw),
+                &mut slice[bi * stride..(bi + 1) * stride],
+            )
+            .unwrap();
+            labels.push(label as i32);
+        }
+        let r = backend.eval_batch(&images, &labels, store).unwrap();
+        loss_sum += r.loss as f64 * n as f64;
+        out.top1_correct += r.top1 as usize;
+        out.top5_correct += r.top5 as usize;
+        out.examples += n;
+        start += n;
+    }
+    out.mean_loss = (loss_sum / out.examples as f64) as f32;
+    out
+}
+
+#[test]
+fn hoisted_buffer_matches_fresh_alloc_including_ragged_tail() {
+    // 20 examples at batch 8: two full batches + a ragged 4 — the
+    // reused buffer must shrink-to-fit logically (begin(n)) and still
+    // produce identical numbers.
+    let cfg = eval_cfg("reuse", 20);
+    let mut backend = build_eval_backend(&cfg).unwrap();
+    let store = ParamStore::init(&backend.model().params, 3);
+    let reused = evaluate(&cfg, backend.as_mut(), &store, 0).unwrap().expect("val present");
+    assert_eq!(reused.examples, 20, "ragged tail must be evaluated");
+    let fresh = evaluate_fresh_alloc(&cfg, &store);
+    // Exact equality — same counts AND bit-equal mean loss.
+    assert_eq!(reused, fresh);
+    assert_eq!(reused.mean_loss.to_bits(), fresh.mean_loss.to_bits());
+    // max_batches semantics unchanged: cap at 1 batch of 8.
+    let capped = evaluate(&cfg, backend.as_mut(), &store, 1).unwrap().unwrap();
+    assert_eq!(capped.examples, 8);
+}

@@ -1,0 +1,244 @@
+//! Serve-level integration tests: dynamic batching (deadline AND
+//! max-batch flush), bit-identical answers vs the eval path on the
+//! same parameters, and graceful shutdown draining in-flight requests.
+//!
+//! Everything runs in-process on the native backend over an ephemeral
+//! 127.0.0.1 port — no artifacts, no fixed port collisions.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use theano_mgpu::config::{DataConfig, TrainConfig};
+use theano_mgpu::coordinator::eval::{evaluate, Engine};
+use theano_mgpu::data::loader::open_split;
+use theano_mgpu::params::ParamStore;
+use theano_mgpu::serve::loadgen::ServeClient;
+use theano_mgpu::serve::{hex_encode, ServeOpts, Server};
+
+const VAL: usize = 24;
+
+fn corpus(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmg_serve_{tag}_{}", std::process::id()));
+    if !dir.join("meta.json").exists() {
+        let spec =
+            theano_mgpu::data::synth::SynthSpec { classes: 10, hw: 36, seed: 9, ..Default::default() };
+        theano_mgpu::data::synth::generate_dataset(&dir, &spec, 64, VAL, 64).unwrap();
+    }
+    dir
+}
+
+fn serve_cfg(tag: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::default();
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "native".into();
+    cfg.compute_threads = 1;
+    cfg.batch_per_worker = 8;
+    cfg.data = DataConfig {
+        dir: corpus(tag),
+        train_examples: 64,
+        val_examples: VAL,
+        shard_examples: 64,
+        seed: 9,
+        stored_hw: 36,
+    };
+    cfg
+}
+
+fn start(tag: &str, seed: u64, opts: ServeOpts) -> (TrainConfig, Arc<ParamStore>, Server) {
+    let cfg = serve_cfg(tag);
+    let model = theano_mgpu::backend::resolve_model(&cfg).unwrap();
+    let store = Arc::new(ParamStore::init(&model.params, seed));
+    let server = Server::start(&cfg, store.clone(), opts).unwrap();
+    (cfg, store, server)
+}
+
+/// Raw stored-size pixels + label of one val example.
+fn val_examples(cfg: &TrainConfig) -> Vec<(Vec<u8>, i32)> {
+    let (mut dataset, _mean) = open_split(&cfg.data.dir, "val", 32, false).unwrap();
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+    for i in 0..dataset.len() {
+        let label = dataset.read_into(i, &mut buf).unwrap();
+        out.push((buf.clone(), label as i32));
+    }
+    out
+}
+
+fn parse_topk(reply: &str) -> Vec<(usize, f32)> {
+    assert!(reply.starts_with("ok "), "bad reply: {reply}");
+    reply
+        .split_whitespace()
+        .skip(1)
+        .map(|kv| {
+            let (c, p) = kv.split_once(':').expect("class:prob");
+            (c.parse::<usize>().unwrap(), p.parse::<f32>().unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn lone_request_flushes_on_deadline() {
+    let opts = ServeOpts {
+        replicas: 1,
+        max_batch: 8,
+        deadline: Duration::from_millis(40),
+        ..ServeOpts::default()
+    };
+    let (cfg, _store, server) = start("deadline", 1, opts);
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let info = client.hello().unwrap();
+    assert_eq!(info.hw, 36);
+    assert_eq!(info.classes, 10);
+    let (pixels, _) = val_examples(&cfg).remove(0);
+    let t = Instant::now();
+    let reply = client.request(&format!("classify {}", hex_encode(&pixels))).unwrap();
+    let elapsed = t.elapsed();
+    assert!(reply.starts_with("ok "), "{reply}");
+    // One lone request against max_batch 8: only the deadline can have
+    // released it, and not before it aged.
+    assert!(elapsed >= Duration::from_millis(20), "answered at {elapsed:?} — before deadline");
+    let stats = client.request("stats").unwrap();
+    assert!(stats.contains("served=1"), "{stats}");
+    assert!(stats.contains("batches=1"), "{stats}");
+    assert!(stats.contains("queue_p50_ms="), "{stats}");
+    let snap = server.shutdown();
+    assert_eq!((snap.served, snap.batches, snap.errors), (1, 1, 0));
+}
+
+#[test]
+fn concurrent_requests_flush_on_max_batch() {
+    // Deadline an hour away: the only way these four requests get
+    // answered promptly is the size flush forming one batch of 4.
+    let opts = ServeOpts {
+        replicas: 1,
+        max_batch: 4,
+        deadline: Duration::from_secs(3600),
+        ..ServeOpts::default()
+    };
+    let (cfg, _store, server) = start("maxbatch", 1, opts);
+    let addr = server.addr().to_string();
+    let examples = val_examples(&cfg);
+    let handles: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            let payload = hex_encode(&examples[i].0);
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr, Duration::from_secs(10)).unwrap();
+                c.request(&format!("classify {payload}")).unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.starts_with("ok "), "{reply}");
+    }
+    assert_eq!(server.stats().size_counts()[4], 1, "one batch of exactly 4");
+    let snap = server.shutdown();
+    assert_eq!((snap.served, snap.batches, snap.errors), (4, 1, 0));
+    assert!((snap.mean_fill - 4.0).abs() < 1e-9);
+}
+
+#[test]
+fn replies_bit_identical_to_eval_path() {
+    // Same parameters, two routes: (a) the evaluator walking the val
+    // split in fixed batches of 8, (b) the server answering per-request
+    // with dynamically formed batches.  Top-1/top-5 agreement must be
+    // exact, and each wire probability must parse back to the very bits
+    // the local Engine computes.
+    let opts = ServeOpts {
+        replicas: 2,
+        max_batch: 4,
+        deadline: Duration::from_millis(2),
+        topk: 5,
+        port: 0,
+    };
+    let (cfg, store, server) = start("bitident", 33, opts);
+    let addr = server.addr().to_string();
+    let examples = val_examples(&cfg);
+
+    // (a) the eval path.
+    let mut backend = theano_mgpu::backend::build_eval_backend(&cfg).unwrap();
+    let eval = evaluate(&cfg, backend.as_mut(), &store, 0).unwrap().expect("val present");
+    assert_eq!(eval.examples, VAL);
+
+    // Local reference predictions through the same Engine the replicas
+    // use, whole split staged as one batch.
+    let (dataset, mean) = open_split(&cfg.data.dir, "val", 32, false).unwrap();
+    let stored_hw = dataset.height;
+    let mut engine = Engine::new(backend.as_mut(), mean, stored_hw).unwrap();
+    engine.begin(examples.len());
+    for (bi, (pixels, _)) in examples.iter().enumerate() {
+        engine.stage(bi, pixels).unwrap();
+    }
+    let local = engine.classify_staged(&store, 5).unwrap();
+
+    // (b) the serve path, one request per example over one connection;
+    // concurrent deadline flushes on the two replicas form small ragged
+    // batches.
+    let mut client = ServeClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let (mut top1, mut top5) = (0usize, 0usize);
+    for (i, (pixels, label)) in examples.iter().enumerate() {
+        let reply = client.request(&format!("classify {}", hex_encode(pixels))).unwrap();
+        let served = parse_topk(&reply);
+        assert_eq!(served.len(), 5);
+        if served[0].0 == *label as usize {
+            top1 += 1;
+        }
+        if served.iter().any(|&(c, _)| c == *label as usize) {
+            top5 += 1;
+        }
+        // Bit-exact agreement with the local engine, example by
+        // example: same classes, same float bits after the wire
+        // round-trip (f32 Display prints shortest-roundtrip decimals).
+        let want: Vec<(usize, u32)> = local[i].iter().map(|&(c, p)| (c, p.to_bits())).collect();
+        let got: Vec<(usize, u32)> = served.iter().map(|&(c, p)| (c, p.to_bits())).collect();
+        assert_eq!(got, want, "example {i}");
+    }
+    assert_eq!(top1, eval.top1_correct, "serve top-1 diverged from tmg eval");
+    assert_eq!(top5, eval.top5_correct, "serve top-5 diverged from tmg eval");
+    let snap = server.shutdown();
+    assert_eq!(snap.served, VAL as u64);
+    assert_eq!(snap.errors, 0);
+    assert!(snap.batches >= 1);
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    // Six requests parked behind an hour-long deadline and an
+    // unreachable max batch: shutdown must flush and answer all of
+    // them — drain, not drop.
+    let opts = ServeOpts {
+        replicas: 1,
+        max_batch: 64,
+        deadline: Duration::from_secs(3600),
+        ..ServeOpts::default()
+    };
+    let (cfg, _store, server) = start("drain", 1, opts);
+    let addr = server.addr().to_string();
+    let examples = val_examples(&cfg);
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let addr = addr.clone();
+            let payload = hex_encode(&examples[i].0);
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(&addr, Duration::from_secs(10)).unwrap();
+                c.request(&format!("classify {payload}")).unwrap()
+            })
+        })
+        .collect();
+    // Wait until all six are actually queued (not merely connected)
+    // before pulling the plug.
+    let t = Instant::now();
+    while server.queue_depth() < 6 {
+        assert!(t.elapsed() < Duration::from_secs(30), "requests never queued");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = server.shutdown();
+    for h in handles {
+        let reply = h.join().unwrap();
+        assert!(reply.starts_with("ok "), "in-flight request dropped: {reply}");
+    }
+    assert_eq!((snap.served, snap.batches, snap.errors), (6, 1, 0));
+}
