@@ -13,7 +13,7 @@ include!("harness.rs");
 
 use theano_mgpu::backend::{NativeBackend, StepBackend};
 use theano_mgpu::params::ParamStore;
-use theano_mgpu::sim::flops::{alexnet_micro, alexnet_tiny, ArchDesc};
+use theano_mgpu::sim::flops::{alexnet_micro, alexnet_tiny, alexnet_tiny_faithful, ArchDesc};
 use theano_mgpu::tensor::{HostTensor, Shape};
 use theano_mgpu::util::Pcg32;
 
@@ -82,6 +82,13 @@ fn main() {
     let tiny_med = step_median(&mut b, &tiny, 16, 1, 1, 3);
     b.record("alexnet-tiny b16 images/sec", 16.0 / tiny_med, "img/s");
 
+    // The grouped-conv + LRN step cost (tiny geometry, faithful
+    // structure): tracks what the per-group GEMM panels and the LRN
+    // window pass cost relative to the ungrouped tiny step above.
+    let faithful = alexnet_tiny_faithful();
+    let faithful_med = step_median(&mut b, &faithful, 16, 1, 1, 3);
+    b.record("alexnet-tiny-faithful b16 images/sec", 16.0 / faithful_med, "img/s");
+
     b.write_csv();
 
     // Machine-readable perf record (consumed by CI / trend tracking).
@@ -93,13 +100,17 @@ fn main() {
     let json = format!(
         "{{\"bench\": \"native_step\", \"model\": \"{}\", \"batch\": {micro_batch}, \
          \"gemm_isa\": \"{}\", \"median_step_seconds\": {base:.6}, \"steps_per_sec\": {:.3}, \
-         \"images_per_sec\": {:.3}, \"available_cores\": {}, \"sweep\": [{}]}}\n",
+         \"images_per_sec\": {:.3}, \"available_cores\": {}, \"sweep\": [{}], \
+         \"grouped_lrn\": {{\"model\": \"{}\", \"batch\": 16, \
+         \"median_step_seconds\": {faithful_med:.6}, \"images_per_sec\": {:.3}}}}}\n",
         micro.name,
         theano_mgpu::backend::native::simd::active_isa(),
         1.0 / base,
         micro_batch as f64 / base,
         theano_mgpu::util::available_cores(),
-        sweep_rows.join(", ")
+        sweep_rows.join(", "),
+        faithful.name,
+        16.0 / faithful_med
     );
     let _ = std::fs::write(&path, json);
     println!("  -> {}", path.display());

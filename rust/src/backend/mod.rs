@@ -272,7 +272,11 @@ pub fn resolve_model(cfg: &TrainConfig) -> Result<ModelSpec> {
 
 fn native_model(cfg: &TrainConfig) -> Result<ModelSpec> {
     let arch = arch_by_name(&cfg.model).ok_or_else(|| {
-        crate::error::Error::msg(format!("model {:?} is not a known architecture", cfg.model))
+        crate::error::Error::msg(format!(
+            "model {:?} is not a known architecture (known models: {})",
+            cfg.model,
+            crate::sim::flops::known_arch_names().join(", ")
+        ))
     })?;
     Ok(native::model::model_spec_of(&arch))
 }

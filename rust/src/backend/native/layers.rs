@@ -1,4 +1,5 @@
-//! The layer zoo: im2col convolution, ReLU, max-pool, fully-connected,
+//! The layer zoo: im2col convolution (grouped or plain), cross-channel
+//! local response normalization, ReLU, max-pool, fully-connected,
 //! inverted dropout and softmax cross-entropy — forward *and* backward,
 //! in pure Rust over flat `f32` slices.
 //!
@@ -42,7 +43,17 @@ use crate::backend::native::pool::{
 };
 use crate::util::Pcg32;
 
-/// Geometry of one conv layer (weights `[cout, cin, k, k]`).
+/// Geometry of one conv layer (weights `[cout, cin/groups, k, k]`).
+///
+/// `groups > 1` splits the channels into independent filter groups
+/// (the two-GPU split of Krizhevsky 2012 baked into the architecture):
+/// group `g` convolves input channels `[g·cin/G, (g+1)·cin/G)` into
+/// output channels `[g·cout/G, (g+1)·cout/G)`.  Both channel ranges and
+/// the group's weight block are contiguous in the NCHW / `[cout, …]`
+/// layouts, so every grouped kernel is the ungrouped kernel applied to
+/// `G` slices — at `groups == 1` the loops degenerate to the exact
+/// ungrouped call sequence (same GEMMs, same accumulation order,
+/// bitwise identical).
 #[derive(Clone, Copy, Debug)]
 pub struct Conv2dShape {
     pub batch: usize,
@@ -53,6 +64,7 @@ pub struct Conv2dShape {
     pub pad: usize,
     pub in_hw: usize,
     pub out_hw: usize,
+    pub groups: usize,
 }
 
 impl Conv2dShape {
@@ -66,14 +78,30 @@ impl Conv2dShape {
         self.cout * self.out_hw * self.out_hw
     }
 
-    /// Elements of the per-example im2col buffer `[cin·k², out_hw²]`.
+    /// Elements of the per-example im2col staging: `groups` panels of
+    /// `[(cin/groups)·k², out_hw²]` back to back — totalling
+    /// `cin·k²·out_hw²` regardless of the group count.
     pub fn col_elems(&self) -> usize {
         self.cin * self.k * self.k * self.out_hw * self.out_hw
     }
 
-    /// Elements of the weight tensor `[cout, cin, k, k]`.
+    /// Elements of the weight tensor `[cout, cin/groups, k, k]`.
     pub fn w_elems(&self) -> usize {
-        self.cout * self.cin * self.k * self.k
+        self.cout * (self.cin / self.groups) * self.k * self.k
+    }
+
+    /// The per-group sub-problem: an ungrouped conv over `cin/groups`
+    /// input and `cout/groups` output channels, same geometry otherwise.
+    pub fn group_shape(&self) -> Conv2dShape {
+        debug_assert!(self.groups >= 1);
+        debug_assert_eq!(self.cin % self.groups, 0);
+        debug_assert_eq!(self.cout % self.groups, 0);
+        Conv2dShape {
+            cin: self.cin / self.groups,
+            cout: self.cout / self.groups,
+            groups: 1,
+            ..*self
+        }
     }
 }
 
@@ -158,9 +186,12 @@ pub fn col2im(col: &[f32], s: &Conv2dShape, dx: &mut [f32]) {
     }
 }
 
-/// One example of the conv forward: `ye = W · im2col(xe) + b`.  `col`
-/// receives the example's columns (the backward pass reuses them when
-/// the caller keeps a batch-wide cache).
+/// One example of the conv forward: per group `g`,
+/// `ye[g] = W[g] · im2col(xe[g]) + b[g]` over the group's contiguous
+/// channel/weight slices.  `col` receives the example's columns, one
+/// group panel after another (the backward pass reuses them when the
+/// caller keeps a batch-wide cache).  With `groups == 1` this is the
+/// plain ungrouped forward, bit for bit.
 fn conv2d_forward_one(
     xe: &[f32],
     w: &[f32],
@@ -170,15 +201,23 @@ fn conv2d_forward_one(
     pack: &mut PackBuf,
     s: &Conv2dShape,
 ) {
-    let ohw = s.out_hw * s.out_hw;
-    let ck2 = s.cin * s.k * s.k;
-    im2col(xe, s, col);
-    ye.fill(0.0);
-    matmul_nn_ws(s.cout, ck2, ohw, w, col, ye, pack);
-    for (co, yrow) in ye.chunks_exact_mut(ohw).enumerate() {
-        let bias = b[co];
-        for v in yrow {
-            *v += bias;
+    let gs = s.group_shape();
+    let ohw = gs.out_hw * gs.out_hw;
+    let ck2 = gs.cin * gs.k * gs.k;
+    let (g_in, g_out, g_col, g_w) = (gs.in_elems(), gs.out_elems(), gs.col_elems(), gs.w_elems());
+    for g in 0..s.groups {
+        let xg = &xe[g * g_in..(g + 1) * g_in];
+        let wg = &w[g * g_w..(g + 1) * g_w];
+        let colg = &mut col[g * g_col..(g + 1) * g_col];
+        let yg = &mut ye[g * g_out..(g + 1) * g_out];
+        im2col(xg, &gs, colg);
+        yg.fill(0.0);
+        matmul_nn_ws(gs.cout, ck2, ohw, wg, colg, yg, pack);
+        for (co, yrow) in yg.chunks_exact_mut(ohw).enumerate() {
+            let bias = b[g * gs.cout + co];
+            for v in yrow {
+                *v += bias;
+            }
         }
     }
 }
@@ -278,18 +317,29 @@ fn conv2d_backward_cols(
     pack: &mut PackBuf,
     s: &Conv2dShape,
 ) {
-    let ohw = s.out_hw * s.out_hw;
-    let ck2 = s.cin * s.k * s.k;
-    for (co, dyrow) in dye.chunks_exact(ohw).enumerate() {
-        db[co] += dyrow.iter().sum::<f32>();
+    let gs = s.group_shape();
+    let ohw = gs.out_hw * gs.out_hw;
+    let ck2 = gs.cin * gs.k * gs.k;
+    let (g_in, g_out, g_col, g_w) = (gs.in_elems(), gs.out_elems(), gs.col_elems(), gs.w_elems());
+    for g in 0..s.groups {
+        let colg = &col[g * g_col..(g + 1) * g_col];
+        let wg = &w[g * g_w..(g + 1) * g_w];
+        let dyg = &dye[g * g_out..(g + 1) * g_out];
+        let dwg = &mut dw[g * g_w..(g + 1) * g_w];
+        let dbg = &mut db[g * gs.cout..(g + 1) * gs.cout];
+        let dxg = &mut dxe[g * g_in..(g + 1) * g_in];
+        for (co, dyrow) in dyg.chunks_exact(ohw).enumerate() {
+            dbg[co] += dyrow.iter().sum::<f32>();
+        }
+        // dW[g] += dY[g] · col[g]ᵀ
+        matmul_nt_ws(gs.cout, ohw, ck2, dyg, colg, dwg, pack);
+        // dcol = W[g]ᵀ · dY[g], then fold back onto the group's planes.
+        let dcolg = &mut dcol[..g_col];
+        dcolg.fill(0.0);
+        matmul_tn_ws(ck2, gs.cout, ohw, wg, dyg, dcolg, pack);
+        dxg.fill(0.0);
+        col2im(dcolg, &gs, dxg);
     }
-    // dW += dY · colᵀ
-    matmul_nt_ws(s.cout, ohw, ck2, dye, col, dw, pack);
-    // dcol = Wᵀ · dY, then fold back onto the input planes.
-    dcol.fill(0.0);
-    matmul_tn_ws(ck2, s.cout, ohw, w, dye, dcol, pack);
-    dxe.fill(0.0);
-    col2im(dcol, s, dxe);
 }
 
 /// Batched conv backward (serial reference).  `dw`/`db` accumulate,
@@ -440,6 +490,163 @@ pub fn conv2d_backward_pool(
             *d += g;
         }
     }
+}
+
+/// Geometry + constants of one cross-channel LRN layer (NCHW).
+///
+/// Matches python/compile/kernels/ref.py::lrn_ref:
+/// `y_c = x_c / (bias + (alpha/n) · Σ_{|c'-c| ≤ radius} x_{c'}²)^beta`
+/// with `n = 2·radius + 1` and the window clipped at the channel edges.
+#[derive(Clone, Copy, Debug)]
+pub struct LrnShape {
+    pub batch: usize,
+    pub channels: usize,
+    pub hw: usize,
+    pub radius: usize,
+    pub bias: f32,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl LrnShape {
+    /// Elements of one example (input and output shapes are equal).
+    pub fn elems(&self) -> usize {
+        self.channels * self.hw * self.hw
+    }
+
+    /// The `alpha/n` window-normalized coefficient.
+    fn alpha_over_n(&self) -> f32 {
+        self.alpha / (2 * self.radius + 1) as f32
+    }
+
+    /// Window sum of squares around channel `c` at in-plane offset `p`.
+    #[inline]
+    fn sq_window(&self, xe: &[f32], c: usize, p: usize) -> f32 {
+        let plane = self.hw * self.hw;
+        let lo = c.saturating_sub(self.radius);
+        let hi = (c + self.radius).min(self.channels - 1);
+        let mut sum = 0.0f32;
+        for cc in lo..=hi {
+            let v = xe[cc * plane + p];
+            sum += v * v;
+        }
+        sum
+    }
+}
+
+/// One example of the LRN forward.
+fn lrn_forward_one(xe: &[f32], ye: &mut [f32], s: &LrnShape) {
+    let plane = s.hw * s.hw;
+    let a = s.alpha_over_n();
+    for p in 0..plane {
+        for c in 0..s.channels {
+            let base = s.bias + a * s.sq_window(xe, c, p);
+            ye[c * plane + p] = xe[c * plane + p] / base.powf(s.beta);
+        }
+    }
+}
+
+/// One example of the LRN backward, differentiating the reference
+/// formula at the saved input `xe` (the scale denominators are
+/// recomputed from it, exactly like the Python reference's vjp):
+///
+/// with `base_c = bias + a·Σ_W x²` and `y_c = x_c · base_c^{-β}`,
+///
+/// `dx_m = dy_m · base_m^{-β}
+///         − 2aβ · x_m · Σ_{c ∈ W(m)} dy_c · y_c / base_c`.
+fn lrn_backward_one(xe: &[f32], ye: &[f32], dye: &[f32], dxe: &mut [f32], s: &LrnShape) {
+    let plane = s.hw * s.hw;
+    let a = s.alpha_over_n();
+    let two_ab = 2.0 * a * s.beta;
+    for p in 0..plane {
+        for m in 0..s.channels {
+            let base_m = s.bias + a * s.sq_window(xe, m, p);
+            let lo = m.saturating_sub(s.radius);
+            let hi = (m + s.radius).min(s.channels - 1);
+            let mut corr = 0.0f32;
+            for c in lo..=hi {
+                let base_c = s.bias + a * s.sq_window(xe, c, p);
+                corr += dye[c * plane + p] * ye[c * plane + p] / base_c;
+            }
+            dxe[m * plane + p] =
+                dye[m * plane + p] * base_m.powf(-s.beta) - two_ab * xe[m * plane + p] * corr;
+        }
+    }
+}
+
+/// Batched LRN forward (serial reference).
+pub fn lrn_forward(x: &[f32], y: &mut [f32], s: &LrnShape) {
+    let n = s.elems();
+    debug_assert_eq!(x.len(), s.batch * n);
+    debug_assert_eq!(y.len(), s.batch * n);
+    for bi in 0..s.batch {
+        lrn_forward_one(&x[bi * n..(bi + 1) * n], &mut y[bi * n..(bi + 1) * n], s);
+    }
+}
+
+/// Batch-parallel [`lrn_forward`].  Every output element is a pure
+/// function of its own example's channel window and examples land in
+/// disjoint chunks, so this is bitwise equal to the serial form for any
+/// lane count.
+pub fn lrn_forward_pool(pool: &ComputePool, x: &[f32], y: &mut [f32], s: &LrnShape) {
+    let n = s.elems();
+    debug_assert_eq!(x.len(), s.batch * n);
+    debug_assert_eq!(y.len(), s.batch * n);
+    let (n_chunks, per) = shape_chunks(s.batch);
+    let y_ptr = SendPtr::new(y.as_mut_ptr());
+    pool.run_chunks(n_chunks, &|_lane, ci| {
+        for bi in ci * per..((ci + 1) * per).min(s.batch) {
+            let xe = &x[bi * n..(bi + 1) * n];
+            // SAFETY: example bi's output slice belongs to exactly one
+            // chunk.
+            let ye = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(bi * n), n) };
+            lrn_forward_one(xe, ye, s);
+        }
+    });
+}
+
+/// Batched LRN backward (serial reference).  `x`/`y` are the saved
+/// layer input and output; `dx` is overwritten.
+pub fn lrn_backward(x: &[f32], y: &[f32], dy: &[f32], dx: &mut [f32], s: &LrnShape) {
+    let n = s.elems();
+    debug_assert_eq!(dy.len(), s.batch * n);
+    debug_assert_eq!(dx.len(), s.batch * n);
+    for bi in 0..s.batch {
+        lrn_backward_one(
+            &x[bi * n..(bi + 1) * n],
+            &y[bi * n..(bi + 1) * n],
+            &dy[bi * n..(bi + 1) * n],
+            &mut dx[bi * n..(bi + 1) * n],
+            s,
+        );
+    }
+}
+
+/// Batch-parallel [`lrn_backward`] (disjoint `dx` example slices;
+/// bitwise equal to the serial form for any lane count).
+pub fn lrn_backward_pool(
+    pool: &ComputePool,
+    x: &[f32],
+    y: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    s: &LrnShape,
+) {
+    let n = s.elems();
+    debug_assert_eq!(dy.len(), s.batch * n);
+    debug_assert_eq!(dx.len(), s.batch * n);
+    let (n_chunks, per) = shape_chunks(s.batch);
+    let dx_ptr = SendPtr::new(dx.as_mut_ptr());
+    pool.run_chunks(n_chunks, &|_lane, ci| {
+        for bi in ci * per..((ci + 1) * per).min(s.batch) {
+            let xe = &x[bi * n..(bi + 1) * n];
+            let ye = &y[bi * n..(bi + 1) * n];
+            let dye = &dy[bi * n..(bi + 1) * n];
+            // SAFETY: example bi's dx slice belongs to exactly one chunk.
+            let dxe = unsafe { std::slice::from_raw_parts_mut(dx_ptr.get().add(bi * n), n) };
+            lrn_backward_one(xe, ye, dye, dxe, s);
+        }
+    });
 }
 
 /// In-place ReLU.
@@ -808,6 +1015,7 @@ mod tests {
             pad: 0,
             in_hw: 3,
             out_hw: 3,
+            groups: 1,
         };
         let x: Vec<f32> = (0..18).map(|v| v as f32).collect();
         let mut col = vec![0.0; s.col_elems()];
@@ -828,6 +1036,7 @@ mod tests {
             pad: 1,
             in_hw: 5,
             out_hw: 3,
+            groups: 1,
         };
         let mut rng = crate::util::Pcg32::seeded(4);
         let mut x = vec![0.0; s.in_elems()];
@@ -841,6 +1050,102 @@ mod tests {
         col2im(&c, &s, &mut folded);
         let rhs: f64 = x.iter().zip(&folded).map(|(a, b)| (a * b) as f64).sum();
         assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn grouped_conv_is_two_stacked_half_convs() {
+        // A groups=2 conv must equal two independent ungrouped convs
+        // over the channel halves, bit for bit (slice-wise dispatch).
+        let s = Conv2dShape {
+            batch: 2,
+            cin: 4,
+            cout: 6,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            in_hw: 5,
+            out_hw: 5,
+            groups: 2,
+        };
+        let gs = s.group_shape();
+        let mut rng = crate::util::Pcg32::seeded(11);
+        let mut x = vec![0.0; s.batch * s.in_elems()];
+        let mut w = vec![0.0; s.w_elems()];
+        let mut b = vec![0.0; s.cout];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut w, 0.5);
+        rng.fill_normal(&mut b, 0.1);
+        let mut y = vec![0.0; s.batch * s.out_elems()];
+        let mut col = vec![0.0; s.col_elems()];
+        conv2d_forward(&x, &w, &b, &mut y, &mut col, &s);
+        // Reference: run each group as its own ungrouped batched conv.
+        let (g_in, g_out, g_w) = (gs.in_elems(), gs.out_elems(), gs.w_elems());
+        let mut gcol = vec![0.0; gs.col_elems()];
+        for g in 0..s.groups {
+            let mut xg = vec![0.0; s.batch * g_in];
+            for bi in 0..s.batch {
+                xg[bi * g_in..(bi + 1) * g_in].copy_from_slice(
+                    &x[bi * s.in_elems() + g * g_in..bi * s.in_elems() + (g + 1) * g_in],
+                );
+            }
+            let wg = &w[g * g_w..(g + 1) * g_w];
+            let bg = &b[g * gs.cout..(g + 1) * gs.cout];
+            let mut yg = vec![0.0; s.batch * g_out];
+            conv2d_forward(&xg, wg, bg, &mut yg, &mut gcol, &gs);
+            for bi in 0..s.batch {
+                assert_eq!(
+                    &yg[bi * g_out..(bi + 1) * g_out],
+                    &y[bi * s.out_elems() + g * g_out..bi * s.out_elems() + (g + 1) * g_out],
+                    "group {g} example {bi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lrn_forward_matches_hand_formula() {
+        // 3 channels, radius 1: check one element against the formula.
+        let s = LrnShape {
+            batch: 1,
+            channels: 3,
+            hw: 1,
+            radius: 1,
+            bias: 2.0,
+            alpha: 0.3,
+            beta: 0.75,
+        };
+        let x = vec![1.0f32, -2.0, 3.0];
+        let mut y = vec![0.0f32; 3];
+        lrn_forward(&x, &mut y, &s);
+        let a = 0.3f32 / 3.0;
+        // Channel 1 sees the full window {1, -2, 3}.
+        let want = -2.0 / (2.0 + a * (1.0 + 4.0 + 9.0)).powf(0.75);
+        assert!((y[1] - want).abs() < 1e-6, "{} vs {want}", y[1]);
+        // Channel 0's window clips to {1, -2}.
+        let want0 = 1.0 / (2.0 + a * (1.0 + 4.0)).powf(0.75);
+        assert!((y[0] - want0).abs() < 1e-6, "{} vs {want0}", y[0]);
+    }
+
+    #[test]
+    fn lrn_zero_alpha_is_a_pure_scale() {
+        // alpha = 0 collapses LRN to y = x / bias^beta.
+        let s = LrnShape {
+            batch: 2,
+            channels: 4,
+            hw: 3,
+            radius: 2,
+            bias: 4.0,
+            alpha: 0.0,
+            beta: 0.5,
+        };
+        let mut rng = crate::util::Pcg32::seeded(5);
+        let mut x = vec![0.0; s.batch * s.elems()];
+        rng.fill_normal(&mut x, 1.0);
+        let mut y = vec![0.0; x.len()];
+        lrn_forward(&x, &mut y, &s);
+        for (v, o) in x.iter().zip(&y) {
+            assert!((o - v / 2.0).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -2,8 +2,9 @@
 //! Rust, no artifacts, no PJRT.
 //!
 //! This is the reproduction's Caffe-style reference path (Jia et al.,
-//! 2014): im2col + packed register-blocked SGEMM convolutions (the
-//! columns staged once per step and reused by the backward pass), ReLU,
+//! 2014): im2col + packed register-blocked SGEMM convolutions (grouped
+//! or plain, the columns staged once per step and reused by the
+//! backward pass), ReLU, cross-channel local response normalization,
 //! max-pool, fully-connected layers with inverted dropout, softmax
 //! cross-entropy and the SGD-momentum update — the same math the
 //! paper's Theano functions computed per GPU, driven by the same
@@ -30,13 +31,14 @@ use crate::backend::{EvalBatchOut, GradSink, StepBackend, TopK, TrainStepOut};
 use crate::error::{Error, Result};
 use crate::params::ParamStore;
 use crate::runtime::ModelSpec;
-use crate::sim::flops::{arch_by_name, ArchDesc};
+use crate::sim::flops::{arch_by_name, known_arch_names, ArchDesc};
 use crate::tensor::HostTensor;
 
 use self::layers::{
     conv2d_backward_pool, conv2d_forward_pool, dropout_backward, dropout_forward, fc_backward_pool,
-    fc_forward_pool, maxpool_backward_pool, maxpool_forward_pool, relu_backward_pool,
-    relu_forward_pool, softmax_xent, topk_correct, Conv2dShape, FcShape, PoolShape,
+    fc_forward_pool, lrn_backward_pool, lrn_forward_pool, maxpool_backward_pool,
+    maxpool_forward_pool, relu_backward_pool, relu_forward_pool, softmax_xent, topk_correct,
+    Conv2dShape, FcShape, LrnShape, PoolShape,
 };
 use self::model::{NetPlan, PlanOp, Workspace};
 use self::pool::{par_ranges, ComputePool, ELEMWISE_CHUNK, SendPtr};
@@ -94,8 +96,9 @@ impl NativeBackend {
         let arch = arch_by_name(&cfg.model).ok_or_else(|| {
             Error::msg(format!(
                 "model {:?} is not a known architecture for the native backend \
-                 (want alexnet, alexnet-tiny or alexnet-micro)",
-                cfg.model
+                 (known models: {})",
+                cfg.model,
+                known_arch_names().join(", ")
             ))
         })?;
         Ok(NativeBackend::with_threads(&arch, cfg.dropout, cfg.threads_per_worker()))
@@ -179,6 +182,10 @@ impl NativeBackend {
                         &s,
                     );
                     relu_forward_pool(pool, y);
+                }
+                PlanOp::Lrn { shape } => {
+                    let s = LrnShape { batch, ..*shape };
+                    lrn_forward_pool(pool, x, y, &s);
                 }
                 PlanOp::Pool { shape, arg } => {
                     let s = PoolShape { batch, ..*shape };
@@ -264,6 +271,14 @@ impl NativeBackend {
                         &s,
                     );
                     Some(*param)
+                }
+                PlanOp::Lrn { shape } => {
+                    // Parameter-free; the scale denominators are
+                    // recomputed from the saved input node `x` (the
+                    // saved output `a` feeds the cross-channel term).
+                    let s = LrnShape { batch, ..*shape };
+                    lrn_backward_pool(pool, x, a, dy, dx, &s);
+                    None
                 }
                 PlanOp::Pool { shape, arg } => {
                     let s = PoolShape { batch, ..*shape };
@@ -622,6 +637,68 @@ mod tests {
         assert_eq!(store_f.max_divergence(&store_s), 0.0);
         // A wrong-length gradient buffer is rejected.
         assert!(staged.apply_update(&mut store_s, 0.01, &[0.0; 3]).is_err());
+    }
+
+    /// Micro geometry with the faithful model's structure: groups=2 on
+    /// conv2 and LRN after conv1 — the cheapest full-step exercise of
+    /// the grouped + LRN plan ops.
+    fn micro_faithful() -> crate::sim::flops::ArchDesc {
+        let mut arch = alexnet_micro();
+        arch.convs[0].lrn = Some(crate::sim::flops::LrnSpec::krizhevsky());
+        arch.convs[1].groups = 2;
+        arch
+    }
+
+    #[test]
+    fn grouped_lrn_step_is_deterministic_and_learns() {
+        let arch = micro_faithful();
+        let (images, labels) = random_batch(8, arch.num_classes, 17);
+        let run = || {
+            let mut b = NativeBackend::new(&arch, 0.0);
+            let mut store = ParamStore::init(&b.model().params, 7);
+            let first = b.train_step(&images, &labels, 0.02, 0, &mut store).unwrap().loss;
+            let mut last = first;
+            for step in 1..35 {
+                last = b.train_step(&images, &labels, 0.02, step, &mut store).unwrap().loss;
+                assert!(last.is_finite(), "loss diverged at step {step}");
+            }
+            (first, last, store)
+        };
+        let (first, last, sa) = run();
+        assert!(last < 0.5 * first, "grouped+LRN overfit failed: {first} -> {last}");
+        let (_, _, sb) = run();
+        assert_eq!(sa.max_divergence(&sb), 0.0);
+        // Every parameter (including the grouped conv's) moved.
+        let fresh = ParamStore::init(&sa.specs, 7);
+        for (i, (old, new)) in fresh.params.iter().zip(&sa.params).enumerate() {
+            let moved = crate::util::math::max_abs_diff(old.as_slice(), new.as_slice());
+            assert!(moved > 0.0, "param {} ({}) did not move", i, sa.specs[i].name);
+        }
+    }
+
+    #[test]
+    fn grouped_lrn_staged_matches_fused() {
+        // The staged protocol must hold unchanged with parameter-free
+        // LRN ops interleaved (they emit nothing; the sink still sees
+        // descending-contiguous emission).
+        let arch = micro_faithful();
+        let (images, labels) = random_batch(4, arch.num_classes, 23);
+        let mut fused = NativeBackend::new(&arch, 0.5);
+        let mut store_f = ParamStore::init(&fused.model().params, 7);
+        let mut staged = NativeBackend::new(&arch, 0.5);
+        let mut store_s = ParamStore::init(&staged.model().params, 7);
+        for step in 0..2 {
+            let of = fused.train_step(&images, &labels, 0.01, step, &mut store_f).unwrap();
+            let offsets = staged.plan.param_offsets();
+            let total = *offsets.last().unwrap();
+            let mut sink = CollectSink { flat: vec![0.0; total], offsets, next: total };
+            let os =
+                staged.forward_backward(&images, &labels, step, &store_s, &mut sink).unwrap();
+            assert_eq!(sink.next, 0, "every gradient must be emitted");
+            staged.apply_update(&mut store_s, 0.01, &sink.flat).unwrap();
+            assert_eq!(of.loss, os.loss, "step {step}");
+        }
+        assert_eq!(store_f.max_divergence(&store_s), 0.0);
     }
 
     #[test]

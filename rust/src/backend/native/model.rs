@@ -15,7 +15,7 @@
 //! collective exchange all operate on native parameters unchanged.
 
 use crate::backend::native::gemm::PackBuf;
-use crate::backend::native::layers::{Conv2dShape, ConvScratch, FcShape, PoolShape};
+use crate::backend::native::layers::{Conv2dShape, ConvScratch, FcShape, LrnShape, PoolShape};
 use crate::backend::native::pool::shape_chunks;
 use crate::runtime::artifact::{ModelSpec, ParamManifestSpec};
 use crate::sim::flops::ArchDesc;
@@ -28,8 +28,14 @@ use crate::tensor::Shape;
 pub enum PlanOp {
     /// Convolution + ReLU; `cache` indexes the workspace buffer holding
     /// this layer's batch-wide im2col columns (written by the forward
-    /// pass, reused by the backward pass).
+    /// pass, reused by the backward pass).  The shape carries the
+    /// layer's channel-group count (weights `cout × (cin/groups) × k²`).
     ConvRelu { shape: Conv2dShape, param: usize, cache: usize },
+    /// Cross-channel local response normalization.  Parameter-free; the
+    /// backward pass recomputes the scale denominators from the saved
+    /// input node (both the input and output activations are workspace
+    /// nodes, so no extra buffers are needed).
+    Lrn { shape: LrnShape },
     /// Max-pool; `arg` indexes the workspace argmax buffer.
     Pool { shape: PoolShape, arg: usize },
     /// Hidden fully-connected + ReLU + dropout; `mask` indexes the
@@ -90,12 +96,15 @@ impl NetPlan {
         let mut n_pools = 0;
         let mut col_elems = 0;
         for (l, c) in arch.convs.iter().enumerate() {
+            assert!(c.groups >= 1, "conv{}: groups must be >= 1", l + 1);
+            assert_eq!(cin % c.groups, 0, "conv{}: groups must divide cin {cin}", l + 1);
+            assert_eq!(c.cout % c.groups, 0, "conv{}: groups must divide cout {}", l + 1, c.cout);
             let conv_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
             let param = params.len();
             params.push(weight(
                 format!("conv{}.w", l + 1),
-                &[c.cout, cin, c.kernel, c.kernel],
-                cin * c.kernel * c.kernel,
+                &[c.cout, cin / c.groups, c.kernel, c.kernel],
+                (cin / c.groups) * c.kernel * c.kernel,
             ));
             params.push(bias(format!("conv{}.b", l + 1), c.cout));
             let shape = Conv2dShape {
@@ -107,11 +116,26 @@ impl NetPlan {
                 pad: c.pad,
                 in_hw: hw,
                 out_hw: conv_hw,
+                groups: c.groups,
             };
             col_elems = col_elems.max(shape.col_elems());
             ops.push(PlanOp::ConvRelu { shape, param, cache: l });
             node_elems.push(c.cout * conv_hw * conv_hw);
             hw = conv_hw;
+            if let Some(lrn) = c.lrn {
+                ops.push(PlanOp::Lrn {
+                    shape: LrnShape {
+                        batch: 1,
+                        channels: c.cout,
+                        hw,
+                        radius: lrn.radius,
+                        bias: lrn.bias,
+                        alpha: lrn.alpha,
+                        beta: lrn.beta,
+                    },
+                });
+                node_elems.push(c.cout * hw * hw);
+            }
             if c.pool {
                 let pooled = (hw - arch.pool_window) / arch.pool_stride + 1;
                 ops.push(PlanOp::Pool {
@@ -327,11 +351,11 @@ impl Workspace {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::flops::{alexnet, alexnet_micro, alexnet_tiny};
+    use crate::sim::flops::{alexnet, alexnet_micro, alexnet_tiny, alexnet_tiny_faithful};
 
     #[test]
     fn plan_mirrors_flops_param_count() {
-        for arch in [alexnet_micro(), alexnet_tiny(), alexnet()] {
+        for arch in [alexnet_micro(), alexnet_tiny(), alexnet_tiny_faithful(), alexnet()] {
             let plan = NetPlan::from_arch(&arch);
             let total: usize = plan.params.iter().map(|p| p.shape.numel()).sum();
             assert_eq!(total as u64, arch.param_elements(), "{}", arch.name);
@@ -355,6 +379,53 @@ mod tests {
         assert_eq!(plan.params.len(), 8);
         assert_eq!(plan.params[0].name, "conv1.w");
         assert_eq!(plan.params[7].name, "out.b");
+    }
+
+    #[test]
+    fn faithful_plan_carries_groups_and_lrn() {
+        let plan = NetPlan::from_arch(&alexnet_tiny_faithful());
+        // conv1 relu lrn pool | conv2 relu lrn pool | conv3 | conv4 |
+        // conv5 pool | fc1 | fc2 | out
+        let lrns: Vec<&LrnShape> = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::Lrn { shape } => Some(shape),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lrns.len(), 2);
+        assert_eq!((lrns[0].channels, lrns[0].hw), (32, 32)); // after conv1
+        assert_eq!((lrns[1].channels, lrns[1].hw), (64, 15)); // after conv2
+        assert_eq!(lrns[0].radius, 2);
+        assert_eq!((lrns[0].bias, lrns[0].alpha, lrns[0].beta), (2.0, 1e-4, 0.75));
+        // LRN nodes preserve the producing conv's activation size.
+        assert_eq!(plan.node_elems[1], 32 * 32 * 32);
+        assert_eq!(plan.node_elems[2], 32 * 32 * 32);
+        // Grouped conv weights are [cout, cin/groups, k, k] with the
+        // matching He fan-in.
+        let conv2 = &plan.params[2];
+        assert_eq!(conv2.name, "conv2.w");
+        assert_eq!(conv2.shape.dims(), &[64, 16, 3, 3]);
+        let fan_in = 16 * 3 * 3;
+        assert!((conv2.std - (2.0f32 / fan_in as f32).sqrt()).abs() < 1e-7);
+        let shapes: Vec<usize> = plan
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::ConvRelu { shape, .. } => Some(shape.groups),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(shapes, vec![1, 2, 1, 2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "groups must divide cin")]
+    fn from_arch_rejects_indivisible_groups() {
+        let mut arch = alexnet_micro();
+        arch.convs[0].groups = 2; // cin = 3 is not divisible
+        let _ = NetPlan::from_arch(&arch);
     }
 
     #[test]

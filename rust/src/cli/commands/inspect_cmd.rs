@@ -1,14 +1,27 @@
-//! `tmg inspect` — list artifacts and their ABIs.
+//! `tmg inspect` — list artifacts and their ABIs, or print a model's
+//! per-layer table (`--model NAME`).
 
 use std::path::PathBuf;
 
 use crate::cli::args::ArgMap;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::Manifest;
+use crate::sim::flops::{arch_by_name, known_arch_names, ArchDesc};
 use crate::util::fmt;
 
 pub fn run(argv: &[String]) -> Result<i32> {
     let a = ArgMap::parse(argv)?;
+    if let Some(name) = a.get("model") {
+        let arch = arch_by_name(name).ok_or_else(|| {
+            Error::msg(format!(
+                "model {:?} is not a known architecture (known models: {})",
+                name,
+                known_arch_names().join(", ")
+            ))
+        })?;
+        print_model_table(&arch);
+        return Ok(0);
+    }
     let dir = PathBuf::from(a.str_or("artifacts", "artifacts"));
     let m = Manifest::load(&dir)?;
 
@@ -41,4 +54,70 @@ pub fn run(argv: &[String]) -> Result<i32> {
         );
     }
     Ok(0)
+}
+
+/// Per-layer breakdown of an architecture.  The table's totals are
+/// asserted equal to the analytic `ArchDesc` counts — any drift between
+/// the two walks is a bug, not a rounding difference.
+fn print_model_table(arch: &ArchDesc) {
+    println!(
+        "{}: {}x{}x{} input, {} classes",
+        arch.name, arch.in_channels, arch.image_hw, arch.image_hw, arch.num_classes
+    );
+    println!(
+        "  {:<10} {:<14} {:>12} {:>14} {:>7}  {}",
+        "layer", "output", "params", "fwd MACs", "groups", "lrn"
+    );
+    let rows = arch.layer_rows();
+    for r in &rows {
+        let out = if r.out_hw > 0 {
+            format!("{}x{}x{}", r.out_ch, r.out_hw, r.out_hw)
+        } else {
+            format!("{}", r.out_ch)
+        };
+        let lrn = match r.lrn {
+            Some(l) => format!("r={} k={} a={} b={}", l.radius, l.bias, l.alpha, l.beta),
+            None => "-".to_string(),
+        };
+        println!(
+            "  {:<10} {:<14} {:>12} {:>14} {:>7}  {}",
+            r.name, out, r.params, r.fwd_macs, r.groups, lrn
+        );
+    }
+    let params: u64 = rows.iter().map(|r| r.params).sum();
+    let macs: u64 = rows.iter().map(|r| r.fwd_macs).sum();
+    assert_eq!(params, arch.param_elements(), "layer table drifted from param_elements()");
+    assert_eq!(macs, arch.forward_macs(), "layer table drifted from forward_macs()");
+    println!(
+        "  {:<10} {:<14} {:>12} {:>14}   ({} params, {} fwd MACs/example)",
+        "total",
+        "",
+        params,
+        macs,
+        fmt::count(params),
+        fmt::count(macs)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_mode_prints_and_reconciles() {
+        // The runtime assertions inside print_model_table are the
+        // contract; run them for every known arch.
+        for name in known_arch_names() {
+            let args: Vec<String> = vec!["--model".into(), (*name).into()];
+            assert_eq!(run(&args).unwrap(), 0);
+        }
+    }
+
+    #[test]
+    fn unknown_model_lists_known_names() {
+        let args: Vec<String> = vec!["--model".into(), "resnet".into()];
+        let err = run(&args).unwrap_err().to_string();
+        assert!(err.contains("alexnet-tiny-faithful"), "{err}");
+        assert!(err.contains("alexnet-micro"), "{err}");
+    }
 }

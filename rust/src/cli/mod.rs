@@ -76,13 +76,20 @@ USAGE:
                 [--seed N]
   tmg calibrate [--artifacts DIR] [--runs N]
   tmg simulate  table1|scaling|overlap [--real] [--steps N] [--csv FILE]
-  tmg inspect   [--artifacts DIR]
+  tmg inspect   [--artifacts DIR] [--model NAME]
   tmg help
 
 The default backend is `native`: a pure-Rust CPU implementation of the
 full AlexNet train/eval step — no AOT artifacts required.  Artifact
 backend tags (e.g. `refconv`) run through the XLA runtime instead and
 fall back to native when the artifacts are unavailable.
+
+Models: `alexnet` (the paper's net, faithful: 2-group convolutions on
+conv2/4/5 and LRN after conv1/conv2), `alexnet-tiny` and
+`alexnet-micro` (fast ungrouped CPU-scale variants), and
+`alexnet-tiny-faithful` (tiny geometry with the faithful structure).
+`tmg inspect --model NAME` prints a per-layer table (output shape,
+params, forward MACs, groups, LRN) with reconciled totals.
 
 `tmg serve` loads a checkpoint once into an immutable shared store and
 answers `classify` requests over a TCP line protocol with dynamically

@@ -446,16 +446,28 @@ impl TrainConfig {
 
     /// FNV-1a fingerprint of everything that must match between the
     /// saving and the resuming run for `--resume` to be bit-exact:
-    /// worker count, exchange period, momentum inclusion, per-worker
-    /// batch size, dropout rate and the experiment seed (the
-    /// data/augmentation/init streams all key off it).  Stored in v2
-    /// checkpoints and checked at restore.  Deliberately excludes knobs
-    /// that provably do not change the math: transport, loader mode,
-    /// thread count, and stream-vs-serial overlap (bit-identical by
-    /// construction) — but *not* overlap on/off, which switches the
-    /// update rule between param and gradient averaging.
+    /// the model architecture, worker count, exchange period, momentum
+    /// inclusion, per-worker batch size, dropout rate and the
+    /// experiment seed (the data/augmentation/init streams all key off
+    /// it).  Stored in v2 checkpoints and checked at restore.
+    /// Deliberately excludes knobs that provably do not change the
+    /// math: transport, loader mode, thread count, and
+    /// stream-vs-serial overlap (bit-identical by construction) — but
+    /// *not* overlap on/off, which switches the update rule between
+    /// param and gradient averaging.
     pub fn resume_fingerprint(&self) -> u64 {
         let mut h = 0xCBF2_9CE4_8422_2325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01B3);
+            }
+        };
+        // The architecture the checkpoint's tensors belong to.  Hashed
+        // by normalized name (underscore and hyphen spellings are the
+        // same arch); unknown names still hash — mismatch detection
+        // must not depend on the lookup table.
+        eat(self.model.replace('_', "-").as_bytes());
         for v in [
             self.cluster.workers as u64,
             self.exchange.period as u64,
@@ -472,10 +484,7 @@ impl TrainConfig {
                 0
             },
         ] {
-            for b in v.to_le_bytes() {
-                h ^= b as u64;
-                h = h.wrapping_mul(0x0000_0100_0000_01B3);
-            }
+            eat(&v.to_le_bytes());
         }
         h
     }
@@ -607,6 +616,16 @@ switch_of_worker = [0, 1]
         let mut c = base.clone();
         c.dropout = 0.25;
         assert_ne!(fp, c.resume_fingerprint());
+        // A different architecture is a different set of tensors: the
+        // fingerprint must refuse to resume across models.
+        let mut c = base.clone();
+        c.model = "alexnet-tiny-faithful".into();
+        assert_ne!(fp, c.resume_fingerprint());
+        // Spelling does not change the arch, so it must not change the
+        // fingerprint.
+        let mut c = base.clone();
+        c.model = base.model.replace('-', "_");
+        assert_eq!(fp, c.resume_fingerprint());
         // Knobs that never change the math leave it untouched.
         let mut c = base.clone();
         c.exchange.transport = TransportKind::Serialized;

@@ -3,6 +3,29 @@
 //! Mirrors python/compile/model.py's architecture descriptions; used to
 //! scale measured micro-model step times to paper-scale AlexNet without
 //! having to run the full net on this CPU testbed.
+//!
+//! Architecture variation flows through data: a `ConvStage` carries its
+//! group count and an optional local-response-normalization spec, so the
+//! faithful paper model and the CPU-scale variants are the same code path
+//! with different descriptions.
+
+/// Cross-channel local response normalization (Krizhevsky et al. 2012,
+/// section 3.3): `b_c = a_c / (bias + (alpha/n) * sum_{|c'-c|<=r} a_{c'}^2)^beta`
+/// with `n = 2*radius + 1`.  Matches python/compile/kernels/ref.py::lrn_ref.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LrnSpec {
+    pub radius: usize,
+    pub bias: f32,
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl LrnSpec {
+    /// The constants of the paper (depth radius 2, k=2, alpha=1e-4, beta=0.75).
+    pub const fn krizhevsky() -> Self {
+        LrnSpec { radius: 2, bias: 2.0, alpha: 1e-4, beta: 0.75 }
+    }
+}
 
 /// One conv stage (see model.py ConvSpec).
 #[derive(Clone, Copy, Debug)]
@@ -12,6 +35,32 @@ pub struct ConvStage {
     pub stride: usize,
     pub pad: usize,
     pub pool: bool,
+    /// Channel groups: weights are `cout x (cin/groups) x k x k`, so
+    /// groups > 1 divides both weight elements and MACs by `groups`.
+    /// This is the two-GPU model-parallel split of the paper baked into
+    /// the architecture (conv2/4/5 of faithful AlexNet use groups=2).
+    pub groups: usize,
+    /// Optional LRN applied after this stage's ReLU (before pooling).
+    pub lrn: Option<LrnSpec>,
+}
+
+impl ConvStage {
+    /// Plain ungrouped stage with no normalization.
+    pub const fn plain(cout: usize, kernel: usize, stride: usize, pad: usize, pool: bool) -> Self {
+        ConvStage { cout, kernel, stride, pad, pool, groups: 1, lrn: None }
+    }
+
+    /// Split this stage's channels into `groups` filter groups.
+    pub const fn grouped(mut self, groups: usize) -> Self {
+        self.groups = groups;
+        self
+    }
+
+    /// Follow this stage's ReLU with local response normalization.
+    pub const fn with_lrn(mut self, lrn: LrnSpec) -> Self {
+        self.lrn = Some(lrn);
+        self
+    }
 }
 
 /// Architecture description sufficient for FLOP counting.
@@ -27,19 +76,21 @@ pub struct ArchDesc {
     pub pool_stride: usize,
 }
 
-/// The full AlexNet of the paper.
+/// The full AlexNet of the paper: 2-group convolutions on conv2/4/5
+/// (the two-GPU split of Krizhevsky 2012) and LRN after conv1/conv2.
 pub fn alexnet() -> ArchDesc {
+    let lrn = LrnSpec::krizhevsky();
     ArchDesc {
         name: "alexnet",
         image_hw: 227,
         in_channels: 3,
         num_classes: 1000,
         convs: vec![
-            ConvStage { cout: 96, kernel: 11, stride: 4, pad: 0, pool: true },
-            ConvStage { cout: 256, kernel: 5, stride: 1, pad: 2, pool: true },
-            ConvStage { cout: 384, kernel: 3, stride: 1, pad: 1, pool: false },
-            ConvStage { cout: 384, kernel: 3, stride: 1, pad: 1, pool: false },
-            ConvStage { cout: 256, kernel: 3, stride: 1, pad: 1, pool: true },
+            ConvStage::plain(96, 11, 4, 0, true).with_lrn(lrn),
+            ConvStage::plain(256, 5, 1, 2, true).grouped(2).with_lrn(lrn),
+            ConvStage::plain(384, 3, 1, 1, false),
+            ConvStage::plain(384, 3, 1, 1, false).grouped(2),
+            ConvStage::plain(256, 3, 1, 1, true).grouped(2),
         ],
         fc_dims: vec![4096, 4096],
         pool_window: 3,
@@ -47,7 +98,7 @@ pub fn alexnet() -> ArchDesc {
     }
 }
 
-/// The CPU-scale variant the end-to-end driver trains.
+/// The CPU-scale variant the end-to-end driver trains (ungrouped, no LRN).
 pub fn alexnet_tiny() -> ArchDesc {
     ArchDesc {
         name: "alexnet-tiny",
@@ -55,11 +106,34 @@ pub fn alexnet_tiny() -> ArchDesc {
         in_channels: 3,
         num_classes: 100,
         convs: vec![
-            ConvStage { cout: 32, kernel: 5, stride: 2, pad: 2, pool: true },
-            ConvStage { cout: 64, kernel: 3, stride: 1, pad: 1, pool: true },
-            ConvStage { cout: 96, kernel: 3, stride: 1, pad: 1, pool: false },
-            ConvStage { cout: 96, kernel: 3, stride: 1, pad: 1, pool: false },
-            ConvStage { cout: 64, kernel: 3, stride: 1, pad: 1, pool: true },
+            ConvStage::plain(32, 5, 2, 2, true),
+            ConvStage::plain(64, 3, 1, 1, true),
+            ConvStage::plain(96, 3, 1, 1, false),
+            ConvStage::plain(96, 3, 1, 1, false),
+            ConvStage::plain(64, 3, 1, 1, true),
+        ],
+        fc_dims: vec![512, 256],
+        pool_window: 3,
+        pool_stride: 2,
+    }
+}
+
+/// Tiny geometry with the faithful model's structure (groups=2 on
+/// conv2/4/5, LRN after conv1/conv2): exercises the grouped + LRN code
+/// paths at CPU test scale.
+pub fn alexnet_tiny_faithful() -> ArchDesc {
+    let lrn = LrnSpec::krizhevsky();
+    ArchDesc {
+        name: "alexnet-tiny-faithful",
+        image_hw: 64,
+        in_channels: 3,
+        num_classes: 100,
+        convs: vec![
+            ConvStage::plain(32, 5, 2, 2, true).with_lrn(lrn),
+            ConvStage::plain(64, 3, 1, 1, true).grouped(2).with_lrn(lrn),
+            ConvStage::plain(96, 3, 1, 1, false),
+            ConvStage::plain(96, 3, 1, 1, false).grouped(2),
+            ConvStage::plain(64, 3, 1, 1, true).grouped(2),
         ],
         fc_dims: vec![512, 256],
         pool_window: 3,
@@ -75,13 +149,18 @@ pub fn alexnet_micro() -> ArchDesc {
         in_channels: 3,
         num_classes: 10,
         convs: vec![
-            ConvStage { cout: 8, kernel: 5, stride: 2, pad: 2, pool: true },
-            ConvStage { cout: 16, kernel: 3, stride: 1, pad: 1, pool: false },
+            ConvStage::plain(8, 5, 2, 2, true),
+            ConvStage::plain(16, 3, 1, 1, false),
         ],
         fc_dims: vec![64],
         pool_window: 3,
         pool_stride: 2,
     }
+}
+
+/// Every architecture `arch_by_name` knows, hyphen spelling.
+pub fn known_arch_names() -> &'static [&'static str] {
+    &["alexnet", "alexnet-tiny", "alexnet-tiny-faithful", "alexnet-micro"]
 }
 
 /// Look up an architecture by name.  Underscore and hyphen spellings
@@ -90,20 +169,37 @@ pub fn arch_by_name(name: &str) -> Option<ArchDesc> {
     match name.replace('_', "-").as_str() {
         "alexnet" => Some(alexnet()),
         "alexnet-tiny" => Some(alexnet_tiny()),
+        "alexnet-tiny-faithful" => Some(alexnet_tiny_faithful()),
         "alexnet-micro" => Some(alexnet_micro()),
         _ => None,
     }
 }
 
+/// One row of the per-layer summary table (`tmg inspect --model`).
+#[derive(Clone, Debug)]
+pub struct LayerRow {
+    pub name: String,
+    /// Output channels (or feature width for FC layers).
+    pub out_ch: usize,
+    /// Output spatial extent; 0 for FC layers.
+    pub out_hw: usize,
+    pub params: u64,
+    pub fwd_macs: u64,
+    pub groups: usize,
+    pub lrn: Option<LrnSpec>,
+}
+
 impl ArchDesc {
-    /// Forward multiply-accumulates for one example.
+    /// Forward multiply-accumulates for one example.  Grouped convs do
+    /// `cout x (cin/groups) x k^2` work per output pixel.
     pub fn forward_macs(&self) -> u64 {
         let mut macs = 0u64;
         let mut cin = self.in_channels;
         let mut hw = self.image_hw;
         for c in &self.convs {
             let out_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
-            macs += (c.cout * cin * c.kernel * c.kernel) as u64 * (out_hw * out_hw) as u64;
+            macs +=
+                (c.cout * (cin / c.groups) * c.kernel * c.kernel) as u64 * (out_hw * out_hw) as u64;
             hw = out_hw;
             if c.pool {
                 hw = (hw - self.pool_window) / self.pool_stride + 1;
@@ -124,13 +220,14 @@ impl ArchDesc {
         3 * self.forward_macs()
     }
 
-    /// Parameter element count (weights + biases).
+    /// Parameter element count (weights + biases).  Grouped conv weights
+    /// are `cout x (cin/groups) x k x k`.
     pub fn param_elements(&self) -> u64 {
         let mut n = 0u64;
         let mut cin = self.in_channels;
         let mut hw = self.image_hw;
         for c in &self.convs {
-            n += (c.cout * cin * c.kernel * c.kernel + c.cout) as u64;
+            n += (c.cout * (cin / c.groups) * c.kernel * c.kernel + c.cout) as u64;
             let out_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
             hw = out_hw;
             if c.pool {
@@ -150,6 +247,76 @@ impl ArchDesc {
     /// Bytes of one Fig-2 exchange payload (params + momenta, f32).
     pub fn exchange_bytes(&self) -> u64 {
         self.param_elements() * 4 * 2
+    }
+
+    /// Per-layer breakdown (conv/lrn/pool/fc rows).  The param/MAC totals
+    /// reconcile with `param_elements()` / `forward_macs()` by test and
+    /// by the `tmg inspect --model` runtime assertion.
+    pub fn layer_rows(&self) -> Vec<LayerRow> {
+        let mut rows = Vec::new();
+        let mut cin = self.in_channels;
+        let mut hw = self.image_hw;
+        for (i, c) in self.convs.iter().enumerate() {
+            let out_hw = (hw + 2 * c.pad - c.kernel) / c.stride + 1;
+            let w = c.cout * (cin / c.groups) * c.kernel * c.kernel;
+            rows.push(LayerRow {
+                name: format!("conv{}", i + 1),
+                out_ch: c.cout,
+                out_hw,
+                params: (w + c.cout) as u64,
+                fwd_macs: w as u64 * (out_hw * out_hw) as u64,
+                groups: c.groups,
+                lrn: None,
+            });
+            hw = out_hw;
+            if let Some(lrn) = c.lrn {
+                rows.push(LayerRow {
+                    name: format!("lrn{}", i + 1),
+                    out_ch: c.cout,
+                    out_hw: hw,
+                    params: 0,
+                    fwd_macs: 0,
+                    groups: 1,
+                    lrn: Some(lrn),
+                });
+            }
+            if c.pool {
+                hw = (hw - self.pool_window) / self.pool_stride + 1;
+                rows.push(LayerRow {
+                    name: format!("pool{}", i + 1),
+                    out_ch: c.cout,
+                    out_hw: hw,
+                    params: 0,
+                    fwd_macs: 0,
+                    groups: 1,
+                    lrn: None,
+                });
+            }
+            cin = c.cout;
+        }
+        let mut feat = cin * hw * hw;
+        for (j, &d) in self.fc_dims.iter().enumerate() {
+            rows.push(LayerRow {
+                name: format!("fc{}", j + 1),
+                out_ch: d,
+                out_hw: 0,
+                params: (feat * d + d) as u64,
+                fwd_macs: (feat * d) as u64,
+                groups: 1,
+                lrn: None,
+            });
+            feat = d;
+        }
+        rows.push(LayerRow {
+            name: "softmax".to_string(),
+            out_ch: self.num_classes,
+            out_hw: 0,
+            params: (feat * self.num_classes + self.num_classes) as u64,
+            fwd_macs: (feat * self.num_classes) as u64,
+            groups: 1,
+            lrn: None,
+        });
+        rows
     }
 }
 
@@ -171,10 +338,70 @@ mod tests {
     }
 
     #[test]
+    fn faithful_alexnet_params_exactly_canonical() {
+        // conv1 34_944 + conv2(g2) 307_456 + conv3 885_120 + conv4(g2)
+        // 663_936 + conv5(g2) 442_624 + fc1 37_752_832 + fc2 16_781_312
+        // + softmax 4_097_000 = the canonical 60.97M.
+        assert_eq!(alexnet().param_elements(), 60_965_224);
+    }
+
+    #[test]
+    fn faithful_alexnet_structure_matches_paper() {
+        let a = alexnet();
+        let groups: Vec<usize> = a.convs.iter().map(|c| c.groups).collect();
+        assert_eq!(groups, vec![1, 2, 1, 2, 2]);
+        let lrn: Vec<bool> = a.convs.iter().map(|c| c.lrn.is_some()).collect();
+        assert_eq!(lrn, vec![true, true, false, false, false]);
+        let spec = a.convs[0].lrn.unwrap();
+        assert_eq!(spec, LrnSpec::krizhevsky());
+        assert_eq!((spec.radius, spec.bias, spec.alpha, spec.beta), (2, 2.0, 1e-4, 0.75));
+    }
+
+    #[test]
     fn alexnet_fwd_flops_near_700m_macs() {
         // Literature: ~0.7 GMACs (1.4 GFLOPs) per 227x227 forward pass.
         let m = alexnet().forward_macs();
         assert!((600_000_000..1_300_000_000).contains(&m), "{m}");
+    }
+
+    #[test]
+    fn grouping_divides_macs_and_params() {
+        // Same geometry with groups stripped must cost strictly more.
+        let faithful = alexnet();
+        let mut plain = faithful.clone();
+        for c in &mut plain.convs {
+            c.groups = 1;
+        }
+        assert!(plain.forward_macs() > faithful.forward_macs());
+        assert!(plain.param_elements() > faithful.param_elements());
+        // And the per-conv deltas are exactly the grouped halves.
+        let f_rows = faithful.layer_rows();
+        let p_rows = plain.layer_rows();
+        for (f, p) in f_rows.iter().zip(&p_rows) {
+            if f.groups == 2 {
+                assert_eq!(p.fwd_macs, 2 * f.fwd_macs, "{}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn layer_rows_reconcile_with_totals() {
+        for arch in
+            [alexnet(), alexnet_tiny(), alexnet_tiny_faithful(), alexnet_micro()]
+        {
+            let rows = arch.layer_rows();
+            let params: u64 = rows.iter().map(|r| r.params).sum();
+            let macs: u64 = rows.iter().map(|r| r.fwd_macs).sum();
+            assert_eq!(params, arch.param_elements(), "{}", arch.name);
+            assert_eq!(macs, arch.forward_macs(), "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn tiny_faithful_is_cheaper_than_tiny() {
+        // Grouping sheds weights/MACs; LRN adds none to the MAC model.
+        assert!(alexnet_tiny_faithful().param_elements() < alexnet_tiny().param_elements());
+        assert!(alexnet_tiny_faithful().forward_macs() < alexnet_tiny().forward_macs());
     }
 
     #[test]
@@ -196,6 +423,10 @@ mod tests {
     fn lookup_by_name() {
         assert!(arch_by_name("alexnet").is_some());
         assert!(arch_by_name("alexnet_micro").is_some());
+        assert!(arch_by_name("alexnet-tiny-faithful").is_some());
         assert!(arch_by_name("resnet").is_none());
+        for name in known_arch_names() {
+            assert!(arch_by_name(name).is_some(), "{name}");
+        }
     }
 }

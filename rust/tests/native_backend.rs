@@ -10,11 +10,12 @@
 
 use theano_mgpu::backend::native::gemm::{matmul_nn, matmul_nt, matmul_tn, scalar};
 use theano_mgpu::backend::native::layers::{
-    conv2d_backward, conv2d_forward, fc_backward, fc_forward, softmax_xent, Conv2dShape, FcShape,
+    conv2d_backward, conv2d_forward, fc_backward, fc_forward, lrn_backward, lrn_forward,
+    softmax_xent, Conv2dShape, FcShape, LrnShape,
 };
 use theano_mgpu::backend::native::model::model_spec_of;
 use theano_mgpu::params::ParamStore;
-use theano_mgpu::sim::flops::{alexnet, alexnet_micro, alexnet_tiny};
+use theano_mgpu::sim::flops::{alexnet, alexnet_micro, alexnet_tiny, alexnet_tiny_faithful};
 use theano_mgpu::util::math::{rel_err, transpose};
 use theano_mgpu::util::Pcg32;
 
@@ -59,10 +60,11 @@ fn conv_gradients_match_finite_differences() {
         pad: 1,
         in_hw: 5,
         out_hw: 3,
+        groups: 1,
     };
     let mut rng = Pcg32::seeded(11);
     let mut x = randn(&mut rng, s.batch * s.in_elems());
-    let mut w = randn(&mut rng, s.cout * s.cin * s.k * s.k);
+    let mut w = randn(&mut rng, s.w_elems());
     let mut b = randn(&mut rng, s.cout);
     // Scalar objective L = <y, r> for fixed random r, so dL/dy = r.
     let r = randn(&mut rng, s.batch * s.out_elems());
@@ -83,6 +85,140 @@ fn conv_gradients_match_finite_differences() {
     check_grad("conv dx", &mut x, &dx, |x| loss_with(x, &ws, &bs));
     check_grad("conv dw", &mut w, &dw, |w| loss_with(&xs, w, &bs));
     check_grad("conv db", &mut b, &db, |b| loss_with(&xs, &ws, b));
+}
+
+#[test]
+fn grouped_conv_gradients_match_finite_differences() {
+    // groups = 2: weights are [cout, cin/2, k, k]; the backward must
+    // route every gradient through its own group's slices only.
+    let s = Conv2dShape {
+        batch: 2,
+        cin: 4,
+        cout: 6,
+        k: 3,
+        stride: 2,
+        pad: 1,
+        in_hw: 5,
+        out_hw: 3,
+        groups: 2,
+    };
+    let mut rng = Pcg32::seeded(19);
+    let mut x = randn(&mut rng, s.batch * s.in_elems());
+    let mut w = randn(&mut rng, s.w_elems());
+    let mut b = randn(&mut rng, s.cout);
+    let r = randn(&mut rng, s.batch * s.out_elems());
+
+    let loss_with = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+        let mut y = vec![0.0; s.batch * s.out_elems()];
+        let mut col = vec![0.0; s.col_elems()];
+        conv2d_forward(x, w, b, &mut y, &mut col, &s);
+        y.iter().zip(&r).map(|(a, c)| (a * c) as f64).sum()
+    };
+
+    let (mut dw, mut db) = (vec![0.0; w.len()], vec![0.0; b.len()]);
+    let mut dx = vec![0.0; x.len()];
+    let (mut col, mut dcol) = (vec![0.0; s.col_elems()], vec![0.0; s.col_elems()]);
+    conv2d_backward(&x, &w, &r, &mut dw, &mut db, &mut dx, &mut col, &mut dcol, &s);
+
+    let (xs, ws, bs) = (x.clone(), w.clone(), b.clone());
+    check_grad("gconv dx", &mut x, &dx, |x| loss_with(x, &ws, &bs));
+    check_grad("gconv dw", &mut w, &dw, |w| loss_with(&xs, w, &bs));
+    check_grad("gconv db", &mut b, &db, |b| loss_with(&xs, &ws, b));
+}
+
+#[test]
+fn lrn_gradients_match_finite_differences() {
+    // Aggressive alpha so the cross-channel correction term carries
+    // real weight (with the paper's 1e-4 the check would mostly probe
+    // the diagonal).
+    let s = LrnShape {
+        batch: 2,
+        channels: 6,
+        hw: 3,
+        radius: 2,
+        bias: 2.0,
+        alpha: 0.4,
+        beta: 0.75,
+    };
+    let mut rng = Pcg32::seeded(29);
+    let mut x = randn(&mut rng, s.batch * s.elems());
+    let r = randn(&mut rng, s.batch * s.elems());
+
+    let loss = |x: &[f32]| -> f64 {
+        let mut y = vec![0.0; x.len()];
+        lrn_forward(x, &mut y, &s);
+        y.iter().zip(&r).map(|(a, c)| (a * c) as f64).sum()
+    };
+
+    let mut y = vec![0.0; x.len()];
+    lrn_forward(&x, &mut y, &s);
+    let mut dx = vec![0.0; x.len()];
+    lrn_backward(&x, &y, &r, &mut dx, &s);
+    check_grad("lrn dx", &mut x, &dx, loss);
+}
+
+#[test]
+fn lrn_forward_matches_python_reference_constants() {
+    // Pinned against f64 evaluations of the exact formula of
+    // python/compile/kernels/ref.py::lrn_ref (cross-channel window sum
+    // with edge clipping, scale = (bias + alpha/n · Σ x²)^beta).
+    //
+    // Case 1: the paper's constants (radius 2, k = 2, alpha = 1e-4,
+    // beta = 0.75) over 6 channels of a 2x2 plane, with values large
+    // enough that the alpha term actually moves the denominator.
+    let s = LrnShape {
+        batch: 1,
+        channels: 6,
+        hw: 2,
+        radius: 2,
+        bias: 2.0,
+        alpha: 1e-4,
+        beta: 0.75,
+    };
+    #[rustfmt::skip]
+    let x = vec![
+         3.0, -11.0,   7.5,  0.25,
+        -6.0,   4.0,  -2.5,  9.0,
+        12.0,  -8.0,   0.0,  5.5,
+        -1.5,  10.0, -13.0,  2.0,
+         8.0,  -3.0,   6.0, -7.0,
+         0.5,   2.5,  -9.5, 14.0,
+    ];
+    #[rustfmt::skip]
+    let want = [
+        1.781286295e0, -6.530796428e0, 4.457437421e0, 1.485269099e-1,
+        -3.562512587e0, 2.373059062e0, -1.483933160e0, 5.346808530e0,
+        7.121613596e0, -4.745798748e0, 0.000000000e0, 3.266295194e0,
+        -8.902599747e-1, 5.937343198e0, -7.712413118e0, 1.186004121e0,
+        4.749332423e0, -1.781416317e0, 3.559741648e0, -4.153528888e0,
+        2.971535857e-1, 1.485225287e0, -5.636257609e0, 8.308937689e0,
+    ];
+    let mut y = vec![0.0f32; x.len()];
+    lrn_forward(&x, &mut y, &s);
+    for (i, (got, w)) in y.iter().zip(&want).enumerate() {
+        let e = rel_err(*got, *w as f32);
+        assert!(e < 1e-5, "case1[{i}]: {got} vs {w} (rel err {e})");
+    }
+
+    // Case 2: radius 1 with a window-dominated denominator
+    // (bias = 1, alpha = 0.9), 3 channels of a 1x1 plane.
+    let s2 = LrnShape {
+        batch: 1,
+        channels: 3,
+        hw: 1,
+        radius: 1,
+        bias: 1.0,
+        alpha: 0.9,
+        beta: 0.75,
+    };
+    let x2 = vec![1.0f32, -2.0, 3.0];
+    let want2 = [5.029733719e-1, -5.808011772e-1, 9.109073255e-1];
+    let mut y2 = vec![0.0f32; 3];
+    lrn_forward(&x2, &mut y2, &s2);
+    for (i, (got, w)) in y2.iter().zip(&want2).enumerate() {
+        let e = rel_err(*got, *w as f32);
+        assert!(e < 1e-5, "case2[{i}]: {got} vs {w} (rel err {e})");
+    }
 }
 
 #[test]
@@ -173,7 +309,7 @@ fn param_shapes_reconcile_across_all_three_layers_of_truth() {
     // ArchDesc::param_elements (analytic) == ModelSpec manifest
     // (derived) == ParamStore::total_elements (materialized), for every
     // arch in the family.
-    for arch in [alexnet_micro(), alexnet_tiny(), alexnet()] {
+    for arch in [alexnet_micro(), alexnet_tiny(), alexnet_tiny_faithful(), alexnet()] {
         let spec = model_spec_of(&arch);
         assert_eq!(
             spec.total_param_elements() as u64,
@@ -194,6 +330,21 @@ fn param_shapes_reconcile_across_all_three_layers_of_truth() {
             assert_eq!(store.n_tensors(), spec.params.len());
         }
     }
+}
+
+#[test]
+fn faithful_alexnet_param_count_is_canonical_three_ways() {
+    // The grouped/LRN AlexNet must land exactly on the canonical
+    // 60,965,224 parameters of Krizhevsky 2012 — analytically, in the
+    // derived manifest, and in a materialized store.  (This is the one
+    // test that pays for the two ~244 MB fc weight allocations.)
+    let arch = alexnet();
+    assert_eq!(arch.param_elements(), 60_965_224);
+    let spec = model_spec_of(&arch);
+    assert_eq!(spec.total_param_elements() as u64, 60_965_224);
+    let store = ParamStore::init(&spec.params, 1);
+    assert_eq!(store.total_elements() as u64, 60_965_224);
+    assert_eq!(store.n_tensors(), spec.params.len());
 }
 
 #[test]

@@ -19,9 +19,10 @@ use theano_mgpu::backend::native::gemm::{
 use theano_mgpu::backend::native::layers::{
     conv2d_backward, conv2d_backward_pool, conv2d_forward, conv2d_forward_pool, dropout_backward,
     dropout_forward, fc_backward, fc_backward_pool, fc_forward, fc_forward_pool, im2col,
-    maxpool_backward, maxpool_backward_pool, maxpool_forward, maxpool_forward_pool, relu_backward,
+    lrn_backward, lrn_backward_pool, lrn_forward, lrn_forward_pool, maxpool_backward,
+    maxpool_backward_pool, maxpool_forward, maxpool_forward_pool, relu_backward,
     relu_backward_pool, relu_forward, relu_forward_pool, Conv2dShape, ConvScratch, FcShape,
-    PoolShape,
+    LrnShape, PoolShape,
 };
 use theano_mgpu::backend::native::pool::{shape_chunks, ComputePool, ELEMWISE_CHUNK, MAX_CHUNKS};
 use theano_mgpu::backend::native::simd::{Isa, MicroKernel};
@@ -30,7 +31,7 @@ use theano_mgpu::comm::collective::build_fabric;
 use theano_mgpu::comm::GradExchanger;
 use theano_mgpu::config::TransportKind;
 use theano_mgpu::params::ParamStore;
-use theano_mgpu::sim::flops::alexnet_micro;
+use theano_mgpu::sim::flops::{alexnet_micro, LrnSpec};
 use theano_mgpu::tensor::{HostTensor, Shape};
 use theano_mgpu::util::math::transpose;
 use theano_mgpu::util::Pcg32;
@@ -202,7 +203,7 @@ fn par_gemm_handles_empty_row_and_column_counts() {
 
 /// Conv geometry used by the batch-sweep tests.
 fn conv_shape(batch: usize) -> Conv2dShape {
-    Conv2dShape { batch, cin: 2, cout: 3, k: 3, stride: 2, pad: 1, in_hw: 7, out_hw: 4 }
+    Conv2dShape { batch, cin: 2, cout: 3, k: 3, stride: 2, pad: 1, in_hw: 7, out_hw: 4, groups: 1 }
 }
 
 fn conv_scratch(lanes: usize, batch: usize, s: &Conv2dShape) -> ConvScratch {
@@ -325,6 +326,147 @@ fn conv_backward_is_lane_count_invariant_and_close_to_serial() {
                     assert_eq!(db1, &db, "conv db lanes b{batch} t{threads}");
                     assert_eq!(dx1, &dx, "conv dx lanes b{batch} t{threads}");
                 }
+            }
+        }
+    }
+}
+
+/// Grouped variant of [`conv_shape`]: 2 groups over 4 in / 6 out
+/// channels, same awkward spatial geometry.
+fn gconv_shape(batch: usize) -> Conv2dShape {
+    Conv2dShape { batch, cin: 4, cout: 6, k: 3, stride: 2, pad: 1, in_hw: 7, out_hw: 4, groups: 2 }
+}
+
+#[test]
+fn grouped_conv_matches_serial_bitwise_at_awkward_batches() {
+    let mut rng = Pcg32::seeded(51);
+    for batch in [1, 5, MAX_CHUNKS, MAX_CHUNKS + 1] {
+        let s = gconv_shape(batch);
+        let x = randn(&mut rng, batch * s.in_elems());
+        let w = randn(&mut rng, s.w_elems());
+        let b = randn(&mut rng, s.cout);
+        let dy = randn(&mut rng, batch * s.out_elems());
+
+        let mut want = vec![0.0; batch * s.out_elems()];
+        let mut col = vec![0.0; s.col_elems()];
+        conv2d_forward(&x, &w, &b, &mut want, &mut col, &s);
+        let mut dw_ref = vec![0.0; w.len()];
+        let mut db_ref = vec![0.0; s.cout];
+        let mut dx_ref = vec![0.0; x.len()];
+        let mut dcol = vec![0.0; s.col_elems()];
+        conv2d_backward(&x, &w, &dy, &mut dw_ref, &mut db_ref, &mut dx_ref, &mut col, &mut dcol, &s);
+
+        let mut first: Option<(Vec<f32>, Vec<f32>)> = None;
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::new(threads);
+            let mut scratch = conv_scratch(pool.lanes(), batch, &s);
+            let mut cache = vec![0.0; batch * s.col_elems()];
+            let mut got = vec![0.0; want.len()];
+            conv2d_forward_pool(
+                &pool,
+                &x,
+                &w,
+                &b,
+                &mut got,
+                Some(cache.as_mut_slice()),
+                &mut scratch,
+                &s,
+            );
+            assert_eq!(want, got, "gconv fwd b{batch} t{threads}");
+            let mut dw = vec![0.0; w.len()];
+            let mut db = vec![0.0; s.cout];
+            let mut dx = vec![0.0; x.len()];
+            conv2d_backward_pool(&pool, &w, &dy, &mut dw, &mut db, &mut dx, &cache, &mut scratch, &s);
+            // Per-example dx is bitwise serial-equal; dw/db regroup the
+            // example sum by chunk (rounding-level vs serial, bitwise
+            // across lane counts).
+            assert_eq!(dx_ref, dx, "gconv dx b{batch} t{threads}");
+            assert!(max_rel_err(&dw_ref, &dw) < 1e-4, "gconv dw b{batch} t{threads}");
+            assert!(max_rel_err(&db_ref, &db) < 1e-4, "gconv db b{batch} t{threads}");
+            match &first {
+                None => first = Some((dw, db)),
+                Some((dw1, db1)) => {
+                    assert_eq!(dw1, &dw, "gconv dw lanes b{batch} t{threads}");
+                    assert_eq!(db1, &db, "gconv db lanes b{batch} t{threads}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lrn_matches_serial_bitwise_at_awkward_batches() {
+    let mut rng = Pcg32::seeded(53);
+    // channels < window, == window, and plenty past it.
+    for (channels, radius) in [(3usize, 2usize), (5, 2), (11, 2)] {
+        for batch in [1, 5, MAX_CHUNKS, MAX_CHUNKS + 1] {
+            let s = LrnShape { batch, channels, hw: 3, radius, bias: 2.0, alpha: 0.3, beta: 0.75 };
+            let x = randn(&mut rng, batch * s.elems());
+            let dy = randn(&mut rng, batch * s.elems());
+            let mut y_ref = vec![0.0; x.len()];
+            lrn_forward(&x, &mut y_ref, &s);
+            let mut dx_ref = vec![0.0; x.len()];
+            lrn_backward(&x, &y_ref, &dy, &mut dx_ref, &s);
+            for threads in LANE_COUNTS {
+                let pool = ComputePool::new(threads);
+                let mut y = vec![0.0; x.len()];
+                lrn_forward_pool(&pool, &x, &mut y, &s);
+                assert_eq!(y_ref, y, "lrn fwd c{channels} b{batch} t{threads}");
+                let mut dx = vec![0.0; x.len()];
+                lrn_backward_pool(&pool, &x, &y_ref, &dy, &mut dx, &s);
+                assert_eq!(dx_ref, dx, "lrn bwd c{channels} b{batch} t{threads}");
+            }
+        }
+    }
+}
+
+/// The per-ISA serial==parallel contract at the *grouped* conv panel
+/// geometry: per-group GEMMs see `cout/G × (cin/G)·k² × ohw` operands
+/// (and their nt/tn backward transposes), which are far narrower than
+/// the ungrouped panels.  For every microkernel the host can run, the
+/// pinned-kernel parallel GEMMs must bitwise match the pinned-kernel
+/// serial forms at these shapes and every lane count.
+#[test]
+fn grouped_panel_gemms_are_bitwise_serial_equal_for_every_available_isa() {
+    let s = gconv_shape(1);
+    let gcout = s.cout / s.groups;
+    let ck2 = (s.cin / s.groups) * s.k * s.k;
+    let ohw = s.out_hw * s.out_hw;
+    // Forward (nn), dW (nt), and dcol (tn) panel shapes.
+    let shapes = [(gcout, ck2, ohw), (gcout, ohw, ck2), (ck2, gcout, ohw)];
+    let mut rng = Pcg32::seeded(57);
+    for isa in [Isa::Avx2, Isa::Neon, Isa::Scalar] {
+        if !isa.available() {
+            continue;
+        }
+        let kern = MicroKernel::for_isa(isa);
+        for threads in LANE_COUNTS {
+            let pool = ComputePool::with_kernel(threads, kern);
+            let mut ws = PackBuf::default();
+            let mut serial_ws = PackBuf::default();
+            for (m, k, n) in shapes {
+                let a = randn(&mut rng, m * k);
+                let at = transpose(m, k, &a);
+                let b = randn(&mut rng, k * n);
+                let bt = transpose(k, n, &b);
+
+                let mut want = vec![0.0; m * n];
+                matmul_nn_ws_with(kern, m, k, n, &a, &b, &mut want, &mut serial_ws);
+                let mut got = vec![0.0; m * n];
+                par_matmul_nn(&pool, m, k, n, &a, &b, &mut got, &mut ws);
+                assert_eq!(want, got, "gpanel nn {isa:?} {m}x{k}x{n} t{threads}");
+
+                let mut want = vec![0.0; m * n];
+                matmul_nt_ws_with(kern, m, k, n, &a, &bt, &mut want, &mut serial_ws);
+                let mut got = vec![0.0; m * n];
+                par_matmul_nt(&pool, m, k, n, &a, &bt, &mut got, &mut ws);
+                assert_eq!(want, got, "gpanel nt {isa:?} {m}x{k}x{n} t{threads}");
+
+                let mut want = vec![0.0; m * n];
+                matmul_tn_ws_with(kern, m, k, n, &at, &b, &mut want, &mut serial_ws);
+                let mut got = vec![0.0; m * n];
+                par_matmul_tn(&pool, m, k, n, &at, &b, &mut got, &mut ws);
+                assert_eq!(want, got, "gpanel tn {isa:?} {m}x{k}x{n} t{threads}");
             }
         }
     }
@@ -470,6 +612,47 @@ fn train_step_is_bitwise_identical_across_thread_counts() {
             store1.max_divergence(&store_t),
             0.0,
             "params/momenta diverged at {threads} threads"
+        );
+    }
+}
+
+/// The capstone again, through the grouped-conv and LRN plan ops: a
+/// micro arch with LRN after conv1 and 2-group conv2 must train
+/// bit-identically for `threads ∈ {1, 2, 4}` — the acceptance bar for
+/// the faithful-AlexNet structure under intra-op parallelism.
+#[test]
+fn grouped_lrn_train_step_is_bitwise_identical_across_thread_counts() {
+    let mut arch = alexnet_micro();
+    arch.convs[0].lrn = Some(LrnSpec::krizhevsky());
+    arch.convs[1].groups = 2;
+    let mut rng = Pcg32::seeded(9);
+    let batch = 6;
+    let images = HostTensor::rand_normal(Shape::of(&[batch, 3, 32, 32]), &mut rng, 1.0);
+    let labels: Vec<i32> =
+        (0..batch).map(|_| rng.below(arch.num_classes as u32) as i32).collect();
+
+    let run = |threads: usize| {
+        let mut backend = NativeBackend::with_threads(&arch, 0.5, threads);
+        let mut store = ParamStore::init(&backend.model().params, 11);
+        let mut losses = Vec::new();
+        for step in 0..4 {
+            let out = backend.train_step(&images, &labels, 0.02, 100 + step, &mut store).unwrap();
+            losses.push(out.loss);
+        }
+        let eval = backend.eval_batch(&images, &labels, &store).unwrap();
+        (losses, eval.loss, store)
+    };
+
+    let (losses1, eval1, store1) = run(1);
+    assert!(losses1.iter().all(|l| l.is_finite()));
+    for threads in [2, 4] {
+        let (losses_t, eval_t, store_t) = run(threads);
+        assert_eq!(losses1, losses_t, "grouped/lrn losses diverged at {threads} threads");
+        assert_eq!(eval1, eval_t, "grouped/lrn eval loss diverged at {threads} threads");
+        assert_eq!(
+            store1.max_divergence(&store_t),
+            0.0,
+            "grouped/lrn params/momenta diverged at {threads} threads"
         );
     }
 }
