@@ -65,6 +65,7 @@ fn main() {
         deadline: Duration::from_secs_f64(DEADLINE_MS / 1e3),
         topk: 5,
         port: 0,
+        ..ServeOpts::default()
     };
     let server = Server::start(&cfg, store, opts).unwrap();
     let addr = server.addr().to_string();

@@ -84,6 +84,7 @@ fn run_server(a: &ArgMap) -> Result<i32> {
             .str_or("port", "7070")
             .parse::<u16>()
             .map_err(|_| Error::msg("--port wants a u16"))?,
+        idle_timeout: Duration::from_secs(a.u64_or("idle-timeout-secs", 60)?.max(1)),
     };
     // `--threads auto` divides the machine's cores across replicas the
     // same way training divides them across workers.

@@ -124,6 +124,44 @@ pub fn apply_overrides(cfg: &mut TrainConfig, a: &ArgMap) -> Result<()> {
     if let Some(v) = a.get("csv") {
         cfg.metrics_csv = Some(PathBuf::from(v));
     }
+    // --- Distributed (multi-process) mode: `--peers` (or a config
+    // --- [distributed] section) makes this process ONE rank of a TCP
+    // --- ring instead of spawning every worker as a thread. ---
+    let wants_distributed =
+        a.has_flag("distributed") || a.get("peers").is_some() || a.get("rank").is_some();
+    if wants_distributed || cfg.distributed.is_some() {
+        let mut d = cfg.distributed.clone().unwrap_or_default();
+        if let Some(v) = a.get("peers") {
+            d.peers = v.split(',').map(|s| s.trim().to_string()).collect();
+        }
+        if let Some(v) = a.get("rank") {
+            d.rank = v.parse().map_err(|_| crate::Error::msg("--rank wants int"))?;
+        }
+        if let Some(v) = a.get("connect-timeout-ms") {
+            d.connect_timeout_ms =
+                v.parse().map_err(|_| crate::Error::msg("--connect-timeout-ms wants int"))?;
+        }
+        if let Some(v) = a.get("io-timeout-ms") {
+            d.io_timeout_ms =
+                v.parse().map_err(|_| crate::Error::msg("--io-timeout-ms wants int"))?;
+        }
+        if d.peers.is_empty() {
+            return Err(crate::Error::msg(
+                "--distributed needs --peers HOST:PORT,... (one listen address per rank, \
+                 in rank order) or a [distributed] config section",
+            ));
+        }
+        // One rank per worker: `--peers` implies the worker count
+        // unless the user pinned it (validate() cross-checks either way).
+        if a.get("workers").is_none()
+            && a.get("switches").is_none()
+            && cfg.cluster.workers != d.peers.len()
+        {
+            cfg.cluster.workers = d.peers.len();
+            cfg.cluster.switch_of_worker = vec![0; d.peers.len()];
+        }
+        cfg.distributed = Some(d);
+    }
     cfg.validate()
 }
 
@@ -345,6 +383,38 @@ mod tests {
         assert!(format!("{err}").contains("period"), "{err}");
         let mut cfg = TrainConfig::default();
         assert!(apply_overrides(&mut cfg, &args("--overlap sideways")).is_err());
+    }
+
+    #[test]
+    fn distributed_overrides_parse() {
+        // `--peers` implies distributed mode and the worker count.
+        let mut cfg = TrainConfig::default();
+        apply_overrides(
+            &mut cfg,
+            &args(
+                "--rank 1 --peers 127.0.0.1:7301,127.0.0.1:7302 \
+                 --connect-timeout-ms 500 --io-timeout-ms 800",
+            ),
+        )
+        .unwrap();
+        let d = cfg.distributed.as_ref().expect("peers enable distributed mode");
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.peers, vec!["127.0.0.1:7301", "127.0.0.1:7302"]);
+        assert_eq!(d.connect_timeout_ms, 500);
+        assert_eq!(d.io_timeout_ms, 800);
+        assert_eq!(cfg.cluster.workers, 2, "one rank per worker");
+        // Bare `--distributed` without a peer list is a config error,
+        // not a silent single-process run.
+        let mut cfg = TrainConfig::default();
+        let err = apply_overrides(&mut cfg, &args("--steps 4 --distributed")).unwrap_err();
+        assert!(format!("{err}").contains("--peers"), "{err}");
+        // Rank outside the peer list is rejected by validation.
+        let mut cfg = TrainConfig::default();
+        assert!(apply_overrides(
+            &mut cfg,
+            &args("--rank 5 --peers 127.0.0.1:7301,127.0.0.1:7302"),
+        )
+        .is_err());
     }
 
     #[test]

@@ -63,6 +63,8 @@ USAGE:
                 [--checkpoint-every N] [--checkpoint-keep N]
                 [--eval-every N] [--resume auto|PATH] [--csv FILE]
                 [--gemm-isa avx2|neon|scalar|auto]
+                [--distributed --rank R --peers HOST:PORT,...]
+                [--connect-timeout-ms N] [--io-timeout-ms N]
   tmg eval      --checkpoint FILE [--config FILE] [--model M]
                 [--backend B] [--data-dir DIR] [--batch N]
                 [--threads N|auto] [--max-batches N]
@@ -71,6 +73,7 @@ USAGE:
                 [--backend B] [--data-dir DIR] [--threads N|auto]
                 [--replicas N] [--max-batch N] [--deadline-ms F]
                 [--port P] [--topk K] [--max-requests N]
+                [--idle-timeout-secs N]
                 [--gemm-isa avx2|neon|scalar|auto]
   tmg serve     --client HOST:PORT [--requests N] [--concurrency C]
                 [--seed N]
@@ -103,6 +106,15 @@ Lifecycle: `--checkpoint-every N` snapshots each replica every N steps
 (atomic v2 files carrying the resume state), `--eval-every N` runs
 mid-training validation, and `--resume auto` (or a checkpoint PATH)
 restarts a killed run bit-exactly from the newest valid snapshot.
+
+Distributed: `--peers HOST:PORT,...` (one listen address per rank, in
+rank order) runs this process as rank `--rank R` of a multi-process
+TCP ring — same collective, same bits as the in-process run.  Ranks
+rendezvous with bounded retry (`--connect-timeout-ms`), every socket
+carries an I/O deadline (`--io-timeout-ms`) so a dead peer is a loud
+timeout instead of a hang, and after a crash restarting every rank
+with `--resume auto` (shared --checkpoint-dir) reassembles the run
+bit-exactly.  See README \"Distributed training\".
 
 The native GEMM picks an explicit SIMD microkernel (avx2/neon/scalar)
 at startup via runtime detection; `--gemm-isa` (or the TMG_GEMM_ISA

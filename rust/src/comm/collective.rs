@@ -33,8 +33,10 @@
 //! [`Endpoint::recv`]; a worker averaging against a stale round (the
 //! paper's §4.3 hazard) is detected, not silently computed.
 
+use std::time::Duration;
+
 use crate::comm::exchange::{ExchangePort, ExchangeStats};
-use crate::comm::link::{transport_pair, Endpoint};
+use crate::comm::link::{transport_pair, Endpoint, Transport};
 use crate::config::TransportKind;
 use crate::error::{Error, Result};
 use crate::params::average::{accumulate, scale_in_place};
@@ -125,6 +127,13 @@ pub trait Collective: Send {
     /// Number of participants in the group.
     fn world_size(&self) -> usize;
 
+    /// Bound every subsequent link recv (and socket send) by `d`, so a
+    /// dead peer surfaces as [`Error::Timeout`] instead of a hang.
+    /// `None` restores blocking behaviour.  No-op for N = 1.
+    fn set_io_deadline(&mut self, _d: Option<Duration>) -> Result<()> {
+        Ok(())
+    }
+
     /// Rounds completed (lockstep across the group).
     fn rounds(&self) -> u64 {
         self.stats().rounds
@@ -175,6 +184,11 @@ impl PairwiseCollective {
         PairwiseCollective { port: ExchangePort::new(endpoint) }
     }
 
+    /// Fast path over any transport (e.g. a socket to the peer rank).
+    pub fn from_transport(link: Box<dyn Transport>) -> Self {
+        PairwiseCollective { port: ExchangePort::from_transport(link) }
+    }
+
     /// Link-layer counters of the underlying endpoint.
     pub fn link_stats(&self) -> crate::comm::link::LinkStats {
         self.port.link_stats()
@@ -221,6 +235,10 @@ impl Collective for PairwiseCollective {
     fn world_size(&self) -> usize {
         2
     }
+
+    fn set_io_deadline(&mut self, d: Option<Duration>) -> Result<()> {
+        self.port.set_deadline(d)
+    }
 }
 
 /// Arbitrary N: chunked ring all-reduce over link transports.
@@ -232,8 +250,8 @@ impl Collective for PairwiseCollective {
 pub struct RingCollective {
     pub rank: usize,
     n: usize,
-    to_next: Endpoint,
-    from_prev: Endpoint,
+    to_next: Box<dyn Transport>,
+    from_prev: Box<dyn Transport>,
     /// Message counter; advances once per hop message so skew anywhere
     /// in the 2(N-1)-step schedule is detected by `Endpoint::recv`.
     seq: u64,
@@ -263,6 +281,29 @@ fn chunk_bounds(len: usize, n: usize) -> Vec<(usize, usize)> {
 }
 
 impl RingCollective {
+    /// Assemble one ring node from its two directed links — how the
+    /// distributed rendezvous builds a node whose links are sockets.
+    pub fn from_transports(
+        rank: usize,
+        n: usize,
+        to_next: Box<dyn Transport>,
+        from_prev: Box<dyn Transport>,
+    ) -> Self {
+        assert!(n >= 2, "a ring needs at least 2 nodes");
+        assert!(rank < n, "rank {rank} out of range for a {n}-node ring");
+        RingCollective {
+            rank,
+            n,
+            to_next,
+            from_prev,
+            seq: 0,
+            flat_buf: Vec::new(),
+            chunk_out: Vec::new(),
+            chunk_in: Vec::new(),
+            stats: CollectiveStats::default(),
+        }
+    }
+
     fn send_recv_chunk(&mut self, lo: usize, hi: usize) -> Result<()> {
         let mut out = std::mem::take(&mut self.chunk_out);
         out.clear();
@@ -394,6 +435,11 @@ impl Collective for RingCollective {
     fn world_size(&self) -> usize {
         self.n
     }
+
+    fn set_io_deadline(&mut self, d: Option<Duration>) -> Result<()> {
+        self.to_next.set_deadline(d)?;
+        self.from_prev.set_deadline(d)
+    }
 }
 
 /// Connected pair of N = 2 fast-path collectives over one link.
@@ -416,16 +462,13 @@ pub fn ring_fabric(hops: &[TransportKind]) -> Vec<RingCollective> {
         recv_sides.push(Some(b));
     }
     (0..n)
-        .map(|i| RingCollective {
-            rank: i,
-            n,
-            to_next: send_sides[i].take().unwrap(),
-            from_prev: recv_sides[(i + n - 1) % n].take().unwrap(),
-            seq: 0,
-            flat_buf: Vec::new(),
-            chunk_out: Vec::new(),
-            chunk_in: Vec::new(),
-            stats: CollectiveStats::default(),
+        .map(|i| {
+            RingCollective::from_transports(
+                i,
+                n,
+                Box::new(send_sides[i].take().unwrap()),
+                Box::new(recv_sides[(i + n - 1) % n].take().unwrap()),
+            )
         })
         .collect()
 }

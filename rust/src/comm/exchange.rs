@@ -15,7 +15,9 @@
 //! workaround: averaging against a stale round is detected, not
 //! silently computed.
 
-use crate::comm::link::Endpoint;
+use std::time::Duration;
+
+use crate::comm::link::{Endpoint, Transport};
 use crate::error::Result;
 use crate::params::ParamStore;
 use crate::util::Timer;
@@ -38,7 +40,7 @@ impl ExchangeStats {
 
 /// One worker's handle on the pairwise exchange.
 pub struct ExchangePort {
-    endpoint: Endpoint,
+    endpoint: Box<dyn Transport>,
     seq: u64,
     recv_buf: Vec<f32>,
     /// Outgoing staging buffer; ping-pongs with `recv_buf` so the P2P
@@ -49,6 +51,11 @@ pub struct ExchangePort {
 
 impl ExchangePort {
     pub fn new(endpoint: Endpoint) -> Self {
+        Self::from_transport(Box::new(endpoint))
+    }
+
+    /// Wrap any transport (in-memory link or a socket to the peer).
+    pub fn from_transport(endpoint: Box<dyn Transport>) -> Self {
         ExchangePort {
             endpoint,
             seq: 0,
@@ -56,6 +63,11 @@ impl ExchangePort {
             flat_buf: Vec::new(),
             stats: ExchangeStats::default(),
         }
+    }
+
+    /// Bound every subsequent recv (and socket send) by `d`.
+    pub fn set_deadline(&mut self, d: Option<Duration>) -> Result<()> {
+        self.endpoint.set_deadline(d)
     }
 
     /// Round counter (must advance in lockstep on both sides).
@@ -137,7 +149,7 @@ impl ExchangePort {
 
     /// Link-layer counters.
     pub fn link_stats(&self) -> crate::comm::link::LinkStats {
-        self.endpoint.stats
+        self.endpoint.stats()
     }
 }
 

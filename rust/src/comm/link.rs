@@ -1,17 +1,28 @@
-//! Paired transport endpoints.
+//! Paired transport endpoints: in-memory links and the TCP link.
 //!
 //! A message is `(seq, payload)`; `seq` lets the exchange protocol
 //! detect skew (a worker averaging against a stale round — exactly the
 //! hazard the paper hit with unsynchronized device-to-device copies,
-//! §4.3).  Three implementations differ in *real* work performed:
+//! §4.3).  The [`Transport`] trait is the send/recv contract every
+//! collective is written against; three in-memory implementations
+//! differ in *real* work performed:
 //!
 //! | kind        | copies                 | extra work        |
 //! |-------------|------------------------|-------------------|
 //! | P2p         | 1 (payload -> wire)    | —                 |
 //! | HostStaged  | 2 (payload -> host staging -> wire) | —    |
 //! | Serialized  | 2 + byte encode/decode | f32<->LE bytes    |
+//!
+//! [`TcpEndpoint`] carries the same contract across process (and
+//! machine) boundaries: each message is one length-prefixed frame
+//! (`seq: u64 LE, count: u32 LE, count * f32 LE`), and an optional
+//! deadline turns a dead or stalled peer into `Error::Timeout` instead
+//! of a hang.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 use crate::config::TransportKind;
 use crate::error::{Error, Result};
@@ -29,16 +40,40 @@ pub struct LinkStats {
     pub bytes_sent: u64,
     /// Host-side copies performed on the send path (P2p=1, staged=2).
     pub send_copies: u64,
-    /// Seconds spent encoding/decoding (Serialized only).
+    /// Seconds spent encoding/decoding (Serialized + TCP).
     pub codec_seconds: f64,
 }
 
-/// One side of a bidirectional link.
+/// The send/recv contract shared by in-memory and TCP links.  The
+/// collectives (`ExchangePort`, `RingCollective`) are written against
+/// this trait, so a ring can mix local channels and sockets.
+pub trait Transport: Send {
+    /// Send an owned payload tagged with `seq` (may move the buffer).
+    fn send_vec(&mut self, seq: u64, payload: Vec<f32>) -> Result<()>;
+
+    /// Send a borrowed payload tagged with `seq`.
+    fn send(&mut self, seq: u64, payload: &[f32]) -> Result<()>;
+
+    /// Receive the message for `expected_seq` into `out`.  A sequence
+    /// mismatch is `Error::Protocol`; a missed deadline is
+    /// `Error::Timeout`.
+    fn recv(&mut self, expected_seq: u64, out: &mut Vec<f32>) -> Result<()>;
+
+    /// Bound every subsequent recv (and, for sockets, send) by `d`.
+    /// `None` restores blocking behaviour.
+    fn set_deadline(&mut self, d: Option<Duration>) -> Result<()>;
+
+    /// Traffic counters accumulated so far.
+    fn stats(&self) -> LinkStats;
+}
+
+/// One side of a bidirectional in-memory link.
 pub struct Endpoint {
     kind: TransportKind,
     tx: Sender<Wire>,
     rx: Receiver<Wire>,
     staging: Vec<f32>,
+    deadline: Option<Duration>,
     pub stats: LinkStats,
 }
 
@@ -47,14 +82,33 @@ pub fn transport_pair(kind: TransportKind) -> (Endpoint, Endpoint) {
     let (tx_ab, rx_ab) = channel();
     let (tx_ba, rx_ba) = channel();
     (
-        Endpoint { kind, tx: tx_ab, rx: rx_ba, staging: Vec::new(), stats: LinkStats::default() },
-        Endpoint { kind, tx: tx_ba, rx: rx_ab, staging: Vec::new(), stats: LinkStats::default() },
+        Endpoint {
+            kind,
+            tx: tx_ab,
+            rx: rx_ba,
+            staging: Vec::new(),
+            deadline: None,
+            stats: LinkStats::default(),
+        },
+        Endpoint {
+            kind,
+            tx: tx_ba,
+            rx: rx_ab,
+            staging: Vec::new(),
+            deadline: None,
+            stats: LinkStats::default(),
+        },
     )
 }
 
 impl Endpoint {
     pub fn kind(&self) -> TransportKind {
         self.kind
+    }
+
+    /// Bound every subsequent `recv` by `d` (None = block forever).
+    pub fn set_deadline(&mut self, d: Option<Duration>) {
+        self.deadline = d;
     }
 
     /// Send an owned payload tagged with `seq`.  On the P2P path the
@@ -111,10 +165,21 @@ impl Endpoint {
 
     /// Receive the message for `expected_seq` into `out`.
     pub fn recv(&mut self, expected_seq: u64, out: &mut Vec<f32>) -> Result<()> {
-        let wire = self
-            .rx
-            .recv()
-            .map_err(|_| Error::Protocol("peer endpoint dropped".into()))?;
+        let wire = match self.deadline {
+            None => self
+                .rx
+                .recv()
+                .map_err(|_| Error::Protocol("peer endpoint dropped".into()))?,
+            Some(d) => self.rx.recv_timeout(d).map_err(|e| match e {
+                RecvTimeoutError::Timeout => Error::Timeout(format!(
+                    "no message for round {expected_seq} within {d:?} \
+                     (peer dead or stalled)"
+                )),
+                RecvTimeoutError::Disconnected => {
+                    Error::Protocol("peer endpoint dropped".into())
+                }
+            })?,
+        };
         let (seq, n) = match wire {
             Wire::Raw(seq, v) => {
                 // Take ownership of the wire buffer — no copy.
@@ -147,9 +212,161 @@ impl Endpoint {
     }
 }
 
+impl Transport for Endpoint {
+    fn send_vec(&mut self, seq: u64, payload: Vec<f32>) -> Result<()> {
+        Endpoint::send_vec(self, seq, payload)
+    }
+
+    fn send(&mut self, seq: u64, payload: &[f32]) -> Result<()> {
+        Endpoint::send(self, seq, payload)
+    }
+
+    fn recv(&mut self, expected_seq: u64, out: &mut Vec<f32>) -> Result<()> {
+        Endpoint::recv(self, expected_seq, out)
+    }
+
+    fn set_deadline(&mut self, d: Option<Duration>) -> Result<()> {
+        Endpoint::set_deadline(self, d);
+        Ok(())
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats
+    }
+}
+
+/// Frame header: seq (u64 LE) + element count (u32 LE).
+const TCP_HEADER_BYTES: usize = 12;
+
+/// Sanity bound on a single frame (2^28 f32 = 1 GiB payload); anything
+/// larger means a corrupt or hostile stream, not a gradient bucket.
+const TCP_MAX_FRAME_ELEMS: u32 = 1 << 28;
+
+/// One direction-pair of a socket link: the same `(seq, payload)`
+/// contract as the in-memory endpoints, framed as
+/// `seq: u64 LE, count: u32 LE, count * f32 LE` on a `TcpStream`.
+pub struct TcpEndpoint {
+    stream: TcpStream,
+    wire_buf: Vec<u8>,
+    pub stats: LinkStats,
+}
+
+impl TcpEndpoint {
+    /// Wrap a connected stream.  `TCP_NODELAY` is set — exchange
+    /// frames are latency-critical and self-contained, so Nagle
+    /// batching only adds round latency.
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true).map_err(Error::RawIo)?;
+        Ok(TcpEndpoint { stream, wire_buf: Vec::new(), stats: LinkStats::default() })
+    }
+
+    fn peer_label(&self) -> String {
+        match self.stream.peer_addr() {
+            Ok(a) => a.to_string(),
+            Err(_) => "<disconnected peer>".into(),
+        }
+    }
+
+    /// Map a socket error to the collective error vocabulary: missed
+    /// deadline -> Timeout, torn stream -> Protocol, rest -> RawIo.
+    fn map_io(&self, what: &str, e: std::io::Error) -> Error {
+        use std::io::ErrorKind;
+        match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => Error::Timeout(format!(
+                "tcp {what} to/from {} missed its deadline (peer dead or stalled)",
+                self.peer_label()
+            )),
+            ErrorKind::UnexpectedEof => Error::Protocol(format!(
+                "peer {} closed the connection mid-{what}",
+                self.peer_label()
+            )),
+            _ => Error::RawIo(e),
+        }
+    }
+}
+
+impl Transport for TcpEndpoint {
+    fn send_vec(&mut self, seq: u64, payload: Vec<f32>) -> Result<()> {
+        self.send(seq, &payload)
+    }
+
+    fn send(&mut self, seq: u64, payload: &[f32]) -> Result<()> {
+        if payload.len() as u64 > TCP_MAX_FRAME_ELEMS as u64 {
+            return Err(Error::Protocol(format!(
+                "tcp frame of {} f32 exceeds the {} element bound",
+                payload.len(),
+                TCP_MAX_FRAME_ELEMS
+            )));
+        }
+        self.stats.messages += 1;
+        self.stats.bytes_sent += (payload.len() * 4) as u64;
+        let t = crate::util::Timer::start();
+        self.wire_buf.clear();
+        self.wire_buf.reserve(TCP_HEADER_BYTES + payload.len() * 4);
+        self.wire_buf.extend_from_slice(&seq.to_le_bytes());
+        self.wire_buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        for v in payload {
+            self.wire_buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.stats.codec_seconds += t.elapsed_secs();
+        // Encode into the wire buffer + the kernel copy on write.
+        self.stats.send_copies += 2;
+        if let Err(e) = self.stream.write_all(&self.wire_buf) {
+            return Err(self.map_io("send", e));
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, expected_seq: u64, out: &mut Vec<f32>) -> Result<()> {
+        let mut header = [0u8; TCP_HEADER_BYTES];
+        if let Err(e) = self.stream.read_exact(&mut header) {
+            return Err(self.map_io("recv", e));
+        }
+        let seq = u64::from_le_bytes(header[0..8].try_into().unwrap());
+        let count = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if count > TCP_MAX_FRAME_ELEMS {
+            return Err(Error::Protocol(format!(
+                "tcp frame header claims {count} f32 (bound {TCP_MAX_FRAME_ELEMS}); \
+                 corrupt stream from {}",
+                self.peer_label()
+            )));
+        }
+        self.wire_buf.clear();
+        self.wire_buf.resize(count as usize * 4, 0);
+        if let Err(e) = self.stream.read_exact(&mut self.wire_buf) {
+            return Err(self.map_io("recv", e));
+        }
+        let t = crate::util::Timer::start();
+        out.clear();
+        out.reserve(count as usize);
+        for c in self.wire_buf.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        self.stats.codec_seconds += t.elapsed_secs();
+        if seq != expected_seq {
+            return Err(Error::Protocol(format!(
+                "exchange skew: received round {seq}, expected {expected_seq} \
+                 (unsynchronized peer copy — the §4.3 hazard)"
+            )));
+        }
+        Ok(())
+    }
+
+    fn set_deadline(&mut self, d: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(d).map_err(Error::RawIo)?;
+        self.stream.set_write_timeout(d).map_err(Error::RawIo)?;
+        Ok(())
+    }
+
+    fn stats(&self) -> LinkStats {
+        self.stats
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::TcpListener;
 
     fn roundtrip(kind: TransportKind) {
         let (mut a, mut b) = transport_pair(kind);
@@ -206,5 +423,93 @@ mod tests {
         let (mut a, b) = transport_pair(TransportKind::P2p);
         drop(b);
         assert!(a.send(0, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn in_memory_recv_deadline_times_out() {
+        let (mut a, _b) = transport_pair(TransportKind::P2p);
+        a.set_deadline(Some(Duration::from_millis(30)));
+        let mut out = Vec::new();
+        // Peer alive but silent: must surface as Timeout, not hang.
+        let err = a.recv(7, &mut out).unwrap_err();
+        match err {
+            Error::Timeout(m) => assert!(m.contains("round 7"), "message: {m}"),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // Clearing the deadline restores normal delivery.
+        a.set_deadline(None);
+    }
+
+    /// A connected loopback TcpEndpoint pair (a = client, b = accepted).
+    fn tcp_pair() -> (TcpEndpoint, TcpEndpoint) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (TcpEndpoint::new(client).unwrap(), TcpEndpoint::new(server).unwrap())
+    }
+
+    #[test]
+    fn tcp_roundtrip_is_exact() {
+        let (mut a, mut b) = tcp_pair();
+        // Includes values that would be lossy under any non-bitwise
+        // re-encode: the LE byte round-trip must be exact.
+        let payload: Vec<f32> =
+            vec![0.1, -0.0, f32::MIN_POSITIVE, 1.0e-38, 3.141_592_7, -12345.678];
+        a.send(0, &payload).unwrap();
+        let mut out = Vec::new();
+        b.recv(0, &mut out).unwrap();
+        assert_eq!(out.len(), payload.len());
+        for (x, y) in out.iter().zip(payload.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        b.send_vec(1, payload.clone()).unwrap();
+        a.recv(1, &mut out).unwrap();
+        assert_eq!(out, payload);
+        assert_eq!(a.stats.messages, 1);
+        assert_eq!(a.stats.bytes_sent, (payload.len() * 4) as u64);
+    }
+
+    #[test]
+    fn tcp_seq_skew_detected() {
+        let (mut a, mut b) = tcp_pair();
+        a.send(3, &[1.0]).unwrap();
+        let mut out = Vec::new();
+        let err = b.recv(4, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn tcp_stalled_peer_times_out() {
+        let (mut a, _b) = tcp_pair();
+        a.set_deadline(Some(Duration::from_millis(30))).unwrap();
+        let mut out = Vec::new();
+        let err = a.recv(0, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn tcp_closed_peer_is_protocol_error() {
+        let (mut a, b) = tcp_pair();
+        drop(b);
+        let mut out = Vec::new();
+        let err = a.recv(0, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn tcp_rejects_oversized_frame_header() {
+        let (mut a, mut b) = tcp_pair();
+        // Hand-craft a header claiming an absurd element count.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&0u64.to_le_bytes());
+        frame.extend_from_slice(&u32::MAX.to_le_bytes());
+        a.stream.write_all(&frame).unwrap();
+        let mut out = Vec::new();
+        let err = b.recv(0, &mut out).unwrap_err();
+        match err {
+            Error::Protocol(m) => assert!(m.contains("corrupt stream"), "message: {m}"),
+            other => panic!("expected Protocol, got {other:?}"),
+        }
     }
 }

@@ -20,6 +20,10 @@
 //!   fixed layout-derived buckets ring-reduced on a dedicated comm
 //!   thread concurrently with the remaining backward pass, joined at a
 //!   barrier before the update (Theano-MPI's comm/compute overlap).
+//! - [`rendezvous`]: multi-process rings — bind/connect/handshake
+//!   assembly of the same ring collective across OS processes over
+//!   TCP, with bounded backoff and loud named-field rejection of
+//!   drifted peers.
 //! - [`barrier`]: timed step barrier.
 //! - [`cost`]: analytic transfer-time model, calibrated by `sim`.
 
@@ -29,6 +33,7 @@ pub mod cost;
 pub mod exchange;
 pub mod link;
 pub mod overlap;
+pub mod rendezvous;
 
 pub use barrier::TimedBarrier;
 pub use collective::{
@@ -38,4 +43,5 @@ pub use collective::{
 pub use overlap::{bucket_bounds, GradExchanger};
 pub use cost::{CommCostModel, LinkCost};
 pub use exchange::{ExchangePort, ExchangeStats};
-pub use link::{transport_pair, Endpoint, LinkStats};
+pub use link::{transport_pair, Endpoint, LinkStats, TcpEndpoint, Transport};
+pub use rendezvous::{ring_over_tcp, Hello, RendezvousCfg, FRESH_RUN, PROTOCOL_VERSION};

@@ -19,6 +19,13 @@
 //! backward) and the serial mode (reduce everything at the join
 //! barrier) are bit-identical by construction — the serial mode *is*
 //! the non-overlapped baseline the benches compare against.
+//!
+//! Fault surface: the exchanger adds no timeouts of its own, but when
+//! the wrapped collective's links carry an I/O deadline
+//! (`Collective::set_io_deadline` — always set in distributed mode) a
+//! dead or stalled peer turns into an [`Error::Timeout`] delivered at
+//! the [`GradExchanger::join`] barrier, never a silent hang of the
+//! step loop.
 
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::thread::JoinHandle;
@@ -371,6 +378,31 @@ mod tests {
             assert_eq!(serial[rank], stream[rank], "rank {rank}");
         }
         assert_eq!(serial[0], serial[1]);
+    }
+
+    /// A stalled (alive but silent) peer behind a link deadline must
+    /// surface as a Timeout at the join barrier — the streamed comm
+    /// thread forwards the error instead of hanging the step loop.
+    #[test]
+    fn stalled_peer_with_deadline_times_out_at_join() {
+        use crate::comm::collective::PairwiseCollective;
+        use crate::comm::link::transport_pair;
+        use std::time::Duration;
+
+        let (a, stalled_peer) = transport_pair(TransportKind::P2p);
+        let mut coll = PairwiseCollective::from_transport(Box::new(a));
+        coll.set_io_deadline(Some(Duration::from_millis(30))).unwrap();
+        let mut ex = GradExchanger::new(Box::new(coll), 8, 4, true);
+        ex.grad_ready(0, &[1.0; 8]).unwrap();
+        let err = ex.join().unwrap_err();
+        assert!(
+            matches!(err, Error::Timeout(_)),
+            "expected Timeout from the join barrier, got: {err}"
+        );
+        // The peer endpoint stayed alive the whole time — this was a
+        // stall, not a disconnect.
+        drop(stalled_peer);
+        ex.finish().unwrap();
     }
 
     #[test]

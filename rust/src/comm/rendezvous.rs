@@ -1,0 +1,527 @@
+//! Distributed rendezvous: assemble the ring collective across OS
+//! processes over TCP.
+//!
+//! Every rank is given the same ordered peer list (`peers[i]` = the
+//! listen address of rank `i`).  Rendezvous builds the two directed
+//! ring links of this rank — `rank -> rank+1` (outbound connect) and
+//! `rank-1 -> rank` (inbound accept) — with a handshake that fails
+//! *loudly* instead of hanging or silently mis-pairing:
+//!
+//! 1. bind the local listener (before connecting out, so a peer's
+//!    early connect lands in the backlog instead of being refused);
+//! 2. connect to the next rank with bounded retry + exponential
+//!    backoff, and immediately send the local [`Hello`];
+//! 3. accept the previous rank's connection under a deadline, read its
+//!    `Hello`, validate every field (version, ring position, world
+//!    size, config fingerprint, resume step), and reply with the local
+//!    `Hello` as the acknowledgement;
+//! 4. read the next rank's acknowledgement on the outbound link and
+//!    validate it the same way.
+//!
+//! Because every rank sends its `Hello` *before* blocking on accept,
+//! and the acknowledgement is produced by the peer's accept phase, the
+//! schedule has no circular wait for any N.  Any mismatch is an
+//! [`Error::Protocol`] naming the offending field; any absent peer is
+//! an [`Error::Timeout`] naming the rank and the exhausted budget.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use crate::comm::collective::RingCollective;
+use crate::comm::link::{TcpEndpoint, Transport};
+use crate::error::{Error, Result};
+
+/// Bumped whenever the frame or handshake layout changes; peers with a
+/// different version refuse to pair.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Resume step value meaning "fresh run, no checkpoint".
+pub const FRESH_RUN: u64 = u64::MAX;
+
+const MAGIC: [u8; 4] = *b"TMGD";
+const HELLO_BYTES: usize = 32;
+
+/// The handshake payload every rank presents on both of its links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u32,
+    pub rank: u32,
+    pub world: u32,
+    /// `TrainConfig::resume_fingerprint()` — ranks running drifted
+    /// configs must not form a ring.
+    pub fingerprint: u64,
+    /// Step the run resumes from ([`FRESH_RUN`] = from scratch); ranks
+    /// that resolved different checkpoint sets must not form a ring.
+    pub resume_step: u64,
+}
+
+fn encode_hello(h: &Hello) -> [u8; HELLO_BYTES] {
+    let mut buf = [0u8; HELLO_BYTES];
+    buf[0..4].copy_from_slice(&MAGIC);
+    buf[4..8].copy_from_slice(&h.version.to_le_bytes());
+    buf[8..12].copy_from_slice(&h.rank.to_le_bytes());
+    buf[12..16].copy_from_slice(&h.world.to_le_bytes());
+    buf[16..24].copy_from_slice(&h.fingerprint.to_le_bytes());
+    buf[24..32].copy_from_slice(&h.resume_step.to_le_bytes());
+    buf
+}
+
+fn decode_hello(buf: &[u8; HELLO_BYTES]) -> Result<Hello> {
+    if buf[0..4] != MAGIC {
+        return Err(Error::Protocol(
+            "handshake: bad magic — the peer is not a tmg distributed worker".into(),
+        ));
+    }
+    Ok(Hello {
+        version: u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+        rank: u32::from_le_bytes(buf[8..12].try_into().unwrap()),
+        world: u32::from_le_bytes(buf[12..16].try_into().unwrap()),
+        fingerprint: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+        resume_step: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+    })
+}
+
+fn fmt_step(step: u64) -> String {
+    if step == FRESH_RUN {
+        "<fresh run>".into()
+    } else {
+        format!("step {step}")
+    }
+}
+
+/// Check a peer's `Hello` against ours and its expected ring position.
+/// Every rejection names the mismatched field and both values.
+pub fn validate_hello(peer: &Hello, expected_rank: u32, local: &Hello) -> Result<()> {
+    if peer.version != local.version {
+        return Err(Error::Protocol(format!(
+            "handshake: protocol version skew: peer rank {} speaks v{}, \
+             this build speaks v{}",
+            peer.rank, peer.version, local.version
+        )));
+    }
+    if peer.world != local.world {
+        return Err(Error::Protocol(format!(
+            "handshake: world-size mismatch: peer rank {} expects a \
+             {}-rank ring, this run has {} ranks",
+            peer.rank, peer.world, local.world
+        )));
+    }
+    if peer.rank != expected_rank {
+        return Err(Error::Protocol(format!(
+            "handshake: ring position mismatch: this link expects rank \
+             {expected_rank}, the peer claims rank {} — check the peer \
+             list ordering",
+            peer.rank
+        )));
+    }
+    if peer.fingerprint != local.fingerprint {
+        return Err(Error::Protocol(format!(
+            "handshake: config fingerprint mismatch: peer rank {} has \
+             {:#018x}, local is {:#018x} — resume-critical config \
+             drifted between ranks",
+            peer.rank, peer.fingerprint, local.fingerprint
+        )));
+    }
+    if peer.resume_step != local.resume_step {
+        return Err(Error::Protocol(format!(
+            "handshake: resume-step mismatch: peer rank {} starts at {}, \
+             this rank at {} — the ranks resolved different checkpoint \
+             sets (share one checkpoint dir, or clean stale snapshots)",
+            peer.rank,
+            fmt_step(peer.resume_step),
+            fmt_step(local.resume_step)
+        )));
+    }
+    Ok(())
+}
+
+/// Connect to `addr` with exponential backoff until `budget` runs out.
+fn connect_with_backoff(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let start = Instant::now();
+    let mut delay = Duration::from_millis(25);
+    let mut last_err = String::from("address did not resolve");
+    loop {
+        let remaining = budget.saturating_sub(start.elapsed());
+        if remaining.is_zero() {
+            return Err(Error::Timeout(format!(
+                "rendezvous: could not connect to peer {addr} within \
+                 {budget:?} (last error: {last_err}) — is that rank up?"
+            )));
+        }
+        match addr.to_socket_addrs() {
+            Ok(mut addrs) => match addrs.next() {
+                Some(sock) => match TcpStream::connect_timeout(&sock, remaining) {
+                    Ok(s) => return Ok(s),
+                    Err(e) => last_err = e.to_string(),
+                },
+                None => {
+                    return Err(Error::Config(format!(
+                        "rendezvous: peer address {addr:?} resolves to nothing"
+                    )))
+                }
+            },
+            Err(e) => last_err = e.to_string(),
+        }
+        std::thread::sleep(delay.min(budget.saturating_sub(start.elapsed())));
+        delay = (delay * 2).min(Duration::from_secs(1));
+    }
+}
+
+/// Accept one connection under a deadline (std listeners have no
+/// native accept timeout, so poll in non-blocking mode).
+fn accept_within(listener: &TcpListener, budget: Duration, from_rank: usize) -> Result<TcpStream> {
+    listener.set_nonblocking(true).map_err(Error::RawIo)?;
+    let start = Instant::now();
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nonblocking(false).map_err(Error::RawIo)?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                if start.elapsed() >= budget {
+                    return Err(Error::Timeout(format!(
+                        "rendezvous: no connection from rank {from_rank} \
+                         within {budget:?} — is that rank up?"
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(Error::RawIo(e)),
+        }
+    }
+}
+
+fn write_hello(stream: &mut TcpStream, hello: &Hello, what: &str) -> Result<()> {
+    stream.write_all(&encode_hello(hello)).map_err(|e| match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            Error::Timeout(format!("handshake: sending {what} missed its deadline"))
+        }
+        _ => Error::RawIo(e),
+    })
+}
+
+fn read_hello(stream: &mut TcpStream, what: &str) -> Result<Hello> {
+    let mut buf = [0u8; HELLO_BYTES];
+    stream.read_exact(&mut buf).map_err(|e| match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+            Error::Timeout(format!("handshake: waiting for {what} missed its deadline"))
+        }
+        ErrorKind::UnexpectedEof => Error::Protocol(format!(
+            "handshake: peer closed the connection before sending its {what} \
+             (its own handshake validation probably failed — check its log)"
+        )),
+        _ => Error::RawIo(e),
+    })?;
+    decode_hello(&buf)
+}
+
+/// Everything rendezvous needs from the run configuration.
+pub struct RendezvousCfg<'a> {
+    /// This process's rank (index into `peers`).
+    pub rank: usize,
+    /// `peers[i]` = listen address (`host:port`) of rank `i`.
+    pub peers: &'a [String],
+    /// `TrainConfig::resume_fingerprint()` of the local config.
+    pub fingerprint: u64,
+    /// Resolved resume step, [`FRESH_RUN`] when starting from scratch.
+    pub resume_step: u64,
+    /// Budget for each of: outbound connect (with backoff), inbound
+    /// accept, and each handshake read/write.
+    pub connect_timeout: Duration,
+    /// Steady-state per-message deadline installed on both links.
+    pub io_timeout: Duration,
+}
+
+/// Run the rendezvous and return this rank's node of the TCP ring.
+///
+/// For a 2-rank world this is still a ring (two directed socket
+/// links); the N = 2 ring schedule is bit-identical to the in-memory
+/// pairwise exchange, so loopback-TCP runs reproduce in-memory runs
+/// exactly.
+pub fn ring_over_tcp(rc: &RendezvousCfg) -> Result<RingCollective> {
+    let n = rc.peers.len();
+    if n < 2 {
+        return Err(Error::Config(format!(
+            "rendezvous: a distributed ring needs at least 2 peers, got {n}"
+        )));
+    }
+    if rc.rank >= n {
+        return Err(Error::Config(format!(
+            "rendezvous: rank {} out of range for a {n}-peer ring",
+            rc.rank
+        )));
+    }
+    let local = Hello {
+        version: PROTOCOL_VERSION,
+        rank: rc.rank as u32,
+        world: n as u32,
+        fingerprint: rc.fingerprint,
+        resume_step: rc.resume_step,
+    };
+    let next = (rc.rank + 1) % n;
+    let prev = (rc.rank + n - 1) % n;
+
+    // 1. Bind first: a peer connecting before we accept parks in the
+    //    listener backlog instead of being refused.
+    let listen_addr = &rc.peers[rc.rank];
+    let listener = TcpListener::bind(listen_addr).map_err(|e| {
+        Error::Config(format!(
+            "rendezvous: rank {} cannot listen on {listen_addr:?}: {e}",
+            rc.rank
+        ))
+    })?;
+    log::info!("rendezvous: rank {} listening on {listen_addr}", rc.rank);
+
+    // 2. Outbound link to the next rank; announce ourselves at once so
+    //    the peer's accept phase never waits on ours.
+    let mut to_next = connect_with_backoff(&rc.peers[next], rc.connect_timeout)?;
+    to_next.set_write_timeout(Some(rc.connect_timeout)).map_err(Error::RawIo)?;
+    to_next.set_read_timeout(Some(rc.connect_timeout)).map_err(Error::RawIo)?;
+    write_hello(&mut to_next, &local, "hello")?;
+
+    // 3. Inbound link from the previous rank: validate, then ack.
+    let mut from_prev = accept_within(&listener, rc.connect_timeout, prev)?;
+    from_prev.set_read_timeout(Some(rc.connect_timeout)).map_err(Error::RawIo)?;
+    from_prev.set_write_timeout(Some(rc.connect_timeout)).map_err(Error::RawIo)?;
+    let prev_hello = read_hello(&mut from_prev, "hello")?;
+    validate_hello(&prev_hello, prev as u32, &local)?;
+    write_hello(&mut from_prev, &local, "acknowledgement")?;
+
+    // 4. The next rank's accept phase acks our outbound hello.
+    let next_hello = read_hello(&mut to_next, "acknowledgement")?;
+    validate_hello(&next_hello, next as u32, &local)?;
+
+    let mut to_next = TcpEndpoint::new(to_next)?;
+    let mut from_prev = TcpEndpoint::new(from_prev)?;
+    to_next.set_deadline(Some(rc.io_timeout))?;
+    from_prev.set_deadline(Some(rc.io_timeout))?;
+    log::info!(
+        "rendezvous: rank {} of {n} joined the ring (next: {}, prev: {}, \
+         io deadline {:?})",
+        rc.rank,
+        rc.peers[next],
+        rc.peers[prev],
+        rc.io_timeout
+    );
+    Ok(RingCollective::from_transports(rc.rank, n, Box::new(to_next), Box::new(from_prev)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective::Collective;
+
+    fn local(rank: u32, world: u32) -> Hello {
+        Hello { version: PROTOCOL_VERSION, rank, world, fingerprint: 0xfeed, resume_step: FRESH_RUN }
+    }
+
+    #[test]
+    fn hello_roundtrips() {
+        let h = Hello {
+            version: 3,
+            rank: 7,
+            world: 9,
+            fingerprint: 0xdead_beef_cafe_f00d,
+            resume_step: 42,
+        };
+        assert_eq!(decode_hello(&encode_hello(&h)).unwrap(), h);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = encode_hello(&local(0, 2));
+        buf[0] = b'X';
+        let err = decode_hello(&buf).unwrap_err();
+        assert!(format!("{err}").contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn version_skew_rejected_with_named_field() {
+        let me = local(0, 2);
+        let mut peer = local(1, 2);
+        peer.version += 1;
+        let err = validate_hello(&peer, 1, &me).unwrap_err();
+        let msg = format!("{err}");
+        assert!(matches!(err, Error::Protocol(_)));
+        assert!(msg.contains("protocol version skew"), "{msg}");
+        assert!(msg.contains("v2") && msg.contains("v1"), "{msg}");
+    }
+
+    #[test]
+    fn world_size_mismatch_rejected_with_named_field() {
+        let me = local(0, 2);
+        let peer = local(1, 3);
+        let err = validate_hello(&peer, 1, &me).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("world-size mismatch"), "{msg}");
+        assert!(msg.contains("3-rank") && msg.contains("2 ranks"), "{msg}");
+    }
+
+    #[test]
+    fn ring_position_mismatch_rejected() {
+        let me = local(0, 4);
+        let peer = local(2, 4);
+        let err = validate_hello(&peer, 3, &me).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("ring position mismatch"), "{msg}");
+        assert!(msg.contains("expects rank 3"), "{msg}");
+    }
+
+    #[test]
+    fn fingerprint_drift_rejected_with_both_values() {
+        let me = local(0, 2);
+        let mut peer = local(1, 2);
+        peer.fingerprint = 0xbad;
+        let err = validate_hello(&peer, 1, &me).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("config fingerprint mismatch"), "{msg}");
+        assert!(msg.contains("0x0000000000000bad"), "{msg}");
+        assert!(msg.contains("0x000000000000feed"), "{msg}");
+    }
+
+    #[test]
+    fn resume_step_drift_rejected() {
+        let mut me = local(0, 2);
+        me.resume_step = 4;
+        let mut peer = local(1, 2);
+        peer.resume_step = 6;
+        let err = validate_hello(&peer, 1, &me).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("resume-step mismatch"), "{msg}");
+        assert!(msg.contains("step 6") && msg.contains("step 4"), "{msg}");
+    }
+
+    /// Reserve `n` distinct loopback ports (bind :0, record, release).
+    fn free_addrs(n: usize) -> Vec<String> {
+        let holds: Vec<TcpListener> =
+            (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        holds.iter().map(|l| l.local_addr().unwrap().to_string()).collect()
+    }
+
+    fn rc(rank: usize, peers: &[String], fingerprint: u64) -> RendezvousCfg<'_> {
+        RendezvousCfg {
+            rank,
+            peers,
+            fingerprint,
+            resume_step: FRESH_RUN,
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+
+    #[test]
+    fn two_rank_rendezvous_forms_a_working_ring() {
+        let peers = free_addrs(2);
+        let peers1 = peers.clone();
+        let h = std::thread::spawn(move || {
+            let mut node = ring_over_tcp(&rc(1, &peers1, 7)).unwrap();
+            let mut data = vec![2.0f32; 11];
+            node.all_reduce_flat(&mut data).unwrap();
+            data
+        });
+        let mut node = ring_over_tcp(&rc(0, &peers, 7)).unwrap();
+        assert_eq!(node.world_size(), 2);
+        let mut data = vec![1.0f32; 11];
+        node.all_reduce_flat(&mut data).unwrap();
+        let peer_data = h.join().unwrap();
+        assert!(data.iter().all(|&v| v == 1.5), "{data:?}");
+        assert_eq!(data, peer_data);
+    }
+
+    #[test]
+    fn three_rank_rendezvous_averages_exactly() {
+        let peers = free_addrs(3);
+        let mut joins = Vec::new();
+        for rank in 0..3 {
+            let peers = peers.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut node = ring_over_tcp(&rc(rank, &peers, 9)).unwrap();
+                let mut data = vec![(rank + 1) as f32; 10];
+                node.all_reduce_flat(&mut data).unwrap();
+                data
+            }));
+        }
+        for j in joins {
+            let data = j.join().unwrap();
+            assert!(data.iter().all(|&v| v == 2.0), "{data:?}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_drift_fails_both_ranks_loudly() {
+        let peers = free_addrs(2);
+        let peers1 = peers.clone();
+        let h = std::thread::spawn(move || ring_over_tcp(&rc(1, &peers1, 0xaaaa)).map(|_| ()));
+        let err = ring_over_tcp(&rc(0, &peers, 0xbbbb)).map(|_| ()).unwrap_err();
+        assert!(
+            format!("{err}").contains("config fingerprint mismatch"),
+            "rank 0 error: {err}"
+        );
+        // Rank 1 must also reject — it validates the same hello fields
+        // in its own accept phase; either it sees the drift itself or
+        // the already-failed peer's closed socket. No partial ring.
+        let peer = h.join().unwrap();
+        assert!(peer.is_err(), "rank 1 formed half a ring from a drifted config");
+    }
+
+    /// A scripted impostor: accepts the victim's outbound link, then
+    /// connects back presenting an arbitrary crafted hello.
+    fn impostor(
+        listen_on: TcpListener,
+        target: String,
+        crafted: [u8; HELLO_BYTES],
+    ) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || {
+            let (mut inbound, _) = listen_on.accept().unwrap();
+            let mut victim_hello = [0u8; HELLO_BYTES];
+            inbound.read_exact(&mut victim_hello).unwrap();
+            let mut outbound = connect_with_backoff(&target, Duration::from_secs(10)).unwrap();
+            outbound.write_all(&crafted).unwrap();
+            // Hold the sockets open until the victim has judged the
+            // hello, so it never sees EOF instead of the bad field.
+            std::thread::sleep(Duration::from_millis(300));
+        })
+    }
+
+    #[test]
+    fn wire_version_skew_rejected_no_hang_no_partial_ring() {
+        let peers = free_addrs(2);
+        // Re-bind rank 1's reserved address for the impostor.
+        let fake_listener = TcpListener::bind(&peers[1]).unwrap();
+        let mut crafted = local(1, 2);
+        crafted.version = PROTOCOL_VERSION + 1;
+        let h = impostor(fake_listener, peers[0].clone(), encode_hello(&crafted));
+        let err = ring_over_tcp(&rc(0, &peers, 0xfeed)).map(|_| ()).unwrap_err();
+        assert!(format!("{err}").contains("protocol version skew"), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn wire_world_size_mismatch_rejected_no_hang() {
+        let peers = free_addrs(2);
+        let fake_listener = TcpListener::bind(&peers[1]).unwrap();
+        // The impostor believes the ring has 3 ranks.
+        let crafted = local(1, 3);
+        let h = impostor(fake_listener, peers[0].clone(), encode_hello(&crafted));
+        let err = ring_over_tcp(&rc(0, &peers, 0xfeed)).map(|_| ()).unwrap_err();
+        assert!(format!("{err}").contains("world-size mismatch"), "{err}");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn absent_peer_times_out_within_budget() {
+        let peers = free_addrs(2);
+        let mut cfg = rc(0, &peers, 1);
+        cfg.connect_timeout = Duration::from_millis(200);
+        let start = Instant::now();
+        let err = ring_over_tcp(&cfg).map(|_| ()).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "{err:?}");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "backoff did not respect its budget: {:?}",
+            start.elapsed()
+        );
+    }
+}

@@ -11,6 +11,6 @@ mod types;
 
 pub use toml::TomlDoc;
 pub use types::{
-    ClusterConfig, DataConfig, ExchangeCfg, LoaderMode, LrSchedule, OverlapMode, ResumeFrom,
-    TrainConfig, TransportKind,
+    ClusterConfig, DataConfig, DistributedCfg, ExchangeCfg, LoaderMode, LrSchedule, OverlapMode,
+    ResumeFrom, TrainConfig, TransportKind,
 };

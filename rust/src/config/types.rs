@@ -215,6 +215,43 @@ impl ClusterConfig {
     }
 }
 
+/// Multi-process mode: one OS process per rank, ring links over TCP.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DistributedCfg {
+    /// This process's rank — an index into `peers`.
+    pub rank: usize,
+    /// `peers[i]` = listen address (`host:port`) of rank `i`; every
+    /// rank is launched with the same ordered list.
+    pub peers: Vec<String>,
+    /// Rendezvous budget: outbound connect (with exponential backoff),
+    /// inbound accept, and each handshake read/write.
+    pub connect_timeout_ms: u64,
+    /// Steady-state per-message socket deadline; a dead peer surfaces
+    /// as `Error::Timeout` within this bound instead of hanging.
+    pub io_timeout_ms: u64,
+}
+
+impl Default for DistributedCfg {
+    fn default() -> Self {
+        DistributedCfg {
+            rank: 0,
+            peers: vec![],
+            connect_timeout_ms: 30_000,
+            io_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl DistributedCfg {
+    pub fn connect_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.connect_timeout_ms)
+    }
+
+    pub fn io_timeout(&self) -> std::time::Duration {
+        std::time::Duration::from_millis(self.io_timeout_ms)
+    }
+}
+
 /// Everything `tmg train` needs.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -256,6 +293,10 @@ pub struct TrainConfig {
     pub schedule: LrSchedule,
     pub data: DataConfig,
     pub cluster: ClusterConfig,
+    /// `Some` = this process runs exactly one rank of a multi-process
+    /// ring over TCP (`tmg train --distributed`); `None` = all workers
+    /// are threads of this process over in-memory links.
+    pub distributed: Option<DistributedCfg>,
     pub checkpoint_dir: Option<PathBuf>,
     pub metrics_csv: Option<PathBuf>,
 }
@@ -282,9 +323,25 @@ impl Default for TrainConfig {
             schedule: LrSchedule::default(),
             data: DataConfig::default(),
             cluster: ClusterConfig::pair_same_switch(),
+            distributed: None,
             checkpoint_dir: None,
             metrics_csv: None,
         }
+    }
+}
+
+fn str_list(doc: &TomlDoc, section: &str, key: &str) -> Result<Vec<String>> {
+    match doc.get(section, key) {
+        None => Ok(vec![]),
+        Some(TomlValue::Array(items)) => items
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Config(format!("{section}.{key}: non-string item")))
+            })
+            .collect(),
+        Some(_) => Err(Error::Config(format!("{section}.{key}: expected array"))),
     }
 }
 
@@ -379,6 +436,24 @@ impl TrainConfig {
                 stored_hw: doc.i64_or("data", "stored_hw", 72) as usize,
             },
             cluster: ClusterConfig { workers, switch_of_worker },
+            distributed: {
+                let peers = str_list(doc, "distributed", "peers")?;
+                if peers.is_empty() {
+                    None
+                } else {
+                    let dd = DistributedCfg::default();
+                    Some(DistributedCfg {
+                        rank: doc.i64_or("distributed", "rank", 0).max(0) as usize,
+                        peers,
+                        connect_timeout_ms: doc
+                            .i64_or("distributed", "connect_timeout_ms", dd.connect_timeout_ms as i64)
+                            .max(0) as u64,
+                        io_timeout_ms: doc
+                            .i64_or("distributed", "io_timeout_ms", dd.io_timeout_ms as i64)
+                            .max(0) as u64,
+                    })
+                }
+            },
             checkpoint_dir: doc
                 .get("training", "checkpoint_dir")
                 .and_then(|v| v.as_str())
@@ -424,6 +499,50 @@ impl TrainConfig {
         }
         if self.compute_threads > 256 {
             return Err(Error::Config("training.threads must be <= 256".into()));
+        }
+        if let Some(d) = &self.distributed {
+            if self.cluster.workers < 2 {
+                return Err(Error::Config(
+                    "distributed mode needs workers >= 2 (a 1-rank ring has no peers)".into(),
+                ));
+            }
+            if d.peers.len() != self.cluster.workers {
+                return Err(Error::Config(format!(
+                    "distributed.peers has {} entries for {} workers — every \
+                     rank (one per worker) needs a listen address",
+                    d.peers.len(),
+                    self.cluster.workers
+                )));
+            }
+            if d.rank >= d.peers.len() {
+                return Err(Error::Config(format!(
+                    "distributed.rank {} out of range for {} peers",
+                    d.rank,
+                    d.peers.len()
+                )));
+            }
+            for (i, p) in d.peers.iter().enumerate() {
+                if !p.contains(':') {
+                    return Err(Error::Config(format!(
+                        "distributed.peers[{i}] {p:?} is not a host:port address"
+                    )));
+                }
+            }
+            for (i, p) in d.peers.iter().enumerate() {
+                if d.peers[..i].contains(p) {
+                    return Err(Error::Config(format!(
+                        "distributed.peers[{i}] {p:?} repeats an earlier address — \
+                         each rank needs its own listen port"
+                    )));
+                }
+            }
+            if d.connect_timeout_ms == 0 || d.io_timeout_ms == 0 {
+                return Err(Error::Config(
+                    "distributed connect/io timeouts must be >= 1 ms (0 would \
+                     turn every socket read into an instant failure)"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -682,6 +801,78 @@ switch_of_worker = [0, 1]
         assert!(TrainConfig::from_doc(&doc).is_err());
         let doc = TomlDoc::parse("[exchange]\ntransport = \"carrier-pigeon\"").unwrap();
         assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn distributed_section_parses() {
+        let doc = TomlDoc::parse(
+            "[cluster]\nworkers = 2\n[distributed]\nrank = 1\n\
+             peers = [\"127.0.0.1:7301\", \"127.0.0.1:7302\"]\n\
+             connect_timeout_ms = 5000\nio_timeout_ms = 9000",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        let d = cfg.distributed.unwrap();
+        assert_eq!(d.rank, 1);
+        assert_eq!(d.peers, vec!["127.0.0.1:7301", "127.0.0.1:7302"]);
+        assert_eq!(d.connect_timeout_ms, 5000);
+        assert_eq!(d.io_timeout_ms, 9000);
+        // No [distributed] section (or an empty peer list) = in-process.
+        assert!(TrainConfig::default().distributed.is_none());
+    }
+
+    #[test]
+    fn distributed_misconfigurations_rejected() {
+        let base = || {
+            let mut cfg = TrainConfig::default();
+            cfg.distributed = Some(DistributedCfg {
+                rank: 0,
+                peers: vec!["127.0.0.1:7301".into(), "127.0.0.1:7302".into()],
+                ..DistributedCfg::default()
+            });
+            cfg
+        };
+        base().validate().unwrap();
+        // Peer list must cover every worker.
+        let mut cfg = base();
+        cfg.distributed.as_mut().unwrap().peers.pop();
+        assert!(cfg.validate().is_err());
+        // Rank must index into the peer list.
+        let mut cfg = base();
+        cfg.distributed.as_mut().unwrap().rank = 2;
+        assert!(cfg.validate().is_err());
+        // Addresses must look like host:port and be distinct.
+        let mut cfg = base();
+        cfg.distributed.as_mut().unwrap().peers[1] = "nonsense".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = base();
+        cfg.distributed.as_mut().unwrap().peers[1] = "127.0.0.1:7301".into();
+        assert!(cfg.validate().is_err());
+        // Zero timeouts are rejected.
+        let mut cfg = base();
+        cfg.distributed.as_mut().unwrap().io_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+        // A single-worker "ring" is rejected.
+        let mut cfg = base();
+        cfg.cluster = ClusterConfig::single();
+        cfg.distributed.as_mut().unwrap().peers.truncate(1);
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn distributed_mode_does_not_change_the_resume_fingerprint() {
+        // The whole point of the TCP ring: a distributed run must
+        // resume from (and produce) the same checkpoints as the
+        // in-memory run with the same math config.
+        let base = TrainConfig::default();
+        let mut dist = base.clone();
+        dist.distributed = Some(DistributedCfg {
+            rank: 1,
+            peers: vec!["10.0.0.1:7301".into(), "10.0.0.2:7301".into()],
+            connect_timeout_ms: 1234,
+            io_timeout_ms: 5678,
+        });
+        assert_eq!(base.resume_fingerprint(), dist.resume_fingerprint());
     }
 
     #[test]

@@ -11,8 +11,9 @@
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 
-use crate::comm::collective::{build_fabric, CollectiveStats};
-use crate::config::{ResumeFrom, TrainConfig, TransportKind};
+use crate::comm::collective::{build_fabric, Collective, CollectiveStats};
+use crate::comm::rendezvous::{ring_over_tcp, RendezvousCfg, FRESH_RUN};
+use crate::config::{DistributedCfg, ResumeFrom, TrainConfig, TransportKind};
 use crate::coordinator::eval::{evaluate, EvalResult};
 use crate::coordinator::worker::{run_worker, WorkerMsg, WorkerSpec};
 use crate::data::loader::LoaderStats;
@@ -174,6 +175,36 @@ fn resolve_resume(cfg: &TrainConfig) -> Result<Option<ResumeSet>> {
     }
 }
 
+/// Rendezvous with the peer processes and return this rank's node of
+/// the TCP ring.  The ring collective is used for every world size
+/// (its N = 2 schedule is bit-identical to the in-memory pairwise
+/// path), and the steady-state I/O deadline is installed before the
+/// node is handed to the worker, so a peer dying mid-round surfaces as
+/// `Error::Timeout` inside the normal collective error path.
+fn distributed_fabric(
+    cfg: &TrainConfig,
+    d: &DistributedCfg,
+    resume_step: u64,
+) -> Result<Box<dyn Collective>> {
+    log::info!(
+        "distributed: rank {} of {} rendezvousing over TCP \
+         (connect budget {:?}, io deadline {:?})",
+        d.rank,
+        d.peers.len(),
+        d.connect_timeout(),
+        d.io_timeout()
+    );
+    let node = ring_over_tcp(&RendezvousCfg {
+        rank: d.rank,
+        peers: &d.peers,
+        fingerprint: cfg.resume_fingerprint(),
+        resume_step,
+        connect_timeout: d.connect_timeout(),
+        io_timeout: d.io_timeout(),
+    })?;
+    Ok(Box::new(node))
+}
+
 /// The eval-curve CSV path derived from the step-metrics CSV path.
 fn eval_csv_path(metrics_csv: &Path) -> PathBuf {
     metrics_csv.with_extension("eval.csv")
@@ -211,6 +242,9 @@ fn trim_csv_rows_from(path: &Path, from: usize) -> Result<()> {
 pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     cfg.validate()?;
     let workers = cfg.cluster.workers;
+    // In distributed mode this process runs exactly one rank; rank 0
+    // owns the leader-only side effects (final checkpoint, final eval).
+    let rank0_local = cfg.distributed.as_ref().map_or(true, |d| d.rank == 0);
     if cfg.checkpoint_every > 0 && cfg.checkpoint_dir.is_none() {
         return Err(Error::Config(
             "checkpoint_every is set but there is no checkpoint_dir to write into".into(),
@@ -233,12 +267,16 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
                 set.step,
                 cfg.steps
             );
-            let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
-            let eval = if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
-                let model = eval_backend.model().clone();
-                let mut store = ParamStore::init(&model.params, cfg.seed);
-                load_checkpoint(&set.paths[0], &mut store)?;
-                evaluate(cfg, eval_backend.as_mut(), &store, 0)?
+            let eval = if rank0_local {
+                let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
+                if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
+                    let model = eval_backend.model().clone();
+                    let mut store = ParamStore::init(&model.params, cfg.seed);
+                    load_checkpoint(&set.paths[0], &mut store)?;
+                    evaluate(cfg, eval_backend.as_mut(), &store, 0)?
+                } else {
+                    None
+                }
             } else {
                 None
             };
@@ -282,24 +320,44 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     if let Some(w) = thread_budget_warning(cfg) {
         log::warn!("{w}");
     }
-    log::info!(
-        "compute: {workers} worker(s) x {} intra-op thread(s) per step, gemm isa {}",
-        cfg.threads_per_worker(),
-        crate::backend::native::simd::active_isa()
-    );
+    match &cfg.distributed {
+        Some(d) => log::info!(
+            "compute: rank {} of {workers} (one process per rank) x {} \
+             intra-op thread(s) per step, gemm isa {}",
+            d.rank,
+            cfg.threads_per_worker(),
+            crate::backend::native::simd::active_isa()
+        ),
+        None => log::info!(
+            "compute: {workers} worker(s) x {} intra-op thread(s) per step, gemm isa {}",
+            cfg.threads_per_worker(),
+            crate::backend::native::simd::active_isa()
+        ),
+    }
 
     // Build the collective fabric (handles move into the threads).
-    // N = 1 -> no-op, N = 2 -> the paper's pairwise fast path,
-    // N > 2 -> chunked ring all-reduce; all behind one trait.
-    let hop_kinds = effective_hop_transports(cfg);
-    let fabrics = build_fabric(workers, &hop_kinds);
+    // In-process: N = 1 -> no-op, N = 2 -> the paper's pairwise fast
+    // path, N > 2 -> chunked ring all-reduce; all behind one trait.
+    // Distributed: this process is one rank of a TCP ring, so exactly
+    // one (rank, fabric) pair is local.
+    let local_fabrics: Vec<(usize, Box<dyn Collective>)> = match &cfg.distributed {
+        Some(d) => {
+            let resume_step = resume_set.as_ref().map(|s| s.step).unwrap_or(FRESH_RUN);
+            vec![(d.rank, distributed_fabric(cfg, d, resume_step)?)]
+        }
+        None => {
+            let hop_kinds = effective_hop_transports(cfg);
+            build_fabric(workers, &hop_kinds).into_iter().enumerate().collect()
+        }
+    };
+    let local_count = local_fabrics.len();
 
     let (tx, rx) = channel::<WorkerMsg>();
     let wall = Timer::start();
 
-    // Spawn the replicas.
-    let mut joins = Vec::with_capacity(workers);
-    for (w, fabric) in fabrics.into_iter().enumerate() {
+    // Spawn the local replicas.
+    let mut joins = Vec::with_capacity(local_count);
+    for (w, fabric) in local_fabrics {
         let spec = WorkerSpec {
             fabric,
             worker: w,
@@ -431,9 +489,21 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     }
 
     // Join replicas and measure the cross-replica divergence.
-    let mut outcomes = Vec::with_capacity(workers);
+    let mut outcomes = Vec::with_capacity(local_count);
     for j in joins {
-        outcomes.push(j.join().map_err(|_| Error::msg("worker thread panicked"))??);
+        match j.join().map_err(|_| Error::msg("worker thread panicked"))? {
+            Ok(o) => outcomes.push(o),
+            Err(e) => {
+                if cfg.distributed.is_some() {
+                    log::error!(
+                        "rank failed mid-run: {e}; if a peer process died, \
+                         restart every rank with --resume auto to reassemble \
+                         the run from the newest complete checkpoint set"
+                    );
+                }
+                return Err(e);
+            }
+        }
     }
     outcomes.sort_by_key(|o| o.worker);
 
@@ -444,7 +514,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     // or private momenta), so report the params-only drift metric
     // instead of flagging expected differences.  Max over all replica
     // pairs against worker 0, not just workers 0 and 1.
-    let final_divergence: Option<f32> = if workers >= 2 {
+    // (In distributed mode only one replica is local, so there is no
+    // in-process peer to compare — the e2e harness compares final
+    // checkpoints across processes instead.)
+    let final_divergence: Option<f32> = if outcomes.len() >= 2 {
         let strict = cfg.exchange.period == 1 && cfg.exchange.include_momentum;
         let mut d = 0f32;
         for o in &outcomes[1..] {
@@ -475,11 +548,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
             c.overlapped_seconds += o.collective.overlapped_seconds;
             c.exposed_seconds += o.collective.exposed_seconds;
         }
-        c.flatten_seconds /= workers as f64;
-        c.transfer_seconds /= workers as f64;
-        c.average_seconds /= workers as f64;
-        c.overlapped_seconds /= workers as f64;
-        c.exposed_seconds /= workers as f64;
+        c.flatten_seconds /= local_count as f64;
+        c.transfer_seconds /= local_count as f64;
+        c.average_seconds /= local_count as f64;
+        c.overlapped_seconds /= local_count as f64;
+        c.exposed_seconds /= local_count as f64;
         c
     };
     if collective.bucket_rounds > 0 {
@@ -496,7 +569,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     // Final checkpoint: replica 0's state as a single shared v2 file
     // (post-exchange replicas agree at period 1; the per-worker
     // periodic snapshots cover exact resume for every other config).
-    if let Some(dir) = &cfg.checkpoint_dir {
+    // In distributed mode only rank 0 writes it — `outcomes[0]` is
+    // that rank's replica exactly when `rank0_local`.
+    if let (Some(dir), true) = (&cfg.checkpoint_dir, rank0_local) {
         let path = dir.join(format!("{}_step{}.ckpt", cfg.name, cfg.steps));
         let (sampler_epoch, sampler_next_batch) = EpochSampler::position_after(
             cfg.data.train_examples,
@@ -524,12 +599,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
     // evaluator covers the whole split including the ragged tail for
     // variable-batch backends, so even `val_examples < batch` is
     // measured rather than silently skipped.
-    let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
-    let eval = if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
-        // `evaluate` answers None when nothing was measured — absent
-        // split, or a fixed-batch backend over a too-small split —
-        // which reports as "no eval" instead of a fake 100% error.
-        evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?
+    // Distributed non-zero ranks skip it: rank 0 owns validation.
+    let eval = if rank0_local {
+        let mut eval_backend = crate::backend::build_eval_backend(cfg)?;
+        if eval_backend.supports_eval() && cfg.data.val_examples > 0 {
+            // `evaluate` answers None when nothing was measured — absent
+            // split, or a fixed-batch backend over a too-small split —
+            // which reports as "no eval" instead of a fake 100% error.
+            evaluate(cfg, eval_backend.as_mut(), &outcomes[0].store, 0)?
+        } else {
+            None
+        }
     } else {
         None
     };
@@ -546,10 +626,10 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainSummary> {
         loader: outcomes.iter().map(|o| o.loader).collect(),
         exchange_rounds: collective.rounds,
         exchange_seconds: outcomes.iter().map(|o| o.exchange_seconds).sum::<f64>()
-            / workers as f64,
+            / local_count as f64,
         collective,
         compute_seconds: outcomes.iter().map(|o| o.compute_seconds).sum::<f64>()
-            / workers as f64,
+            / local_count as f64,
         final_divergence,
         eval,
         gemm_isa: crate::backend::native::simd::active_isa().name().to_string(),

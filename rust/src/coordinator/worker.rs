@@ -90,6 +90,21 @@ pub struct WorkerSpec {
     pub restore: Option<PathBuf>,
 }
 
+/// Attach worker/step context to a failed collective round, plus the
+/// recovery runbook when the failure looks like a dead peer process
+/// (distributed mode): every rank must restart with `--resume auto`
+/// so the ring reassembles from the newest complete checkpoint set.
+fn exchange_error_context(e: Error, worker: usize, step: usize) -> Error {
+    match e {
+        Error::Timeout(m) => Error::Timeout(format!(
+            "worker {worker}, step {step}: {m}; a peer process likely died — \
+             restart every rank with --resume auto to reassemble the run"
+        )),
+        Error::Protocol(m) => Error::Protocol(format!("worker {worker}, step {step}: {m}")),
+        other => other,
+    }
+}
+
 /// Per-step RNG seed for worker `worker` at `step`: a SplitMix64-style
 /// finalizer over the full-width `(seed, step, worker)` triple,
 /// truncated to the backend ABI's i32 only *after* mixing.
@@ -371,7 +386,7 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
                 };
                 compute_seconds += t_compute.elapsed_secs();
                 let t_ex = Timer::start();
-                let flat = ex.join()?;
+                let flat = ex.join().map_err(|e| exchange_error_context(e, worker, step))?;
                 dt_exchange = t_ex.elapsed_secs();
                 exchange_seconds += dt_exchange;
                 let t_upd = Timer::start();
@@ -393,7 +408,9 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
                 let fabric = fabric.as_mut().expect("non-staged worker keeps its fabric");
                 if fabric.world_size() > 1 && (step + 1) % cfg.exchange.period == 0 {
                     let t_ex = Timer::start();
-                    fabric.all_reduce_average(&mut store, include_momentum)?;
+                    fabric
+                        .all_reduce_average(&mut store, include_momentum)
+                        .map_err(|e| exchange_error_context(e, worker, step))?;
                     dt_exchange = t_ex.elapsed_secs();
                     exchange_seconds += dt_exchange;
                 }
@@ -496,7 +513,7 @@ pub fn run_worker(spec: WorkerSpec) -> Result<WorkerOutcome> {
     }
 
     let collective = match exchanger {
-        Some(ex) => ex.finish()?,
+        Some(ex) => ex.finish().map_err(|e| exchange_error_context(e, worker, cfg.steps))?,
         None => fabric.as_ref().expect("non-staged worker keeps its fabric").stats(),
     };
     Ok(WorkerOutcome {

@@ -42,6 +42,9 @@ pub enum Error {
     /// Interconnect topology rejected a requested route.
     Topology(String),
 
+    /// A peer missed an I/O deadline (dead or stalled process).
+    Timeout(String),
+
     /// Checkpoint serialization problems.
     Checkpoint(String),
 
@@ -64,6 +67,7 @@ impl fmt::Display for Error {
             Error::Shape(m) => write!(f, "shape mismatch: {m}"),
             Error::Protocol(m) => write!(f, "protocol: {m}"),
             Error::Topology(m) => write!(f, "topology: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
             Error::Checkpoint(m) => write!(f, "checkpoint: {m}"),
             Error::Msg(m) => write!(f, "{m}"),
         }

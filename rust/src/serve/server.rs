@@ -34,6 +34,15 @@ use crate::util::Timer;
 /// Emit the per-stage timing log line every this many served requests.
 const LOG_EVERY: u64 = 256;
 
+/// Socket read poll interval: bounds how often a connection handler
+/// checks its idle clock while the peer is silent.
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Hard cap on one request line.  A `classify` payload is 2 hex chars
+/// per byte, so 16 MiB covers every supported geometry with a wide
+/// margin; anything longer is a runaway or hostile client.
+const MAX_LINE_BYTES: usize = 16 << 20;
+
 /// Serving knobs (CLI flags map 1:1).
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
@@ -47,6 +56,9 @@ pub struct ServeOpts {
     pub topk: usize,
     /// TCP port on 127.0.0.1; 0 picks an ephemeral port.
     pub port: u16,
+    /// Evict a connection that has sent no bytes for this long (the
+    /// client gets an `err idle ...` reply before the close).
+    pub idle_timeout: Duration,
 }
 
 impl Default for ServeOpts {
@@ -57,6 +69,7 @@ impl Default for ServeOpts {
             deadline: Duration::from_millis(5),
             topk: 5,
             port: 0,
+            idle_timeout: Duration::from_secs(60),
         }
     }
 }
@@ -260,6 +273,8 @@ struct FrontCtx {
     input_bytes: usize,
     /// Canned `hello` reply (model geometry for clients).
     hello: String,
+    /// Evict a connection after this long with no bytes from the peer.
+    idle_timeout: Duration,
 }
 
 fn answer(line: &str, ctx: &FrontCtx) -> Option<String> {
@@ -315,44 +330,79 @@ fn answer(line: &str, ctx: &FrontCtx) -> Option<String> {
 
 fn handle_conn(stream: TcpStream, ctx: Arc<FrontCtx>) {
     let _ = stream.set_nodelay(true);
-    // Finite read timeout so a handler never wedges on a silent peer;
-    // on timeout the partial line stays buffered and reading resumes.
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    // Finite read timeout so the idle clock is polled even while the
+    // peer is silent; partial lines stay buffered across polls.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    // Byte-level line assembly (instead of `read_line`) so a non-UTF-8
+    // request is *answered* with an `err` line, not silently dropped.
+    let mut acc: Vec<u8> = Vec::new();
+    let mut last_activity = Instant::now();
     loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => return, // EOF
-            Ok(_) => {
-                let reply = answer(&line, &ctx);
-                line.clear();
-                match reply {
-                    Some(mut s) => {
-                        s.push('\n');
-                        if writer.write_all(s.as_bytes()).and_then(|_| writer.flush()).is_err() {
-                            return;
-                        }
-                    }
-                    None => {
-                        let _ = writer.write_all(b"ok bye\n");
+        // Assemble the next full line into `line`; None = clean EOF.
+        let line: Option<Vec<u8>> = loop {
+            if let Some(nl) = acc.iter().position(|&b| b == b'\n') {
+                let rest = acc.split_off(nl + 1);
+                let mut line = std::mem::replace(&mut acc, rest);
+                line.pop(); // the newline itself
+                break Some(line);
+            }
+            let filled = match reader.fill_buf() {
+                Ok([]) => break None, // EOF
+                Ok(buf) => {
+                    acc.extend_from_slice(buf);
+                    buf.len()
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // Idle eviction: a client that sends nothing for
+                    // the whole budget is told why and disconnected —
+                    // its handler thread must not live forever.
+                    if last_activity.elapsed() >= ctx.idle_timeout {
+                        let msg = format!(
+                            "err idle for {:?} with no request — closing\n",
+                            ctx.idle_timeout
+                        );
+                        let _ = writer.write_all(msg.as_bytes());
                         return;
                     }
+                    continue;
+                }
+                Err(_) => return,
+            };
+            reader.consume(filled);
+            last_activity = Instant::now();
+            if acc.len() > MAX_LINE_BYTES {
+                let _ = writer.write_all(b"err request line exceeds 16 MiB - closing\n");
+                return;
+            }
+        };
+        let Some(line) = line else { return };
+        let reply = match std::str::from_utf8(&line) {
+            Ok(s) => answer(s, &ctx),
+            // A malformed (non-UTF-8) request gets a protocol-shaped
+            // error reply instead of a silent connection drop.
+            Err(_) => Some("err request is not valid utf-8".into()),
+        };
+        match reply {
+            Some(mut s) => {
+                s.push('\n');
+                if writer.write_all(s.as_bytes()).and_then(|_| writer.flush()).is_err() {
+                    return;
                 }
             }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                // Keep whatever partial line accumulated; keep reading.
-                continue;
+            None => {
+                let _ = writer.write_all(b"ok bye\n");
+                return;
             }
-            Err(_) => return,
         }
     }
 }
@@ -440,6 +490,7 @@ impl Server {
             stats: stats.clone(),
             input_bytes: meta.channels * meta.hw * meta.hw,
             hello,
+            idle_timeout: opts.idle_timeout,
         });
         let stop = shutdown.clone();
         let accept = std::thread::Builder::new()
@@ -466,9 +517,11 @@ impl Server {
             .map_err(Error::RawIo)?;
 
         log::info!(
-            "serve: listening on {addr} ({replicas} replica(s), max_batch {}, deadline {:?})",
+            "serve: listening on {addr} ({replicas} replica(s), max_batch {}, deadline {:?}, \
+             idle timeout {:?})",
             opts.max_batch,
-            opts.deadline
+            opts.deadline,
+            opts.idle_timeout
         );
         Ok(Server {
             addr,

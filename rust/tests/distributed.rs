@@ -1,0 +1,236 @@
+//! End-to-end multi-process distributed training over loopback TCP,
+//! with real OS processes and real `kill -9` fault injection.
+//!
+//! Two invariants from the paper-reproduction contract:
+//!
+//! 1. A 2-process TCP ring produces **bit-identical** parameters to
+//!    the same-config in-memory (threaded) run — the transport is
+//!    outside the numerics.
+//! 2. SIGKILLing one rank mid-run and restarting every rank with
+//!    `--resume auto` (shared checkpoint dir) reassembles the run
+//!    bit-exactly: the final checkpoint equals the uninterrupted
+//!    baseline's, byte for byte.
+//!
+//! Both tests drive the actual `tmg` binary (`CARGO_BIN_EXE_tmg`), so
+//! the rendezvous, handshake, deadline and supervisor paths are the
+//! shipped ones, not test doubles.
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use theano_mgpu::data::synth::{generate_dataset, SynthSpec};
+use theano_mgpu::params::{load_checkpoint, ParamStore};
+
+const TRAIN: usize = 256;
+const VAL: usize = 32;
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("tmg_dist_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One shared corpus per test: generated up front so two spawned ranks
+/// never race on first-use generation.
+fn fresh_corpus(tag: &str) -> PathBuf {
+    let dir = fresh_dir(&format!("{tag}_data"));
+    let spec = SynthSpec { classes: 10, hw: 36, seed: 13, ..Default::default() };
+    generate_dataset(&dir, &spec, TRAIN, VAL, 128).unwrap();
+    dir
+}
+
+/// Reserve `n` distinct free loopback ports (bind, record, release).
+fn free_addrs(n: usize) -> Vec<String> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect()
+}
+
+/// The flag set shared by every run in a test — everything
+/// resume-critical is pinned explicitly so the in-memory baseline and
+/// the distributed ranks train the same function.
+fn common_args(data: &Path, ckpt: &Path, steps: usize, every: usize) -> Vec<String> {
+    [
+        "train",
+        "--model",
+        "alexnet-micro",
+        "--backend",
+        "native",
+        "--batch",
+        "8",
+        "--threads",
+        "1",
+        "--seed",
+        "11",
+        "--checkpoint-keep",
+        "16",
+    ]
+    .into_iter()
+    .map(String::from)
+    .chain([
+        "--steps".into(),
+        steps.to_string(),
+        "--checkpoint-every".into(),
+        every.to_string(),
+        "--data-dir".into(),
+        data.display().to_string(),
+        "--checkpoint-dir".into(),
+        ckpt.display().to_string(),
+    ])
+    .collect()
+}
+
+fn spawn_rank(common: &[String], rank: usize, peers: &str, resume: bool) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_tmg"));
+    cmd.args(common)
+        .args(["--rank", &rank.to_string(), "--peers", peers])
+        .args(["--connect-timeout-ms", "60000", "--io-timeout-ms", "8000"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    if resume {
+        cmd.args(["--resume", "auto"]);
+    }
+    cmd.spawn().expect("spawn tmg rank")
+}
+
+/// Wait for a child, asserting success and returning its stdout.
+fn finish_ok(child: Child, who: &str) -> String {
+    let out = child.wait_with_output().expect("wait tmg");
+    assert!(
+        out.status.success(),
+        "{who} failed ({:?})\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Max absolute parameter difference between two checkpoint files,
+/// loaded through the same path training uses.
+fn checkpoint_divergence(a: &Path, b: &Path) -> f32 {
+    let mut cfg = theano_mgpu::config::TrainConfig::default();
+    cfg.model = "alexnet-micro".into();
+    cfg.backend = "native".into();
+    let model = theano_mgpu::backend::resolve_model(&cfg).unwrap();
+    let mut sa = ParamStore::init(&model.params, 1);
+    let mut sb = ParamStore::init(&model.params, 2);
+    load_checkpoint(a, &mut sa).unwrap();
+    load_checkpoint(b, &mut sb).unwrap();
+    sa.max_divergence(&sb)
+}
+
+#[test]
+fn tcp_two_process_run_is_bit_identical_to_in_memory() {
+    let data = fresh_corpus("bitident");
+    let mem_ckpt = fresh_dir("bitident_mem");
+    let tcp_ckpt = fresh_dir("bitident_tcp");
+    let steps = 4;
+
+    // Baseline: the ordinary in-memory 2-worker run (threads in one
+    // process, channel transports).
+    let mut base = Command::new(env!("CARGO_BIN_EXE_tmg"));
+    base.args(common_args(&data, &mem_ckpt, steps, 0))
+        .args(["--workers", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    finish_ok(base.spawn().expect("spawn baseline"), "in-memory baseline");
+
+    // The same run as two OS processes over loopback TCP.
+    let peers = free_addrs(2).join(",");
+    let common = common_args(&data, &tcp_ckpt, steps, 0);
+    let r0 = spawn_rank(&common, 0, &peers, false);
+    let r1 = spawn_rank(&common, 1, &peers, false);
+    finish_ok(r1, "tcp rank 1");
+    finish_ok(r0, "tcp rank 0");
+
+    // Same function, same bits: the final checkpoints must be
+    // byte-identical, and the loaded parameters exactly equal.
+    let mem_final = mem_ckpt.join(format!("default_step{steps}.ckpt"));
+    let tcp_final = tcp_ckpt.join(format!("default_step{steps}.ckpt"));
+    let mem_bytes = std::fs::read(&mem_final).unwrap();
+    let tcp_bytes = std::fs::read(&tcp_final).unwrap();
+    assert_eq!(
+        mem_bytes, tcp_bytes,
+        "TCP run's final checkpoint differs from the in-memory run's"
+    );
+    assert_eq!(checkpoint_divergence(&mem_final, &tcp_final), 0.0);
+}
+
+#[test]
+fn kill_nine_then_resume_auto_reassembles_bit_exactly() {
+    let data = fresh_corpus("kill9");
+    let base_ckpt = fresh_dir("kill9_base");
+    let dist_ckpt = fresh_dir("kill9_dist");
+    // Kill at the step-2 checkpoint with 8 more steps to go: rank 1
+    // cannot race to completion before the SIGKILL lands.
+    let (steps, every) = (10, 2);
+
+    // Uninterrupted baseline (in-memory, same config).
+    let mut base = Command::new(env!("CARGO_BIN_EXE_tmg"));
+    base.args(common_args(&data, &base_ckpt, steps, every))
+        .args(["--workers", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped());
+    finish_ok(base.spawn().expect("spawn baseline"), "uninterrupted baseline");
+
+    // Launch the 2-rank TCP run, then SIGKILL rank 1 as soon as both
+    // ranks have a step-2 checkpoint on disk (a complete resume set).
+    let peers = free_addrs(2).join(",");
+    let common = common_args(&data, &dist_ckpt, steps, every);
+    let r0 = spawn_rank(&common, 0, &peers, false);
+    let mut r1 = spawn_rank(&common, 1, &peers, false);
+
+    let set = [dist_ckpt.join("default_step2.w0.ckpt"), dist_ckpt.join("default_step2.w1.ckpt")];
+    let deadline = Instant::now() + Duration::from_secs(180);
+    while !set.iter().all(|p| p.exists()) {
+        assert!(Instant::now() < deadline, "step-2 checkpoint set never appeared");
+        assert!(
+            r1.try_wait().expect("poll rank 1").is_none(),
+            "rank 1 exited before it could be killed"
+        );
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    r1.kill().expect("SIGKILL rank 1"); // Child::kill is SIGKILL on unix
+    let _ = r1.wait();
+
+    // The survivor must notice the dead peer (deadline or EOF in the
+    // collective error path) and exit non-zero — not hang.
+    let out0 = r0.wait_with_output().expect("wait rank 0");
+    assert!(
+        !out0.status.success(),
+        "rank 0 should have failed after its peer was SIGKILLed\n--- stdout ---\n{}",
+        String::from_utf8_lossy(&out0.stdout)
+    );
+
+    // Supervised recovery: restart every rank with --resume auto on
+    // fresh ports (the old ones may sit in TIME_WAIT).  Both ranks
+    // must resolve the same newest *complete* checkpoint set.
+    let peers = free_addrs(2).join(",");
+    let r0 = spawn_rank(&common, 0, &peers, true);
+    let r1 = spawn_rank(&common, 1, &peers, true);
+    let out1 = finish_ok(r1, "resumed rank 1");
+    let out0 = finish_ok(r0, "resumed rank 0");
+    assert!(
+        out0.contains("resumed from checkpoint at step"),
+        "rank 0 did not resume from a checkpoint:\n{out0}"
+    );
+    assert!(
+        out1.contains("resumed from checkpoint at step"),
+        "rank 1 did not resume from a checkpoint:\n{out1}"
+    );
+
+    // Bit-exact reassembly: final checkpoint identical to the
+    // uninterrupted run's, max parameter divergence exactly 0.0.
+    let base_final = base_ckpt.join(format!("default_step{steps}.ckpt"));
+    let dist_final = dist_ckpt.join(format!("default_step{steps}.ckpt"));
+    assert_eq!(
+        std::fs::read(&base_final).unwrap(),
+        std::fs::read(&dist_final).unwrap(),
+        "kill-9 + --resume auto did not reassemble the baseline bits"
+    );
+    assert_eq!(checkpoint_divergence(&base_final, &dist_final), 0.0);
+}

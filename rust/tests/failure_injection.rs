@@ -192,6 +192,76 @@ fn dead_peer_mid_bucket_round_is_an_error_not_a_hang() {
 }
 
 #[test]
+fn stalled_peer_with_io_deadline_is_a_timeout_not_a_hang() {
+    // The peer stays *alive* but never participates (a wedged process,
+    // not a dead one — drop-based tests can't catch this case): with
+    // an I/O deadline installed the survivor's join barrier reports
+    // Error::Timeout instead of blocking forever.
+    use std::time::Duration;
+    use theano_mgpu::comm::collective::Collective;
+
+    let mut fabrics = build_fabric(2, &[TransportKind::HostStaged]);
+    let stalled = fabrics.remove(1);
+    let mut survivor = fabrics.remove(0);
+    survivor.set_io_deadline(Some(Duration::from_millis(40))).unwrap();
+    let t = std::thread::spawn(move || {
+        let mut ex = GradExchanger::new(survivor, 12, 4, false);
+        ex.grad_ready(0, &[1.0; 12]).unwrap();
+        ex.join().map(|g| g.to_vec())
+    });
+    let res = t.join().unwrap();
+    assert!(matches!(res, Err(Error::Timeout(_))), "want timeout, got {res:?}");
+    // Only now does the peer go away: the whole round it was alive.
+    drop(stalled);
+}
+
+#[test]
+fn tcp_ring_stalled_peer_times_out_mid_round() {
+    // Same failure over real sockets: two ranks rendezvous into a TCP
+    // ring, then rank 1 wedges without sending its round.  Rank 0's
+    // socket deadline must fire — a dead-quiet peer is a loud timeout
+    // in the collective error path, never a hang.
+    use std::net::TcpListener;
+    use std::time::Duration;
+    use theano_mgpu::comm::collective::Collective;
+    use theano_mgpu::comm::{ring_over_tcp, RendezvousCfg, FRESH_RUN};
+
+    let addrs: Vec<String> = {
+        let ls: Vec<TcpListener> =
+            (0..2).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        ls.iter().map(|l| l.local_addr().unwrap().to_string()).collect()
+    };
+    let peers1 = addrs.clone();
+    let h1 = std::thread::spawn(move || {
+        let rc = RendezvousCfg {
+            rank: 1,
+            peers: &peers1,
+            fingerprint: 7,
+            resume_step: FRESH_RUN,
+            connect_timeout: Duration::from_secs(10),
+            io_timeout: Duration::from_secs(10),
+        };
+        let ring = ring_over_tcp(&rc).unwrap();
+        // Wedge: hold the sockets open, contribute nothing.
+        std::thread::sleep(Duration::from_millis(800));
+        drop(ring);
+    });
+    let rc = RendezvousCfg {
+        rank: 0,
+        peers: &addrs,
+        fingerprint: 7,
+        resume_step: FRESH_RUN,
+        connect_timeout: Duration::from_secs(10),
+        io_timeout: Duration::from_millis(100),
+    };
+    let mut ring = ring_over_tcp(&rc).unwrap();
+    let mut buf = vec![1.0f32; 8];
+    let res = ring.all_reduce_flat(&mut buf);
+    assert!(matches!(res, Err(Error::Timeout(_))), "want timeout, got {res:?}");
+    h1.join().unwrap();
+}
+
+#[test]
 fn dataset_too_small_for_batch_panics_cleanly() {
     let dir = fresh_dataset("small", 10);
     let lcfg = LoaderCfg {

@@ -153,6 +153,7 @@ fn replies_bit_identical_to_eval_path() {
         deadline: Duration::from_millis(2),
         topk: 5,
         port: 0,
+        ..ServeOpts::default()
     };
     let (cfg, store, server) = start("bitident", 33, opts);
     let addr = server.addr().to_string();
@@ -241,4 +242,61 @@ fn shutdown_drains_in_flight_requests() {
         assert!(reply.starts_with("ok "), "in-flight request dropped: {reply}");
     }
     assert_eq!((snap.served, snap.batches, snap.errors), (6, 1, 0));
+}
+
+#[test]
+fn idle_client_is_evicted_with_an_err_reply() {
+    use std::io::{BufRead, BufReader};
+    use std::net::TcpStream;
+
+    let opts = ServeOpts {
+        replicas: 1,
+        idle_timeout: Duration::from_millis(300),
+        ..ServeOpts::default()
+    };
+    let (_cfg, _store, server) = start("idle", 1, opts);
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    // Send nothing: the server must say why it is hanging up, then
+    // actually hang up — not keep the handler thread alive forever.
+    let t = Instant::now();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("err idle"), "expected idle eviction, got: {line:?}");
+    assert!(t.elapsed() >= Duration::from_millis(250), "evicted before the idle budget");
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must be closed");
+    drop(stream);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_lines_get_err_replies_not_silent_drops() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let (_cfg, _store, server) = start("malformed", 1, ServeOpts::default());
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+
+    // A non-UTF-8 request line is answered, not silently dropped.
+    stream.write_all(b"classify \xff\xfe\xfa\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("err request is not valid utf-8"), "{line:?}");
+
+    // Bad hex in an otherwise well-formed line: still an err reply.
+    line.clear();
+    stream.write_all(b"classify zz\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("err "), "{line:?}");
+
+    // The connection survives malformed requests and keeps serving.
+    line.clear();
+    stream.write_all(b"stats\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ok "), "{line:?}");
+    server.shutdown();
 }
